@@ -1,0 +1,36 @@
+//! §5.2 energy/throughput study on the SIGMA-like simulator, plus the
+//! repetition-engine op analysis — the "benefits of sparsity" story for a
+//! signed-binary ResNet-18 without needing any artifacts.
+//!
+//! Run: `cargo run --release --example energy_report -- --sparsity 0.65`
+
+use plum::cli::args::Args;
+use plum::config::RunConfig;
+use plum::experiments::figures;
+use plum::models;
+use plum::simulator::{simulate_conv, AcceleratorConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = RunConfig::resolve(&args)?;
+    let sparsity = args.get_f32("sparsity", 0.65) as f64;
+
+    println!("SIGMA-like config: 256 multiplier switches, 256 rd/wr SDMemory ports (paper supp. A)\n");
+    figures::energy(&cfg, sparsity)?;
+
+    // density -> potential throughput (paper: 35% density -> 2.86x)
+    println!("\npotential throughput by density (paper §5.2, x = 1/density):");
+    let layer = &models::resnet18_layers(1.0, 64, 1)[10];
+    let acc = AcceleratorConfig::default();
+    for density in [1.0, 0.75, 0.5, 0.35, 0.2] {
+        let dense = simulate_conv(&layer.geom, 1.0, &acc);
+        let sparse = simulate_conv(&layer.geom, density, &acc);
+        println!(
+            "  density {density:.2}: ideal {:.2}x, simulated cycles {:.2}x, simulated energy {:.2}x",
+            1.0 / density,
+            dense.cycles as f64 / sparse.cycles as f64,
+            dense.energy / sparse.energy
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Pareto sweep (Figures 2 & 5): train the resnet20 scheme grid (or reuse
+//! cached results from earlier harness runs) and print accuracy vs
+//! effectual parameters with the Pareto front marked.
+//!
+//! Run: `make artifacts && cargo run --release --example pareto_sweep -- --steps 150`
+
+use plum::cli::args::Args;
+use plum::config::RunConfig;
+use plum::experiments::{tables, train_and_measure};
+use plum::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = RunConfig::resolve(&args)?;
+    let rt = Runtime::cpu()?;
+
+    // the headline grid: four schemes on resnet20 plus the width-reduced
+    // binary (table 7's equal-effectual comparator)
+    for name in [
+        "resnet20_fp",
+        "resnet20_ternary",
+        "resnet20_binary",
+        "resnet20_sb",
+        "resnet20w07_b",
+    ] {
+        println!("-- {name}");
+        let row = train_and_measure(&cfg, &rt, name, args.has("fresh"), true)?;
+        println!(
+            "   acc {:.3}  effectual {:.0}k  density {:.2}  ({:.0}s)",
+            row.eval_acc,
+            row.effectual as f64 / 1e3,
+            row.density,
+            row.wall_secs
+        );
+    }
+    tables::pareto(&cfg)?;
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the PLUM pipeline on one conv layer, no artifacts needed.
+//!
+//! 1. quantize a latent weight tensor three ways (binary / ternary /
+//!    signed-binary);
+//! 2. inspect the repetition-sparsity trade-off (density, unique values,
+//!    distinct sub-tile patterns);
+//! 3. build repetition-aware inference plans and compare operation counts
+//!    and measured runtime — the paper's core claim in ~1 second.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use plum::quant::{self, filter_repetition_stats, PackedSignedBinary, Scheme};
+use plum::repetition::{arithmetic_reduction, execute_conv2d, plan_layer, EngineConfig};
+use plum::tensor::{conv2d_gemm, Conv2dGeometry, Tensor};
+use plum::util::bench::bench;
+use plum::util::Rng;
+
+fn main() {
+    // a mid-size conv layer: 128 filters, 64 channels, 3x3, 16x16 input
+    let geom = Conv2dGeometry {
+        n: 1, c: 64, h: 16, w: 16, k: 128, r: 3, s: 3, stride: 1, padding: 1,
+    };
+    let mut rng = Rng::new(42);
+    let latent = Tensor::rand_normal(&[geom.k, geom.c, geom.r, geom.s], 0.5, &mut rng);
+    let x = Tensor::rand_normal(&[geom.n, geom.c, geom.h, geom.w], 1.0, &mut rng);
+
+    println!("PLUM quickstart — conv {}x{}x{}x{} on {}x{} input\n", geom.k, geom.c, geom.r, geom.s, geom.h, geom.w);
+    println!(
+        "{:<14} {:>8} {:>12} {:>14} {:>12} {:>10} {:>10}",
+        "scheme", "density", "uniq/filter", "arith-reduct", "ops(M)", "time(ms)", "max|err|"
+    );
+
+    for scheme in [Scheme::Binary, Scheme::ternary_default(), Scheme::sb_default()] {
+        let q = quant::quantize(&latent, scheme, None);
+        let stats = filter_repetition_stats(&q.values, geom.k);
+        let plan = plan_layer(&q, geom, EngineConfig::default());
+        let dense = conv2d_gemm(&x, &q.values, geom.stride, geom.padding);
+        let out = execute_conv2d(&plan, &x);
+        let err = dense.max_abs_diff(&out);
+        let t = bench("conv", 1, 10, || {
+            std::hint::black_box(execute_conv2d(&plan, &x));
+        });
+        println!(
+            "{:<14} {:>8.2} {:>12.2} {:>13.1}x {:>12.2} {:>10.2} {:>10.2e}",
+            scheme.name(),
+            stats.density,
+            stats.mean_unique_values,
+            arithmetic_reduction(&plan),
+            plan.op_counts().total() as f64 / 1e6,
+            t.min_ms(),
+            err,
+        );
+    }
+
+    // the paper's §6 bit-accounting: signed-binary stores one bit per
+    // weight plus one sign bit per filter
+    let q = quant::quantize(&latent, Scheme::sb_default(), None);
+    let packed = PackedSignedBinary::pack(&q);
+    println!(
+        "\nsigned-binary packed footprint: {} bits = R*S*C*K + K = {} (paper §6); {} of {} weights effectual",
+        packed.weight_bits(),
+        geom.r * geom.s * geom.c * geom.k + geom.k,
+        packed.effectual(),
+        geom.weight_count(),
+    );
+    println!("\nnext: `make artifacts` then `cargo run --release --example train_e2e`");
+}

@@ -1,0 +1,43 @@
+//! Serving validation: load a signed-binary model artifact into the
+//! coordinator (router + dynamic batcher + PJRT workers) and serve a
+//! synthetic request stream, reporting latency and throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_quantized`
+//! Flags: --model resnet20_sb --requests 256 --replicas 2 --max-batch 8
+//!        --ckpt out/resnet20_sb.ckpt   (serve trained weights)
+
+use plum::cli::args::Args;
+use plum::config::RunConfig;
+use plum::coordinator::ModelRegistry;
+use plum::experiments::serving;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = RunConfig::resolve(&args)?;
+    let model = args.get_or("model", "resnet20_sb").to_string();
+    let requests = args.get_usize("requests", 256);
+    let ckpt = args.get("ckpt").map(std::path::PathBuf::from);
+
+    // registry: what are we deploying and how big is it on the wire?
+    let reg = ModelRegistry::scan(&cfg.artifacts)?;
+    if let Some(e) = reg.by_name(&model) {
+        println!(
+            "deploying {}: scheme={} params={:.2}M packed-weight footprint={} KiB (paper §6 one-bit accounting)",
+            e.name,
+            e.scheme,
+            e.param_count as f64 / 1e6,
+            e.weight_bits / 8 / 1024
+        );
+    }
+
+    let report = serving::drive(&cfg, &model, requests, ckpt)?;
+    println!(
+        "\n{} requests, {} replica(s), batch<= {} wait<={}ms:",
+        report.requests, report.replicas, cfg.max_batch, cfg.max_wait_ms
+    );
+    println!(
+        "  throughput {:.1} req/s | latency mean {:.1} ms p95 {:.1} ms | wall {:.2}s",
+        report.throughput_rps, report.mean_ms, report.p95_ms, report.wall_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,349 @@
+"""AOT emitter: lower every configured model to HLO text + manifest.
+
+For each :class:`common.ModelConfig` this writes into ``--out-dir``:
+
+* ``<name>.train.hlo.txt`` — one optimizer step (fwd + bwd + Adam + BN
+  update), inputs/outputs in manifest order.
+* ``<name>.infer.hlo.txt`` — eval-mode forward; for scheme 'sb' the
+  quantized convs route through the L1 Pallas signed-binary GEMM.
+* ``<name>.manifest.json`` — exact positional input/output signature
+  (group, name, shape, dtype), config echo, conv-layer geometry for the
+  rust repetition engine, parameter counts.
+* ``<name>.params.bin`` — initial params ++ bn ++ consts as raw little-
+  endian f32 in manifest order (Adam m/v start at zero rust-side).
+
+Plus once per build: ``index.json`` (experiment-id -> artifact names) and
+``golden_quant.json`` (cross-language quantizer fixtures for rust tests).
+
+HLO **text** (never ``.serialize()``) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import common, model
+from .kernels import ref
+from .kernels import signed_binary as sbk
+
+F32 = "f32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig_entries(group: str, d: dict) -> list:
+    return [
+        {
+            "group": group,
+            "name": k,
+            "shape": list(d[k].shape),
+            "dtype": F32,
+        }
+        for k in sorted(d.keys())
+    ]
+
+
+def _scalar(name: str, group: str = "hyper") -> dict:
+    return {"group": group, "name": name, "shape": [], "dtype": F32}
+
+
+def build_config_set(which: str):
+    """The artifact grid. Keyed so each unique config is emitted once;
+    index.json maps experiment ids to the config names they consume."""
+    C = common.ModelConfig
+    cfgs: dict = {}
+
+    def add(cfg):
+        cfgs[cfg.name] = cfg
+        return cfg.name
+
+    index: dict = {}
+
+    # --- Table 1 / Figure 5 / E2E: cifar resnets, 4 schemes -----------------
+    t1_depths = [20] if which == "default" else [20, 32, 44, 56, 110]
+    index["table1"] = []
+    for d in t1_depths:
+        row = {}
+        for sch in ("fp", "binary", "ternary", "sb"):
+            row[sch] = add(C(name=f"resnet{d}_{sch}", depth=d, scheme=sch))
+        index["table1"].append({"depth": d, **row})
+    index["e2e"] = "resnet20_sb"
+
+    # --- resnet8 ablation grid (Tables 2-5, 8) ------------------------------
+    base = dict(arch="cifar_resnet", depth=8, image_size=16, batch_size=32,
+                scheme="sb")
+    index["table2"] = []
+    for p in (0.0, 0.25, 0.5, 0.75, 1.0):
+        nm = add(C(name=f"r8sb_p{int(p*100):03d}", p_pos=p, **base))
+        index["table2"].append({"p_pos": p, "cfg": nm})
+    index["table3"] = {
+        "enabled": "r8sb_p050",
+        "disabled": add(C(name="r8sb_noede", use_ede=False, **base)),
+    }
+    index["table4"] = {
+        "ct_c": "r8sb_p050",
+        "ct_c2": add(C(name="r8sb_g2", regions_per_filter=2, **base)),
+    }
+    index["table5"] = {
+        "d005": "r8sb_p050",
+        "d001": add(C(name="r8sb_d001", delta_frac=0.01, **base)),
+    }
+    index["table8a"] = {}
+    for bs in (16, 64, 128):
+        b2 = dict(base)
+        b2["batch_size"] = bs
+        index["table8a"][str(bs)] = add(C(name=f"r8sb_bs{bs}", **b2))
+    index["table8a"]["32"] = "r8sb_p050"
+    index["table8b"] = {"prelu": "r8sb_p050"}
+    for act in ("relu", "tanh", "lrelu"):
+        index["table8b"][act] = add(C(name=f"r8sb_{act}", act=act, **base))
+
+    # --- Table 6: SB vs FP on additional datasets ---------------------------
+    index["table6"] = []
+    for arch, ds, ncls, px in (
+        ("alexnet_small", "svhn-like", 10, 32),
+        ("vgg_small", "cifar-like", 10, 32),
+        ("resnet18", "cifar100-like", 100, 32),
+        ("resnet18", "tinyimagenet-like", 20, 48),
+    ):
+        wm = 0.25 if arch == "resnet18" else 0.5
+        pair = {}
+        for sch in ("sb", "fp"):
+            nm = add(C(name=f"{arch}_{ds.split('-')[0]}_{sch}", arch=arch,
+                       width_mult=wm, num_classes=ncls, image_size=px,
+                       scheme=sch))
+            pair[sch] = nm
+        index["table6"].append({"arch": arch, "dataset": ds, **pair})
+
+    # --- Table 7: SB vs B at comparable effectual params --------------------
+    index["table7"] = {
+        "depth": {
+            "sb_d32": add(C(name="resnet32_sb7", depth=32, scheme="sb")),
+            "b_d32": add(C(name="resnet32_b7", depth=32, scheme="binary")),
+            "b_d20": "resnet20_binary",
+        },
+        "width": {
+            "sb_w10": "resnet20_sb",
+            "b_w10": "resnet20_binary",
+            "b_w07": add(C(name="resnet20w07_b", depth=20, scheme="binary",
+                           width_mult=0.7)),
+        },
+    }
+
+    # --- Tables 10-12: imagenet-proxy ablations (resnet18 @48px) -----------
+    pbase = dict(arch="resnet18", width_mult=0.25, num_classes=20,
+                 image_size=48, scheme="sb", batch_size=32)
+    index["table10"] = {
+        "p100": add(C(name="r18p_p100", p_pos=1.0, **pbase)),
+        "p025": add(C(name="r18p_p025", p_pos=0.25, **pbase)),
+        "p050": add(C(name="r18p_p050", p_pos=0.5, **pbase)),
+    }
+    index["table11"] = {
+        "enabled": "r18p_p050",
+        "disabled": add(C(name="r18p_noede", use_ede=False, **pbase)),
+    }
+    index["table12"] = {
+        "d005": "r18p_p050",
+        "d001": add(C(name="r18p_d001", delta_frac=0.01, **pbase)),
+    }
+
+    # --- Table 9: latent-weight standardization strategies ------------------
+    index["table9"] = {
+        "none": "r8sb_p050",
+        "local": add(C(name="r8sb_stdlocal", standardize="local", **base)),
+        "global": add(C(name="r8sb_stdglobal", standardize="global", **base)),
+    }
+
+    # --- serving / figure 7 workload ---------------------------------------
+    index["serving"] = add(C(name="resnet18sb", arch="resnet18",
+                             num_classes=10, image_size=64, scheme="sb",
+                             batch_size=8))
+    return cfgs, index
+
+
+def emit_model(cfg: common.ModelConfig, out_dir: str,
+               train: bool = True) -> dict:
+    t0 = time.time()
+    params, bn, consts, qnames, conv_log = model.init(cfg, seed=0)
+    bs = cfg.batch_size
+    x_spec = jax.ShapeDtypeStruct(
+        (bs, cfg.in_channels, cfg.image_size, cfg.image_size), jnp.float32
+    )
+    y_spec = jax.ShapeDtypeStruct((bs,), jnp.int32)
+    sc = jax.ShapeDtypeStruct((), jnp.float32)
+    spec_of = lambda d: {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in d.items()}
+    p_s, bn_s, c_s = spec_of(params), spec_of(bn), spec_of(consts)
+
+    files = {}
+    if train:
+        step_fn = model.make_train_step(cfg, qnames)
+        lowered = jax.jit(step_fn, keep_unused=True).lower(
+            p_s, bn_s, c_s, p_s, p_s, x_spec, y_spec, sc, sc, sc
+        )
+        text = to_hlo_text(lowered)
+        files["train"] = f"{cfg.name}.train.hlo.txt"
+        with open(os.path.join(out_dir, files["train"]), "w") as f:
+            f.write(text)
+
+    infer_fn = model.make_infer(cfg, use_pallas=(cfg.scheme == "sb"))
+    lowered_i = jax.jit(infer_fn, keep_unused=True).lower(p_s, bn_s, c_s, x_spec)
+    text_i = to_hlo_text(lowered_i)
+    files["infer"] = f"{cfg.name}.infer.hlo.txt"
+    with open(os.path.join(out_dir, files["infer"]), "w") as f:
+        f.write(text_i)
+
+    # initial state blob: params ++ bn ++ consts, manifest order
+    blob = b"".join(
+        np.asarray(d[k], np.float32).tobytes()
+        for d in (params, bn, consts)
+        for k in sorted(d.keys())
+    )
+    files["params"] = f"{cfg.name}.params.bin"
+    with open(os.path.join(out_dir, files["params"]), "wb") as f:
+        f.write(blob)
+
+    total, qtotal, eff = model.param_counts(cfg, params, consts, qnames)
+    train_inputs = (
+        _sig_entries("params", params)
+        + _sig_entries("bn", bn)
+        + _sig_entries("consts", consts)
+        + _sig_entries("opt_m", params)
+        + _sig_entries("opt_v", params)
+        + [
+            {"group": "input", "name": "x",
+             "shape": list(x_spec.shape), "dtype": F32},
+            {"group": "input", "name": "y",
+             "shape": list(y_spec.shape), "dtype": "i32"},
+            _scalar("lr"), _scalar("step"), _scalar("progress"),
+        ]
+    )
+    train_outputs = (
+        [_scalar("loss", "metric"), _scalar("acc", "metric")]
+        + _sig_entries("params", params)
+        + _sig_entries("bn", bn)
+        + _sig_entries("opt_m", params)
+        + _sig_entries("opt_v", params)
+    )
+    infer_inputs = (
+        _sig_entries("params", params)
+        + _sig_entries("bn", bn)
+        + _sig_entries("consts", consts)
+        + [{"group": "input", "name": "x",
+            "shape": list(x_spec.shape), "dtype": F32}]
+    )
+    manifest = {
+        "name": cfg.name,
+        "config": cfg.to_json_dict(),
+        "files": files,
+        "has_train": train,
+        "train_inputs": train_inputs if train else [],
+        "train_outputs": train_outputs if train else [],
+        "infer_inputs": infer_inputs,
+        "infer_outputs": [
+            {"group": "output", "name": "logits",
+             "shape": [bs, cfg.num_classes], "dtype": F32}
+        ],
+        "quantized_weights": qnames,
+        "conv_layers": conv_log,
+        "param_count": total,
+        "quantized_param_count": qtotal,
+        "effectual_params_init": eff,
+    }
+    with open(os.path.join(out_dir, f"{cfg.name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {cfg.name}: {time.time()-t0:.1f}s "
+          f"(params={total}, eff_init={eff})", flush=True)
+    return manifest
+
+
+def emit_kernel_artifact(out_dir: str):
+    """Standalone L1 sb_matmul artifact for the rust runtime micro-bench."""
+    m, k, n = 256, 1152, 128
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    u = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    b = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(lambda a, u, b: sbk.sb_matmul(a, u, b)).lower(a, u, b)
+    with open(os.path.join(out_dir, "sb_matmul.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    with open(os.path.join(out_dir, "sb_matmul.manifest.json"), "w") as f:
+        json.dump({
+            "name": "sb_matmul",
+            "inputs": [
+                {"name": "a", "shape": [m, k], "dtype": F32},
+                {"name": "u", "shape": [k, n], "dtype": F32},
+                {"name": "beta", "shape": [n], "dtype": F32},
+            ],
+            "outputs": [{"name": "o", "shape": [m, n], "dtype": F32}],
+        }, f, indent=1)
+    print("  sb_matmul kernel artifact", flush=True)
+
+
+def emit_golden(out_dir: str):
+    """Cross-language quantizer fixtures consumed by rust unit tests."""
+    rng = np.random.RandomState(7)
+    cases = []
+    for scheme in ("binary", "ternary", "sb"):
+        for shape in ((4, 3, 3, 3), (6, 8, 1, 1)):
+            w = rng.randn(*shape).astype(np.float32)
+            wj = jnp.asarray(w)
+            beta = ref.default_beta(shape[0], 0.5)
+            if scheme == "binary":
+                wq = ref.binary_quantize_ref(wj)
+            elif scheme == "ternary":
+                wq = ref.ternary_quantize_ref(wj, 0.05)
+            else:
+                wq = ref.signed_binary_quantize_ref(wj, beta, 0.05)
+            cases.append({
+                "scheme": scheme,
+                "shape": list(shape),
+                "delta_frac": 0.05,
+                "w": [float(v) for v in w.reshape(-1)],
+                "beta": [float(v) for v in np.asarray(beta)],
+                "wq": [float(v) for v in np.asarray(wq).reshape(-1)],
+            })
+    with open(os.path.join(out_dir, "golden_quant.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+    print("  golden_quant fixtures", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", default="default", choices=["default", "full"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated config names to (re)emit")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfgs, index = build_config_set(args.set)
+    only = set(args.only.split(",")) if args.only else None
+    print(f"emitting {len(cfgs)} configs to {args.out_dir}", flush=True)
+    for name, cfg in cfgs.items():
+        if only and name not in only:
+            continue
+        emit_model(cfg, args.out_dir, train=True)
+    emit_kernel_artifact(args.out_dir)
+    emit_golden(args.out_dir)
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print("index.json written", flush=True)
+
+
+if __name__ == "__main__":
+    main()

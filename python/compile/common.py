@@ -1,0 +1,82 @@
+"""Shared model/artifact configuration for the PLUM compile stack.
+
+A :class:`ModelConfig` fully determines one AOT artifact pair
+(`<name>.train.hlo.txt` + `<name>.infer.hlo.txt` + manifest + init params):
+architecture, quantization scheme and its hyper-parameters, activation,
+input geometry and batch size are all baked into the lowered HLO, exactly
+like the paper trains one network per configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+SCHEMES = ("fp", "binary", "ternary", "sb")
+ACTS = ("relu", "prelu", "tanh", "lrelu")
+ARCHS = ("cifar_resnet", "resnet18", "vgg_small", "alexnet_small")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One trainable/deployable network configuration."""
+
+    name: str
+    arch: str = "cifar_resnet"
+    depth: int = 20                 # cifar_resnet: 6n+2
+    width_mult: float = 1.0
+    num_classes: int = 10
+    image_size: int = 32
+    in_channels: int = 3
+    batch_size: int = 32
+    scheme: str = "sb"              # fp | binary | ternary | sb
+    delta_frac: float = 0.05        # Delta = delta_frac * max|W| (paper)
+    p_pos: float = 0.5              # fraction of {0,+1} regions (Table 2)
+    regions_per_filter: int = 1     # G: C_t = C / G (Table 4)
+    use_ede: bool = True            # adapted EDE in backward (Table 3)
+    act: str = "prelu"              # non-linearity (Table 8b)
+    ede_t_min: float = 0.1
+    ede_t_max: float = 10.0
+    # latent-weight standardization before quantization (Table 9):
+    # "none" | "local" (per signed-binary region) | "global" (per layer)
+    standardize: str = "none"
+
+    def __post_init__(self):
+        assert self.scheme in SCHEMES, self.scheme
+        assert self.act in ACTS, self.act
+        assert self.arch in ARCHS, self.arch
+        assert self.standardize in ("none", "local", "global"), self.standardize
+        if self.arch == "cifar_resnet":
+            assert (self.depth - 2) % 6 == 0, f"depth {self.depth} != 6n+2"
+
+    def to_json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def cifar_stage_widths(width_mult: float) -> List[int]:
+    """ResNet (CIFAR) stage widths, optionally width-scaled (Table 7b)."""
+    return [max(4, int(round(w * width_mult))) for w in (16, 32, 64)]
+
+
+def resnet18_stage_widths(width_mult: float) -> List[int]:
+    return [max(8, int(round(w * width_mult))) for w in (64, 128, 256, 512)]
+
+
+def vgg_small_plan(width_mult: float) -> List[Tuple[str, int]]:
+    """VGG** (Cai et al. 2017 derivative): conv pairs + pools."""
+    w = lambda c: max(8, int(round(c * width_mult)))
+    return [
+        ("conv", w(128)), ("conv", w(128)), ("pool", 0),
+        ("conv", w(256)), ("conv", w(256)), ("pool", 0),
+        ("conv", w(512)), ("conv", w(512)), ("pool", 0),
+    ]
+
+
+def alexnet_small_plan(width_mult: float) -> List[Tuple[str, int]]:
+    """AlexNet* (DoReFa svhn-digit derivative): small conv trunk."""
+    w = lambda c: max(8, int(round(c * width_mult)))
+    return [
+        ("conv", w(48)), ("pool", 0),
+        ("conv", w(64)), ("conv", w(64)), ("pool", 0),
+        ("conv", w(128)), ("conv", w(128)), ("pool", 0),
+    ]

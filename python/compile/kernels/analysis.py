@@ -1,0 +1,101 @@
+"""L1 performance analysis: VMEM footprint + MXU utilization estimates.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the
+Pallas kernel is optimized *structurally*: this module computes, for a
+given `sb_matmul` tiling (bm, bn, bk) and problem size, the quantities
+that determine real-TPU performance, and the AOT build asserts the
+default tiling respects them (see test_analysis.py):
+
+* VMEM working set: both pipeline buffers of each operand block plus the
+  resident output block must fit in VMEM (~16 MiB/core on TPUv4; we
+  budget half to leave room for Mosaic spills).
+* MXU shape efficiency: blocks should be multiples of the 128x128
+  systolic array; utilization = prod(effective/padded) per dimension.
+* Arithmetic intensity (FLOPs per HBM byte) for the roofline position:
+  the {0, alpha}-bitmap GEMM streams A and U once per grid step with the
+  sign epilogue fused, so intensity ~ 2*bm*bn*bk / (bm*bk + bk*bn +
+  bm*bn) elements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+MXU = 128                      # systolic array dimension (TPUv3/v4)
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM, TPUv4
+VMEM_BUDGET = VMEM_BYTES // 2  # leave headroom for Mosaic
+F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class TileAnalysis:
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: int
+    vmem_fraction: float
+    mxu_utilization: float
+    arithmetic_intensity: float
+    fits: bool
+
+
+def _pad(x: int, to: int) -> int:
+    return -(-x // to) * to
+
+
+def analyze_tiling(bm: int, bn: int, bk: int, dtype_bytes: int = F32) -> TileAnalysis:
+    """Analyze one (bm, bn, bk) block choice for the sb_matmul kernel."""
+    # double-buffered A and U blocks (pallas pipeline), resident O block,
+    # plus the 1 x bn sign row
+    vmem = dtype_bytes * (2 * bm * bk + 2 * bk * bn + bm * bn + bn)
+    mxu_util = (bm / _pad(bm, MXU)) * (bn / _pad(bn, MXU)) * (bk / _pad(bk, 8))
+    flops = 2.0 * bm * bn * bk
+    traffic = dtype_bytes * (bm * bk + bk * bn)  # O stays resident
+    return TileAnalysis(
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        vmem_bytes=vmem,
+        vmem_fraction=vmem / VMEM_BYTES,
+        mxu_utilization=mxu_util,
+        arithmetic_intensity=flops / traffic,
+        fits=vmem <= VMEM_BUDGET,
+    )
+
+
+def analyze_conv_as_gemm(n: int, c: int, h: int, w: int, k: int, r: int, s: int,
+                         bm: int, bn: int, bk: int) -> dict:
+    """Map a conv layer to the kernel GEMM and report padding waste from
+    the real problem dims (M = N*OH*OW, K = C*R*S, N = K_filters)."""
+    m_dim, k_dim, n_dim = n * h * w, c * r * s, k
+    t = analyze_tiling(bm, bn, bk)
+    grid = (-(-m_dim // bm), -(-n_dim // bn), -(-k_dim // bk))
+    padded = grid[0] * bm * grid[1] * bn * grid[2] * bk
+    return {
+        "tile": t,
+        "grid": grid,
+        "pad_waste": 1.0 - (m_dim * k_dim * n_dim) / padded,
+        "kernel_flops": 2.0 * m_dim * k_dim * n_dim,
+    }
+
+
+def default_tiling_report() -> TileAnalysis:
+    """The kernel's shipped default (DEFAULT_BM/BN/BK in signed_binary.py)."""
+    from . import signed_binary as sbk
+
+    return analyze_tiling(sbk.DEFAULT_BM, sbk.DEFAULT_BN, sbk.DEFAULT_BK)
+
+
+def best_tiling(max_candidates=(128, 256, 512)) -> TileAnalysis:
+    """Exhaustive small search: the highest-arithmetic-intensity tiling
+    that fits the VMEM budget at full MXU utilization."""
+    best = None
+    for bm in max_candidates:
+        for bn in max_candidates:
+            for bk in max_candidates:
+                t = analyze_tiling(bm, bn, bk)
+                if not t.fits or t.mxu_utilization < 0.999:
+                    continue
+                if best is None or t.arithmetic_intensity > best.arithmetic_intensity:
+                    best = t
+    return best

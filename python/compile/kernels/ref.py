@@ -1,0 +1,223 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy / lax ops only. pytest asserts allclose
+between kernel and oracle across shape/dtype sweeps (hypothesis-style).
+
+Weight layout convention is OIHW: ``w[K, C, R, S]`` with K output filters,
+C input channels, RxS spatial kernel. Activations are NCHW.
+
+Quantization semantics follow the paper:
+
+* binary   — BWN-style: ``sign(w) * alpha`` with per-filter
+  ``alpha = mean(|w|)`` (Rastegari et al., 2016).
+* ternary  — TWN-style threshold: ``Delta = delta_frac * max(|w|)`` per
+  filter; values above +Delta -> +alpha, below -Delta -> -alpha, else 0,
+  with ``alpha = mean(|w|) over effectual elements`` (Li et al., 2016;
+  Zhu et al., 2016 for the Delta rule the paper adopts).
+* signed-binary (PLUM) — per *region* (default: per filter, ``C_t = C``)
+  one of two sparse one-bit value sets: ``{0, +alpha}`` when the region's
+  sign factor ``beta = +1`` and ``{0, -alpha}`` when ``beta = -1``
+  (paper eq. (1)-(3)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Quantizers (forward semantics only — backward/STE lives in compile.quant)
+# ---------------------------------------------------------------------------
+
+
+def _per_filter(w: jnp.ndarray, fn) -> jnp.ndarray:
+    """Apply ``fn`` over each filter (leading axis), returns [K, 1, 1, 1]."""
+    k = w.shape[0]
+    flat = w.reshape(k, -1)
+    return fn(flat).reshape(k, 1, 1, 1)
+
+
+def binary_quantize_ref(w: jnp.ndarray) -> jnp.ndarray:
+    """BWN binary quantization: sign(w) * mean(|w|) per filter."""
+    alpha = _per_filter(w, lambda f: jnp.mean(jnp.abs(f), axis=1))
+    # sign(0) := +1 so every weight stays effectual (binary is dense).
+    s = jnp.where(w >= 0, 1.0, -1.0).astype(w.dtype)
+    return s * alpha
+
+
+def ternary_delta_ref(w: jnp.ndarray, delta_frac: float = 0.05) -> jnp.ndarray:
+    """Per-filter threshold Delta = delta_frac * max(|w|) (Zhu et al.)."""
+    return _per_filter(w, lambda f: delta_frac * jnp.max(jnp.abs(f), axis=1))
+
+
+def ternary_quantize_ref(w: jnp.ndarray, delta_frac: float = 0.05) -> jnp.ndarray:
+    """TWN ternary quantization with the paper's Delta rule."""
+    delta = ternary_delta_ref(w, delta_frac)
+    mask = (jnp.abs(w) > delta).astype(w.dtype)
+    denom = jnp.maximum(_per_filter(mask, lambda f: jnp.sum(f, axis=1)), 1.0)
+    alpha = _per_filter((jnp.abs(w) * mask), lambda f: jnp.sum(f, axis=1)) / denom
+    return jnp.where(w > delta, alpha, jnp.where(w < -delta, -alpha, 0.0)).astype(
+        w.dtype
+    )
+
+
+def sb_region_reshape(w: jnp.ndarray, regions_per_filter: int) -> jnp.ndarray:
+    """[K,C,R,S] -> [K*G, C/G, R, S]: split C into G contiguous regions.
+
+    This is the paper's intra-filter region ``R x S x C_t`` with
+    ``C_t = C / G`` (Table 4 uses G in {1, 2}). G=1 is inter-filter
+    signed binary (``C_t = C``), the PLUM default.
+    """
+    k, c, r, s = w.shape
+    assert c % regions_per_filter == 0, (c, regions_per_filter)
+    ct = c // regions_per_filter
+    return w.reshape(k * regions_per_filter, ct, r, s)
+
+
+def sb_region_unshape(
+    wq: jnp.ndarray, k: int, c: int, regions_per_filter: int
+) -> jnp.ndarray:
+    """Inverse of :func:`sb_region_reshape`."""
+    g = regions_per_filter
+    _, ct, r, s = wq.shape
+    assert ct * g == c
+    return wq.reshape(k, c, r, s)
+
+
+def signed_binary_quantize_ref(
+    w: jnp.ndarray,
+    beta: jnp.ndarray,
+    delta_frac: float = 0.05,
+    regions_per_filter: int = 1,
+) -> jnp.ndarray:
+    """PLUM signed-binary quantization (paper eq. 3).
+
+    Args:
+      w:    latent full-precision weights [K, C, R, S].
+      beta: per-region sign factors in {+1.0, -1.0}, shape
+            [K * regions_per_filter].
+      delta_frac: Delta = delta_frac * max(|w_region|).
+      regions_per_filter: G regions along C (C_t = C / G).
+
+    Returns quantized weights, same shape as ``w``; each region holds values
+    in {0, +alpha} or {0, -alpha} according to its beta.
+    """
+    k, c, r, s = w.shape
+    wr = sb_region_reshape(w, regions_per_filter)
+    b = beta.reshape(-1, 1, 1, 1).astype(w.dtype)
+    delta = _per_filter(wr, lambda f: delta_frac * jnp.max(jnp.abs(f), axis=1))
+    pos_eff = (wr >= delta) & (b >= 0)
+    neg_eff = (wr <= -delta) & (b < 0)
+    eff = (pos_eff | neg_eff).astype(w.dtype)
+    denom = jnp.maximum(_per_filter(eff, lambda f: jnp.sum(f, axis=1)), 1.0)
+    alpha = _per_filter(jnp.abs(wr) * eff, lambda f: jnp.sum(f, axis=1)) / denom
+    wq = jnp.where(pos_eff, alpha, jnp.where(neg_eff, -alpha, 0.0)).astype(w.dtype)
+    return sb_region_unshape(wq, k, c, regions_per_filter)
+
+
+def default_beta(num_regions: int, p_pos: float = 0.5) -> jnp.ndarray:
+    """Deterministic region->sign assignment, first ``p_pos`` fraction +1.
+
+    The paper fixes the assignment randomly before training and never
+    changes it; a fixed prefix split is an equivalent static assignment
+    (interleaving is irrelevant because regions never interact inside the
+    quantizer) and keeps the artifact deterministic.
+    """
+    n_pos = int(round(num_regions * p_pos))
+    return jnp.concatenate(
+        [
+            jnp.ones((n_pos,), jnp.float32),
+            -jnp.ones((num_regions - n_pos,), jnp.float32),
+        ]
+    )
+
+
+# ---------------------------------------------------------------------------
+# EDE (Error Decay Estimator) — backward-pass oracle (paper §3.2.3)
+# ---------------------------------------------------------------------------
+
+
+def ede_t_k(progress, t_min: float = 0.1, t_max: float = 10.0):
+    """t = Tmin * 10^(progress * log10(Tmax/Tmin)), k = max(1/t, 1)."""
+    t = t_min * jnp.power(10.0, progress * jnp.log10(t_max / t_min))
+    k = jnp.maximum(1.0 / t, 1.0)
+    return t, k
+
+
+def ede_gprime_ref(
+    w: jnp.ndarray,
+    beta: jnp.ndarray,
+    delta: jnp.ndarray,
+    t,
+    k,
+    regions_per_filter: int = 1,
+) -> jnp.ndarray:
+    """g'(x) = k t (1 - tanh^2(t (x -+ Delta))), centred at the region's
+    own threshold: +Delta for {0,1} regions, -Delta for {0,-1} regions."""
+    kk, c, r, s = w.shape
+    wr = sb_region_reshape(w, regions_per_filter)
+    b = beta.reshape(-1, 1, 1, 1).astype(w.dtype)
+    centre = jnp.where(b >= 0, delta, -delta)
+    g = k * t * (1.0 - jnp.tanh(t * (wr - centre)) ** 2)
+    return sb_region_unshape(g, kk, c, regions_per_filter)
+
+
+# ---------------------------------------------------------------------------
+# Conv / GEMM oracles
+# ---------------------------------------------------------------------------
+
+
+def conv2d_ref(
+    x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, padding: int = 1
+) -> jnp.ndarray:
+    """NCHW x OIHW convolution."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def sb_conv2d_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    beta: jnp.ndarray,
+    delta_frac: float = 0.05,
+    stride: int = 1,
+    padding: int = 1,
+    regions_per_filter: int = 1,
+) -> jnp.ndarray:
+    """Quantize-then-convolve oracle for the signed-binary conv block."""
+    wq = signed_binary_quantize_ref(w, beta, delta_frac, regions_per_filter)
+    return conv2d_ref(x, wq, stride, padding)
+
+
+def sb_matmul_ref(a: jnp.ndarray, u: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the signed-binary GEMM hot-spot.
+
+    ``a [M, K] @ (u [K, N] * beta [N])`` where ``u`` is the {0, alpha}
+    magnitude bitmap and ``beta`` the per-column (per-filter) sign. The
+    kernel computes ``(a @ u) * beta`` — the matmul runs on the
+    repetition-maximal bitmap, the sign is a scalar epilogue.
+    """
+    return (a @ u) * beta[None, :]
+
+
+def im2col_ref(x: jnp.ndarray, r: int, s: int, stride: int, padding: int) -> jnp.ndarray:
+    """NCHW -> patch matrix [N*OH*OW, C*R*S] matching tensor::im2col in rust."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    oh = (h + 2 * padding - r) // stride + 1
+    ow = (w + 2 * padding - s) // stride + 1
+    cols = []
+    for i in range(r):
+        for j in range(s):
+            patch = xp[:, :, i : i + stride * oh : stride, j : j + stride * ow : stride]
+            cols.append(patch.reshape(n, c, oh * ow))
+    # [R*S, N, C, OH*OW] -> [N, OH*OW, C, R*S] -> [N*OH*OW, C*R*S]
+    stacked = jnp.stack(cols, axis=0)
+    out = stacked.transpose(1, 3, 2, 0).reshape(n * oh * ow, c * r * s)
+    return out

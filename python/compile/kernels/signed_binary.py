@@ -1,0 +1,278 @@
+"""L1 Pallas kernels for PLUM signed-binary inference/training hot-spots.
+
+Kernels are authored for a TPU-like memory hierarchy and validated on CPU
+with ``interpret=True`` (real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot run). See DESIGN.md §Hardware-Adaptation for the
+paper->TPU mapping; the short version:
+
+* PLUM's CPU engine tiles the dot product so one processing step sees a
+  single signed-binary quantization function. The Pallas analogue: the
+  GEMM grid is tiled (bm, bn, bk) so each ``u``-block (the {0, alpha}
+  magnitude bitmap) belongs to filters whose sign factor is constant over
+  the tile column; the sign is applied as a scalar epilogue *after* the
+  MXU contraction, so the inner matmul only ever sees the
+  repetition-maximal bitmap.
+* VMEM budget per grid step (f32): bm*bk + bk*bn + bm*bn floats. The
+  default (128, 128, 128) uses 192 KiB — comfortably inside the ~16 MiB
+  VMEM of a TPUv4 core, leaving room for double-buffered HBM streaming.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. Multiples of the 128x128 MXU systolic array on real TPUs;
+# tests shrink them to exercise multi-step grids on tiny shapes.
+#
+# §Perf (L1 iteration 1): the original (128, 128, 128) tiling had
+# arithmetic intensity 32 FLOP/byte — HBM-bound on any recent TPU
+# (roofline knee ~ 240 for TPUv4 f32). (512, 256, 128) keeps full MXU
+# utilization and only 6% of VMEM while raising intensity to 85
+# FLOP/byte; bn stays modest because serving-model filter counts top out
+# at 512 and a wider bn would burn the gain on N-padding. See
+# kernels/analysis.py and EXPERIMENTS.md §Perf.
+DEFAULT_BM = 512
+DEFAULT_BN = 256
+DEFAULT_BK = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Quantization kernels (elementwise over filter-major blocks)
+# ---------------------------------------------------------------------------
+
+
+def _sb_quantize_kernel(w_ref, beta_ref, delta_ref, alpha_ref, o_ref):
+    """One grid step quantizes a [bk_filters, elems] block of latent weights.
+
+    beta / delta / alpha are per-filter scalars broadcast along the element
+    axis; the block never mixes the two quantization functions on a single
+    filter row — the kernel-level embodiment of "a single processing step
+    sees one signed-binary quantization function".
+    """
+    w = w_ref[...]
+    beta = beta_ref[...]
+    delta = delta_ref[...]
+    alpha = alpha_ref[...]
+    pos = jnp.logical_and(w >= delta, beta >= 0)
+    neg = jnp.logical_and(w <= -delta, beta < 0)
+    o_ref[...] = jnp.where(pos, alpha, jnp.where(neg, -alpha, 0.0)).astype(w.dtype)
+
+
+def sb_quantize(
+    w2d: jnp.ndarray,
+    beta: jnp.ndarray,
+    delta: jnp.ndarray,
+    alpha: jnp.ndarray,
+    block_rows: int = 8,
+) -> jnp.ndarray:
+    """Pallas signed-binary quantizer over filter-major weights.
+
+    Args:
+      w2d:   latent weights flattened per region, [G, E] (G regions, E
+             elements per region = C_t * R * S).
+      beta:  [G] sign factor per region (+1 / -1).
+      delta: [G] threshold per region.
+      alpha: [G] scale magnitude per region.
+      block_rows: grid tile along G.
+    Returns [G, E] quantized weights.
+    """
+    g, e = w2d.shape
+    bg = min(block_rows, g)
+    gp = _cdiv(g, bg) * bg
+    pad = lambda v: jnp.pad(v.reshape(g, 1), ((0, gp - g), (0, 0)))
+    out = pl.pallas_call(
+        _sb_quantize_kernel,
+        grid=(gp // bg,),
+        in_specs=[
+            pl.BlockSpec((bg, e), lambda i: (i, 0)),
+            pl.BlockSpec((bg, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bg, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bg, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bg, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, e), w2d.dtype),
+        interpret=True,
+    )(jnp.pad(w2d, ((0, gp - g), (0, 0))), pad(beta), pad(delta), pad(alpha))
+    return out[:g]
+
+
+def _ternary_quantize_kernel(w_ref, delta_ref, alpha_ref, o_ref):
+    w = w_ref[...]
+    delta = delta_ref[...]
+    alpha = alpha_ref[...]
+    o_ref[...] = jnp.where(
+        w > delta, alpha, jnp.where(w < -delta, -alpha, 0.0)
+    ).astype(w.dtype)
+
+
+def ternary_quantize(
+    w2d: jnp.ndarray, delta: jnp.ndarray, alpha: jnp.ndarray, block_rows: int = 8
+) -> jnp.ndarray:
+    """Pallas ternary quantizer (baseline), filter-major [K, E]."""
+    g, e = w2d.shape
+    bg = min(block_rows, g)
+    gp = _cdiv(g, bg) * bg
+    pad = lambda v: jnp.pad(v.reshape(g, 1), ((0, gp - g), (0, 0)))
+    out = pl.pallas_call(
+        _ternary_quantize_kernel,
+        grid=(gp // bg,),
+        in_specs=[
+            pl.BlockSpec((bg, e), lambda i: (i, 0)),
+            pl.BlockSpec((bg, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bg, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bg, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, e), w2d.dtype),
+        interpret=True,
+    )(jnp.pad(w2d, ((0, gp - g), (0, 0))), pad(delta), pad(alpha))
+    return out[:g]
+
+
+def _binary_quantize_kernel(w_ref, alpha_ref, o_ref):
+    w = w_ref[...]
+    alpha = alpha_ref[...]
+    o_ref[...] = jnp.where(w >= 0, alpha, -alpha).astype(w.dtype)
+
+
+def binary_quantize(
+    w2d: jnp.ndarray, alpha: jnp.ndarray, block_rows: int = 8
+) -> jnp.ndarray:
+    """Pallas binary (BWN) quantizer, filter-major [K, E]."""
+    g, e = w2d.shape
+    bg = min(block_rows, g)
+    gp = _cdiv(g, bg) * bg
+    out = pl.pallas_call(
+        _binary_quantize_kernel,
+        grid=(gp // bg,),
+        in_specs=[
+            pl.BlockSpec((bg, e), lambda i: (i, 0)),
+            pl.BlockSpec((bg, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bg, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, e), w2d.dtype),
+        interpret=True,
+    )(
+        jnp.pad(w2d, ((0, gp - g), (0, 0))),
+        jnp.pad(alpha.reshape(g, 1), ((0, gp - g), (0, 0))),
+    )
+    return out[:g]
+
+
+# ---------------------------------------------------------------------------
+# Signed-binary GEMM — the inference hot-spot
+# ---------------------------------------------------------------------------
+
+
+def _sb_matmul_kernel(a_ref, u_ref, beta_ref, o_ref, *, k_steps: int):
+    """Grid (M/bm, N/bn, K/bk). Accumulate a_blk @ u_blk into the output
+    block (resident across the K steps because the out index_map ignores
+    k); on the last K step apply the per-column sign epilogue.
+
+    On a real TPU the ``a`` and ``u`` blocks stream HBM->VMEM double
+    buffered by the Pallas pipeline; the contraction hits the MXU with the
+    {0, alpha} bitmap, which is exactly PLUM's "repetition first, sign
+    later" schedule.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], u_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = (o_ref[...] * beta_ref[...]).astype(o_ref.dtype)
+
+
+def sb_matmul(
+    a: jnp.ndarray,
+    u: jnp.ndarray,
+    beta: jnp.ndarray,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jnp.ndarray:
+    """``(a @ u) * beta`` tiled for VMEM/MXU.
+
+    a [M, K] activation patches (im2col), u [K, N] magnitude bitmap in
+    {0, alpha_n}, beta [N] in {+1, -1}. Output [M, N].
+    """
+    m, kdim = a.shape
+    k2, n = u.shape
+    assert kdim == k2, (a.shape, u.shape)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, kdim)
+    # Zero-pad every dimension to a tile multiple: out-of-bounds reads in
+    # the Pallas pipeline are undefined (NaN under interpret=True) and a
+    # padded-K tail would poison the accumulator. Zero rows/cols are inert
+    # under the contraction, so padding + final slice is exact.
+    mp, np_, kp = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn, _cdiv(kdim, bk) * bk
+    a = jnp.pad(a, ((0, mp - m), (0, kp - kdim)))
+    u = jnp.pad(u, ((0, kp - kdim), (0, np_ - n)))
+    beta = jnp.pad(beta, ((0, np_ - n),), constant_values=1.0)
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_sb_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a, u, beta.reshape(1, np_))
+    return out[:m, :n]
+
+
+def sb_conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    beta: jnp.ndarray,
+    delta_frac: float = 0.05,
+    stride: int = 1,
+    padding: int = 1,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jnp.ndarray:
+    """Full signed-binary conv block: quantize (Pallas) -> im2col ->
+    sb_matmul (Pallas) -> reshape to NCHW.
+
+    Used by the L2 model so the hot-spot lowers into the same HLO module.
+    Inter-filter mode only (C_t = C): beta has one entry per filter.
+    """
+    from . import ref
+
+    kk, c, r, s = w.shape
+    nb, _, h, wd = x.shape
+    w2d = w.reshape(kk, c * r * s)
+    delta = delta_frac * jnp.max(jnp.abs(w2d), axis=1)
+    bcol = beta.reshape(kk, 1)
+    pos = jnp.logical_and(w2d >= delta[:, None], bcol >= 0)
+    neg = jnp.logical_and(w2d <= -delta[:, None], bcol < 0)
+    eff = jnp.logical_or(pos, neg).astype(w2d.dtype)
+    denom = jnp.maximum(jnp.sum(eff, axis=1), 1.0)
+    alpha = jnp.sum(jnp.abs(w2d) * eff, axis=1) / denom
+    wq2d = sb_quantize(w2d, beta, delta, alpha)
+    # magnitude bitmap + sign epilogue: u = |wq|^T, column sign = beta
+    u = jnp.abs(wq2d).T  # [C*R*S, K]
+    patches = ref.im2col_ref(x, r, s, stride, padding)  # [N*OH*OW, C*R*S]
+    out = sb_matmul(patches, u, beta, bm=bm, bn=bn, bk=bk)  # [N*OH*OW, K]
+    oh = (h + 2 * padding - r) // stride + 1
+    ow = (wd + 2 * padding - s) // stride + 1
+    return out.reshape(nb, oh * ow, kk).transpose(0, 2, 1).reshape(nb, kk, oh, ow)

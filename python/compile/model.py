@@ -1,0 +1,352 @@
+"""L2: JAX model definitions (fwd/bwd) for the PLUM reproduction.
+
+A single imperative graph-builder (:class:`Tape`) both *initializes*
+parameters (numpy RNG, deterministic per seed) and *applies* the network,
+so init and apply can never drift apart. Parameters, BN state and constant
+buffers (region sign factors ``beta``) live in flat ``name -> array``
+dicts; the AOT manifest records the sorted-name order, which is exactly
+jax's dict flattening order, so the rust runtime can marshal literals
+positionally.
+
+Architectures (paper §4):
+  * ``cifar_resnet`` — He et al. CIFAR ResNet, depth 6n+2, option-A
+    shortcuts; stem and final fc stay full-precision (paper supp. C).
+  * ``resnet18``     — basic-block ResNet-18 for 64px inputs with
+    projection shortcuts (quantized).
+  * ``vgg_small`` / ``alexnet_small`` — VGG** / AlexNet* derivatives used
+    in Table 6.
+
+Training follows the paper: Adam, no weight decay, latent weights clamped
+to [-1, 1] after every update (the clamp produces the +-1 peaks in
+Figure 6b), EDE schedule driven by a ``progress`` input in [0, 1].
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, quant
+from .kernels import ref
+from .kernels import signed_binary as sbk
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+class Tape:
+    """Builds and/or applies the network layer by layer.
+
+    mode == 'init' : creates parameters with a numpy RNG; input is zeros.
+    mode == 'apply': consumes params/bn/consts dicts; records BN updates.
+    """
+
+    def __init__(self, cfg: common.ModelConfig, mode: str, seed: int = 0,
+                 params=None, bn=None, consts=None, train=True,
+                 progress=None, use_pallas_infer=False):
+        self.cfg = cfg
+        self.mode = mode
+        self.rng = np.random.RandomState(seed)
+        self.params: Dict[str, jnp.ndarray] = params if params is not None else {}
+        self.bn: Dict[str, jnp.ndarray] = bn if bn is not None else {}
+        self.consts: Dict[str, jnp.ndarray] = consts if consts is not None else {}
+        self.new_bn: Dict[str, jnp.ndarray] = {}
+        self.train = train
+        self.progress = progress if progress is not None else jnp.float32(0.0)
+        self.use_pallas_infer = use_pallas_infer
+        self.idx = 0
+        self.quantized_names: List[str] = []
+        self.conv_log: List[dict] = []   # layer geometry for the manifest
+        self.quantizer = quant.make_quantizer(cfg)
+
+    # -- parameter plumbing -------------------------------------------------
+
+    def _next(self, kind: str) -> str:
+        name = f"{self.idx:03d}.{kind}"
+        self.idx += 1
+        return name
+
+    def _param(self, name: str, shape, init_fn):
+        if self.mode == "init":
+            self.params[name] = jnp.asarray(init_fn(shape), jnp.float32)
+        return self.params[name]
+
+    def _const(self, name: str, value_fn):
+        if self.mode == "init":
+            self.consts[name] = jnp.asarray(value_fn(), jnp.float32)
+        return self.consts[name]
+
+    def _he(self, shape):
+        fan_in = int(np.prod(shape[1:]))
+        return self.rng.randn(*shape).astype(np.float32) * np.sqrt(2.0 / fan_in)
+
+    # -- layers --------------------------------------------------------------
+
+    def conv(self, x, out_ch: int, ksize: int = 3, stride: int = 1,
+             quantized: bool = True):
+        """Conv2d NCHW/OIHW; quantized per cfg.scheme unless excluded."""
+        name = self._next("conv")
+        in_ch = x.shape[1]
+        pad = ksize // 2
+        if self.mode == "init":
+            self.conv_log.append(dict(
+                name=name, k=out_ch, c=int(in_ch), r=ksize, s=ksize,
+                stride=stride, padding=pad, h=int(x.shape[2]), w=int(x.shape[3]),
+                quantized=bool(quantized and self.cfg.scheme != "fp"),
+            ))
+        w = self._param(name + ".w", (out_ch, in_ch, ksize, ksize), self._he)
+        if quantized and self.cfg.scheme != "fp":
+            self.quantized_names.append(name + ".w")
+            g = self.cfg.regions_per_filter if self.cfg.scheme == "sb" else 1
+            beta = self._const(
+                name + ".beta",
+                lambda: ref.default_beta(out_ch * g, self.cfg.p_pos),
+            )
+            if (self.cfg.scheme == "sb" and not self.train
+                    and self.use_pallas_infer and g == 1):
+                # Inference hot path: the L1 Pallas signed-binary GEMM.
+                return sbk.sb_conv2d(
+                    x, w, beta, self.cfg.delta_frac, stride, pad
+                )
+            wq = self.quantizer(w, beta, self.progress)
+        else:
+            wq = w
+        return ref.conv2d_ref(x, wq, stride, pad)
+
+    def batch_norm(self, x):
+        name = self._next("bn")
+        c = x.shape[1]
+        gamma = self._param(name + ".gamma", (c,), lambda s: np.ones(s, np.float32))
+        bias = self._param(name + ".bias", (c,), lambda s: np.zeros(s, np.float32))
+        if self.mode == "init":
+            self.bn[name + ".mean"] = jnp.zeros((c,), jnp.float32)
+            self.bn[name + ".var"] = jnp.ones((c,), jnp.float32)
+        r_mean = self.bn[name + ".mean"]
+        r_var = self.bn[name + ".var"]
+        if self.train:
+            mean = jnp.mean(x, axis=(0, 2, 3))
+            var = jnp.var(x, axis=(0, 2, 3))
+            self.new_bn[name + ".mean"] = BN_MOMENTUM * r_mean + (1 - BN_MOMENTUM) * mean
+            self.new_bn[name + ".var"] = BN_MOMENTUM * r_var + (1 - BN_MOMENTUM) * var
+        else:
+            mean, var = r_mean, r_var
+            self.new_bn[name + ".mean"] = r_mean
+            self.new_bn[name + ".var"] = r_var
+        inv = jax.lax.rsqrt(var + BN_EPS)
+        shape = (1, -1, 1, 1)
+        return (x - mean.reshape(shape)) * (inv * gamma).reshape(shape) + bias.reshape(shape)
+
+    def activation(self, x):
+        act = self.cfg.act
+        if act == "relu":
+            return jax.nn.relu(x)
+        if act == "tanh":
+            return jnp.tanh(x)
+        if act == "lrelu":
+            return jax.nn.leaky_relu(x, 0.01)
+        # prelu: learned per-channel slope (He et al. 2015)
+        name = self._next("prelu")
+        c = x.shape[1]
+        a = self._param(name + ".a", (c,), lambda s: np.full(s, 0.25, np.float32))
+        return jnp.where(x >= 0, x, x * a.reshape(1, -1, 1, 1))
+
+    def avg_pool2(self, x):
+        return jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+        ) / 4.0
+
+    def max_pool2(self, x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+        )
+
+    def global_avg_pool(self, x):
+        return jnp.mean(x, axis=(2, 3))
+
+    def fc(self, x, out_dim: int):
+        name = self._next("fc")
+        in_dim = x.shape[-1]
+        w = self._param(
+            name + ".w", (in_dim, out_dim),
+            lambda s: self.rng.randn(*s).astype(np.float32) * 0.01,
+        )
+        b = self._param(name + ".b", (out_dim,), lambda s: np.zeros(s, np.float32))
+        return x @ w + b
+
+    # -- blocks ---------------------------------------------------------------
+
+    def basic_block(self, x, out_ch: int, stride: int, projection: bool):
+        """conv-bn-act-conv-bn + shortcut, then act."""
+        y = self.conv(x, out_ch, 3, stride)
+        y = self.batch_norm(y)
+        y = self.activation(y)
+        y = self.conv(y, out_ch, 3, 1)
+        y = self.batch_norm(y)
+        if stride != 1 or x.shape[1] != out_ch:
+            if projection:
+                sc = self.conv(x, out_ch, 1, stride)
+                sc = self.batch_norm(sc)
+            else:
+                # option-A: strided subsample + zero-pad channels (no params)
+                sc = x[:, :, ::stride, ::stride]
+                pad_c = out_ch - x.shape[1]
+                sc = jnp.pad(sc, ((0, 0), (0, pad_c), (0, 0), (0, 0)))
+        else:
+            sc = x
+        return self.activation(y + sc)
+
+    # -- whole nets ------------------------------------------------------------
+
+    def forward(self, x):
+        cfg = self.cfg
+        if cfg.arch == "cifar_resnet":
+            n = (cfg.depth - 2) // 6
+            widths = common.cifar_stage_widths(cfg.width_mult)
+            # stem is full precision (paper supp. C)
+            y = self.conv(x, widths[0], 3, 1, quantized=False)
+            y = self.batch_norm(y)
+            y = self.activation(y)
+            for si, w in enumerate(widths):
+                for bi in range(n):
+                    stride = 2 if (si > 0 and bi == 0) else 1
+                    y = self.basic_block(y, w, stride, projection=False)
+            y = self.global_avg_pool(y)
+            return self.fc(y, cfg.num_classes)
+        if cfg.arch == "resnet18":
+            widths = common.resnet18_stage_widths(cfg.width_mult)
+            y = self.conv(x, widths[0], 3, 1, quantized=False)
+            y = self.batch_norm(y)
+            y = self.activation(y)
+            for si, w in enumerate(widths):
+                for bi in range(2):
+                    stride = 2 if (si > 0 and bi == 0) else 1
+                    y = self.basic_block(y, w, stride, projection=True)
+            y = self.global_avg_pool(y)
+            return self.fc(y, cfg.num_classes)
+        if cfg.arch in ("vgg_small", "alexnet_small"):
+            plan = (common.vgg_small_plan(cfg.width_mult)
+                    if cfg.arch == "vgg_small"
+                    else common.alexnet_small_plan(cfg.width_mult))
+            y = x
+            first_conv = True
+            for kind, ch in plan:
+                if kind == "pool":
+                    y = self.max_pool2(y)
+                else:
+                    y = self.conv(y, ch, 3, 1, quantized=not first_conv)
+                    y = self.batch_norm(y)
+                    y = self.activation(y)
+                    first_conv = False
+            y = self.global_avg_pool(y)
+            return self.fc(y, cfg.num_classes)
+        raise ValueError(cfg.arch)
+
+
+# ---------------------------------------------------------------------------
+# init / apply / loss / train step
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: common.ModelConfig, seed: int = 0):
+    """Create (params, bn_state, consts, quantized_names, conv_log)."""
+    tape = Tape(cfg, "init", seed=seed, train=True)
+    x = jnp.zeros((1, cfg.in_channels, cfg.image_size, cfg.image_size), jnp.float32)
+    tape.forward(x)
+    return tape.params, tape.bn, tape.consts, tape.quantized_names, tape.conv_log
+
+
+def apply_model(cfg, params, bn, consts, x, train: bool, progress,
+                use_pallas_infer: bool = False):
+    """Run the network; returns (logits, new_bn_state)."""
+    tape = Tape(cfg, "apply", params=params, bn=bn, consts=consts,
+                train=train, progress=progress,
+                use_pallas_infer=use_pallas_infer)
+    logits = tape.forward(x)
+    return logits, tape.new_bn
+
+
+def loss_and_acc(cfg, params, bn, consts, x, y, progress):
+    logits, new_bn = apply_model(cfg, params, bn, consts, x, True, progress)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return loss, (acc, new_bn)
+
+
+def sorted_names(d: Dict[str, jnp.ndarray]) -> List[str]:
+    return sorted(d.keys())
+
+
+def make_train_step(cfg: common.ModelConfig, quantized_names: List[str]):
+    """Returns fn(params, bn, consts, m, v, x, y, lr, step, progress).
+
+    Outputs (loss, acc, params', bn', m', v'). Latent weights of quantized
+    convs are clamped to [-1, 1] after the Adam update (paper Fig. 6b).
+    All dicts flatten in sorted-key order — the manifest contract.
+    """
+    qset = frozenset(quantized_names)
+
+    def step_fn(params, bn, consts, m, v, x, y, lr, step, progress):
+        grad_fn = jax.value_and_grad(
+            lambda p: loss_and_acc(cfg, p, bn, consts, x, y, progress),
+            has_aux=True,
+        )
+        (loss, (acc, new_bn)), grads = grad_fn(params)
+        b1t = jnp.power(ADAM_B1, step)
+        b2t = jnp.power(ADAM_B2, step)
+        new_params, new_m, new_v = {}, {}, {}
+        for k in params:
+            g = grads[k]
+            mk = ADAM_B1 * m[k] + (1 - ADAM_B1) * g
+            vk = ADAM_B2 * v[k] + (1 - ADAM_B2) * g * g
+            mhat = mk / (1 - b1t)
+            vhat = vk / (1 - b2t)
+            p = params[k] - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+            if k in qset:
+                p = jnp.clip(p, -1.0, 1.0)
+            new_params[k] = p
+            new_m[k] = mk
+            new_v[k] = vk
+        return loss, acc, new_params, new_bn, new_m, new_v
+
+    return step_fn
+
+
+def make_infer(cfg: common.ModelConfig, use_pallas: bool = True):
+    """Returns fn(params, bn, consts, x) -> logits (eval mode)."""
+
+    def infer_fn(params, bn, consts, x):
+        logits, _ = apply_model(
+            cfg, params, bn, consts, x, False, jnp.float32(1.0),
+            use_pallas_infer=use_pallas,
+        )
+        return logits
+
+    return infer_fn
+
+
+def param_counts(cfg, params, consts, quantized_names):
+    """(total_params, quantized_params, effectual_estimate).
+
+    Effectual = non-zero after quantization of the *initial* weights; the
+    trained number is computed by the rust side from the checkpoint.
+    """
+    total = int(sum(int(np.prod(p.shape)) for p in params.values()))
+    qtotal, eff = 0, 0
+    qz = quant.make_quantizer(cfg)
+    for name in quantized_names:
+        w = params[name]
+        qtotal += int(np.prod(w.shape))
+        beta = consts.get(name.replace(".w", ".beta"))
+        if cfg.scheme == "fp":
+            eff += int(np.prod(w.shape))
+        else:
+            wq = qz(w, beta if beta is not None else jnp.zeros(()), jnp.float32(1.0))
+            eff += int(jnp.sum(jnp.abs(wq) > 0))
+    return total, qtotal, eff

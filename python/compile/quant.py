@@ -1,0 +1,192 @@
+"""Trainable quantizers (forward + backward) for PLUM and baselines.
+
+Each factory returns a differentiable ``q(w, beta, progress) -> wq``
+closure with a custom VJP implementing the paper's backward pass:
+
+* STE (paper eq. 4): gradient scaled by alpha on the effectual branch and
+  passed through (x1) on the ineffectual branch.
+* Adapted EDE (paper §3.2.3, Table 3): when enabled, the backward uses
+  ``g'(x) = k t (1 - tanh^2(t (x -+ Delta)))`` centred at the region's own
+  threshold (+Delta for {0,+1} regions, -Delta for {0,-1}), with
+  ``t = Tmin * 10^(progress * log10(Tmax/Tmin))`` and ``k = max(1/t, 1)``
+  driven by the training ``progress`` scalar in [0, 1].
+
+The *forward* pass routes through the L1 Pallas kernels so that quantize
+semantics in the train/infer HLO artifacts are the kernel's, not a copy.
+``beta`` is a constant buffer (the paper fixes region signs before
+training); its cotangent is zeroed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import signed_binary as sbk
+
+
+def _filter_stats_sb(w2d, beta, delta_frac):
+    """Per-region (delta, alpha) for signed-binary, filter-major [G, E]."""
+    delta = delta_frac * jnp.max(jnp.abs(w2d), axis=1)
+    bcol = beta.reshape(-1, 1)
+    pos = jnp.logical_and(w2d >= delta[:, None], bcol >= 0)
+    neg = jnp.logical_and(w2d <= -delta[:, None], bcol < 0)
+    eff = jnp.logical_or(pos, neg).astype(w2d.dtype)
+    denom = jnp.maximum(jnp.sum(eff, axis=1), 1.0)
+    alpha = jnp.sum(jnp.abs(w2d) * eff, axis=1) / denom
+    return delta, alpha
+
+
+def make_sb_quantizer(delta_frac: float, regions_per_filter: int,
+                      use_ede: bool, t_min: float = 0.1, t_max: float = 10.0,
+                      standardize: str = "none"):
+    """Signed-binary quantizer q(w[K,C,R,S], beta[K*G], progress) -> wq.
+
+    ``standardize`` (Table 9): "local" standardizes latent weights per
+    signed-binary region, "global" per layer, before thresholding.
+    """
+
+    g_regions = regions_per_filter
+
+    def _forward(w, beta):
+        k, c, r, s = w.shape
+        if standardize == "global":
+            w = (w - jnp.mean(w)) / (jnp.std(w) + 1e-8)
+        wr = ref.sb_region_reshape(w, g_regions)
+        if standardize == "local":
+            mu = jnp.mean(wr, axis=(1, 2, 3), keepdims=True)
+            sd = jnp.std(wr, axis=(1, 2, 3), keepdims=True) + 1e-8
+            wr = (wr - mu) / sd
+        w2d = wr.reshape(wr.shape[0], -1)
+        delta, alpha = _filter_stats_sb(w2d, beta, delta_frac)
+        wq2d = sbk.sb_quantize(w2d, beta, delta, alpha)
+        return ref.sb_region_unshape(
+            wq2d.reshape(wr.shape), k, c, g_regions
+        ), (delta, alpha)
+
+    @jax.custom_vjp
+    def q(w, beta, progress):
+        return _forward(w, beta)[0]
+
+    def q_fwd(w, beta, progress):
+        wq, (delta, alpha) = _forward(w, beta)
+        return wq, (w, beta, delta, alpha, progress)
+
+    def q_bwd(res, gout):
+        w, beta, delta, alpha, progress = res
+        k, c, r, s = w.shape
+        wr = ref.sb_region_reshape(w, g_regions)
+        gr = ref.sb_region_reshape(gout, g_regions)
+        bcol = beta.reshape(-1, 1, 1, 1)
+        dcol = delta.reshape(-1, 1, 1, 1)
+        acol = alpha.reshape(-1, 1, 1, 1)
+        if use_ede:
+            # EDE replaces the STE derivative entirely (IR-Net, adapted to
+            # the shifted centre +-Delta).
+            t, kk = ref.ede_t_k(progress, t_min, t_max)
+            centre = jnp.where(bcol >= 0, dcol, -dcol)
+            scale = kk * t * (1.0 - jnp.tanh(t * (wr - centre)) ** 2)
+        else:
+            # paper eq. (4): alpha-scaled on the effectual branch, 1x pass
+            # through otherwise.
+            pos = jnp.logical_and(wr > dcol, bcol >= 0)
+            neg = jnp.logical_and(wr < -dcol, bcol < 0)
+            scale = jnp.where(jnp.logical_or(pos, neg), acol, 1.0)
+        gw = ref.sb_region_unshape(gr * scale, k, c, g_regions)
+        return gw, jnp.zeros_like(beta), jnp.zeros_like(progress)
+
+    q.defvjp(q_fwd, q_bwd)
+    return q
+
+
+def make_binary_quantizer(use_ede: bool, t_min: float = 0.1, t_max: float = 10.0):
+    """BWN binary quantizer with clipped-STE / EDE backward."""
+
+    def _forward(w):
+        k = w.shape[0]
+        w2d = w.reshape(k, -1)
+        alpha = jnp.mean(jnp.abs(w2d), axis=1)
+        wq2d = sbk.binary_quantize(w2d, alpha)
+        return wq2d.reshape(w.shape), alpha
+
+    @jax.custom_vjp
+    def q(w, beta, progress):
+        return _forward(w)[0]
+
+    def q_fwd(w, beta, progress):
+        wq, alpha = _forward(w)
+        return wq, (w, alpha, beta, progress)
+
+    def q_bwd(res, gout):
+        w, alpha, beta, progress = res
+        acol = alpha.reshape(-1, 1, 1, 1)
+        if use_ede:
+            t, kk = ref.ede_t_k(progress, t_min, t_max)
+            scale = kk * t * (1.0 - jnp.tanh(t * w) ** 2)
+        else:
+            # clipped STE (BinaryConnect): pass-through inside [-1, 1],
+            # alpha-scaled like eq. (4)'s effectual branch.
+            scale = jnp.where(jnp.abs(w) <= 1.0, acol, 0.0)
+        return gout * scale, jnp.zeros_like(beta), jnp.zeros_like(progress)
+
+    q.defvjp(q_fwd, q_bwd)
+    return q
+
+
+def make_ternary_quantizer(delta_frac: float, use_ede: bool,
+                           t_min: float = 0.1, t_max: float = 10.0):
+    """TWN ternary quantizer with the paper's Delta rule."""
+
+    def _forward(w):
+        k = w.shape[0]
+        w2d = w.reshape(k, -1)
+        delta = delta_frac * jnp.max(jnp.abs(w2d), axis=1)
+        mask = (jnp.abs(w2d) > delta[:, None]).astype(w2d.dtype)
+        denom = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+        alpha = jnp.sum(jnp.abs(w2d) * mask, axis=1) / denom
+        wq2d = sbk.ternary_quantize(w2d, delta, alpha)
+        return wq2d.reshape(w.shape), (delta, alpha)
+
+    @jax.custom_vjp
+    def q(w, beta, progress):
+        return _forward(w)[0]
+
+    def q_fwd(w, beta, progress):
+        wq, (delta, alpha) = _forward(w)
+        return wq, (w, delta, alpha, beta, progress)
+
+    def q_bwd(res, gout):
+        w, delta, alpha, beta, progress = res
+        dcol = delta.reshape(-1, 1, 1, 1)
+        acol = alpha.reshape(-1, 1, 1, 1)
+        if use_ede:
+            t, kk = ref.ede_t_k(progress, t_min, t_max)
+            # two transition centres at +-Delta; take the nearer one.
+            centre = jnp.where(w >= 0, dcol, -dcol)
+            scale = kk * t * (1.0 - jnp.tanh(t * (w - centre)) ** 2)
+        else:
+            scale = jnp.where(jnp.abs(w) > dcol, acol, 1.0)
+        return gout * scale, jnp.zeros_like(beta), jnp.zeros_like(progress)
+
+    q.defvjp(q_fwd, q_bwd)
+    return q
+
+
+def make_quantizer(cfg):
+    """Dispatch on cfg.scheme; 'fp' returns identity (beta ignored)."""
+    if cfg.scheme == "fp":
+        return lambda w, beta, progress: w
+    if cfg.scheme == "binary":
+        return make_binary_quantizer(cfg.use_ede, cfg.ede_t_min, cfg.ede_t_max)
+    if cfg.scheme == "ternary":
+        return make_ternary_quantizer(
+            cfg.delta_frac, cfg.use_ede, cfg.ede_t_min, cfg.ede_t_max
+        )
+    if cfg.scheme == "sb":
+        return make_sb_quantizer(
+            cfg.delta_frac, cfg.regions_per_filter, cfg.use_ede,
+            cfg.ede_t_min, cfg.ede_t_max,
+            standardize=getattr(cfg, "standardize", "none"),
+        )
+    raise ValueError(cfg.scheme)

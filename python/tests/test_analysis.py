@@ -1,0 +1,47 @@
+"""L1 structural-performance guardrails: the shipped Pallas tiling must
+fit VMEM with full MXU utilization (the interpret=True path cannot
+measure TPU time, so these assertions *are* the kernel perf contract)."""
+
+from compile.kernels import analysis
+
+
+def test_default_tiling_fits_vmem():
+    t = analysis.default_tiling_report()
+    assert t.fits, f"default tiling uses {t.vmem_bytes} bytes"
+    assert t.vmem_fraction < 0.5
+
+
+def test_default_tiling_saturates_mxu():
+    t = analysis.default_tiling_report()
+    assert t.mxu_utilization == 1.0, t
+
+
+def test_default_intensity_near_structural_max():
+    t = analysis.default_tiling_report()
+    best = analysis.best_tiling()
+    # paper-style efficiency ratio: achieved / structural roofline >= 0.5
+    # (the residual gap is deliberate N-padding headroom — see the
+    # DEFAULT_* comment in signed_binary.py)
+    assert t.arithmetic_intensity >= 0.5 * best.arithmetic_intensity, (t, best)
+    assert t.arithmetic_intensity >= 64.0
+
+
+def test_vmem_scales_with_tiles():
+    small = analysis.analyze_tiling(128, 128, 128)
+    big = analysis.analyze_tiling(256, 256, 256)
+    assert big.vmem_bytes > small.vmem_bytes
+    assert big.arithmetic_intensity > small.arithmetic_intensity
+
+
+def test_misaligned_tiles_lose_mxu_utilization():
+    t = analysis.analyze_tiling(100, 128, 128)
+    assert t.mxu_utilization < 1.0
+
+
+def test_conv_mapping_resnet_block():
+    rep = analysis.analyze_conv_as_gemm(
+        n=8, c=256, h=16, w=16, k=256, r=3, s=3, bm=128, bn=128, bk=128
+    )
+    assert rep["grid"][0] >= 1 and rep["grid"][2] >= 1
+    assert 0.0 <= rep["pad_waste"] < 0.5
+    assert rep["tile"].fits

@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/blocks; assert_allclose against ref — the CORE
+correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import signed_binary as sbk
+
+jax.config.update("jax_platform_name", "cpu")
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def randn(rng, *shape):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sb_matmul vs oracle
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 60),
+    n=st.integers(1, 24),
+    bm=st.sampled_from([2, 4, 8, 128]),
+    bn=st.sampled_from([2, 4, 128]),
+    bk=st.sampled_from([3, 8, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sb_matmul_matches_ref(m, k, n, bm, bn, bk, seed):
+    rng = np.random.RandomState(seed)
+    a = randn(rng, m, k)
+    u = jnp.abs(randn(rng, k, n)) * (randn(rng, k, n) > 0)
+    beta = ref.default_beta(n, 0.5)
+    got = sbk.sb_matmul(a, u, beta, bm=bm, bn=bn, bk=bk)
+    want = ref.sb_matmul_ref(a, u, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_sb_matmul_zero_bitmap_gives_zero():
+    a = jnp.ones((8, 16))
+    u = jnp.zeros((16, 4))
+    beta = ref.default_beta(4, 0.5)
+    out = sbk.sb_matmul(a, u, beta, bm=4, bn=2, bk=8)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# quantize kernels vs oracle
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    k=st.integers(1, 16),
+    c=st.integers(1, 16),
+    r=st.sampled_from([1, 3]),
+    p_pos=st.sampled_from([0.0, 0.25, 0.5, 1.0]),
+    block=st.sampled_from([1, 3, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sb_quantize_matches_ref(k, c, r, p_pos, block, seed):
+    rng = np.random.RandomState(seed)
+    w = randn(rng, k, c, r, r)
+    beta = ref.default_beta(k, p_pos)
+    want = ref.signed_binary_quantize_ref(w, beta, 0.05)
+    # kernel path: compute stats like the quantizer module does
+    w2d = w.reshape(k, -1)
+    delta = 0.05 * jnp.max(jnp.abs(w2d), axis=1)
+    bcol = beta.reshape(k, 1)
+    pos = jnp.logical_and(w2d >= delta[:, None], bcol >= 0)
+    neg = jnp.logical_and(w2d <= -delta[:, None], bcol < 0)
+    eff = jnp.logical_or(pos, neg).astype(w2d.dtype)
+    denom = jnp.maximum(jnp.sum(eff, axis=1), 1.0)
+    alpha = jnp.sum(jnp.abs(w2d) * eff, axis=1) / denom
+    got = sbk.sb_quantize(w2d, beta, delta, alpha, block_rows=block).reshape(w.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@SET
+@given(
+    k=st.integers(1, 12),
+    e=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binary_ternary_kernels_match_ref(k, e, seed):
+    rng = np.random.RandomState(seed)
+    w = randn(rng, k, e, 1, 1)
+    wb = ref.binary_quantize_ref(w)
+    w2d = w.reshape(k, -1)
+    alpha = jnp.mean(jnp.abs(w2d), axis=1)
+    got_b = sbk.binary_quantize(w2d, alpha).reshape(w.shape)
+    np.testing.assert_allclose(np.asarray(got_b), np.asarray(wb), rtol=1e-5, atol=1e-6)
+
+    wt = ref.ternary_quantize_ref(w, 0.05)
+    delta = 0.05 * jnp.max(jnp.abs(w2d), axis=1)
+    mask = (jnp.abs(w2d) > delta[:, None]).astype(w2d.dtype)
+    denom = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    alpha_t = jnp.sum(jnp.abs(w2d) * mask, axis=1) / denom
+    got_t = sbk.ternary_quantize(w2d, delta, alpha_t).reshape(w.shape)
+    np.testing.assert_allclose(np.asarray(got_t), np.asarray(wt), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sb_conv2d (full hot path) vs oracle
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 12),
+    hw=st.integers(3, 10),
+    k=st.integers(1, 12),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sb_conv2d_matches_ref(n, c, hw, k, stride, seed):
+    rng = np.random.RandomState(seed)
+    x = randn(rng, n, c, hw, hw)
+    w = randn(rng, k, c, 3, 3)
+    beta = ref.default_beta(k, 0.5)
+    got = sbk.sb_conv2d(x, w, beta, stride=stride, bm=16, bn=4, bk=32)
+    want = ref.sb_conv2d_ref(x, w, beta, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_im2col_matches_lax_conv():
+    rng = np.random.RandomState(0)
+    x = randn(rng, 2, 4, 6, 6)
+    w = randn(rng, 5, 4, 3, 3)
+    patches = ref.im2col_ref(x, 3, 3, 1, 1)
+    w2d = w.reshape(5, -1).T
+    out = (patches @ w2d).reshape(2, 36, 5).transpose(0, 2, 1).reshape(2, 5, 6, 6)
+    want = ref.conv2d_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantizer semantics (oracle-level invariants)
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    k=st.integers(1, 10),
+    c=st.integers(1, 10),
+    p_pos=st.sampled_from([0.0, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sb_regions_never_mix_signs(k, c, p_pos, seed):
+    rng = np.random.RandomState(seed)
+    w = randn(rng, k, c, 3, 3)
+    beta = ref.default_beta(k, p_pos)
+    wq = np.asarray(ref.signed_binary_quantize_ref(w, beta, 0.05))
+    for fi in range(k):
+        f = wq[fi]
+        assert not ((f > 0).any() and (f < 0).any()), f"filter {fi} mixes signs"
+
+
+def test_ternary_sparser_than_binary():
+    rng = np.random.RandomState(1)
+    w = randn(rng, 8, 16, 3, 3)
+    assert float(jnp.mean(ref.ternary_quantize_ref(w) == 0)) > 0.0
+    assert float(jnp.mean(ref.binary_quantize_ref(w) == 0)) == 0.0
+
+
+def test_ede_t_k_schedule():
+    t0, k0 = ref.ede_t_k(jnp.float32(0.0))
+    t1, k1 = ref.ede_t_k(jnp.float32(1.0))
+    assert float(t0) == pytest.approx(0.1, rel=1e-5)
+    assert float(t1) == pytest.approx(10.0, rel=1e-4)
+    assert float(k0) == pytest.approx(10.0, rel=1e-5)
+    assert float(k1) == pytest.approx(1.0, rel=1e-5)

@@ -1,0 +1,134 @@
+"""L2 model: shapes, init/apply agreement, training dynamics, and the
+signatures the AOT manifest promises to the rust runtime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_cfg(**kw):
+    base = dict(name="t", depth=8, image_size=16, batch_size=4)
+    base.update(kw)
+    return common.ModelConfig(**base)
+
+
+def test_init_is_deterministic():
+    cfg = tiny_cfg()
+    p1, bn1, c1, q1, _ = model.init(cfg, 0)
+    p2, _, _, _, _ = model.init(cfg, 0)
+    for k in p1:
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+    assert sorted(p1) == sorted(p2)
+    assert q1  # quantized convs exist
+
+
+def test_seeds_differ():
+    cfg = tiny_cfg()
+    p1, *_ = model.init(cfg, 0)
+    p2, *_ = model.init(cfg, 1)
+    k = sorted(p1)[0]
+    assert not np.array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+
+@pytest.mark.parametrize("arch,depth,px", [
+    ("cifar_resnet", 8, 16),
+    ("cifar_resnet", 20, 32),
+    ("resnet18", 20, 32),
+    ("vgg_small", 8, 32),
+    ("alexnet_small", 8, 32),
+])
+def test_forward_shapes(arch, depth, px):
+    cfg = tiny_cfg(arch=arch, depth=depth, image_size=px, width_mult=0.25)
+    params, bn, consts, _, conv_log = model.init(cfg, 0)
+    x = jnp.zeros((4, 3, px, px))
+    logits, new_bn = model.apply_model(cfg, params, bn, consts, x, True, jnp.float32(0.0))
+    assert logits.shape == (4, 10)
+    assert sorted(new_bn) == sorted(bn)
+    assert conv_log  # geometry recorded for the manifest
+
+
+def test_first_layer_not_quantized():
+    cfg = tiny_cfg()
+    _, _, _, qnames, conv_log = model.init(cfg, 0)
+    assert conv_log[0]["quantized"] is False
+    assert all(l["quantized"] for l in conv_log[1:])
+    assert f"{conv_log[0]['name']}.w" not in qnames
+
+
+def test_train_step_reduces_loss_all_schemes():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(4, 3, 16, 16).astype(np.float32))
+    y = jnp.asarray(np.arange(4) % 10)
+    for scheme in ("fp", "binary", "ternary", "sb"):
+        cfg = tiny_cfg(scheme=scheme)
+        params, bn, consts, qnames, _ = model.init(cfg, 0)
+        step = jax.jit(model.make_train_step(cfg, qnames))
+        m = {k: jnp.zeros_like(v) for k, v in params.items()}
+        v = {k: jnp.zeros_like(vv) for k, vv in params.items()}
+        first = None
+        for i in range(8):
+            out = step(params, bn, consts, m, v, x, y,
+                       jnp.float32(5e-3), jnp.float32(i + 1), jnp.float32(0.0))
+            loss, _, params, bn, m, v = out
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first, f"{scheme}: {first} -> {float(loss)}"
+        assert np.isfinite(float(loss))
+
+
+def test_latent_weights_clamped():
+    cfg = tiny_cfg(scheme="sb")
+    params, bn, consts, qnames, _ = model.init(cfg, 0)
+    step = jax.jit(model.make_train_step(cfg, qnames))
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(4, 3, 16, 16).astype(np.float32))
+    y = jnp.asarray(np.arange(4) % 10)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in params.items()}
+    for i in range(4):
+        out = step(params, bn, consts, m, v, x, y,
+                   jnp.float32(0.5), jnp.float32(i + 1), jnp.float32(0.0))
+        _, _, params, bn, m, v = out
+    for name in qnames:
+        w = np.asarray(params[name])
+        assert w.max() <= 1.0 + 1e-6 and w.min() >= -1.0 - 1e-6, name
+
+
+def test_infer_eval_mode_uses_running_stats():
+    cfg = tiny_cfg(scheme="sb")
+    params, bn, consts, _, _ = model.init(cfg, 0)
+    infer = jax.jit(model.make_infer(cfg, use_pallas=False))
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(4, 3, 16, 16).astype(np.float32))
+    l1 = infer(params, bn, consts, x)
+    l2 = infer(params, bn, consts, x)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    assert l1.shape == (4, 10)
+
+
+def test_pallas_and_lax_infer_agree():
+    """The Pallas sb hot path and the plain lax path compute the same logits."""
+    cfg = tiny_cfg(scheme="sb")
+    params, bn, consts, _, _ = model.init(cfg, 0)
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(4, 3, 16, 16).astype(np.float32))
+    lp = model.make_infer(cfg, use_pallas=True)(params, bn, consts, x)
+    ll = model.make_infer(cfg, use_pallas=False)(params, bn, consts, x)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ll), rtol=1e-3, atol=1e-3)
+
+
+def test_param_counts_sb_sparser_than_binary():
+    cb = tiny_cfg(scheme="binary")
+    cs = tiny_cfg(scheme="sb")
+    pb, _, cob, qb, _ = model.init(cb, 0)
+    ps, _, cos, qs, _ = model.init(cs, 0)
+    _, qtot_b, eff_b = model.param_counts(cb, pb, cob, qb)
+    _, qtot_s, eff_s = model.param_counts(cs, ps, cos, qs)
+    assert qtot_b == qtot_s
+    assert eff_b == qtot_b          # binary dense
+    assert eff_s < 0.7 * qtot_s     # sb sparse

@@ -1,0 +1,107 @@
+"""L2 trainable quantizers: forward matches oracle; backward implements
+the paper's STE (eq. 4) / adapted EDE (§3.2.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, quant
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def w_fixture(seed=0, shape=(6, 8, 3, 3)):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32))
+
+
+def test_sb_forward_matches_oracle():
+    w = w_fixture()
+    beta = ref.default_beta(6, 0.5)
+    q = quant.make_sb_quantizer(0.05, 1, use_ede=True)
+    np.testing.assert_allclose(
+        np.asarray(q(w, beta, jnp.float32(0.3))),
+        np.asarray(ref.signed_binary_quantize_ref(w, beta, 0.05)),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_binary_ternary_forward_match_oracle():
+    w = w_fixture(1)
+    beta = jnp.zeros((6,))
+    qb = quant.make_binary_quantizer(use_ede=False)
+    np.testing.assert_allclose(
+        np.asarray(qb(w, beta, jnp.float32(0.0))),
+        np.asarray(ref.binary_quantize_ref(w)),
+        rtol=1e-5, atol=1e-6,
+    )
+    qt = quant.make_ternary_quantizer(0.05, use_ede=False)
+    np.testing.assert_allclose(
+        np.asarray(qt(w, beta, jnp.float32(0.0))),
+        np.asarray(ref.ternary_quantize_ref(w, 0.05)),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_sb_ste_gradient_eq4():
+    """With EDE off, dL/dw = alpha on the effectual branch, 1 elsewhere."""
+    w = w_fixture(2)
+    beta = ref.default_beta(6, 0.5)
+    q = quant.make_sb_quantizer(0.05, 1, use_ede=False)
+    g = jax.grad(lambda w_: jnp.sum(q(w_, beta, jnp.float32(0.0))))(w)
+    wq = ref.signed_binary_quantize_ref(w, beta, 0.05)
+    g_np, wq_np, w_np = map(np.asarray, (g, wq, w))
+    eff = wq_np != 0
+    # effectual positions: gradient equals |alpha| (value magnitude)
+    np.testing.assert_allclose(g_np[eff], np.abs(wq_np[eff]), rtol=1e-4)
+    # strictly-interior ineffectual positions pass through at 1.0
+    ineff = ~eff
+    np.testing.assert_allclose(g_np[ineff], np.ones_like(g_np[ineff]), rtol=1e-5)
+
+
+def test_sb_ede_gradient_peaks_at_threshold():
+    """EDE derivative is largest near the region's own +-Delta centre."""
+    k, c = 2, 64
+    w = w_fixture(3, (k, c, 3, 3))
+    beta = jnp.asarray([1.0, -1.0])
+    q = quant.make_sb_quantizer(0.05, 1, use_ede=True)
+    progress = jnp.float32(1.0)  # t = 10: sharply peaked
+    g = jax.grad(lambda w_: jnp.sum(q(w_, beta, progress)))(w)
+    g_np, w_np = np.asarray(g), np.asarray(w)
+    delta = 0.05 * np.abs(w_np.reshape(k, -1)).max(axis=1)
+    for fi, centre in [(0, delta[0]), (1, -delta[1])]:
+        near = np.abs(w_np[fi] - centre) < 0.02
+        far = np.abs(w_np[fi] - centre) > 0.5
+        if near.any() and far.any():
+            assert g_np[fi][near].mean() > 5 * g_np[fi][far].mean()
+
+
+def test_beta_and_progress_get_zero_grads():
+    w = w_fixture(4)
+    beta = ref.default_beta(6, 0.5)
+    q = quant.make_sb_quantizer(0.05, 1, use_ede=True)
+    gb = jax.grad(lambda b: jnp.sum(q(w, b, jnp.float32(0.5))))(beta)
+    assert float(jnp.abs(gb).max()) == 0.0
+
+
+def test_standardize_variants_run():
+    w = w_fixture(5)
+    beta = ref.default_beta(6, 0.5)
+    for std in ("none", "local", "global"):
+        q = quant.make_sb_quantizer(0.05, 1, use_ede=True, standardize=std)
+        out = q(w, beta, jnp.float32(0.1))
+        assert out.shape == w.shape
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_dispatch_matches_config():
+    for scheme in ("fp", "binary", "ternary", "sb"):
+        cfg = common.ModelConfig(name="t", scheme=scheme, depth=8, image_size=16)
+        q = quant.make_quantizer(cfg)
+        w = w_fixture(6)
+        beta = ref.default_beta(6, 0.5)
+        out = q(w, beta, jnp.float32(0.0))
+        assert out.shape == w.shape
+        if scheme == "fp":
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(w))

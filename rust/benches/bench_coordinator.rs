@@ -1,0 +1,67 @@
+//! `cargo bench` target: serving coordinator overhead and batching
+//! behaviour with a mock backend (no PJRT) — isolates router/batcher
+//! costs from model compute — plus an optional end-to-end PJRT serve if
+//! artifacts exist (kept tiny so `cargo bench` stays fast).
+
+use std::time::{Duration, Instant};
+
+use plum::coordinator::{spawn_worker, BatchPolicy, MockBackend, Router};
+use plum::config::RunConfig;
+use plum::experiments::serving;
+
+fn mock_roundtrip(replicas: usize, n_req: usize, max_batch: usize) -> (f64, f64) {
+    let workers = (0..replicas)
+        .map(|_| {
+            spawn_worker(
+                move || {
+                    Ok(MockBackend {
+                        bs: max_batch,
+                        sample: 64,
+                        classes: 10,
+                        delay: Duration::from_micros(200), // pretend-model
+                    })
+                },
+                BatchPolicy { max_batch, max_wait: Duration::from_micros(500) },
+            )
+            .unwrap()
+        })
+        .collect();
+    let router = Router::new(workers);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let x = vec![i as f32; 64];
+        rxs.push(router.submit(x).unwrap().0);
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mean_us = router.worker(0).latency.mean_us();
+    router.shutdown().unwrap();
+    (n_req as f64 / wall, mean_us)
+}
+
+fn main() {
+    println!("# bench_coordinator — router + dynamic batcher");
+    for (replicas, max_batch) in [(1, 1), (1, 8), (2, 8), (4, 8)] {
+        let (rps, mean_us) = mock_roundtrip(replicas, 2000, max_batch);
+        println!(
+            "mock replicas={replicas} max_batch={max_batch}: {rps:>10.0} req/s  worker-mean {mean_us:.0} us"
+        );
+    }
+
+    // end-to-end with PJRT if artifacts are present
+    let cfg = RunConfig::default();
+    if cfg.artifacts.join("resnet20_sb.manifest.json").exists() {
+        match serving::drive(&cfg, "resnet20_sb", 64, None) {
+            Ok(r) => println!(
+                "RESULT bench_coordinator pjrt_rps={:.1} mean_ms={:.1} p95_ms={:.1}",
+                r.throughput_rps, r.mean_ms, r.p95_ms
+            ),
+            Err(e) => println!("pjrt serve skipped: {e:#}"),
+        }
+    } else {
+        println!("pjrt serve skipped: artifacts not built");
+    }
+}

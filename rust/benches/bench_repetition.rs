@@ -1,0 +1,28 @@
+//! `cargo bench` target for Figure 7 / §5.1: the repetition-sparsity
+//! engine on the ResNet-18 conv workload, B/T/SB x sparsity on/off.
+//!
+//! criterion is not in the offline vendor set; this is a `harness = false`
+//! bench binary using the repo's min-of-N harness (paper supp. A
+//! methodology: unloaded machine, report the minimum).
+
+use plum::config::RunConfig;
+use plum::experiments::figures;
+
+fn main() {
+    let mut cfg = RunConfig::default();
+    cfg.bench_reps = std::env::var("PLUM_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    println!("# bench_repetition — Figure 7 workload (reps={})", cfg.bench_reps);
+    let rows = figures::fig7(&cfg, 1, 8, None).expect("fig7");
+    // machine-readable summary line for EXPERIMENTS.md tooling
+    let b: f64 = rows.iter().map(|r| r.t_binary_ms).sum();
+    let s: f64 = rows.iter().map(|r| r.t_sb_sp_ms).sum();
+    let t: f64 = rows.iter().map(|r| r.t_ternary_sp_ms).sum();
+    println!(
+        "RESULT bench_repetition aggregate_speedup_sb={:.3} aggregate_speedup_ternary={:.3}",
+        b / s,
+        b / t
+    );
+}

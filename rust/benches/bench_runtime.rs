@@ -1,0 +1,64 @@
+//! `cargo bench` target: the PJRT hot path — standalone L1 sb_matmul
+//! kernel artifact, full infer artifact, and one train step. Skips
+//! gracefully when artifacts are absent.
+
+use std::path::PathBuf;
+
+use plum::data::SyntheticDataset;
+use plum::runtime::{execute_tuple, literal_f32, Runtime};
+use plum::training::Trainer;
+use plum::util::bench::{bench, black_box};
+use plum::util::Rng;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("index.json").exists() {
+        println!("# bench_runtime — artifacts not built, skipping (run `make artifacts`)");
+        return;
+    }
+    println!("# bench_runtime — PJRT executables");
+    let rt = Runtime::cpu().expect("pjrt client");
+
+    // L1 kernel artifact
+    if dir.join("sb_matmul.hlo.txt").exists() {
+        let exe = rt.compile_hlo_file(&dir.join("sb_matmul.hlo.txt")).unwrap();
+        let (m, k, n) = (256usize, 1152usize, 128usize);
+        let mut rng = Rng::new(5);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let u: Vec<f32> = (0..k * n).map(|_| if rng.coin(0.5) { 0.4 } else { 0.0 }).collect();
+        let beta: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let al = literal_f32(&[m, k], &a).unwrap();
+        let ul = literal_f32(&[k, n], &u).unwrap();
+        let bl = literal_f32(&[n], &beta).unwrap();
+        let r = bench("sb_matmul kernel 256x1152x128", 2, 20, || {
+            black_box(execute_tuple(&exe, &[&al, &ul, &bl]).unwrap());
+        });
+        let flops = 2.0 * (m * k * n) as f64;
+        println!("{}   {:.2} GFLOP/s", r.row(), flops / r.min_ns as f64);
+    }
+
+    // infer + train step of the e2e model
+    let mut tr = match Trainer::new(&rt, &dir, "resnet20_sb") {
+        Ok(t) => t,
+        Err(e) => {
+            println!("resnet20_sb unavailable: {e:#}");
+            return;
+        }
+    };
+    let ds = SyntheticDataset::cifar_like(3);
+    let bs = tr.batch_size();
+    let (xs, ys) = ds.batch(0, bs);
+    let r = bench("resnet20_sb infer (pallas path) bs32", 1, 10, || {
+        black_box(tr.infer_logits(&xs).unwrap());
+    });
+    println!("{}", r.row());
+    let r = bench("resnet20_sb train step bs32", 1, 10, || {
+        black_box(tr.train_step(&xs, &ys, 1e-3, 0.5).unwrap());
+    });
+    println!("{}", r.row());
+    println!(
+        "RESULT bench_runtime train_step_ms={:.2} infer_ms={:.2}",
+        r.min_ms(),
+        r.min_ms()
+    );
+}

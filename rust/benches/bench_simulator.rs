@@ -1,0 +1,26 @@
+//! `cargo bench` target for §5.2: SIGMA-like simulator energy/throughput
+//! on dense vs sparse conv layers (Figure-level series + Figure 9/10 op
+//! analyses, which are analytical and cheap).
+
+use plum::config::RunConfig;
+use plum::experiments::figures;
+use plum::models;
+use plum::simulator::{energy_reduction, AcceleratorConfig};
+
+fn main() {
+    let cfg = RunConfig::default();
+    println!("# bench_simulator — §5.2 energy + Figures 9/10");
+    figures::energy(&cfg, 0.65).expect("energy");
+    figures::fig9(&cfg, 8).expect("fig9");
+    figures::fig10(&cfg, 8, 20).expect("fig10");
+
+    let acc = AcceleratorConfig::default();
+    let mean: f64 = {
+        let ls: Vec<_> = models::resnet18_layers(1.0, 64, 1)
+            .into_iter()
+            .filter(|l| l.quantized && l.geom.r == 3)
+            .collect();
+        ls.iter().map(|l| energy_reduction(&l.geom, 0.65, &acc)).sum::<f64>() / ls.len() as f64
+    };
+    println!("RESULT bench_simulator mean_energy_reduction={mean:.3} paper=2.0");
+}

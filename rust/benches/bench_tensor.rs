@@ -1,0 +1,35 @@
+//! `cargo bench` target: dense substrate baselines (GEMM, im2col conv)
+//! that the repetition engine is compared against — the "naive dense"
+//! denominator of the paper's arithmetic-reduction metric, timed.
+
+use plum::tensor::{conv2d_gemm, conv2d_naive, gemm, Tensor};
+use plum::util::bench::{bench, black_box};
+use plum::util::Rng;
+
+fn main() {
+    println!("# bench_tensor — dense baselines");
+    let mut rng = Rng::new(11);
+
+    for (m, k, n) in [(64, 576, 64), (256, 1152, 128), (1024, 2304, 256)] {
+        let a = Tensor::rand_normal(&[m, k], 1.0, &mut rng);
+        let b = Tensor::rand_normal(&[k, n], 1.0, &mut rng);
+        let r = bench(&format!("gemm {m}x{k}x{n}"), 1, 10, || {
+            black_box(gemm(&a, &b));
+        });
+        let flops = 2.0 * (m * k * n) as f64;
+        println!("{}   {:.2} GFLOP/s", r.row(), flops / r.min_ns as f64);
+    }
+
+    let x = Tensor::rand_normal(&[1, 64, 32, 32], 1.0, &mut rng);
+    let w = Tensor::rand_normal(&[64, 64, 3, 3], 0.5, &mut rng);
+    let r = bench("conv2d_gemm 64x64x3x3@32", 1, 10, || {
+        black_box(conv2d_gemm(&x, &w, 1, 1));
+    });
+    println!("{}", r.row());
+    let xs = Tensor::rand_normal(&[1, 16, 16, 16], 1.0, &mut rng);
+    let ws = Tensor::rand_normal(&[16, 16, 3, 3], 0.5, &mut rng);
+    let r = bench("conv2d_naive 16x16x3x3@16", 1, 5, || {
+        black_box(conv2d_naive(&xs, &ws, 1, 1));
+    });
+    println!("{}", r.row());
+}

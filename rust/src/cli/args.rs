@@ -1,0 +1,102 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `plum <subcommand> [positionals...] [--flag value | --switch]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse everything after the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --k=v or --k v or --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        // grammar is greedy: a flag consumes the next non-flag token, so
+        // switches must come last or use --flag=value
+        let a = parse("table1 extra --steps 200 --quiet");
+        assert_eq!(a.positionals, vec!["table1", "extra"]);
+        assert_eq!(a.get_usize("steps", 0), 200);
+        assert!(a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--lr=0.01 --name=resnet20_sb");
+        assert_eq!(a.get_f32("lr", 0.0), 0.01);
+        assert_eq!(a.get("name"), Some("resnet20_sb"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("--verbose");
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_u64("n", 7), 7);
+    }
+}

@@ -1,0 +1,247 @@
+//! Launcher CLI (S10): subcommand dispatch for the `plum` binary.
+
+pub mod args;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::ModelRegistry;
+use crate::experiments::{self, figures, serving, tables};
+use crate::quant::PackedSignedBinary;
+use crate::runtime::Runtime;
+use crate::training::{save_checkpoint, Schedule, Trainer};
+
+use args::Args;
+
+pub const HELP: &str = "\
+plum — PLUM repetition-sparsity co-design framework (paper reproduction)
+
+USAGE:
+  plum <command> [options]
+
+COMMANDS:
+  train --model NAME [--steps N] [--lr F]   train one artifact, save ckpt
+  bench <target> [--steps N] [--fresh]      regenerate a paper table/figure:
+         table1..table12 | tables | pareto | fig7 | fig9 | fig10 | energy | cse | all
+  serve --model NAME [--requests N] [--replicas R] [--ckpt PATH]
+  report weights --model NAME               figure 6/11 distributions
+  quantize --model NAME                     density/repetition/bit report
+  registry                                  list artifacts + footprints
+  help
+
+GLOBAL OPTIONS:
+  --artifacts DIR (default artifacts)   --out-dir DIR (default out)
+  --config FILE  --steps N  --seed N  --reps N  --eval-batches N
+";
+
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let mut it = argv.into_iter();
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let args = Args::parse(it);
+    let cfg = RunConfig::resolve(&args)?;
+    match cmd.as_str() {
+        "train" => cmd_train(&cfg, &args),
+        "bench" => cmd_bench(&cfg, &args),
+        "serve" => cmd_serve(&cfg, &args),
+        "report" => cmd_report(&cfg, &args),
+        "quantize" => cmd_quantize(&cfg, &args),
+        "registry" => cmd_registry(&cfg),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' — try `plum help`")),
+    }
+}
+
+fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let model = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model required"))?;
+    let rt = Runtime::cpu()?;
+    let mut tr = Trainer::new(&rt, &cfg.artifacts, model)?;
+    let ds = experiments::dataset_for_run(cfg, &tr.model.manifest);
+    let schedule = Schedule::Step {
+        init: args.get_f32("lr", 5e-3),
+        milestones: vec![0.5, 0.8],
+    };
+    println!(
+        "training {model}: {} params, {} steps, bs {}",
+        tr.model.manifest.param_count,
+        cfg.steps,
+        tr.batch_size()
+    );
+    let log = tr.train(&ds, cfg.steps, &schedule, (cfg.steps / 20).max(1), cfg.eval_batches, false)?;
+    println!(
+        "final: loss {:.4}, eval acc {:.3}, density {:.2}, {:.1}s ({:.0} ms/step)",
+        log.final_train_loss,
+        log.eval_acc,
+        tr.quantized_density()?,
+        log.wall_secs,
+        1e3 * log.wall_secs / log.steps as f64
+    );
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    let ckpt = cfg.out_dir.join(format!("{model}.ckpt"));
+    save_checkpoint(&ckpt, tr.step, &tr.state_to_host()?)?;
+    println!("checkpoint: {}", ckpt.display());
+    Ok(())
+}
+
+fn cmd_bench(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let target = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("bench target required — see `plum help`"))?;
+    let fresh = args.has("fresh");
+    let needs_rt = matches!(
+        target,
+        "table1" | "table2" | "table3" | "table4" | "table5" | "table6" | "table7"
+            | "table8" | "table9" | "table10" | "table11" | "table12" | "tables" | "all"
+    );
+    let rt = if needs_rt { Some(Runtime::cpu()?) } else { None };
+    let rt = rt.as_ref();
+    let subtile = args.get_usize("subtile", 0); // 0 = auto-tuned
+    match target {
+        "table1" => drop(tables::table1(cfg, rt.unwrap(), fresh)?),
+        "table2" => drop(tables::table_mix(cfg, rt.unwrap(), fresh, false)?),
+        "table3" => drop(tables::table_ede(cfg, rt.unwrap(), fresh, false)?),
+        "table4" => drop(tables::table4(cfg, rt.unwrap(), fresh)?),
+        "table5" => drop(tables::table_delta(cfg, rt.unwrap(), fresh, false)?),
+        "table6" => drop(tables::table6(cfg, rt.unwrap(), fresh)?),
+        "table7" => drop(tables::table7(cfg, rt.unwrap(), fresh)?),
+        "table8" => drop(tables::table8(cfg, rt.unwrap(), fresh)?),
+        "table9" => drop(tables::table9(cfg, rt.unwrap(), fresh)?),
+        "table10" => drop(tables::table_mix(cfg, rt.unwrap(), fresh, true)?),
+        "table11" => drop(tables::table_ede(cfg, rt.unwrap(), fresh, true)?),
+        "table12" => drop(tables::table_delta(cfg, rt.unwrap(), fresh, true)?),
+        "tables" => {
+            let rt = rt.unwrap();
+            tables::table1(cfg, rt, fresh)?;
+            tables::table_mix(cfg, rt, fresh, false)?;
+            tables::table_ede(cfg, rt, fresh, false)?;
+            tables::table4(cfg, rt, fresh)?;
+            tables::table_delta(cfg, rt, fresh, false)?;
+            tables::table6(cfg, rt, fresh)?;
+            tables::table7(cfg, rt, fresh)?;
+            tables::table8(cfg, rt, fresh)?;
+            tables::table9(cfg, rt, fresh)?;
+            tables::pareto(cfg)?;
+        }
+        "pareto" => tables::pareto(cfg)?,
+        "fig7" => drop(figures::fig7(cfg, args.get_usize("batch", 1), subtile, None)?),
+        "fig9" => figures::fig9(cfg, subtile)?,
+        "fig10" => figures::fig10(cfg, subtile, args.get_usize("points", 20))?,
+        "energy" => figures::energy(cfg, args.get_f32("sparsity", 0.65) as f64)?,
+        "cse" => figures::cse_ablation(cfg, args.get_usize("rounds", 3000))?,
+        "all" => {
+            let rt = rt.unwrap();
+            tables::table1(cfg, rt, fresh)?;
+            tables::table_mix(cfg, rt, fresh, false)?;
+            tables::table_ede(cfg, rt, fresh, false)?;
+            tables::table4(cfg, rt, fresh)?;
+            tables::table_delta(cfg, rt, fresh, false)?;
+            tables::table6(cfg, rt, fresh)?;
+            tables::table7(cfg, rt, fresh)?;
+            tables::table8(cfg, rt, fresh)?;
+            tables::table9(cfg, rt, fresh)?;
+            tables::table_mix(cfg, rt, fresh, true)?;
+            tables::table_ede(cfg, rt, fresh, true)?;
+            tables::table_delta(cfg, rt, fresh, true)?;
+            tables::pareto(cfg)?;
+            figures::fig7(cfg, 1, subtile, None)?;
+            figures::fig9(cfg, subtile)?;
+            figures::fig10(cfg, subtile, 20)?;
+            figures::energy(cfg, 0.65)?;
+        }
+        other => return Err(anyhow!("unknown bench target '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let model = args.get_or("model", "resnet20_sb").to_string();
+    let requests = args.get_usize("requests", 256);
+    let ckpt = args.get("ckpt").map(std::path::PathBuf::from);
+    let report = serving::drive(cfg, &model, requests, ckpt)?;
+    println!(
+        "\nserved {} requests on {} replica(s): {:.1} req/s, mean {:.1} ms, p95 {:.1} ms",
+        report.requests, report.replicas, report.throughput_rps, report.mean_ms, report.p95_ms
+    );
+    Ok(())
+}
+
+fn cmd_report(cfg: &RunConfig, args: &Args) -> Result<()> {
+    match args.positionals.first().map(String::as_str) {
+        Some("weights") => {
+            let model = args.get_or("model", "resnet20_sb");
+            figures::report_weights(cfg, model)
+        }
+        _ => Err(anyhow!("usage: plum report weights --model NAME")),
+    }
+}
+
+fn cmd_quantize(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let model = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model required"))?;
+    let rt = Runtime::cpu()?;
+    let tr = Trainer::new(&rt, &cfg.artifacts, model)?;
+    let layers = tr.export_quantized()?;
+    let mut rows = Vec::new();
+    let (mut bits, mut eff, mut tot) = (0usize, 0usize, 0usize);
+    for (info, q) in &layers {
+        let st = crate::quant::filter_repetition_stats(&q.values, info.geom.k);
+        if !q.beta.is_empty() && q.scheme.values_per_filter() == 2 {
+            bits += PackedSignedBinary::pack(q).weight_bits();
+        }
+        eff += q.effectual();
+        tot += q.values.len();
+        rows.push(vec![
+            info.name.clone(),
+            format!("{}x{}x{}x{}", info.geom.k, info.geom.c, info.geom.r, info.geom.s),
+            format!("{:.2}", st.density),
+            format!("{:.2}", st.mean_unique_values),
+            format!("{:.2}", st.unique_filter_fraction),
+        ]);
+    }
+    experiments::print_table(
+        &format!("quantization report — {model} ({})", tr.model.manifest.config.scheme),
+        &["Layer", "KxCxRxS", "density", "uniq vals/filter", "uniq filters"],
+        &rows,
+    );
+    println!(
+        "\naggregate: density {:.2} ({} / {} effectual), packed sb footprint {} bits ({} KiB)",
+        eff as f64 / tot.max(1) as f64,
+        eff,
+        tot,
+        bits,
+        bits / 8 / 1024
+    );
+    Ok(())
+}
+
+fn cmd_registry(cfg: &RunConfig) -> Result<()> {
+    let reg = ModelRegistry::scan(&cfg.artifacts)?;
+    let rows: Vec<Vec<String>> = reg
+        .entries
+        .iter()
+        .map(|e| {
+            vec![
+                e.name.clone(),
+                e.arch.clone(),
+                e.scheme.clone(),
+                format!("{}", e.batch_size),
+                format!("{:.2}M", e.param_count as f64 / 1e6),
+                format!("{:.0}k", e.effectual_params_init as f64 / 1e3),
+                format!("{} KiB", e.weight_bits / 8 / 1024),
+            ]
+        })
+        .collect();
+    experiments::print_table(
+        &format!("model registry — {} ({} artifacts)", cfg.artifacts.display(), rows.len()),
+        &["Name", "Arch", "Scheme", "BS", "Params", "Eff(init)", "Weight bits"],
+        &rows,
+    );
+    Ok(())
+}

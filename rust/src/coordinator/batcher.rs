@@ -1,0 +1,110 @@
+//! Dynamic batching: collect requests up to `max_batch` or until
+//! `max_wait` has elapsed since the first queued request — the standard
+//! size-or-deadline policy (vLLM/Triton style).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pulls batches off an mpsc receiver under the policy.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. Returns None when all senders dropped
+    /// and the queue is drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // block for the first element
+        let first = match self.rx.recv() {
+            Ok(v) => v,
+            Err(_) => return None,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(v) => batch.push(v),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_respect_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn none_after_disconnect() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn drains_everything() {
+        let (tx, rx) = channel();
+        for i in 0..23 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 5, max_wait: Duration::from_millis(1) });
+        let mut seen = 0;
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 5);
+            seen += batch.len();
+        }
+        assert_eq!(seen, 23);
+    }
+}

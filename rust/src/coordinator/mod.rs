@@ -1,0 +1,22 @@
+//! Serving coordinator (S7): request router + dynamic batcher + model
+//! workers over the PJRT runtime. Pure std threads/channels (tokio is not
+//! in the offline vendor set); the architecture mirrors a vLLM-style
+//! router: clients submit single-sample requests, a batcher groups them
+//! under a size/deadline policy, workers run the AOT infer executable,
+//! and a router spreads load across replicas.
+//!
+//! PLUM integration: each worker serves a *quantized* model artifact —
+//! the signed-binary infer HLO whose hot path is the L1 Pallas kernel —
+//! and the registry reports the packed one-bit footprint (S2's
+//! `PackedSignedBinary`) so deployment density matches the paper's
+//! bit-accounting.
+
+mod batcher;
+mod registry;
+mod router;
+mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use registry::{ModelEntry, ModelRegistry};
+pub use router::Router;
+pub use server::{spawn_worker, InferBackend, InferRequest, MockBackend, PjrtBackend, WorkerHandle};

@@ -1,0 +1,118 @@
+//! Model registry: discover artifacts in a directory, report deployment
+//! footprints (packed one-bit weights for sb — the paper's §6 R*S*C*K+K
+//! bit accounting), and select models by scheme.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::runtime::Manifest;
+
+/// One registered model artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub scheme: String,
+    pub arch: String,
+    pub batch_size: usize,
+    pub param_count: usize,
+    pub effectual_params_init: usize,
+    /// one-bit packed weight bits for sb models (paper §6 formula);
+    /// 32-bit dense bits otherwise.
+    pub weight_bits: usize,
+}
+
+/// Registry over an artifact directory.
+#[derive(Debug)]
+pub struct ModelRegistry {
+    pub dir: PathBuf,
+    pub entries: Vec<ModelEntry>,
+}
+
+impl ModelRegistry {
+    /// Scan `dir` for `*.manifest.json` and build entries.
+    pub fn scan(dir: &Path) -> Result<ModelRegistry> {
+        let mut entries = Vec::new();
+        if dir.exists() {
+            let mut names: Vec<String> = std::fs::read_dir(dir)?
+                .filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    let f = e.file_name().into_string().ok()?;
+                    f.strip_suffix(".manifest.json").map(str::to_string)
+                })
+                .collect();
+            names.sort();
+            for name in names {
+                let Ok(man) = Manifest::load(dir, &name) else { continue };
+                entries.push(Self::entry_from_manifest(&man));
+            }
+        }
+        Ok(ModelRegistry { dir: dir.to_path_buf(), entries })
+    }
+
+    fn entry_from_manifest(man: &Manifest) -> ModelEntry {
+        let quantized_weights: usize = man
+            .conv_layers
+            .iter()
+            .filter(|l| l.quantized)
+            .map(|l| l.geom.weight_count())
+            .sum();
+        let regions: usize = man
+            .conv_layers
+            .iter()
+            .filter(|l| l.quantized)
+            .map(|l| l.geom.k * man.config.regions_per_filter)
+            .sum();
+        let weight_bits = match man.config.scheme.as_str() {
+            // paper §6: R*S*C*K bits + K region-sign bits
+            "sb" => quantized_weights + regions,
+            "binary" => quantized_weights,
+            "ternary" => 2 * quantized_weights,
+            _ => 32 * man.param_count,
+        };
+        ModelEntry {
+            name: man.name.clone(),
+            scheme: man.config.scheme.clone(),
+            arch: man.config.arch.clone(),
+            batch_size: man.config.batch_size,
+            param_count: man.param_count,
+            effectual_params_init: man.effectual_params_init,
+            weight_bits,
+        }
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn by_scheme(&self, scheme: &str) -> Vec<&ModelEntry> {
+        self.entries.iter().filter(|e| e.scheme == scheme).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_missing_dir_is_empty() {
+        let r = ModelRegistry::scan(Path::new("/nonexistent/plum")).unwrap();
+        assert!(r.entries.is_empty());
+    }
+
+    #[test]
+    fn scan_artifacts_if_present() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("index.json").exists() {
+            return;
+        }
+        let r = ModelRegistry::scan(&dir).unwrap();
+        assert!(!r.entries.is_empty());
+        let sb = r.by_scheme("sb");
+        assert!(!sb.is_empty());
+        // sb one-bit footprint beats ternary's 2 bits for same geometry
+        if let (Some(s), Some(t)) = (r.by_name("resnet20_sb"), r.by_name("resnet20_ternary")) {
+            assert!(s.weight_bits < t.weight_bits);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Least-outstanding-requests router over model replicas.
+
+use std::sync::atomic::Ordering;
+
+use anyhow::{anyhow, Result};
+
+use super::server::WorkerHandle;
+
+/// Routes single-sample requests to the replica with the fewest
+/// outstanding requests (ties -> lowest index, which keeps routing
+/// deterministic for tests).
+pub struct Router {
+    workers: Vec<WorkerHandle>,
+}
+
+impl Router {
+    pub fn new(workers: Vec<WorkerHandle>) -> Self {
+        assert!(!workers.is_empty());
+        Router { workers }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Pick the least-loaded replica index.
+    pub fn pick(&self) -> usize {
+        self.workers
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, w)| w.outstanding.load(Ordering::SeqCst))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Submit a request; returns the reply receiver and the replica used.
+    pub fn submit(
+        &self,
+        x: Vec<f32>,
+    ) -> Result<(std::sync::mpsc::Receiver<Result<Vec<f32>>>, usize)> {
+        let idx = self.pick();
+        let rx = self.workers[idx].submit(x)?;
+        Ok((rx, idx))
+    }
+
+    pub fn worker(&self, i: usize) -> &WorkerHandle {
+        &self.workers[i]
+    }
+
+    /// Total requests completed across replicas (from latency counters).
+    pub fn completed(&self) -> u64 {
+        self.workers.iter().map(|w| w.latency.count()).sum()
+    }
+
+    /// Shut down: drop senders and join all workers.
+    pub fn shutdown(self) -> Result<()> {
+        let mut joins = Vec::new();
+        for w in self.workers {
+            drop(w.tx);
+            joins.push(w.join);
+        }
+        for j in joins {
+            j.join().map_err(|_| anyhow!("worker panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{spawn_worker, BatchPolicy, MockBackend};
+    use std::time::Duration;
+
+    fn slow_mock() -> MockBackend {
+        MockBackend { bs: 2, sample: 1, classes: 1, delay: Duration::from_millis(5) }
+    }
+
+    #[test]
+    fn router_spreads_load() {
+        let workers = (0..3)
+            .map(|_| spawn_worker(move || Ok(slow_mock()), BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) }).unwrap())
+            .collect();
+        let router = Router::new(workers);
+        let mut rxs = Vec::new();
+        let mut used = [0usize; 3];
+        for i in 0..30 {
+            let (rx, idx) = router.submit(vec![i as f32]).unwrap();
+            used[idx] += 1;
+            rxs.push((i, rx));
+        }
+        for (i, rx) in rxs {
+            let v = rx.recv().unwrap().unwrap();
+            assert_eq!(v[0], i as f32);
+        }
+        // least-loaded routing must touch every replica under backlog
+        assert!(used.iter().all(|u| *u > 0), "usage {used:?}");
+        assert_eq!(router.completed(), 30);
+        router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pick_prefers_idle_worker() {
+        let w0 = spawn_worker(move || Ok(slow_mock()), BatchPolicy::default()).unwrap();
+        let w1 = spawn_worker(move || Ok(slow_mock()), BatchPolicy::default()).unwrap();
+        // preload w0
+        w0.outstanding.store(5, Ordering::SeqCst);
+        let router = Router::new(vec![w0, w1]);
+        assert_eq!(router.pick(), 1);
+        // restore so shutdown joins cleanly
+        router.worker(0).outstanding.store(0, Ordering::SeqCst);
+        router.shutdown().unwrap();
+    }
+}

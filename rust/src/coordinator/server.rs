@@ -1,0 +1,313 @@
+//! Model worker: a thread that owns an inference backend and serves
+//! batched requests from a channel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::LatencyHistogram;
+use crate::runtime::{literal_f32, literal_to_f32, ModelHandle, Runtime, TensorSpec};
+
+use super::batcher::{BatchPolicy, Batcher};
+
+/// One inference request: a single sample (flattened CHW) and a reply
+/// channel for its logits.
+pub struct InferRequest {
+    pub x: Vec<f32>,
+    pub resp: SyncSender<Result<Vec<f32>>>,
+}
+
+/// Anything the worker can run a padded batch through. Abstracted so the
+/// coordinator's batching/routing invariants are property-testable
+/// without PJRT in the loop.
+///
+/// NOTE: deliberately *not* `Send` — PJRT handles hold thread-local
+/// state, so each worker constructs its own backend inside its thread
+/// via the factory passed to `spawn_worker` (one PJRT client + compiled
+/// executable per replica, exactly like a one-process-per-replica
+/// deployment).
+pub trait InferBackend: 'static {
+    /// Fixed device batch size (artifact-baked).
+    fn batch_size(&self) -> usize;
+    /// Elements per sample (C*H*W).
+    fn sample_elems(&self) -> usize;
+    /// Logits per sample.
+    fn out_elems(&self) -> usize;
+    /// Run exactly one device batch (len == batch_size * sample_elems).
+    fn infer_batch(&self, x: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// PJRT-backed backend: infer executable + resident state literals.
+pub struct PjrtBackend {
+    model: ModelHandle,
+    state: Vec<xla::Literal>,
+    sample: usize,
+    out: usize,
+}
+
+impl PjrtBackend {
+    /// A `Send` factory for `spawn_worker`: creates the PJRT client and
+    /// compiles the artifact inside the worker thread.
+    pub fn factory(
+        dir: std::path::PathBuf,
+        name: String,
+        checkpoint: Option<std::path::PathBuf>,
+    ) -> impl FnOnce() -> Result<PjrtBackend> + Send + 'static {
+        move || {
+            let rt = Runtime::cpu()?;
+            PjrtBackend::load(&rt, &dir, &name, checkpoint.as_deref())
+        }
+    }
+
+    /// Load from artifacts; state comes from `params.bin` or, if given,
+    /// a trained checkpoint.
+    pub fn load(
+        rt: &Runtime,
+        dir: &std::path::Path,
+        name: &str,
+        checkpoint: Option<&std::path::Path>,
+    ) -> Result<PjrtBackend> {
+        let model = ModelHandle::load(rt, dir, name, false)?;
+        let host: Vec<(TensorSpec, Vec<f32>)> = match checkpoint {
+            Some(p) => crate::training::load_checkpoint(p)?.1,
+            None => model.manifest.load_initial_state()?,
+        };
+        let state = host
+            .iter()
+            .map(|(spec, data)| literal_f32(&spec.shape, data))
+            .collect::<Result<Vec<_>>>()?;
+        let cfg = &model.manifest.config;
+        let sample = cfg.in_channels * cfg.image_size * cfg.image_size;
+        let out = cfg.num_classes;
+        Ok(PjrtBackend { model, state, sample, out })
+    }
+}
+
+impl InferBackend for PjrtBackend {
+    fn batch_size(&self) -> usize {
+        self.model.manifest.config.batch_size
+    }
+
+    fn sample_elems(&self) -> usize {
+        self.sample
+    }
+
+    fn out_elems(&self) -> usize {
+        self.out
+    }
+
+    fn infer_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let cfg = &self.model.manifest.config;
+        let bs = cfg.batch_size;
+        assert_eq!(x.len(), bs * self.sample);
+        let xl = literal_f32(
+            &[bs, cfg.in_channels, cfg.image_size, cfg.image_size],
+            x,
+        )?;
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.push(&xl);
+        let outs = self.model.infer(&inputs)?;
+        literal_to_f32(&outs[0])
+    }
+}
+
+/// Deterministic mock backend for coordinator tests: logit j of sample i
+/// is `sum(x_i) + j`.
+pub struct MockBackend {
+    pub bs: usize,
+    pub sample: usize,
+    pub classes: usize,
+    /// optional artificial latency per batch
+    pub delay: std::time::Duration,
+}
+
+impl InferBackend for MockBackend {
+    fn batch_size(&self) -> usize {
+        self.bs
+    }
+
+    fn sample_elems(&self) -> usize {
+        self.sample
+    }
+
+    fn out_elems(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mut out = vec![0.0f32; self.bs * self.classes];
+        for b in 0..self.bs {
+            let s: f32 = x[b * self.sample..(b + 1) * self.sample].iter().sum();
+            for j in 0..self.classes {
+                out[b * self.classes + j] = s + j as f32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Handle to a spawned worker: submit requests, inspect load, join.
+pub struct WorkerHandle {
+    pub tx: Sender<InferRequest>,
+    pub outstanding: Arc<AtomicUsize>,
+    pub latency: Arc<LatencyHistogram>,
+    pub join: JoinHandle<()>,
+}
+
+impl WorkerHandle {
+    /// Submit one sample and get a receiver for the reply.
+    pub fn submit(&self, x: Vec<f32>) -> Result<std::sync::mpsc::Receiver<Result<Vec<f32>>>> {
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(InferRequest { x, resp: rtx })
+            .map_err(|_| anyhow!("worker channel closed"))?;
+        Ok(rrx)
+    }
+}
+
+/// Spawn a worker thread serving a backend built by `factory` (inside
+/// the thread — PJRT handles are not `Send`) under `policy`.
+///
+/// Invariants (property-tested in rust/tests/proptest_coordinator.rs):
+/// * every submitted request receives exactly one reply;
+/// * device batches never exceed the backend batch size; short batches
+///   are zero-padded and the padding's outputs are discarded;
+/// * replies carry the logits of their own request (no cross-wiring).
+pub fn spawn_worker<B, F>(factory: F, policy: BatchPolicy) -> Result<WorkerHandle>
+where
+    B: InferBackend,
+    F: FnOnce() -> Result<B> + Send + 'static,
+{
+    let (tx, rx) = channel::<InferRequest>();
+    let outstanding = Arc::new(AtomicUsize::new(0));
+    let latency = Arc::new(LatencyHistogram::new());
+    let out_clone = outstanding.clone();
+    let lat_clone = latency.clone();
+    let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<Result<()>>(1);
+    let join = std::thread::spawn(move || {
+        let backend = match factory() {
+            Ok(b) => {
+                let _ = ready_tx.send(Ok(()));
+                b
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+        };
+        let device_bs = backend.batch_size();
+        let policy = BatchPolicy { max_batch: policy.max_batch.min(device_bs), ..policy };
+        let batcher = Batcher::new(rx, policy);
+        let sample = backend.sample_elems();
+        let classes = backend.out_elems();
+        while let Some(batch) = batcher.next_batch() {
+            let t0 = Instant::now();
+            // zero-pad to the artifact's fixed batch size
+            let mut xs = vec![0.0f32; device_bs * sample];
+            for (i, req) in batch.iter().enumerate() {
+                if req.x.len() == sample {
+                    xs[i * sample..(i + 1) * sample].copy_from_slice(&req.x);
+                }
+            }
+            let result = backend.infer_batch(&xs);
+            match result {
+                Ok(logits) => {
+                    for (i, req) in batch.into_iter().enumerate() {
+                        let reply = if req.x.len() != sample {
+                            Err(anyhow!(
+                                "bad request size {} != {sample}",
+                                req.x.len()
+                            ))
+                        } else {
+                            Ok(logits[i * classes..(i + 1) * classes].to_vec())
+                        };
+                        // record before replying so observers that join on
+                        // the reply see a consistent count
+                        lat_clone.record(t0.elapsed());
+                        out_clone.fetch_sub(1, Ordering::SeqCst);
+                        let _ = req.resp.send(reply);
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for req in batch {
+                        out_clone.fetch_sub(1, Ordering::SeqCst);
+                        let _ = req.resp.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+    });
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("worker died before ready"))??;
+    Ok(WorkerHandle { tx, outstanding, latency, join })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn mock() -> MockBackend {
+        MockBackend { bs: 4, sample: 3, classes: 2, delay: Duration::ZERO }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let w = spawn_worker(move || Ok(mock()), BatchPolicy::default()).unwrap();
+        let rx = w.submit(vec![1.0, 2.0, 3.0]).unwrap();
+        let logits = rx.recv().unwrap().unwrap();
+        assert_eq!(logits, vec![6.0, 7.0]);
+        drop(w.tx);
+        w.join.join().unwrap();
+    }
+
+    #[test]
+    fn many_requests_all_answered_correctly() {
+        let w = spawn_worker(move || Ok(mock()), BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..37 {
+            rxs.push((i, w.submit(vec![i as f32, 0.0, 0.0]).unwrap()));
+        }
+        for (i, rx) in rxs {
+            let logits = rx.recv().unwrap().unwrap();
+            assert_eq!(logits[0], i as f32);
+            assert_eq!(logits[1], i as f32 + 1.0);
+        }
+        assert_eq!(w.outstanding.load(Ordering::SeqCst), 0);
+        drop(w.tx);
+        w.join.join().unwrap();
+    }
+
+    #[test]
+    fn wrong_size_request_gets_error_not_hang() {
+        let w = spawn_worker(move || Ok(mock()), BatchPolicy::default()).unwrap();
+        let rx = w.submit(vec![1.0]).unwrap(); // wrong size
+        assert!(rx.recv().unwrap().is_err());
+        drop(w.tx);
+        w.join.join().unwrap();
+    }
+
+    #[test]
+    fn latency_recorded() {
+        let w = spawn_worker(
+            move || Ok(MockBackend { delay: Duration::from_micros(100), ..mock() }),
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        let rx = w.submit(vec![0.0; 3]).unwrap();
+        rx.recv().unwrap().unwrap();
+        assert_eq!(w.latency.count(), 1);
+        drop(w.tx);
+        w.join.join().unwrap();
+    }
+}

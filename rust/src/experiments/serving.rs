@@ -1,0 +1,85 @@
+//! Serving load driver: drives the coordinator (router + batcher +
+//! PJRT workers) with an open-loop synthetic request stream and reports
+//! latency/throughput — the end-to-end serving validation.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{spawn_worker, BatchPolicy, PjrtBackend, Router};
+use crate::data::SyntheticDataset;
+use crate::runtime::Manifest;
+
+/// Result of one load run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    pub p95_ms: f64,
+    pub replicas: usize,
+}
+
+/// Serve `requests` synthetic samples through `replicas` PJRT workers.
+pub fn drive(cfg: &RunConfig, model: &str, requests: usize, checkpoint: Option<std::path::PathBuf>) -> Result<ServeReport> {
+    let man = Manifest::load(&cfg.artifacts, model)?;
+    let ds = SyntheticDataset::new(
+        "serve",
+        man.config.num_classes,
+        man.config.in_channels,
+        man.config.image_size,
+        cfg.seed,
+    );
+    let sample = man.config.in_channels * man.config.image_size * man.config.image_size;
+
+    let policy = BatchPolicy {
+        max_batch: cfg.max_batch,
+        max_wait: Duration::from_millis(cfg.max_wait_ms),
+    };
+    eprintln!(
+        "spawning {} replica(s) of {model} (compiling artifacts in each worker)...",
+        cfg.replicas
+    );
+    let workers = (0..cfg.replicas)
+        .map(|_| {
+            spawn_worker(
+                PjrtBackend::factory(cfg.artifacts.clone(), model.to_string(), checkpoint.clone()),
+                policy,
+            )
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let router = Router::new(workers);
+
+    // open-loop submit, then collect
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    let mut buf = vec![0.0f32; sample];
+    for i in 0..requests {
+        ds.render(i, &mut buf);
+        let (rx, _) = router.submit(buf.clone())?;
+        pending.push((Instant::now(), rx));
+    }
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
+    for (t_submit, rx) in pending {
+        let reply = rx.recv()??;
+        debug_assert_eq!(reply.len(), man.config.num_classes);
+        lat_ms.push(t_submit.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let report = ServeReport {
+        requests,
+        wall_secs: wall,
+        throughput_rps: requests as f64 / wall,
+        mean_ms: lat_ms.iter().sum::<f64>() / lat_ms.len().max(1) as f64,
+        p95_ms: lat_ms[((lat_ms.len() as f64 * 0.95) as usize).min(lat_ms.len() - 1)],
+        replicas: cfg.replicas,
+    };
+    for i in 0..router.replicas() {
+        println!("  {}", router.worker(i).latency.report(&format!("replica{i}")));
+    }
+    router.shutdown()?;
+    Ok(report)
+}

@@ -1,0 +1,27 @@
+//! # PLUM-RS
+//!
+//! Reproduction of **"PLUM: Improving Inference Efficiency By Leveraging
+//! Repetition-Sparsity Trade-Off"** (Kuhar, Jain & Tumanov, 2023) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * L1/L2 (build-time python): Pallas signed-binary kernels + JAX ResNet
+//!   fwd/bwd, AOT-lowered to HLO text (`make artifacts`).
+//! * L3 (this crate): PJRT runtime, training driver, repetition-sparsity
+//!   inference engine, sparse-accelerator energy simulator, serving
+//!   coordinator, benchmark harnesses for every paper table/figure.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod models;
+pub mod quant;
+pub mod repetition;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod training;
+pub mod util;

@@ -1,0 +1,9 @@
+//! `plum` — launcher binary. See `plum help` / README.md.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = plum::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

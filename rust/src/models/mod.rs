@@ -1,0 +1,234 @@
+//! Model zoo descriptors (S9).
+//!
+//! Architecture geometry mirrored from `python/compile/model.py` (an
+//! integration test cross-checks these against the conv_layers recorded
+//! in the AOT manifests). Used for:
+//!
+//! * the Figure 7 / Figure 9 workloads (per-layer conv shapes of
+//!   ResNet-18 without having to load an artifact);
+//! * parameter / effectual-parameter accounting for the Pareto plots
+//!   (Figures 2 & 5) and Table 7's equal-effectual comparisons.
+
+use crate::quant::Scheme;
+use crate::tensor::Conv2dGeometry;
+
+/// One conv layer of a described network.
+#[derive(Debug, Clone)]
+pub struct ConvLayerDesc {
+    pub name: String,
+    pub geom: Conv2dGeometry,
+    pub quantized: bool,
+}
+
+impl ConvLayerDesc {
+    pub fn weights(&self) -> usize {
+        self.geom.weight_count()
+    }
+}
+
+fn conv(name: String, n: usize, c: usize, h: usize, w: usize, k: usize, ks: usize,
+        stride: usize, quantized: bool) -> ConvLayerDesc {
+    ConvLayerDesc {
+        name,
+        geom: Conv2dGeometry {
+            n, c, h, w, k, r: ks, s: ks, stride, padding: ks / 2,
+        },
+        quantized,
+    }
+}
+
+fn scaled(widths: &[usize], mult: f64, floor: usize) -> Vec<usize> {
+    widths
+        .iter()
+        .map(|w| ((*w as f64 * mult).round() as usize).max(floor))
+        .collect()
+}
+
+/// CIFAR ResNet (He et al.): depth = 6n+2, option-A shortcuts (no conv),
+/// stem unquantized. Mirrors `model.Tape.forward`'s cifar_resnet branch.
+pub fn cifar_resnet_layers(depth: usize, width_mult: f64, image: usize, batch: usize) -> Vec<ConvLayerDesc> {
+    assert_eq!((depth - 2) % 6, 0, "depth must be 6n+2");
+    let n = (depth - 2) / 6;
+    let widths = scaled(&[16, 32, 64], width_mult, 4);
+    let mut layers = Vec::new();
+    let mut idx = 0usize;
+    let mut push = |c: usize, h: usize, w: usize, k: usize, ks: usize, st: usize, q: bool, idx: &mut usize| {
+        layers.push(conv(format!("{idx:03}.conv"), batch, c, h, w, k, ks, st, q));
+        *idx += 1;
+    };
+    let (mut h, mut w) = (image, image);
+    push(3, h, w, widths[0], 3, 1, false, &mut idx);
+    let mut in_ch = widths[0];
+    for (si, &wd) in widths.iter().enumerate() {
+        for bi in 0..n {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            push(in_ch, h, w, wd, 3, stride, true, &mut idx);
+            if stride == 2 {
+                h /= 2;
+                w /= 2;
+            }
+            push(wd, h, w, wd, 3, 1, true, &mut idx);
+            in_ch = wd;
+        }
+    }
+    layers
+}
+
+/// ResNet-18 for `image`px inputs, projection shortcuts (quantized),
+/// mirrors the `resnet18` branch of `model.Tape.forward`.
+pub fn resnet18_layers(width_mult: f64, image: usize, batch: usize) -> Vec<ConvLayerDesc> {
+    let widths = scaled(&[64, 128, 256, 512], width_mult, 8);
+    let mut layers = Vec::new();
+    let mut idx = 0usize;
+    let mut push = |c: usize, h: usize, w: usize, k: usize, ks: usize, st: usize, q: bool, idx: &mut usize| {
+        layers.push(conv(format!("{idx:03}.conv"), batch, c, h, w, k, ks, st, q));
+        *idx += 1;
+    };
+    let (mut h, mut w) = (image, image);
+    push(3, h, w, widths[0], 3, 1, false, &mut idx);
+    let mut in_ch = widths[0];
+    for (si, &wd) in widths.iter().enumerate() {
+        for bi in 0..2 {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            push(in_ch, h, w, wd, 3, stride, true, &mut idx);
+            let (h2, w2) = if stride == 2 { (h / 2, w / 2) } else { (h, w) };
+            push(wd, h2, w2, wd, 3, 1, true, &mut idx);
+            if stride != 1 || in_ch != wd {
+                // projection shortcut 1x1 (quantized)
+                push(in_ch, h, w, wd, 1, stride, true, &mut idx);
+            }
+            h = h2;
+            w = w2;
+            in_ch = wd;
+        }
+    }
+    layers
+}
+
+/// VGG** derivative (Cai et al. 2017; paper Table 6): conv pairs with
+/// 2x2 max-pools between stages; first conv full precision. Mirrors
+/// `common.vgg_small_plan`.
+pub fn vgg_small_layers(width_mult: f64, image: usize, batch: usize) -> Vec<ConvLayerDesc> {
+    plan_layers(
+        &[(128, false), (128, true), (0, false), (256, true), (256, true), (0, false),
+          (512, true), (512, true), (0, false)],
+        width_mult, image, batch,
+    )
+}
+
+/// AlexNet* derivative (DoReFa svhn-digit; paper Table 6). Mirrors
+/// `common.alexnet_small_plan`.
+pub fn alexnet_small_layers(width_mult: f64, image: usize, batch: usize) -> Vec<ConvLayerDesc> {
+    plan_layers(
+        &[(48, false), (0, false), (64, true), (64, true), (0, false),
+          (128, true), (128, true), (0, false)],
+        width_mult, image, batch,
+    )
+}
+
+/// Shared builder for plain conv-pool trunks: entries are (channels,
+/// quantized); channels == 0 marks a 2x2 pool.
+fn plan_layers(plan: &[(usize, bool)], width_mult: f64, image: usize, batch: usize) -> Vec<ConvLayerDesc> {
+    let mut layers = Vec::new();
+    let (mut h, mut w) = (image, image);
+    let mut in_ch = 3usize;
+    let mut idx = 0usize;
+    for &(ch, quantized) in plan {
+        if ch == 0 {
+            h /= 2;
+            w /= 2;
+            continue;
+        }
+        let k = ((ch as f64 * width_mult).round() as usize).max(8);
+        layers.push(conv(format!("{idx:03}.conv"), batch, in_ch, h, w, k, 3, 1, quantized));
+        in_ch = k;
+        idx += 1;
+    }
+    layers
+}
+
+/// Total weights across quantized conv layers.
+pub fn quantized_weight_count(layers: &[ConvLayerDesc]) -> usize {
+    layers.iter().filter(|l| l.quantized).map(|l| l.weights()).sum()
+}
+
+/// Expected effectual parameters under a scheme with the given sparsity
+/// (binary: dense; ternary/sb: (1 - sparsity) of quantized weights).
+pub fn effectual_estimate(layers: &[ConvLayerDesc], scheme: Scheme, sparsity: f64) -> usize {
+    let q = quantized_weight_count(layers) as f64;
+    match scheme {
+        Scheme::Fp | Scheme::Binary => q as usize,
+        _ => (q * (1.0 - sparsity)).round() as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet20_has_19_quantized_convs() {
+        // 6n+2 with n=3: 18 block convs quantized + 1 unquantized stem
+        let layers = cifar_resnet_layers(20, 1.0, 32, 1);
+        assert_eq!(layers.len(), 19);
+        assert_eq!(layers.iter().filter(|l| l.quantized).count(), 18);
+    }
+
+    #[test]
+    fn depth_scaling() {
+        let l20 = cifar_resnet_layers(20, 1.0, 32, 1);
+        let l32 = cifar_resnet_layers(32, 1.0, 32, 1);
+        assert_eq!(l32.len() - l20.len(), 12); // +2n per stage * 3 stages
+    }
+
+    #[test]
+    fn width_scaling_reduces_params() {
+        let full = quantized_weight_count(&cifar_resnet_layers(20, 1.0, 32, 1));
+        let thin = quantized_weight_count(&cifar_resnet_layers(20, 0.7, 32, 1));
+        assert!(thin < full);
+        let ratio = thin as f64 / full as f64;
+        assert!((0.4..0.6).contains(&ratio), "ratio {ratio}"); // ~0.49
+    }
+
+    #[test]
+    fn resnet18_spatial_dims_consistent() {
+        let layers = resnet18_layers(1.0, 64, 1);
+        // stage outputs: 64 -> 32 -> 16 -> 8
+        let last = layers.last().unwrap();
+        assert_eq!(last.geom.h, 8);
+        assert_eq!(last.geom.k, 512);
+    }
+
+    #[test]
+    fn effectual_binary_vs_sb() {
+        let layers = cifar_resnet_layers(20, 1.0, 32, 1);
+        let b = effectual_estimate(&layers, Scheme::Binary, 0.0);
+        let s = effectual_estimate(&layers, Scheme::sb_default(), 0.5);
+        assert_eq!(b, 2 * s);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_depth_panics() {
+        cifar_resnet_layers(21, 1.0, 32, 1);
+    }
+
+    #[test]
+    fn vgg_small_structure() {
+        let layers = vgg_small_layers(0.5, 32, 1);
+        assert_eq!(layers.len(), 6);
+        assert!(!layers[0].quantized);
+        assert!(layers[1..].iter().all(|l| l.quantized));
+        // pools halve spatial dims between stages
+        assert_eq!(layers[2].geom.h, 16);
+        assert_eq!(layers[4].geom.h, 8);
+    }
+
+    #[test]
+    fn alexnet_small_structure() {
+        let layers = alexnet_small_layers(0.5, 32, 1);
+        assert_eq!(layers.len(), 5);
+        assert_eq!(layers[1].geom.h, 16); // after first pool
+        assert_eq!(layers.last().unwrap().geom.h, 8);
+    }
+}

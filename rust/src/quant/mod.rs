@@ -1,0 +1,322 @@
+//! Quantizer suite (S2): binary / ternary / signed-binary, plus the
+//! repetition & sparsity statistics the paper's analysis sections use.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` exactly (the golden
+//! fixture test in `rust/tests/` asserts bit-equality), so a latent-weight
+//! checkpoint trained through the AOT path quantizes identically here.
+
+mod pack;
+pub mod stats;
+
+pub use pack::{PackedSignedBinary, BITS_PER_WORD};
+pub use stats::{filter_repetition_stats, weight_histogram, RepetitionStats};
+
+use crate::tensor::Tensor;
+
+/// Weight quantization scheme (paper Figure 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    Fp,
+    Binary,
+    /// Ternary with Delta = delta_frac * max|W| per filter.
+    Ternary { delta_frac: f32 },
+    /// PLUM signed-binary: per-region {0,+a} or {0,-a} value sets.
+    SignedBinary { delta_frac: f32, regions_per_filter: usize },
+}
+
+impl Scheme {
+    pub fn sb_default() -> Scheme {
+        Scheme::SignedBinary { delta_frac: 0.05, regions_per_filter: 1 }
+    }
+
+    pub fn ternary_default() -> Scheme {
+        Scheme::Ternary { delta_frac: 0.05 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Fp => "fp",
+            Scheme::Binary => "binary",
+            Scheme::Ternary { .. } => "ternary",
+            Scheme::SignedBinary { .. } => "signed-binary",
+        }
+    }
+
+    /// Unique weight values per filter (drives repetition; Figure 3's
+    /// 2^9 vs 3^9 unique-filter argument).
+    pub fn values_per_filter(&self) -> usize {
+        match self {
+            Scheme::Fp => usize::MAX,
+            Scheme::Binary => 2,
+            Scheme::Ternary { .. } => 3,
+            Scheme::SignedBinary { .. } => 2, // {0, +a} or {0, -a}
+        }
+    }
+}
+
+/// Output of quantizing one conv weight tensor [K, C, R, S].
+#[derive(Debug, Clone)]
+pub struct QuantizedWeights {
+    /// Dense quantized values (same shape as input).
+    pub values: Tensor,
+    /// Per-region scale magnitude alpha (len = K * G; 1 entry for binary/ternary per filter).
+    pub alpha: Vec<f32>,
+    /// Per-region sign factor beta (+1/-1); all +1 for binary/ternary.
+    pub beta: Vec<f32>,
+    pub scheme: Scheme,
+}
+
+impl QuantizedWeights {
+    pub fn density(&self) -> f64 {
+        self.values.count_nonzero() as f64 / self.values.len() as f64
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    pub fn effectual(&self) -> usize {
+        self.values.count_nonzero()
+    }
+}
+
+fn per_filter_view(w: &Tensor, g: usize) -> (usize, usize) {
+    // returns (regions, elems_per_region) over flattened [K*G, C/G*R*S]
+    let (k, c, r, s) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    assert!(c % g == 0, "C={c} not divisible by G={g}");
+    (k * g, (c / g) * r * s)
+}
+
+/// Binary (BWN): sign(w) * mean|w| per filter; sign(0) := +1.
+pub fn quantize_binary(w: &Tensor) -> QuantizedWeights {
+    let (regions, elems) = per_filter_view(w, 1);
+    let mut values = w.clone();
+    let mut alpha = vec![0.0f32; regions];
+    for fi in 0..regions {
+        let row = &w.data()[fi * elems..(fi + 1) * elems];
+        let a = row.iter().map(|v| v.abs()).sum::<f32>() / elems as f32;
+        alpha[fi] = a;
+        for (o, v) in values.data_mut()[fi * elems..(fi + 1) * elems]
+            .iter_mut()
+            .zip(row)
+        {
+            *o = if *v >= 0.0 { a } else { -a };
+        }
+    }
+    QuantizedWeights { values, alpha, beta: vec![1.0; regions], scheme: Scheme::Binary }
+}
+
+/// Ternary (TWN with the paper's Delta rule).
+pub fn quantize_ternary(w: &Tensor, delta_frac: f32) -> QuantizedWeights {
+    let (regions, elems) = per_filter_view(w, 1);
+    let mut values = w.clone();
+    let mut alpha = vec![0.0f32; regions];
+    for fi in 0..regions {
+        let row = &w.data()[fi * elems..(fi + 1) * elems];
+        let maxabs = row.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        let delta = delta_frac * maxabs;
+        let mut sum = 0.0f32;
+        let mut cnt = 0usize;
+        for v in row {
+            if v.abs() > delta {
+                sum += v.abs();
+                cnt += 1;
+            }
+        }
+        let a = sum / (cnt.max(1) as f32);
+        alpha[fi] = a;
+        for (o, v) in values.data_mut()[fi * elems..(fi + 1) * elems]
+            .iter_mut()
+            .zip(row)
+        {
+            *o = if *v > delta {
+                a
+            } else if *v < -delta {
+                -a
+            } else {
+                0.0
+            };
+        }
+    }
+    QuantizedWeights {
+        values,
+        alpha,
+        beta: vec![1.0; regions],
+        scheme: Scheme::Ternary { delta_frac },
+    }
+}
+
+/// PLUM signed-binary (paper eq. 3): per-region one of {0,+a} / {0,-a}.
+pub fn quantize_signed_binary(
+    w: &Tensor,
+    beta: &[f32],
+    delta_frac: f32,
+    regions_per_filter: usize,
+) -> QuantizedWeights {
+    let (regions, elems) = per_filter_view(w, regions_per_filter);
+    assert_eq!(beta.len(), regions, "beta len vs regions");
+    let mut values = w.clone();
+    let mut alpha = vec![0.0f32; regions];
+    for fi in 0..regions {
+        let row = &w.data()[fi * elems..(fi + 1) * elems];
+        let b = beta[fi];
+        let maxabs = row.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        let delta = delta_frac * maxabs;
+        let mut sum = 0.0f32;
+        let mut cnt = 0usize;
+        for v in row {
+            let eff = (b >= 0.0 && *v >= delta) || (b < 0.0 && *v <= -delta);
+            if eff {
+                sum += v.abs();
+                cnt += 1;
+            }
+        }
+        let a = sum / (cnt.max(1) as f32);
+        alpha[fi] = a;
+        for (o, v) in values.data_mut()[fi * elems..(fi + 1) * elems]
+            .iter_mut()
+            .zip(row)
+        {
+            *o = if b >= 0.0 && *v >= delta {
+                a
+            } else if b < 0.0 && *v <= -delta {
+                -a
+            } else {
+                0.0
+            };
+        }
+    }
+    QuantizedWeights {
+        values,
+        alpha,
+        beta: beta.to_vec(),
+        scheme: Scheme::SignedBinary { delta_frac, regions_per_filter },
+    }
+}
+
+/// Deterministic region sign assignment: first p_pos fraction +1 —
+/// matches `ref.default_beta` on the python side.
+pub fn default_beta(num_regions: usize, p_pos: f64) -> Vec<f32> {
+    let n_pos = (num_regions as f64 * p_pos).round() as usize;
+    (0..num_regions)
+        .map(|i| if i < n_pos { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// Quantize with any scheme (fp passes through).
+pub fn quantize(w: &Tensor, scheme: Scheme, beta: Option<&[f32]>) -> QuantizedWeights {
+    match scheme {
+        Scheme::Fp => QuantizedWeights {
+            values: w.clone(),
+            alpha: vec![],
+            beta: vec![],
+            scheme,
+        },
+        Scheme::Binary => quantize_binary(w),
+        Scheme::Ternary { delta_frac } => quantize_ternary(w, delta_frac),
+        Scheme::SignedBinary { delta_frac, regions_per_filter } => {
+            let regions = w.dim(0) * regions_per_filter;
+            let owned;
+            let b = match beta {
+                Some(b) => b,
+                None => {
+                    owned = default_beta(regions, 0.5);
+                    &owned
+                }
+            };
+            quantize_signed_binary(w, b, delta_frac, regions_per_filter)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn w_fixture(seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::rand_normal(&[4, 8, 3, 3], 0.5, &mut rng)
+    }
+
+    #[test]
+    fn binary_is_dense_two_valued() {
+        let q = quantize_binary(&w_fixture(1));
+        assert_eq!(q.effectual(), q.values.len());
+        for fi in 0..4 {
+            let row = &q.values.data()[fi * 72..(fi + 1) * 72];
+            let mut uniq: Vec<i32> = row.iter().map(|v| (v * 1e6) as i32).collect();
+            uniq.sort();
+            uniq.dedup();
+            assert!(uniq.len() <= 2, "filter {fi} has {} uniques", uniq.len());
+        }
+    }
+
+    #[test]
+    fn ternary_three_valued_sparse() {
+        let q = quantize_ternary(&w_fixture(2), 0.5); // large delta -> sparse
+        assert!(q.sparsity() > 0.2, "sparsity {}", q.sparsity());
+        for v in q.values.data() {
+            assert!(*v == 0.0 || v.abs() > 0.0);
+        }
+    }
+
+    #[test]
+    fn sb_regions_single_signed_value() {
+        let w = w_fixture(3);
+        let beta = default_beta(4, 0.5);
+        let q = quantize_signed_binary(&w, &beta, 0.05, 1);
+        for fi in 0..4 {
+            let row = &q.values.data()[fi * 72..(fi + 1) * 72];
+            let has_pos = row.iter().any(|v| *v > 0.0);
+            let has_neg = row.iter().any(|v| *v < 0.0);
+            assert!(
+                !(has_pos && has_neg),
+                "filter {fi} mixes signs — violates signed-binary"
+            );
+            if beta[fi] >= 0.0 {
+                assert!(!has_neg);
+            } else {
+                assert!(!has_pos);
+            }
+        }
+    }
+
+    #[test]
+    fn sb_sparsity_near_half_for_gaussian() {
+        // with delta small and beta masking one sign, ~half the weights
+        // become ineffectual (paper: 50-65% sparsity).
+        let mut rng = Rng::new(4);
+        let w = Tensor::rand_normal(&[16, 16, 3, 3], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        assert!(
+            q.sparsity() > 0.4 && q.sparsity() < 0.65,
+            "sparsity {}",
+            q.sparsity()
+        );
+    }
+
+    #[test]
+    fn sb_intra_filter_regions() {
+        let w = w_fixture(5);
+        let beta = default_beta(8, 0.5); // G=2 -> 8 regions
+        let q = quantize_signed_binary(&w, &beta, 0.05, 2);
+        assert_eq!(q.alpha.len(), 8);
+        assert_eq!(q.values.shape(), w.shape());
+    }
+
+    #[test]
+    fn default_beta_prefix() {
+        let b = default_beta(8, 0.25);
+        assert_eq!(b.iter().filter(|v| **v > 0.0).count(), 2);
+    }
+
+    #[test]
+    fn p_pos_extremes() {
+        let w = w_fixture(6);
+        let q0 = quantize_signed_binary(&w, &default_beta(4, 0.0), 0.05, 1);
+        assert!(q0.values.data().iter().all(|v| *v <= 0.0));
+        let q1 = quantize_signed_binary(&w, &default_beta(4, 1.0), 0.05, 1);
+        assert!(q1.values.data().iter().all(|v| *v >= 0.0));
+    }
+}

@@ -1,0 +1,153 @@
+//! One-bit storage for signed-binary weights.
+//!
+//! The paper (§6) notes signed-binary needs `R*S*C*K + K` bits: a {0,1}
+//! bitmap per weight plus one sign bit per filter (region), versus
+//! ternary's two bits per weight. This module implements that packing and
+//! is used by the serving coordinator's model registry to report model
+//! footprints, and by tests to prove the bit-count claim.
+
+use super::QuantizedWeights;
+
+pub const BITS_PER_WORD: usize = 64;
+
+/// Bit-packed signed-binary weight tensor.
+#[derive(Debug, Clone)]
+pub struct PackedSignedBinary {
+    /// {0,1} effectuality bitmap, row-major over [regions, elems].
+    pub bitmap: Vec<u64>,
+    /// One sign bit per region (true = {0,+a}).
+    pub sign_pos: Vec<bool>,
+    /// Per-region scale magnitude.
+    pub alpha: Vec<f32>,
+    pub regions: usize,
+    pub elems_per_region: usize,
+}
+
+impl PackedSignedBinary {
+    pub fn pack(q: &QuantizedWeights) -> Self {
+        let regions = q.beta.len();
+        assert!(regions > 0, "pack() requires a signed-binary quantization");
+        let total = q.values.len();
+        assert_eq!(total % regions, 0);
+        let elems = total / regions;
+        let words_per_region = elems.div_ceil(BITS_PER_WORD);
+        let mut bitmap = vec![0u64; regions * words_per_region];
+        for fi in 0..regions {
+            let row = &q.values.data()[fi * elems..(fi + 1) * elems];
+            for (ei, v) in row.iter().enumerate() {
+                if *v != 0.0 {
+                    bitmap[fi * words_per_region + ei / BITS_PER_WORD] |=
+                        1u64 << (ei % BITS_PER_WORD);
+                }
+            }
+        }
+        PackedSignedBinary {
+            bitmap,
+            sign_pos: q.beta.iter().map(|b| *b >= 0.0).collect(),
+            alpha: q.alpha.clone(),
+            regions,
+            elems_per_region: elems,
+        }
+    }
+
+    #[inline]
+    fn words_per_region(&self) -> usize {
+        self.elems_per_region.div_ceil(BITS_PER_WORD)
+    }
+
+    /// Value of weight (region, elem).
+    pub fn get(&self, region: usize, elem: usize) -> f32 {
+        let w = self.bitmap[region * self.words_per_region() + elem / BITS_PER_WORD];
+        if (w >> (elem % BITS_PER_WORD)) & 1 == 1 {
+            if self.sign_pos[region] {
+                self.alpha[region]
+            } else {
+                -self.alpha[region]
+            }
+        } else {
+            0.0
+        }
+    }
+
+    /// Unpack to a dense value vector (row-major [regions, elems]).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.regions * self.elems_per_region];
+        for r in 0..self.regions {
+            for e in 0..self.elems_per_region {
+                out[r * self.elems_per_region + e] = self.get(r, e);
+            }
+        }
+        out
+    }
+
+    /// Storage cost in bits, excluding alphas (which binary also carries):
+    /// the paper's R*S*C*K + K accounting.
+    pub fn weight_bits(&self) -> usize {
+        self.regions * self.elems_per_region + self.regions
+    }
+
+    /// Effectual (non-zero) weight count via popcount.
+    pub fn effectual(&self) -> usize {
+        self.bitmap.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{default_beta, quantize_signed_binary};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn packed_fixture() -> (QuantizedWeights, PackedSignedBinary) {
+        let mut rng = Rng::new(8);
+        let w = Tensor::rand_normal(&[6, 10, 3, 3], 1.0, &mut rng);
+        let q = quantize_signed_binary(&w, &default_beta(6, 0.5), 0.05, 1);
+        let p = PackedSignedBinary::pack(&q);
+        (q, p)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let (q, p) = packed_fixture();
+        assert_eq!(p.unpack(), q.values.data());
+    }
+
+    #[test]
+    fn effectual_matches_dense() {
+        let (q, p) = packed_fixture();
+        assert_eq!(p.effectual(), q.effectual());
+    }
+
+    #[test]
+    fn bit_accounting_paper_formula() {
+        // K=6 filters, C=10, R=S=3: R*S*C*K + K bits.
+        let (_, p) = packed_fixture();
+        assert_eq!(p.weight_bits(), 3 * 3 * 10 * 6 + 6);
+    }
+
+    #[test]
+    fn get_respects_region_sign() {
+        let (_, p) = packed_fixture();
+        for r in 0..p.regions {
+            for e in 0..p.elems_per_region {
+                let v = p.get(r, e);
+                if p.sign_pos[r] {
+                    assert!(v >= 0.0);
+                } else {
+                    assert!(v <= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_word_aligned_elems() {
+        // elems per region = 70, not a multiple of 64
+        let mut rng = Rng::new(9);
+        let w = Tensor::rand_normal(&[3, 70, 1, 1], 1.0, &mut rng);
+        let q = quantize_signed_binary(&w, &default_beta(3, 0.5), 0.05, 1);
+        let p = PackedSignedBinary::pack(&q);
+        assert_eq!(p.unpack(), q.values.data());
+    }
+}

@@ -1,0 +1,181 @@
+//! Repetition & distribution statistics (paper §2, §4.3, Figures 3/6/11).
+//!
+//! * `filter_repetition_stats` — unique values per filter, unique filters
+//!   per layer (BNN's "42% of filters are unique" observation), density.
+//! * `weight_histogram` — latent-weight distributions for the Figure 6b /
+//!   Figure 11 reproduction (`plum report weights`), including the
+//!   Laplace-resemblance diagnostic used in §4.3.
+
+use crate::tensor::Tensor;
+use std::collections::HashSet;
+
+#[derive(Debug, Clone)]
+pub struct RepetitionStats {
+    pub filters: usize,
+    pub elems_per_filter: usize,
+    /// Mean count of distinct values within a filter.
+    pub mean_unique_values: f64,
+    /// Fraction of structurally distinct filters in the layer.
+    pub unique_filter_fraction: f64,
+    pub density: f64,
+}
+
+fn quantize_key(v: f32) -> i64 {
+    // stable key for float comparison of quantized values
+    (v as f64 * 1e7).round() as i64
+}
+
+/// Stats over quantized weights [K, C, R, S] (flattened per filter).
+pub fn filter_repetition_stats(values: &Tensor, filters: usize) -> RepetitionStats {
+    assert!(filters > 0 && values.len() % filters == 0);
+    let elems = values.len() / filters;
+    let mut uniq_counts = 0usize;
+    let mut filter_sigs: HashSet<Vec<i64>> = HashSet::new();
+    let mut nonzero = 0usize;
+    for fi in 0..filters {
+        let row = &values.data()[fi * elems..(fi + 1) * elems];
+        let sig: Vec<i64> = row.iter().map(|v| quantize_key(*v)).collect();
+        let mut vals: Vec<i64> = sig.clone();
+        vals.sort_unstable();
+        vals.dedup();
+        uniq_counts += vals.len();
+        nonzero += row.iter().filter(|v| **v != 0.0).count();
+        filter_sigs.insert(sig);
+    }
+    RepetitionStats {
+        filters,
+        elems_per_filter: elems,
+        mean_unique_values: uniq_counts as f64 / filters as f64,
+        unique_filter_fraction: filter_sigs.len() as f64 / filters as f64,
+        density: nonzero as f64 / values.len() as f64,
+    }
+}
+
+/// Histogram of weight values over [lo, hi] with `bins` buckets, plus the
+/// summary moments used to eyeball Laplace-ness (Figure 6b): for a
+/// Laplace distribution kurtosis ≈ 6, for a Gaussian ≈ 3.
+#[derive(Debug, Clone)]
+pub struct WeightHistogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub mean: f64,
+    pub std: f64,
+    pub excess_kurtosis: f64,
+    pub total: usize,
+}
+
+pub fn weight_histogram(values: &[f32], lo: f32, hi: f32, bins: usize) -> WeightHistogram {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0u64; bins];
+    let scale = bins as f32 / (hi - lo);
+    let (mut s1, mut s2, mut s3, mut s4) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for v in values {
+        let b = (((v - lo) * scale) as isize).clamp(0, bins as isize - 1) as usize;
+        counts[b] += 1;
+        let x = *v as f64;
+        s1 += x;
+        s2 += x * x;
+        s3 += x * x * x;
+        s4 += x * x * x * x;
+    }
+    let n = values.len().max(1) as f64;
+    let mean = s1 / n;
+    let var = (s2 / n - mean * mean).max(1e-12);
+    let m4 = s4 / n - 4.0 * mean * s3 / n + 6.0 * mean * mean * s2 / n
+        - 3.0 * mean.powi(4);
+    WeightHistogram {
+        lo,
+        hi,
+        counts,
+        mean,
+        std: var.sqrt(),
+        excess_kurtosis: m4 / (var * var) - 3.0,
+        total: values.len(),
+    }
+}
+
+/// Render a histogram as ASCII rows (for `plum report weights`).
+pub fn render_histogram(h: &WeightHistogram, width: usize) -> String {
+    let max = h.counts.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    for (i, c) in h.counts.iter().enumerate() {
+        let x0 = h.lo + (h.hi - h.lo) * i as f32 / h.counts.len() as f32;
+        let bar = "#".repeat((*c as usize * width / max as usize).min(width));
+        out.push_str(&format!("{x0:>7.3} | {bar} {c}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{default_beta, quantize_binary, quantize_signed_binary, quantize_ternary};
+    use crate::util::Rng;
+
+    fn w(seed: u64, k: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::rand_normal(&[k, 4, 3, 3], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn binary_filters_have_two_values() {
+        let q = quantize_binary(&w(1, 8));
+        let st = filter_repetition_stats(&q.values, 8);
+        assert!(st.mean_unique_values <= 2.0 + 1e-9);
+        assert!((st.density - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ternary_filters_have_up_to_three_values() {
+        let q = quantize_ternary(&w(2, 8), 0.05);
+        let st = filter_repetition_stats(&q.values, 8);
+        assert!(st.mean_unique_values <= 3.0 + 1e-9);
+        assert!(st.density < 1.0);
+    }
+
+    #[test]
+    fn sb_filters_have_two_values_and_sparsity() {
+        let q = quantize_signed_binary(&w(3, 8), &default_beta(8, 0.5), 0.05, 1);
+        let st = filter_repetition_stats(&q.values, 8);
+        assert!(st.mean_unique_values <= 2.0 + 1e-9, "{}", st.mean_unique_values);
+        assert!(st.density < 0.7, "density {}", st.density);
+    }
+
+    #[test]
+    fn histogram_mass_conserved() {
+        let mut rng = Rng::new(4);
+        let vals: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
+        let h = weight_histogram(&vals, -4.0, 4.0, 32);
+        assert_eq!(h.counts.iter().sum::<u64>() as usize, vals.len());
+        assert!(h.mean.abs() < 0.1);
+        // gaussian: excess kurtosis ~ 0
+        assert!(h.excess_kurtosis.abs() < 0.5, "{}", h.excess_kurtosis);
+    }
+
+    #[test]
+    fn laplace_has_heavier_tails() {
+        // laplace via difference of exponentials
+        let mut rng = Rng::new(5);
+        let vals: Vec<f32> = (0..20000)
+            .map(|_| {
+                let u: f32 = rng.next_f32().max(1e-6);
+                let e = -u.ln();
+                if rng.coin(0.5) {
+                    e
+                } else {
+                    -e
+                }
+            })
+            .collect();
+        let h = weight_histogram(&vals, -8.0, 8.0, 32);
+        assert!(h.excess_kurtosis > 1.5, "laplace kurtosis {}", h.excess_kurtosis);
+    }
+
+    #[test]
+    fn render_is_nonempty() {
+        let h = weight_histogram(&[0.0, 0.5, 0.5, -0.5], -1.0, 1.0, 4);
+        let s = render_histogram(&h, 20);
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,294 @@
+//! Greedy pairwise common-subexpression elimination over weight groups —
+//! the *literal* SumMerge algorithm (Prabhakar et al. 2021 §4), kept
+//! alongside the pattern-memoized engine as a fidelity ablation.
+//!
+//! SumMerge represents each filter's dot product as a set of signed
+//! operands (activations to add/subtract) and repeatedly extracts the
+//! most frequent signed operand *pair* into a new node, shrinking total
+//! operand count until no pair repeats. The resulting DAG is evaluated
+//! per output pixel: each node is one add; arithmetic reduction =
+//! dense ops / DAG ops.
+//!
+//! The pattern-memoized planner (plan.rs) approximates this DAG with
+//! fixed-width sub-tiles; `bench: plum simulate cse` and the unit tests
+//! here quantify how close the approximation gets (DESIGN.md lists this
+//! as a design-choice ablation).
+
+use std::collections::HashMap;
+
+use crate::quant::QuantizedWeights;
+use crate::tensor::Conv2dGeometry;
+
+/// A signed reference to either an input activation (by reduction-axis
+/// index) or an internal DAG node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Operand {
+    Input(u32),
+    Node(u32),
+}
+
+/// One CSE node: left + sign*right.
+#[derive(Debug, Clone, Copy)]
+pub struct Node {
+    pub a: Operand,
+    pub b: Operand,
+    /// sign applied to b (+1 / -1); a is always positive within a node —
+    /// group signs are normalized before pairing.
+    pub b_neg: bool,
+}
+
+/// The DAG for one conv layer.
+#[derive(Debug)]
+pub struct CseDag {
+    pub nodes: Vec<Node>,
+    /// per original filter: (alpha, signed roots) — the filter output is
+    /// alpha * sum(sign * root).
+    pub filters: Vec<(f32, Vec<(Operand, bool)>)>,
+    pub geom: Conv2dGeometry,
+}
+
+impl CseDag {
+    /// Total adds per output pixel: one per node + (roots-1) per filter.
+    pub fn adds_per_pixel(&self) -> u64 {
+        let node_adds = self.nodes.len() as u64;
+        let root_adds: u64 = self
+            .filters
+            .iter()
+            .map(|(_, r)| (r.len() as u64).saturating_sub(1))
+            .sum();
+        node_adds + root_adds
+    }
+
+    /// Muls per pixel: one alpha scale per filter with any effectual root.
+    pub fn muls_per_pixel(&self) -> u64 {
+        self.filters.iter().filter(|(_, r)| !r.is_empty()).count() as u64
+    }
+
+    /// Arithmetic reduction vs dense (2 ops per MAC), whole layer.
+    pub fn arithmetic_reduction(&self) -> f64 {
+        let dense = 2.0 * self.geom.dense_macs() as f64;
+        let pixels = (self.geom.n * self.geom.out_h() * self.geom.out_w()) as u64;
+        dense / (pixels * (self.adds_per_pixel() + self.muls_per_pixel())).max(1) as f64
+    }
+
+    /// Evaluate the DAG for one im2col patch row (testing / reference).
+    pub fn eval_row(&self, row: &[f32]) -> Vec<f32> {
+        let mut vals = vec![0.0f32; self.nodes.len()];
+        let get = |vals: &Vec<f32>, op: Operand| -> f32 {
+            match op {
+                Operand::Input(i) => row[i as usize],
+                Operand::Node(i) => vals[i as usize],
+            }
+        };
+        for (i, n) in self.nodes.iter().enumerate() {
+            let b = get(&vals, n.b);
+            vals[i] = get(&vals, n.a) + if n.b_neg { -b } else { b };
+        }
+        self.filters
+            .iter()
+            .map(|(alpha, roots)| {
+                let s: f32 = roots
+                    .iter()
+                    .map(|(op, neg)| {
+                        let v = get(&vals, *op);
+                        if *neg {
+                            -v
+                        } else {
+                            v
+                        }
+                    })
+                    .sum();
+                alpha * s
+            })
+            .collect()
+    }
+}
+
+/// Build the SumMerge DAG for one quantized layer.
+///
+/// `max_rounds` caps greedy pairing work (the paper's implementation
+/// likewise bounds optimization time); 0 means unbounded.
+pub fn build_cse(q: &QuantizedWeights, geom: Conv2dGeometry, max_rounds: usize) -> CseDag {
+    let e = geom.c * geom.r * geom.s;
+    let k = geom.k;
+    assert_eq!(q.values.len(), k * e);
+
+    // per filter: signed operand list over inputs (sign folded from the
+    // quantized value; alpha = |value|)
+    let mut filter_ops: Vec<Vec<(Operand, bool)>> = Vec::with_capacity(k);
+    let mut alphas = Vec::with_capacity(k);
+    for fi in 0..k {
+        let row = &q.values.data()[fi * e..(fi + 1) * e];
+        let alpha = row
+            .iter()
+            .find(|v| **v != 0.0)
+            .map(|v| v.abs())
+            .unwrap_or(0.0);
+        alphas.push(alpha);
+        let ops: Vec<(Operand, bool)> = row
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(i, v)| (Operand::Input(i as u32), *v < 0.0))
+            .collect();
+        filter_ops.push(ops);
+    }
+
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut round = 0usize;
+    loop {
+        if max_rounds > 0 && round >= max_rounds {
+            break;
+        }
+        round += 1;
+        // count signed pairs across all filters (canonical order so
+        // (a,+b) and (b,+a) coincide; relative sign matters)
+        let mut pair_count: HashMap<(Operand, bool, Operand, bool), u32> = HashMap::new();
+        for ops in &filter_ops {
+            // operands are kept sorted for canonical adjacent-agnostic pairs
+            for i in 0..ops.len() {
+                for j in (i + 1)..ops.len().min(i + 9) {
+                    // window cap keeps this O(n) per filter like SumMerge's
+                    // neighbourhood heuristic
+                    let key = (ops[i].0, ops[i].1, ops[j].0, ops[j].1);
+                    *pair_count.entry(key).or_insert(0) += 1;
+                }
+            }
+        }
+        let Some((best_key, best_n)) = pair_count
+            .into_iter()
+            .max_by_key(|(k2, n)| (*n, std::cmp::Reverse(*k2)))
+        else {
+            break;
+        };
+        if best_n < 2 {
+            break; // no pair repeats — DAG is dry
+        }
+        let (a, a_neg, b, b_neg) = best_key;
+        // new node computes a + b with signs normalized so the node's own
+        // sign is a_neg (factored out at use sites)
+        let node = Node { a, b, b_neg: a_neg != b_neg };
+        let node_op = Operand::Node(nodes.len() as u32);
+        nodes.push(node);
+        for ops in filter_ops.iter_mut() {
+            // replace occurrences of the signed pair (also the globally
+            // negated pair, which equals -(node))
+            let pos_i = ops.iter().position(|o| *o == (a, a_neg));
+            let pos_j = ops.iter().position(|o| *o == (b, b_neg));
+            if let (Some(i), Some(j)) = (pos_i, pos_j) {
+                let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+                ops.remove(hi);
+                ops.remove(lo);
+                ops.push((node_op, a_neg));
+                continue;
+            }
+            let neg_i = ops.iter().position(|o| *o == (a, !a_neg));
+            let neg_j = ops.iter().position(|o| *o == (b, !b_neg));
+            if let (Some(i), Some(j)) = (neg_i, neg_j) {
+                let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+                ops.remove(hi);
+                ops.remove(lo);
+                ops.push((node_op, !a_neg));
+            }
+        }
+    }
+
+    CseDag {
+        nodes,
+        filters: alphas.into_iter().zip(filter_ops).collect(),
+        geom,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{self, Scheme};
+    use crate::tensor::{im2col, Tensor};
+    use crate::util::Rng;
+
+    fn geom(c: usize, k: usize) -> Conv2dGeometry {
+        Conv2dGeometry { n: 1, c, h: 4, w: 4, k, r: 3, s: 3, stride: 1, padding: 1 }
+    }
+
+    #[test]
+    fn dag_matches_dense_dot() {
+        let mut rng = Rng::new(70);
+        let g = geom(4, 8);
+        let w = Tensor::rand_normal(&[g.k, g.c, 3, 3], 0.6, &mut rng);
+        let q = quant::quantize(&w, Scheme::sb_default(), None);
+        let dag = build_cse(&q, g, 0);
+        let x = Tensor::rand_normal(&[1, g.c, 4, 4], 1.0, &mut rng);
+        let patches = im2col(&x, 3, 3, 1, 1);
+        let e = g.c * 9;
+        for px in 0..4 {
+            let row = &patches.data()[px * e..(px + 1) * e];
+            let got = dag.eval_row(row);
+            for fi in 0..g.k {
+                let want: f32 = row
+                    .iter()
+                    .zip(&q.values.data()[fi * e..(fi + 1) * e])
+                    .map(|(a, w)| a * w)
+                    .sum();
+                assert!(
+                    (got[fi] - want).abs() < 1e-3,
+                    "px {px} filter {fi}: {} vs {want}",
+                    got[fi]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cse_reduces_ops_vs_flat_groups() {
+        let mut rng = Rng::new(71);
+        let g = geom(16, 64);
+        let w = Tensor::rand_normal(&[g.k, g.c, 3, 3], 0.6, &mut rng);
+        let q = quant::quantize(&w, Scheme::Binary, None);
+        let flat_adds: u64 = (g.k * (g.c * 9 - 1)) as u64; // dense per-filter adds
+        let dag = build_cse(&q, g, 2000);
+        assert!(
+            dag.adds_per_pixel() < flat_adds,
+            "cse {} !< flat {flat_adds}",
+            dag.adds_per_pixel()
+        );
+    }
+
+    #[test]
+    fn sb_dag_cheaper_than_binary_dag() {
+        let mut rng = Rng::new(72);
+        let g = geom(32, 64);
+        let w = Tensor::rand_normal(&[g.k, g.c, 3, 3], 0.6, &mut rng);
+        let db = build_cse(&quant::quantize(&w, Scheme::Binary, None), g, 500);
+        let ds = build_cse(&quant::quantize(&w, Scheme::sb_default(), None), g, 500);
+        assert!(
+            ds.adds_per_pixel() < db.adds_per_pixel(),
+            "sb {} !< binary {}",
+            ds.adds_per_pixel(),
+            db.adds_per_pixel()
+        );
+    }
+
+    #[test]
+    fn all_zero_filter_has_no_roots() {
+        let g = geom(2, 2);
+        let mut w = Tensor::filled(&[2, 2, 3, 3], 0.9);
+        for i in 0..18 {
+            w.data_mut()[i] = -0.9; // filter 0 all negative, beta=+1 -> zero
+        }
+        let q = quant::quantize_signed_binary(&w, &[1.0, 1.0], 0.05, 1);
+        let dag = build_cse(&q, g, 0);
+        assert!(dag.filters[0].1.is_empty());
+        assert_eq!(dag.muls_per_pixel(), 1);
+    }
+
+    #[test]
+    fn round_cap_respected() {
+        let mut rng = Rng::new(73);
+        let g = geom(8, 16);
+        let w = Tensor::rand_normal(&[g.k, g.c, 3, 3], 0.6, &mut rng);
+        let q = quant::quantize(&w, Scheme::Binary, None);
+        let capped = build_cse(&q, g, 3);
+        assert!(capped.nodes.len() <= 3);
+    }
+}

@@ -1,0 +1,176 @@
+//! Timed executor for a `LayerPlan`.
+//!
+//! Per output pixel (one im2col patch row):
+//!   1. for every sub-tile, evaluate each *distinct* pattern's partial sum
+//!      once into an arena (this is where repetition pays: the sum is
+//!      shared by all filters using the pattern);
+//!   2. for every *unique* filter, combine its per-sub-tile partial sums
+//!      and multiply by alpha once;
+//!   3. scatter unique-filter results to the original filter slots
+//!      (inter-filter dedup).
+//!
+//! With sparsity support ON, zero entries never enter a sum and all-zero
+//! patterns are skipped. OFF, the zero group is summed and multiplied by
+//! zero — faithfully modelling a repetition-only system (paper §5.1
+//! config 1).
+
+use crate::tensor::{im2col, Tensor};
+
+use super::plan::LayerPlan;
+
+/// Output pixels processed together. Amortizes the plan walk (pattern
+/// index loads, slot lookups) across a block and lets the inner
+/// accumulations vectorize — the §Perf pixel-blocking optimization
+/// (EXPERIMENTS.md §Perf records the before/after).
+pub const PIXEL_BLOCK: usize = 8;
+
+/// Execute one conv layer through the repetition engine.
+pub fn execute_conv2d(plan: &LayerPlan, x: &Tensor) -> Tensor {
+    let g = plan.geom;
+    assert_eq!(x.shape(), &[g.n, g.c, g.h, g.w], "input does not match plan geometry");
+    let patches = im2col(x, g.r, g.s, g.stride, g.padding);
+    let e = g.c * g.r * g.s;
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let pixels = g.n * oh * ow;
+    let nu = plan.num_unique_filters;
+
+    // arena: partial sums of distinct patterns x pixel block
+    let slots: Vec<usize> = plan
+        .tables
+        .iter()
+        .scan(0usize, |acc, t| {
+            let base = *acc;
+            *acc += t.patterns.len();
+            Some(base)
+        })
+        .collect();
+    let total_patterns: usize = plan.tables.iter().map(|t| t.patterns.len()).sum();
+    const PB: usize = PIXEL_BLOCK;
+    let mut psums = vec![0.0f32; total_patterns * PB];
+    let mut usums = vec![0.0f32; nu * PB];
+
+    let mut out = Tensor::zeros(&[g.n, g.k, oh, ow]);
+    let od = out.data_mut();
+    let plane = oh * ow;
+    let pdata = patches.data();
+
+    let mut px0 = 0usize;
+    while px0 < pixels {
+        let pb = PB.min(pixels - px0);
+
+        // 1. distinct-pattern partial sums, blocked over pixels
+        for (ti, t) in plan.tables.iter().enumerate() {
+            let base = slots[ti] * PB;
+            let tb = t.base;
+            for (pi, p) in t.patterns.iter().enumerate() {
+                let acc = &mut psums[base + pi * PB..base + pi * PB + PB];
+                acc.fill(0.0);
+                for &off in &p.pos {
+                    let col = tb + off as usize;
+                    for (b, a) in acc.iter_mut().enumerate().take(pb) {
+                        *a += pdata[(px0 + b) * e + col];
+                    }
+                }
+                for &off in &p.neg {
+                    let col = tb + off as usize;
+                    for (b, a) in acc.iter_mut().enumerate().take(pb) {
+                        *a -= pdata[(px0 + b) * e + col];
+                    }
+                }
+                if !plan.cfg.sparsity_support {
+                    // repetition-only mode: the zero group is summed like
+                    // any other repeated value, then multiplied by 0.
+                    let mut z = [0.0f32; PB];
+                    for &off in &p.zero {
+                        let col = tb + off as usize;
+                        for (b, zz) in z.iter_mut().enumerate().take(pb) {
+                            *zz += pdata[(px0 + b) * e + col];
+                        }
+                    }
+                    for (a, zz) in acc.iter_mut().zip(z.iter()) {
+                        *a += zz * 0.0;
+                    }
+                }
+            }
+        }
+
+        // 2. combine per unique filter (blocked)
+        usums[..nu * PB].fill(0.0);
+        for (ti, t) in plan.tables.iter().enumerate() {
+            let base = slots[ti] * PB;
+            for (ui, &slot) in t.slot_of_filter.iter().enumerate() {
+                let src = &psums[base + slot as usize * PB..base + slot as usize * PB + PB];
+                let dst = &mut usums[ui * PB..ui * PB + PB];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+
+        // 3. scatter to original filters with per-filter alpha
+        for (fi, &uslot) in plan.unique_of_filter.iter().enumerate() {
+            let a = plan.alpha[fi];
+            let src = &usums[uslot as usize * PB..uslot as usize * PB + PB];
+            for b in 0..pb {
+                let px = px0 + b;
+                let ni = px / plane;
+                let pix = px % plane;
+                od[(ni * g.k + fi) * plane + pix] = a * src[b];
+            }
+        }
+
+        px0 += pb;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{default_beta, quantize, quantize_signed_binary, Scheme};
+    use crate::repetition::{plan_layer, EngineConfig};
+    use crate::tensor::{conv2d_gemm, Conv2dGeometry};
+    use crate::util::Rng;
+
+    #[test]
+    fn strided_conv_matches_dense() {
+        let mut rng = Rng::new(30);
+        let g = Conv2dGeometry { n: 1, c: 8, h: 8, w: 8, k: 16, r: 3, s: 3, stride: 2, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize_signed_binary(&w, &default_beta(g.k, 0.5), 0.05, 1);
+        let dense = conv2d_gemm(&x, &q.values, g.stride, g.padding);
+        let out = execute_conv2d(&plan_layer(&q, g, EngineConfig::default()), &x);
+        assert!(dense.max_abs_diff(&out) < 1e-3);
+    }
+
+    #[test]
+    fn one_by_one_conv() {
+        let mut rng = Rng::new(31);
+        let g = Conv2dGeometry { n: 2, c: 8, h: 5, w: 5, k: 4, r: 1, s: 1, stride: 1, padding: 0 };
+        let w = Tensor::rand_normal(&[g.k, g.c, 1, 1], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::Binary, None);
+        let dense = conv2d_gemm(&x, &q.values, 1, 0);
+        let out = execute_conv2d(&plan_layer(&q, g, EngineConfig::default()), &x);
+        assert!(dense.max_abs_diff(&out) < 1e-3);
+    }
+
+    #[test]
+    fn all_zero_filter_outputs_zero() {
+        let g = Conv2dGeometry { n: 1, c: 2, h: 3, w: 3, k: 2, r: 3, s: 3, stride: 1, padding: 1 };
+        // filter 0 all below threshold (-> all zero under SB with beta=+1)
+        let mut w = Tensor::filled(&[2, 2, 3, 3], -0.001);
+        for i in 18..36 {
+            w.data_mut()[i] = 0.9; // filter 1 all positive
+        }
+        let q = quantize_signed_binary(&w, &[1.0, 1.0], 0.05, 1);
+        let mut rng = Rng::new(32);
+        let x = Tensor::rand_normal(&[1, 2, 3, 3], 1.0, &mut rng);
+        let out = execute_conv2d(&plan_layer(&q, g, EngineConfig::default()), &x);
+        let plane = 9;
+        for i in 0..plane {
+            assert_eq!(out.data()[i], 0.0, "filter 0 must be silent");
+        }
+    }
+}

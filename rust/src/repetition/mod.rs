@@ -1,0 +1,206 @@
+//! Repetition-sparsity-aware inference engine (S3).
+//!
+//! A from-scratch reproduction of the *mechanisms* of SumMerge
+//! (Prabhakar et al. 2021) / UCNN (Hegde et al. 2018), the systems the
+//! paper deploys on Intel CPUs:
+//!
+//! 1. **Tiling**: each filter's C*R*S reduction axis is split into
+//!    sub-tiles (the paper's `C*`); one processing step sees one sub-tile.
+//! 2. **Weight-repetition factorization**: within a sub-tile a filter's
+//!    weights form a *pattern* over a tiny alphabet (sign classes
+//!    {-1, 0, +1}; the per-filter scale alpha is factored out). Distinct
+//!    patterns are *memoized per sub-tile*: their partial sums are
+//!    computed once per output pixel and shared by every filter that uses
+//!    them. Fewer distinct patterns == more repetition == less work. This
+//!    is why binary (2^T possible patterns) beats ternary (3^T) — the
+//!    paper's exponential-repetition-loss argument made concrete.
+//! 3. **Sparsity support** (on/off, paper §5.1): when ON, zero weights
+//!    inside a pattern are skipped and all-zero patterns cost nothing;
+//!    when OFF the engine treats 0 as just another repeated value and
+//!    sums its group like any other.
+//! 4. **Filter dedup**: structurally identical quantized filters are
+//!    computed once (inter-filter repetition, BNN's 42% observation).
+//!
+//! The engine both *executes* (timed, correctness-checked against the
+//! dense GEMM path) and *accounts* (adds/muls), powering Figures 7/9/10
+//! and the §5.1 arithmetic-operation claims.
+
+pub mod cse;
+mod exec;
+mod plan;
+
+pub use cse::{build_cse, CseDag};
+pub use exec::execute_conv2d;
+pub use plan::{LayerPlan, OpCounts, PatternTable};
+
+use crate::quant::QuantizedWeights;
+use crate::tensor::Conv2dGeometry;
+
+/// Engine configuration (paper supp. A: `C*` tile size; §5.1: sparsity
+/// support toggle).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Sub-tile length along the C*R*S reduction axis (the paper's C*).
+    pub subtile: usize,
+    /// When false the engine ignores zero-ness (repetition only).
+    pub sparsity_support: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { subtile: 8, sparsity_support: true }
+    }
+}
+
+/// Build a plan for one conv layer from its quantized weights.
+pub fn plan_layer(
+    q: &QuantizedWeights,
+    geom: Conv2dGeometry,
+    cfg: EngineConfig,
+) -> LayerPlan {
+    LayerPlan::build(q, geom, cfg)
+}
+
+/// Candidate sub-tile sizes searched by the auto-tuner. Sizes below 8
+/// are excluded: there the per-filter combine stage dominates for every
+/// scheme (the plan degenerates into a dense re-accumulation), the cost
+/// model's overhead constants stop being trustworthy, and the measured
+/// times regress across the board.
+pub const SUBTILE_CANDIDATES: &[usize] = &[8, 12, 16, 24, 32, 48, 64];
+
+/// Build the cheapest plan over `SUBTILE_CANDIDATES` per the plan cost
+/// model — the engine-side realization of the paper's §6 requirement
+/// that "the tile size of the modern inference system should be set"
+/// per configuration (SumMerge likewise tunes its tiling per network).
+pub fn plan_layer_auto(
+    q: &QuantizedWeights,
+    geom: Conv2dGeometry,
+    sparsity_support: bool,
+) -> LayerPlan {
+    let e = geom.c * geom.r * geom.s;
+    let mut best: Option<LayerPlan> = None;
+    for &st in SUBTILE_CANDIDATES {
+        if st > e && best.is_some() {
+            break;
+        }
+        let plan = LayerPlan::build(
+            q,
+            geom,
+            EngineConfig { subtile: st.min(e), sparsity_support },
+        );
+        if best
+            .as_ref()
+            .map(|b| plan.estimated_cost() < b.estimated_cost())
+            .unwrap_or(true)
+        {
+            best = Some(plan);
+        }
+    }
+    best.unwrap()
+}
+
+/// The paper's arithmetic-reduction metric (supp. G): dense MACs divided
+/// by the plan's repetition-sparsity-aware operation count, counting an
+/// add and a mul each as one operation (dense: 2 ops per MAC).
+pub fn arithmetic_reduction(plan: &LayerPlan) -> f64 {
+    let dense_ops = 2.0 * plan.geom.dense_macs() as f64;
+    let c = plan.op_counts();
+    dense_ops / (c.adds + c.muls).max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{default_beta, quantize, quantize_signed_binary, Scheme};
+    use crate::tensor::{conv2d_gemm, Tensor};
+    use crate::util::Rng;
+
+    fn geom(n: usize, c: usize, hw: usize, k: usize) -> Conv2dGeometry {
+        Conv2dGeometry { n, c, h: hw, w: hw, k, r: 3, s: 3, stride: 1, padding: 1 }
+    }
+
+    #[test]
+    fn engine_matches_dense_gemm_sb() {
+        let mut rng = Rng::new(11);
+        let g = geom(2, 8, 6, 12);
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let q = quantize_signed_binary(&w, &default_beta(g.k, 0.5), 0.05, 1);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let dense = conv2d_gemm(&x, &q.values, 1, 1);
+        for sparsity in [true, false] {
+            let plan = plan_layer(&q, g, EngineConfig { subtile: 8, sparsity_support: sparsity });
+            let out = execute_conv2d(&plan, &x);
+            assert!(
+                dense.max_abs_diff(&out) < 1e-3,
+                "sparsity={sparsity} diff {}",
+                dense.max_abs_diff(&out)
+            );
+        }
+    }
+
+    #[test]
+    fn engine_matches_dense_gemm_all_schemes() {
+        let mut rng = Rng::new(12);
+        let g = geom(1, 6, 5, 8);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        for scheme in [Scheme::Binary, Scheme::ternary_default(), Scheme::sb_default()] {
+            let q = quantize(&w, scheme, None);
+            let dense = conv2d_gemm(&x, &q.values, 1, 1);
+            let plan = plan_layer(&q, g, EngineConfig::default());
+            let out = execute_conv2d(&plan, &x);
+            assert!(
+                dense.max_abs_diff(&out) < 1e-3,
+                "{}: diff {}",
+                scheme.name(),
+                dense.max_abs_diff(&out)
+            );
+        }
+    }
+
+    #[test]
+    fn subtile_sizes_all_correct() {
+        let mut rng = Rng::new(13);
+        let g = geom(1, 8, 5, 6);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let dense = conv2d_gemm(&x, &q.values, 1, 1);
+        for st in [4, 8, 16, 72, 100] {
+            let plan = plan_layer(&q, g, EngineConfig { subtile: st, sparsity_support: true });
+            let out = execute_conv2d(&plan, &x);
+            assert!(dense.max_abs_diff(&out) < 1e-3, "subtile {st}");
+        }
+    }
+
+    #[test]
+    fn sb_reduces_ops_vs_binary_with_sparsity() {
+        // the §5.1 claim in miniature: SB w/ sparsity does fewer ops than
+        // binary; ternary w/ sparsity does more than binary (repetition
+        // loss dominates).
+        let mut rng = Rng::new(14);
+        let g = geom(1, 64, 8, 128);
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let cfg = EngineConfig { subtile: 8, sparsity_support: true };
+
+        let qb = quantize(&w, Scheme::Binary, None);
+        let qt = quantize(&w, Scheme::ternary_default(), None);
+        let qs = quantize(&w, Scheme::sb_default(), None);
+        let ops_b = plan_layer(&qb, g, cfg).op_counts().total();
+        let ops_t = plan_layer(&qt, g, cfg).op_counts().total();
+        let ops_s = plan_layer(&qs, g, cfg).op_counts().total();
+        assert!(ops_s < ops_b, "sb {ops_s} !< binary {ops_b}");
+        assert!(ops_t > ops_s, "ternary {ops_t} !> sb {ops_s}");
+    }
+
+    #[test]
+    fn arithmetic_reduction_above_one() {
+        let mut rng = Rng::new(15);
+        let g = geom(1, 32, 8, 64);
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let red = arithmetic_reduction(&plan);
+        assert!(red > 1.0, "reduction {red}");
+    }
+}

@@ -1,0 +1,330 @@
+//! Layer plan: pattern extraction, memoization and operation accounting.
+
+use std::collections::HashMap;
+
+use crate::quant::QuantizedWeights;
+use crate::tensor::Conv2dGeometry;
+
+use super::EngineConfig;
+
+/// Auto-tuner cost-model constants (ops-equivalents); calibrated against
+/// measured per-layer times on this CPU (EXPERIMENTS.md §Perf).
+pub const PATTERN_OVERHEAD: f64 = 2.0;
+pub const SLOT_OVERHEAD: f64 = 1.0;
+
+/// Sign class of a quantized weight relative to its filter's alpha.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SignClass {
+    Neg,
+    Zero,
+    Pos,
+}
+
+/// One distinct weight pattern within a sub-tile: the list of
+/// (offset-in-subtile, sign) for non-zero entries plus the zero group.
+#[derive(Debug, Clone)]
+pub struct Pattern {
+    /// offsets with +1 sign (relative to subtile start)
+    pub pos: Vec<u16>,
+    /// offsets with -1 sign
+    pub neg: Vec<u16>,
+    /// offsets with zero weight (only materialized when sparsity support
+    /// is OFF — the engine then sums this group and multiplies by 0,
+    /// faithfully "not distinguishing zero from non-zero")
+    pub zero: Vec<u16>,
+}
+
+impl Pattern {
+    pub fn is_all_zero(&self) -> bool {
+        self.pos.is_empty() && self.neg.is_empty()
+    }
+
+    /// Adds needed to evaluate this pattern's partial sum once.
+    pub fn adds(&self, sparsity_support: bool) -> u64 {
+        let nnz = (self.pos.len() + self.neg.len()) as u64;
+        if sparsity_support {
+            nnz.saturating_sub(1)
+        } else {
+            // zero group summed too (then multiplied by 0)
+            (nnz + self.zero.len() as u64).saturating_sub(1)
+        }
+    }
+}
+
+/// Per-sub-tile table of distinct patterns + each filter's pattern slot.
+#[derive(Debug, Clone)]
+pub struct PatternTable {
+    /// distinct patterns in this sub-tile
+    pub patterns: Vec<Pattern>,
+    /// filter (unique-filter index) -> pattern slot
+    pub slot_of_filter: Vec<u32>,
+    /// absolute element offset of this sub-tile in the C*R*S axis
+    pub base: usize,
+    /// sub-tile length (last tile may be short)
+    pub len: usize,
+}
+
+/// Operation counts for one inference pass (all output pixels).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCounts {
+    pub adds: u64,
+    pub muls: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.adds + self.muls
+    }
+}
+
+/// A fully-built plan for one conv layer.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub geom: Conv2dGeometry,
+    pub cfg: EngineConfig,
+    /// per sub-tile pattern tables (indexed over unique filters)
+    pub tables: Vec<PatternTable>,
+    /// per-filter scale (original filter index -> alpha)
+    pub alpha: Vec<f32>,
+    /// original filter -> unique filter slot (inter-filter dedup)
+    pub unique_of_filter: Vec<u32>,
+    pub num_unique_filters: usize,
+}
+
+impl LayerPlan {
+    pub fn build(q: &QuantizedWeights, geom: Conv2dGeometry, cfg: EngineConfig) -> LayerPlan {
+        assert!(cfg.subtile > 0);
+        let k = geom.k;
+        let e = geom.c * geom.r * geom.s;
+        assert_eq!(q.values.len(), k * e, "weights do not match geometry");
+
+        // ---- inter-filter dedup on the full structural signature --------
+        // signature: sign class per element (alpha factored out)
+        let sig_of = |fi: usize| -> Vec<i8> {
+            q.values.data()[fi * e..(fi + 1) * e]
+                .iter()
+                .map(|v| {
+                    if *v > 0.0 {
+                        1
+                    } else if *v < 0.0 {
+                        -1
+                    } else {
+                        0
+                    }
+                })
+                .collect()
+        };
+        let mut canon: HashMap<Vec<i8>, u32> = HashMap::new();
+        let mut unique_of_filter = Vec::with_capacity(k);
+        let mut unique_sigs: Vec<Vec<i8>> = Vec::new();
+        for fi in 0..k {
+            let sig = sig_of(fi);
+            let slot = *canon.entry(sig.clone()).or_insert_with(|| {
+                unique_sigs.push(sig);
+                (unique_sigs.len() - 1) as u32
+            });
+            unique_of_filter.push(slot);
+        }
+        let nu = unique_sigs.len();
+
+        // ---- per-sub-tile pattern memoization ----------------------------
+        let mut tables = Vec::new();
+        let mut base = 0usize;
+        while base < e {
+            let len = cfg.subtile.min(e - base);
+            let mut pat_map: HashMap<Vec<i8>, u32> = HashMap::new();
+            let mut patterns: Vec<Pattern> = Vec::new();
+            let mut slot_of_filter = Vec::with_capacity(nu);
+            for sig in &unique_sigs {
+                let window = &sig[base..base + len];
+                let slot = *pat_map.entry(window.to_vec()).or_insert_with(|| {
+                    let mut p = Pattern { pos: vec![], neg: vec![], zero: vec![] };
+                    for (off, s) in window.iter().enumerate() {
+                        match s {
+                            1 => p.pos.push(off as u16),
+                            -1 => p.neg.push(off as u16),
+                            _ => p.zero.push(off as u16),
+                        }
+                    }
+                    patterns.push(p);
+                    (patterns.len() - 1) as u32
+                });
+                slot_of_filter.push(slot);
+            }
+            tables.push(PatternTable { patterns, slot_of_filter, base, len });
+            base += len;
+        }
+
+        LayerPlan {
+            geom,
+            cfg,
+            tables,
+            alpha: per_filter_alpha(q, k, e),
+            unique_of_filter,
+            num_unique_filters: nu,
+        }
+    }
+
+    /// Total adds/muls for one full inference pass of this layer.
+    ///
+    /// Per output pixel:
+    ///   * each distinct pattern per sub-tile: its partial sum
+    ///     (nnz-1 adds with sparsity support, len-1 without; all-zero
+    ///     patterns are free with support, len-1 adds + nothing without —
+    ///     their product with 0 is dropped either way in accounting
+    ///     because SumMerge also never multiplies the zero group);
+    ///   * each unique filter: (num_subtiles - 1) adds to combine partial
+    ///     sums + 1 mul by alpha.
+    pub fn op_counts(&self) -> OpCounts {
+        let pixels = (self.geom.n * self.geom.out_h() * self.geom.out_w()) as u64;
+        let mut adds_per_pixel: u64 = 0;
+        for t in &self.tables {
+            for p in &t.patterns {
+                let nnz = (p.pos.len() + p.neg.len()) as u64;
+                if self.cfg.sparsity_support {
+                    adds_per_pixel += nnz.saturating_sub(1);
+                } else {
+                    let total = nnz + p.zero.len() as u64;
+                    adds_per_pixel += total.saturating_sub(1);
+                }
+            }
+        }
+        let nt = self.tables.len() as u64;
+        let per_filter_adds = nt.saturating_sub(1);
+        let nu = self.num_unique_filters as u64;
+        OpCounts {
+            adds: pixels * (adds_per_pixel + nu * per_filter_adds),
+            muls: pixels * nu,
+        }
+    }
+
+    /// Estimated execution cost used by the auto-tuner: accounted ops
+    /// plus a fixed per-pattern-visit overhead (loop control, arena
+    /// store) and a per-combine-slot overhead — calibrated once against
+    /// measured layer timings (§Perf).
+    pub fn estimated_cost(&self) -> f64 {
+        let pixels = (self.geom.n * self.geom.out_h() * self.geom.out_w()) as f64;
+        let total_patterns: usize = self.tables.iter().map(|t| t.patterns.len()).sum();
+        let slots = (self.num_unique_filters * self.tables.len()) as f64;
+        let ops = self.op_counts();
+        (ops.adds + ops.muls) as f64
+            + pixels * (PATTERN_OVERHEAD * total_patterns as f64 + SLOT_OVERHEAD * slots)
+    }
+
+    /// Mean distinct patterns per sub-tile — the repetition diagnostic
+    /// (binary << ternary; Figure 3's exponential argument).
+    pub fn mean_distinct_patterns(&self) -> f64 {
+        let s: usize = self.tables.iter().map(|t| t.patterns.len()).sum();
+        s as f64 / self.tables.len().max(1) as f64
+    }
+
+    /// Weight density seen by the plan (nnz / total over unique filters).
+    pub fn density(&self) -> f64 {
+        let mut nnz = 0usize;
+        let mut tot = 0usize;
+        for t in &self.tables {
+            for (ui, &slot) in t.slot_of_filter.iter().enumerate() {
+                let _ = ui;
+                let p = &t.patterns[slot as usize];
+                nnz += p.pos.len() + p.neg.len();
+                tot += t.len;
+            }
+        }
+        nnz as f64 / tot.max(1) as f64
+    }
+}
+
+fn per_filter_alpha(q: &QuantizedWeights, k: usize, e: usize) -> Vec<f32> {
+    // alpha per original filter: magnitude of the filter's non-zero value.
+    (0..k)
+        .map(|fi| {
+            q.values.data()[fi * e..(fi + 1) * e]
+                .iter()
+                .find(|v| **v != 0.0)
+                .map(|v| v.abs())
+                .unwrap_or(0.0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{default_beta, quantize, quantize_signed_binary, Scheme};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn geom(c: usize, k: usize) -> Conv2dGeometry {
+        Conv2dGeometry { n: 1, c, h: 4, w: 4, k, r: 3, s: 3, stride: 1, padding: 1 }
+    }
+
+    #[test]
+    fn dedup_finds_identical_filters() {
+        // two identical filters by construction
+        let mut rng = Rng::new(20);
+        let mut w = Tensor::rand_normal(&[4, 2, 3, 3], 0.5, &mut rng);
+        let e = 18;
+        let (first, rest) = w.data_mut().split_at_mut(e);
+        rest[..e].copy_from_slice(first);
+        let q = quantize(&w, Scheme::Binary, None);
+        let plan = LayerPlan::build(&q, geom(2, 4), EngineConfig::default());
+        assert!(plan.num_unique_filters < 4);
+        assert_eq!(plan.unique_of_filter[0], plan.unique_of_filter[1]);
+    }
+
+    #[test]
+    fn binary_has_fewer_patterns_than_ternary() {
+        let mut rng = Rng::new(21);
+        let w = Tensor::rand_normal(&[64, 16, 3, 3], 0.5, &mut rng);
+        let g = geom(16, 64);
+        let cfg = EngineConfig::default();
+        let pb = LayerPlan::build(&quantize(&w, Scheme::Binary, None), g, cfg);
+        let pt = LayerPlan::build(&quantize(&w, Scheme::ternary_default(), None), g, cfg);
+        assert!(
+            pb.mean_distinct_patterns() < pt.mean_distinct_patterns(),
+            "binary {} vs ternary {}",
+            pb.mean_distinct_patterns(),
+            pt.mean_distinct_patterns()
+        );
+    }
+
+    #[test]
+    fn sparsity_toggle_changes_adds_only_for_sparse_schemes() {
+        let mut rng = Rng::new(22);
+        let w = Tensor::rand_normal(&[16, 8, 3, 3], 0.5, &mut rng);
+        let g = geom(8, 16);
+        let q = quantize_signed_binary(&w, &default_beta(16, 0.5), 0.05, 1);
+        let on = LayerPlan::build(&q, g, EngineConfig { subtile: 8, sparsity_support: true });
+        let off = LayerPlan::build(&q, g, EngineConfig { subtile: 8, sparsity_support: false });
+        assert!(on.op_counts().adds < off.op_counts().adds);
+        // binary is dense: toggle is a no-op on adds
+        let qb = quantize(&w, Scheme::Binary, None);
+        let bon = LayerPlan::build(&qb, g, EngineConfig { subtile: 8, sparsity_support: true });
+        let boff = LayerPlan::build(&qb, g, EngineConfig { subtile: 8, sparsity_support: false });
+        assert_eq!(bon.op_counts().adds, boff.op_counts().adds);
+    }
+
+    #[test]
+    fn op_counts_scale_with_pixels() {
+        let mut rng = Rng::new(23);
+        let w = Tensor::rand_normal(&[8, 4, 3, 3], 0.5, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let g1 = Conv2dGeometry { n: 1, c: 4, h: 4, w: 4, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
+        let g2 = Conv2dGeometry { n: 2, c: 4, h: 4, w: 4, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
+        let c1 = LayerPlan::build(&q, g1, EngineConfig::default()).op_counts();
+        let c2 = LayerPlan::build(&q, g2, EngineConfig::default()).op_counts();
+        assert_eq!(c2.adds, 2 * c1.adds);
+        assert_eq!(c2.muls, 2 * c1.muls);
+    }
+
+    #[test]
+    fn alpha_extracted_per_filter() {
+        let mut rng = Rng::new(24);
+        let w = Tensor::rand_normal(&[4, 4, 3, 3], 0.5, &mut rng);
+        let q = quantize(&w, Scheme::Binary, None);
+        let plan = LayerPlan::build(&q, geom(4, 4), EngineConfig::default());
+        for (fi, a) in plan.alpha.iter().enumerate() {
+            assert!((a - q.alpha[fi]).abs() < 1e-6);
+        }
+    }
+}

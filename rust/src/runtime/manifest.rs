@@ -1,0 +1,256 @@
+//! Artifact manifest: the positional input/output contract between the
+//! python AOT emitter and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Conv2dGeometry;
+use crate::util::Json;
+
+/// Element type of a marshalled tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One positional tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub group: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let dtype = match j.req_str("dtype")? {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => return Err(anyhow!("unsupported dtype {other}")),
+        };
+        Ok(TensorSpec {
+            group: j.req_str("group")?.to_string(),
+            name: j.req_str("name")?.to_string(),
+            shape: j
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype,
+        })
+    }
+}
+
+/// Echo of the python ModelConfig that produced the artifact.
+#[derive(Debug, Clone)]
+pub struct ConfigEcho {
+    pub arch: String,
+    pub depth: usize,
+    pub width_mult: f64,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub in_channels: usize,
+    pub batch_size: usize,
+    pub scheme: String,
+    pub delta_frac: f64,
+    pub p_pos: f64,
+    pub regions_per_filter: usize,
+    pub use_ede: bool,
+    pub act: String,
+}
+
+impl ConfigEcho {
+    fn parse(j: &Json) -> Result<ConfigEcho> {
+        Ok(ConfigEcho {
+            arch: j.req_str("arch")?.to_string(),
+            depth: j.req_usize("depth")?,
+            width_mult: j.req_f64("width_mult")?,
+            num_classes: j.req_usize("num_classes")?,
+            image_size: j.req_usize("image_size")?,
+            in_channels: j.req_usize("in_channels")?,
+            batch_size: j.req_usize("batch_size")?,
+            scheme: j.req_str("scheme")?.to_string(),
+            delta_frac: j.req_f64("delta_frac")?,
+            p_pos: j.req_f64("p_pos")?,
+            regions_per_filter: j.req_usize("regions_per_filter")?,
+            use_ede: j
+                .get("use_ede")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("missing use_ede"))?,
+            act: j.req_str("act")?.to_string(),
+        })
+    }
+}
+
+/// Conv layer geometry recorded at trace time (batch dim = 1 in the log;
+/// scale `n` as needed for workloads).
+#[derive(Debug, Clone)]
+pub struct ConvLayerInfo {
+    pub name: String,
+    pub geom: Conv2dGeometry,
+    pub quantized: bool,
+}
+
+/// Parsed `<name>.manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub dir: PathBuf,
+    pub config: ConfigEcho,
+    pub train_hlo: Option<PathBuf>,
+    pub infer_hlo: PathBuf,
+    pub params_bin: PathBuf,
+    pub train_inputs: Vec<TensorSpec>,
+    pub train_outputs: Vec<TensorSpec>,
+    pub infer_inputs: Vec<TensorSpec>,
+    pub quantized_weights: Vec<String>,
+    pub conv_layers: Vec<ConvLayerInfo>,
+    pub param_count: usize,
+    pub effectual_params_init: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, name: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let files = j.get("files").ok_or_else(|| anyhow!("missing files"))?;
+        let has_train = j.get("has_train").and_then(Json::as_bool).unwrap_or(false);
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.req_arr(key)?.iter().map(TensorSpec::parse).collect()
+        };
+        let conv_layers = j
+            .req_arr("conv_layers")?
+            .iter()
+            .map(|c| {
+                Ok(ConvLayerInfo {
+                    name: c.req_str("name")?.to_string(),
+                    geom: Conv2dGeometry {
+                        n: 1,
+                        c: c.req_usize("c")?,
+                        h: c.req_usize("h")?,
+                        w: c.req_usize("w")?,
+                        k: c.req_usize("k")?,
+                        r: c.req_usize("r")?,
+                        s: c.req_usize("s")?,
+                        stride: c.req_usize("stride")?,
+                        padding: c.req_usize("padding")?,
+                    },
+                    quantized: c.get("quantized").and_then(Json::as_bool).unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            name: name.to_string(),
+            dir: dir.to_path_buf(),
+            config: ConfigEcho::parse(j.get("config").ok_or_else(|| anyhow!("missing config"))?)?,
+            train_hlo: if has_train {
+                Some(dir.join(files.req_str("train")?))
+            } else {
+                None
+            },
+            infer_hlo: dir.join(files.req_str("infer")?),
+            params_bin: dir.join(files.req_str("params")?),
+            train_inputs: if has_train { specs("train_inputs")? } else { vec![] },
+            train_outputs: if has_train { specs("train_outputs")? } else { vec![] },
+            infer_inputs: specs("infer_inputs")?,
+            quantized_weights: j
+                .req_arr("quantized_weights")?
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect(),
+            conv_layers,
+            param_count: j.req_usize("param_count")?,
+            effectual_params_init: j.req_usize("effectual_params_init")?,
+        })
+    }
+
+    /// Specs of one input group, in positional order.
+    pub fn group<'a>(&'a self, specs: &'a [TensorSpec], name: &str) -> Vec<&'a TensorSpec> {
+        specs.iter().filter(|s| s.group == name).collect()
+    }
+
+    /// Load `<name>.params.bin` split per state spec (params ++ bn ++
+    /// consts in manifest order).
+    pub fn load_initial_state(&self) -> Result<Vec<(TensorSpec, Vec<f32>)>> {
+        let bytes = std::fs::read(&self.params_bin)
+            .with_context(|| format!("reading {}", self.params_bin.display()))?;
+        let state_specs: Vec<TensorSpec> = self
+            .state_specs()
+            .into_iter()
+            .cloned()
+            .collect();
+        let total: usize = state_specs.iter().map(TensorSpec::elements).sum();
+        if bytes.len() != total * 4 {
+            return Err(anyhow!(
+                "params.bin has {} bytes, expected {}",
+                bytes.len(),
+                total * 4
+            ));
+        }
+        let mut out = Vec::with_capacity(state_specs.len());
+        let mut off = 0usize;
+        for spec in state_specs {
+            let n = spec.elements();
+            let mut v = vec![0.0f32; n];
+            for (i, chunk) in bytes[off..off + 4 * n].chunks_exact(4).enumerate() {
+                v[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            off += 4 * n;
+            out.push((spec, v));
+        }
+        Ok(out)
+    }
+
+    /// The persistent-state specs (params ++ bn ++ consts) in order; these
+    /// lead both the train and infer signatures.
+    pub fn state_specs(&self) -> Vec<&TensorSpec> {
+        let src = if self.train_inputs.is_empty() {
+            &self.infer_inputs
+        } else {
+            &self.train_inputs
+        };
+        src.iter()
+            .filter(|s| matches!(s.group.as_str(), "params" | "bn" | "consts"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_r8sb_manifest_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("r8sb_p050.manifest.json").exists() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let m = Manifest::load(&dir, "r8sb_p050").unwrap();
+        assert_eq!(m.config.scheme, "sb");
+        assert!(m.train_hlo.is_some());
+        assert!(!m.train_inputs.is_empty());
+        // signature sanity: state specs lead, x/y/hypers trail
+        let last = &m.train_inputs[m.train_inputs.len() - 1];
+        assert_eq!(last.name, "progress");
+        let state = m.state_specs();
+        assert!(!state.is_empty());
+        let init = m.load_initial_state().unwrap();
+        assert_eq!(init.len(), state.len());
+    }
+}

@@ -1,0 +1,246 @@
+//! Cycle-level sparse-accelerator simulator (S4).
+//!
+//! Stands in for STONNE simulating the SIGMA accelerator (paper §5.2 and
+//! supp. A): the paper only uses that stack to measure the *energy ratio*
+//! of a dense (0% sparsity) vs sparse (65% sparsity) run of each conv
+//! layer, so this module models the mechanism that produces the ratio:
+//!
+//! * a grid of `mult_switches` multiplier switches (SIGMA default 256)
+//!   consuming only *effectual* (non-zero-weight) MACs — SIGMA's
+//!   bitmap-based sparse GEMM controller (`SIGMA_SPARSE_GEMM`);
+//! * a pipelined adder/reduction network (`ASNETWORK`) whose switch count
+//!   scales with the multiplier count;
+//! * an SDMemory with `rd_ports`/`wr_ports` that streams compressed
+//!   (bitmap) weights — reads scale with density plus a metadata tax —
+//!   and dense activations/outputs;
+//! * per-component energy weights in arbitrary units with SIGMA-like
+//!   relative costs (SRAM access >> network hop > MAC).
+//!
+//! Energies are reported per layer for a dense and a sparse configuration
+//! of the same GEMM; their ratio is the experiment. Like SIGMA, energy
+//! is *not* a function of operand bit-width here (supp. A note).
+
+use crate::tensor::Conv2dGeometry;
+
+/// Hardware configuration (defaults = the paper's SIGMA setup).
+#[derive(Debug, Clone, Copy)]
+pub struct AcceleratorConfig {
+    pub mult_switches: usize,
+    pub rd_ports: usize,
+    pub wr_ports: usize,
+    /// elements per port per cycle
+    pub port_width: usize,
+    /// output columns served by one activation fetch (multicast width of
+    /// the distribution network): activation SRAM traffic scales with
+    /// ceil(N / multicast) *independent of weight sparsity* — the term
+    /// that keeps measured energy reduction below the 1/density ideal.
+    pub multicast: usize,
+    // energy per event, arbitrary units (relative costs follow
+    // Horowitz-style tallies used by STONNE's energy tables)
+    pub e_mac: f64,
+    pub e_reduce_hop: f64,
+    pub e_dist_hop: f64,
+    pub e_sram_read: f64,
+    pub e_sram_write: f64,
+    pub e_ctrl_per_cycle: f64,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        AcceleratorConfig {
+            mult_switches: 256,
+            rd_ports: 256,
+            wr_ports: 256,
+            port_width: 1,
+            multicast: 16,
+            e_mac: 1.0,
+            e_reduce_hop: 0.6,
+            e_dist_hop: 0.4,
+            e_sram_read: 8.0,
+            e_sram_write: 4.5,
+            e_ctrl_per_cycle: 8.0,
+        }
+    }
+}
+
+/// One simulated GEMM / conv run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub cycles: u64,
+    pub effectual_macs: u64,
+    pub total_macs: u64,
+    pub energy: f64,
+    pub energy_compute: f64,
+    pub energy_network: f64,
+    pub energy_sram: f64,
+    pub energy_ctrl: f64,
+}
+
+impl SimReport {
+    pub fn density(&self) -> f64 {
+        self.effectual_macs as f64 / self.total_macs.max(1) as f64
+    }
+}
+
+/// Simulate `C[M,N] = A[M,K] x B[K,N]` where B (weights) has the given
+/// density in [0, 1]. Dense runs use density = 1.0.
+pub fn simulate_gemm(m: usize, k: usize, n: usize, density: f64, cfg: &AcceleratorConfig) -> SimReport {
+    assert!((0.0..=1.0).contains(&density));
+    let total_macs = (m as u64) * (k as u64) * (n as u64);
+    let effectual_macs = ((total_macs as f64) * density).round() as u64;
+
+    // --- cycles -----------------------------------------------------------
+    // compute: effectual MACs spread over the multiplier switches, plus the
+    // reduction-tree fill latency once per output tile.
+    let compute_cycles = effectual_macs.div_ceil(cfg.mult_switches as u64);
+    let tree_depth = (cfg.mult_switches as f64).log2().ceil() as u64;
+    // memory: weights stream compressed (density + 1/32 bitmap metadata);
+    // activations are re-fetched once per multicast-wide column tile
+    // regardless of weight sparsity (weight-stationary dataflow); outputs
+    // written once.
+    let col_passes = (n as u64).div_ceil(cfg.multicast as u64);
+    let weight_elems = ((k * n) as f64 * (density + 1.0 / 32.0)).ceil() as u64;
+    let act_elems = (m as u64) * (k as u64) * col_passes;
+    let out_elems = (m as u64) * (n as u64);
+    let rd_bw = (cfg.rd_ports * cfg.port_width) as u64;
+    let wr_bw = (cfg.wr_ports * cfg.port_width) as u64;
+    let mem_cycles = (weight_elems + act_elems).div_ceil(rd_bw) + out_elems.div_ceil(wr_bw);
+    // compute and memory overlap (double-buffered SDMemory): the run is
+    // bound by the slower of the two, plus pipeline fill.
+    let cycles = compute_cycles.max(mem_cycles) + tree_depth;
+
+    // --- energy -----------------------------------------------------------
+    let energy_compute = effectual_macs as f64 * cfg.e_mac;
+    // each effectual operand traverses the distribution network once and
+    // each partial product climbs the reduction tree (log2 hops amortized
+    // to ~1 hop per MAC in a balanced FAN/AS network).
+    let energy_network =
+        effectual_macs as f64 * (cfg.e_dist_hop + cfg.e_reduce_hop);
+    let energy_sram = (weight_elems + act_elems) as f64 * cfg.e_sram_read
+        + out_elems as f64 * cfg.e_sram_write;
+    let energy_ctrl = cycles as f64 * cfg.e_ctrl_per_cycle;
+    let energy = energy_compute + energy_network + energy_sram + energy_ctrl;
+
+    SimReport {
+        cycles,
+        effectual_macs,
+        total_macs,
+        energy,
+        energy_compute,
+        energy_network,
+        energy_sram,
+        energy_ctrl,
+    }
+}
+
+/// Map a conv layer to the accelerator GEMM (im2col view) and simulate.
+pub fn simulate_conv(geom: &Conv2dGeometry, density: f64, cfg: &AcceleratorConfig) -> SimReport {
+    let m = geom.n * geom.out_h() * geom.out_w();
+    let k = geom.c * geom.r * geom.s;
+    let n = geom.k;
+    simulate_gemm(m, k, n, density, cfg)
+}
+
+/// The paper's §5.2 experiment: energy(dense) / energy(sparse) for one
+/// layer at the given sparsity (0.65 for signed-binary ResNet-18).
+pub fn energy_reduction(geom: &Conv2dGeometry, sparsity: f64, cfg: &AcceleratorConfig) -> f64 {
+    let dense = simulate_conv(geom, 1.0, cfg);
+    let sparse = simulate_conv(geom, 1.0 - sparsity, cfg);
+    dense.energy / sparse.energy
+}
+
+/// §5.2 throughput potential: 1/density ideal, cycles ratio as modelled.
+pub fn throughput_speedup(geom: &Conv2dGeometry, sparsity: f64, cfg: &AcceleratorConfig) -> f64 {
+    let dense = simulate_conv(geom, 1.0, cfg);
+    let sparse = simulate_conv(geom, 1.0 - sparsity, cfg);
+    dense.cycles as f64 / sparse.cycles as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resnet_layer() -> Conv2dGeometry {
+        // a mid resnet18 layer: 128x128 3x3 on 28x28
+        Conv2dGeometry { n: 1, c: 128, h: 28, w: 28, k: 128, r: 3, s: 3, stride: 1, padding: 1 }
+    }
+
+    #[test]
+    fn dense_run_has_all_macs_effectual() {
+        let r = simulate_conv(&resnet_layer(), 1.0, &AcceleratorConfig::default());
+        assert_eq!(r.effectual_macs, r.total_macs);
+        assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn energy_decreases_monotonically_with_sparsity() {
+        let cfg = AcceleratorConfig::default();
+        let g = resnet_layer();
+        let mut last = f64::INFINITY;
+        for s in [0.0, 0.25, 0.5, 0.65, 0.9] {
+            let e = simulate_conv(&g, 1.0 - s, &cfg).energy;
+            assert!(e < last, "energy not monotone at sparsity {s}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn paper_ratio_65pct_sparsity_about_2x() {
+        // §5.2: decreasing density from 100% to 35% -> ~2x energy reduction
+        let cfg = AcceleratorConfig::default();
+        let ratio = energy_reduction(&resnet_layer(), 0.65, &cfg);
+        assert!(
+            (1.6..=2.6).contains(&ratio),
+            "energy reduction {ratio} outside the paper's ~2x band"
+        );
+    }
+
+    #[test]
+    fn throughput_bounded_by_ideal() {
+        let cfg = AcceleratorConfig::default();
+        let g = resnet_layer();
+        let sp = throughput_speedup(&g, 0.65, &cfg);
+        let ideal = 1.0 / 0.35;
+        assert!(sp > 1.2 && sp <= ideal + 1e-9, "speedup {sp}, ideal {ideal}");
+    }
+
+    #[test]
+    fn cycles_scale_with_work() {
+        let cfg = AcceleratorConfig::default();
+        let a = simulate_gemm(64, 512, 64, 1.0, &cfg);
+        let b = simulate_gemm(128, 512, 64, 1.0, &cfg);
+        assert!(b.cycles > a.cycles);
+        assert_eq!(b.total_macs, 2 * a.total_macs);
+    }
+
+    #[test]
+    fn more_multipliers_fewer_cycles() {
+        let mut cfg = AcceleratorConfig::default();
+        let g = resnet_layer();
+        let base = simulate_conv(&g, 1.0, &cfg).cycles;
+        cfg.mult_switches = 1024;
+        cfg.rd_ports = 1024;
+        cfg.wr_ports = 1024;
+        let big = simulate_conv(&g, 1.0, &cfg).cycles;
+        assert!(big < base);
+    }
+
+    #[test]
+    fn energy_breakdown_sums() {
+        let r = simulate_conv(&resnet_layer(), 0.35, &AcceleratorConfig::default());
+        let sum = r.energy_compute + r.energy_network + r.energy_sram + r.energy_ctrl;
+        assert!((sum - r.energy).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bitwidth_independence_note() {
+        // supp. A: the reduction due to sparsity is not a function of
+        // weight precision — our model has no bit-width term at all, so
+        // the ratio is trivially invariant; assert the API reflects that.
+        let cfg = AcceleratorConfig::default();
+        let g = resnet_layer();
+        let r1 = energy_reduction(&g, 0.65, &cfg);
+        let r2 = energy_reduction(&g, 0.65, &cfg);
+        assert_eq!(r1, r2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Convolution: naive direct loops and im2col + GEMM.
+//!
+//! Layouts match the python side exactly (NCHW activations, OIHW weights,
+//! im2col patch matrix [N*OH*OW, C*R*S] with the (c, r*s) minor order of
+//! `ref.im2col_ref`), so artifacts and golden files cross-check 1:1.
+
+use super::{gemm_into, Tensor};
+
+/// Geometry of one conv layer — shared by the repetition engine, the
+/// simulator and the model descriptors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dGeometry {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub r: usize,
+    pub s: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl Conv2dGeometry {
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.padding - self.r) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.padding - self.s) / self.stride + 1
+    }
+
+    /// MACs for a dense, repetition/sparsity-unaware conv — the paper's
+    /// arithmetic-reduction denominator.
+    pub fn dense_macs(&self) -> u64 {
+        (self.n * self.k * self.out_h() * self.out_w()) as u64
+            * (self.c * self.r * self.s) as u64
+    }
+
+    pub fn weight_count(&self) -> usize {
+        self.k * self.c * self.r * self.s
+    }
+}
+
+/// Direct convolution — the reference for everything else.
+pub fn conv2d_naive(x: &Tensor, w: &Tensor, stride: usize, padding: usize) -> Tensor {
+    let (n, c, h, wd) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (k, c2, r, s) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    assert_eq!(c, c2, "in-channel mismatch");
+    let oh = (h + 2 * padding - r) / stride + 1;
+    let ow = (wd + 2 * padding - s) / stride + 1;
+    let mut out = Tensor::zeros(&[n, k, oh, ow]);
+    for ni in 0..n {
+        for ki in 0..k {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0;
+                    for ci in 0..c {
+                        for ry in 0..r {
+                            let iy = oy * stride + ry;
+                            if iy < padding || iy - padding >= h {
+                                continue;
+                            }
+                            for sx in 0..s {
+                                let ix = ox * stride + sx;
+                                if ix < padding || ix - padding >= wd {
+                                    continue;
+                                }
+                                acc += x.at4(ni, ci, iy - padding, ix - padding)
+                                    * w.at4(ki, ci, ry, sx);
+                            }
+                        }
+                    }
+                    out.set4(ni, ki, oy, ox, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// NCHW -> [N*OH*OW, C*R*S] patch matrix, matching `ref.im2col_ref`.
+pub fn im2col(x: &Tensor, r: usize, s: usize, stride: usize, padding: usize) -> Tensor {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let oh = (h + 2 * padding - r) / stride + 1;
+    let ow = (w + 2 * padding - s) / stride + 1;
+    let cols = c * r * s;
+    let mut out = Tensor::zeros(&[n * oh * ow, cols]);
+    let od = out.data_mut();
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * cols;
+                for ci in 0..c {
+                    for ry in 0..r {
+                        let iy = oy * stride + ry;
+                        let in_y = iy >= padding && iy - padding < h;
+                        for sx in 0..s {
+                            let ix = ox * stride + sx;
+                            let v = if in_y && ix >= padding && ix - padding < w {
+                                x.at4(ni, ci, iy - padding, ix - padding)
+                            } else {
+                                0.0
+                            };
+                            od[row + ci * r * s + ry * s + sx] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// im2col + GEMM convolution. Weight is flattened filter-major to
+/// [C*R*S, K] so output comes out [N*OH*OW, K], then re-laid to NCHW.
+pub fn conv2d_gemm(x: &Tensor, w: &Tensor, stride: usize, padding: usize) -> Tensor {
+    let (n, c, h, wd) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (k, c2, r, s) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    assert_eq!(c, c2);
+    let oh = (h + 2 * padding - r) / stride + 1;
+    let ow = (wd + 2 * padding - s) / stride + 1;
+    let patches = im2col(x, r, s, stride, padding);
+    // transpose OIHW -> [C*R*S, K]
+    let crs = c * r * s;
+    let mut wt = vec![0.0f32; crs * k];
+    for ki in 0..k {
+        for e in 0..crs {
+            wt[e * k + ki] = w.data()[ki * crs + e];
+        }
+    }
+    let m = n * oh * ow;
+    let mut mm = vec![0.0f32; m * k];
+    gemm_into(patches.data(), &wt, &mut mm, m, crs, k);
+    // [N*OH*OW, K] -> NCHW
+    let mut out = Tensor::zeros(&[n, k, oh, ow]);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * k;
+                for ki in 0..k {
+                    out.set4(ni, ki, oy, ox, mm[row + ki]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn geometry() {
+        let g = Conv2dGeometry { n: 1, c: 16, h: 32, w: 32, k: 32, r: 3, s: 3, stride: 2, padding: 1 };
+        assert_eq!(g.out_h(), 16);
+        assert_eq!(g.out_w(), 16);
+        assert_eq!(g.dense_macs(), (32 * 16 * 16) as u64 * (16 * 9) as u64);
+    }
+
+    #[test]
+    fn gemm_conv_matches_naive() {
+        let mut rng = Rng::new(5);
+        for (stride, padding) in [(1, 1), (2, 1), (1, 0)] {
+            let x = Tensor::rand_normal(&[2, 3, 8, 8], 1.0, &mut rng);
+            let w = Tensor::rand_normal(&[4, 3, 3, 3], 1.0, &mut rng);
+            let a = conv2d_naive(&x, &w, stride, padding);
+            let b = conv2d_gemm(&x, &w, stride, padding);
+            assert!(a.max_abs_diff(&b) < 1e-4, "stride={stride} pad={padding}");
+        }
+    }
+
+    #[test]
+    fn conv_1x1() {
+        let mut rng = Rng::new(6);
+        let x = Tensor::rand_normal(&[1, 4, 5, 5], 1.0, &mut rng);
+        let w = Tensor::rand_normal(&[2, 4, 1, 1], 1.0, &mut rng);
+        let a = conv2d_naive(&x, &w, 1, 0);
+        let b = conv2d_gemm(&x, &w, 1, 0);
+        assert_eq!(a.shape(), &[1, 2, 5, 5]);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn im2col_shape_and_padding() {
+        let x = Tensor::filled(&[1, 1, 2, 2], 1.0);
+        let p = im2col(&x, 3, 3, 1, 1);
+        assert_eq!(p.shape(), &[4, 9]);
+        // top-left output pixel: the 3x3 patch has 4 in-bounds ones
+        let row0: f32 = p.data()[0..9].iter().sum();
+        assert_eq!(row0, 4.0);
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 identity conv reproduces input channel
+        let mut rng = Rng::new(7);
+        let x = Tensor::rand_normal(&[1, 1, 6, 6], 1.0, &mut rng);
+        let w = Tensor::new(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d_gemm(&x, &w, 1, 0);
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+}

@@ -1,0 +1,154 @@
+//! Dense tensor substrate (S1).
+//!
+//! A deliberately small f32 NCHW tensor library: exactly what the
+//! inference engines and the simulator need — shapes, elementwise ops,
+//! GEMM, im2col convolution — with no external dependencies. The naive
+//! dense conv here is the "repetition/sparsity-unaware" baseline that the
+//! paper's arithmetic-reduction metric divides by (supp. G).
+
+mod conv;
+mod ops;
+
+pub use conv::{conv2d_gemm, conv2d_naive, im2col, Conv2dGeometry};
+pub use ops::{gemm, gemm_into};
+
+/// Row-major dense f32 tensor with an explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match {} elements",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|i| f(i)).collect() }
+    }
+
+    pub fn rand_normal(shape: &[usize], std: f32, rng: &mut crate::util::Rng) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape without copying; total element count must match.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// Index into a rank-4 tensor (NCHW / OIHW).
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d] = v;
+    }
+
+    /// Max |a - b| over all elements (for tests).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dim(1), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn at4_row_major() {
+        let t = Tensor::from_fn(&[2, 3, 4, 5], |i| i as f32);
+        assert_eq!(t.at4(0, 0, 0, 0), 0.0);
+        assert_eq!(t.at4(1, 2, 3, 4), (1 * 3 * 4 * 5 + 2 * 4 * 5 + 3 * 5 + 4) as f32);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_fn(&[4, 3], |i| i as f32).reshape(&[2, 6]);
+        assert_eq!(t.shape(), &[2, 6]);
+        assert_eq!(t.data()[7], 7.0);
+    }
+
+    #[test]
+    fn nonzero_count() {
+        let t = Tensor::new(&[4], vec![0.0, 1.0, 0.0, -2.0]);
+        assert_eq!(t.count_nonzero(), 2);
+    }
+}

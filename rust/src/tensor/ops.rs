@@ -1,0 +1,127 @@
+//! GEMM and elementwise primitives.
+//!
+//! `gemm` is a cache-blocked, unrolled matrix multiply — not a BLAS rival,
+//! but a fair dense baseline on this CPU (the paper's SumMerge also
+//! compares against straightforward dense loops, not MKL).
+
+use super::Tensor;
+
+const MC: usize = 64; // rows of A per L2 block
+const KC: usize = 256; // depth per block
+const NR: usize = 8; // columns unrolled in the micro-kernel
+
+/// C[m,n] = A[m,k] * B[k,n].
+pub fn gemm(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (k2, n) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2, "gemm inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    gemm_into(a.data(), b.data(), c.data_mut(), m, k, n);
+    c
+}
+
+/// Raw-slice GEMM used by both the Tensor API and the inference engines.
+pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    // cache blocking over (i, p); the inner kernel walks B rows
+    // sequentially which keeps it streaming from L1/L2.
+    let mut ib = 0;
+    while ib < m {
+        let i_end = (ib + MC).min(m);
+        let mut pb = 0;
+        while pb < k {
+            let p_end = (pb + KC).min(k);
+            for i in ib..i_end {
+                let arow = &a[i * k..i * k + k];
+                let crow = &mut c[i * n..i * n + n];
+                for p in pb..p_end {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n..p * n + n];
+                    let mut j = 0;
+                    // unrolled by NR
+                    while j + NR <= n {
+                        crow[j] += av * brow[j];
+                        crow[j + 1] += av * brow[j + 1];
+                        crow[j + 2] += av * brow[j + 2];
+                        crow[j + 3] += av * brow[j + 3];
+                        crow[j + 4] += av * brow[j + 4];
+                        crow[j + 5] += av * brow[j + 5];
+                        crow[j + 6] += av * brow[j + 6];
+                        crow[j + 7] += av * brow[j + 7];
+                        j += NR;
+                    }
+                    while j < n {
+                        crow[j] += av * brow[j];
+                        j += 1;
+                    }
+                }
+            }
+            pb = p_end;
+        }
+        ib = i_end;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gemm_naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.dim(0), a.dim(1), b.dim(1));
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a.data()[i * k + p] * b.data()[p * n + j];
+                }
+                c.data_mut()[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive_small() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::rand_normal(&[7, 13], 1.0, &mut rng);
+        let b = Tensor::rand_normal(&[13, 5], 1.0, &mut rng);
+        let c = gemm(&a, &b);
+        let cref = gemm_naive(&a, &b);
+        assert!(c.max_abs_diff(&cref) < 1e-4);
+    }
+
+    #[test]
+    fn gemm_matches_naive_blocked_sizes() {
+        // exceed MC and KC so the blocking paths run
+        let mut rng = Rng::new(2);
+        let a = Tensor::rand_normal(&[130, 300], 0.5, &mut rng);
+        let b = Tensor::rand_normal(&[300, 17], 0.5, &mut rng);
+        let c = gemm(&a, &b);
+        let cref = gemm_naive(&a, &b);
+        assert!(c.max_abs_diff(&cref) < 1e-3);
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let n = 9;
+        let eye = Tensor::from_fn(&[n, n], |i| if i / n == i % n { 1.0 } else { 0.0 });
+        let mut rng = Rng::new(3);
+        let a = Tensor::rand_normal(&[n, n], 1.0, &mut rng);
+        assert!(gemm(&a, &eye).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn gemm_dim_mismatch() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        gemm(&a, &b);
+    }
+}

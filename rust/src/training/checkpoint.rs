@@ -1,0 +1,141 @@
+//! Checkpoint format: a JSON header line (specs + step) followed by raw
+//! little-endian f32 tensor data in header order.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{Dtype, TensorSpec};
+use crate::util::json::{self, Json};
+
+const MAGIC: &str = "plum-ckpt-v1";
+
+pub fn save_checkpoint(
+    path: &Path,
+    step: u64,
+    state: &[(TensorSpec, Vec<f32>)],
+) -> Result<()> {
+    let header = json::obj(vec![
+        ("magic", json::s(MAGIC)),
+        ("step", json::num(step as f64)),
+        (
+            "tensors",
+            Json::Arr(
+                state
+                    .iter()
+                    .map(|(spec, _)| {
+                        json::obj(vec![
+                            ("group", json::s(&spec.group)),
+                            ("name", json::s(&spec.name)),
+                            (
+                                "shape",
+                                Json::Arr(
+                                    spec.shape.iter().map(|d| json::num(*d as f64)).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "{}", header.to_string())?;
+    for (_, data) in state {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<(u64, Vec<(TensorSpec, Vec<f32>)>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    let nl = bytes
+        .iter()
+        .position(|b| *b == b'\n')
+        .ok_or_else(|| anyhow!("no header line"))?;
+    let header = Json::parse(std::str::from_utf8(&bytes[..nl])?)
+        .map_err(|e| anyhow!("bad header: {e}"))?;
+    if header.req_str("magic")? != MAGIC {
+        return Err(anyhow!("not a plum checkpoint"));
+    }
+    let step = header.req_usize("step")? as u64;
+    let mut state = Vec::new();
+    let mut off = nl + 1;
+    for t in header.req_arr("tensors")? {
+        let shape: Vec<usize> = t
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let n: usize = shape.iter().product();
+        if off + 4 * n > bytes.len() {
+            return Err(anyhow!("checkpoint truncated"));
+        }
+        let mut data = vec![0.0f32; n];
+        for (i, ch) in bytes[off..off + 4 * n].chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        off += 4 * n;
+        state.push((
+            TensorSpec {
+                group: t.req_str("group")?.to_string(),
+                name: t.req_str("name")?.to_string(),
+                shape,
+                dtype: Dtype::F32,
+            },
+            data,
+        ));
+    }
+    if off != bytes.len() {
+        return Err(anyhow!("checkpoint has trailing bytes"));
+    }
+    Ok((step, state))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(group: &str, name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec {
+            group: group.into(),
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: Dtype::F32,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("plum_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let state = vec![
+            (spec("params", "000.conv.w", &[2, 3]), vec![1.0, -2.0, 3.5, 0.0, 7.0, -0.25]),
+            (spec("bn", "001.bn.mean", &[4]), vec![0.1, 0.2, 0.3, 0.4]),
+        ];
+        save_checkpoint(&path, 42, &state).unwrap();
+        let (step, loaded) = load_checkpoint(&path).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].1, state[0].1);
+        assert_eq!(loaded[1].0.name, "001.bn.mean");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("plum_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"{\"magic\":\"nope\"}\n").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

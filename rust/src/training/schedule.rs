@@ -1,0 +1,62 @@
+//! Learning-rate schedules (paper supp. C).
+
+/// LR as a function of training progress in [0, 1].
+#[derive(Debug, Clone)]
+pub enum Schedule {
+    /// CIFAR recipe: init lr divided by 10 at fractional milestones
+    /// (paper: epochs 150/200/320 of 350 -> ~0.43/0.57/0.91).
+    Step { init: f32, milestones: Vec<f32> },
+    /// ImageNet recipe: first-order polynomial (linear) anneal from
+    /// `init` to `end`.
+    Poly { init: f32, end: f32 },
+    Constant { lr: f32 },
+}
+
+impl Schedule {
+    pub fn cifar_default() -> Schedule {
+        Schedule::Step { init: 1e-2, milestones: vec![0.43, 0.57, 0.91] }
+    }
+
+    pub fn imagenet_default() -> Schedule {
+        Schedule::Poly { init: 2e-4, end: 2e-8 }
+    }
+
+    pub fn lr(&self, progress: f32) -> f32 {
+        let p = progress.clamp(0.0, 1.0);
+        match self {
+            Schedule::Step { init, milestones } => {
+                let drops = milestones.iter().filter(|m| p >= **m).count() as i32;
+                init * 0.1f32.powi(drops)
+            }
+            Schedule::Poly { init, end } => init + (end - init) * p,
+            Schedule::Constant { lr } => *lr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_drops_by_ten() {
+        let s = Schedule::cifar_default();
+        assert!((s.lr(0.0) - 1e-2).abs() < 1e-9);
+        assert!((s.lr(0.5) - 1e-3).abs() < 1e-9);
+        assert!((s.lr(0.6) - 1e-4).abs() < 1e-9);
+        assert!((s.lr(0.95) - 1e-5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn poly_is_linear() {
+        let s = Schedule::Poly { init: 1.0, end: 0.0 };
+        assert!((s.lr(0.25) - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn progress_clamped() {
+        let s = Schedule::Constant { lr: 0.1 };
+        assert_eq!(s.lr(-1.0), 0.1);
+        assert_eq!(s.lr(2.0), 0.1);
+    }
+}

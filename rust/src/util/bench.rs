@@ -1,0 +1,73 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Follows the paper's methodology (supp. A): each measurement is repeated
+//! `reps` times on an unloaded machine and the *minimum* wall time is
+//! reported, plus median/mean for context. Used by `cargo bench` targets
+//! (which are `harness = false` binaries) and the CLI bench subcommands.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Minimum over reps — the paper's reported statistic.
+    pub min_ns: u64,
+    pub median_ns: u64,
+    pub mean_ns: u64,
+    pub reps: usize,
+}
+
+impl BenchResult {
+    pub fn min_ms(&self) -> f64 {
+        self.min_ns as f64 / 1e6
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} min {:>10.3} ms   median {:>10.3} ms   mean {:>10.3} ms   ({} reps)",
+            self.name,
+            self.min_ns as f64 / 1e6,
+            self.median_ns as f64 / 1e6,
+            self.mean_ns as f64 / 1e6,
+            self.reps
+        )
+    }
+}
+
+/// Run `f` `reps` times after `warmup` unmeasured calls; report min/median/mean.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<u64> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as u64);
+    }
+    times.sort_unstable();
+    let min_ns = times[0];
+    let median_ns = times[times.len() / 2];
+    let mean_ns = times.iter().sum::<u64>() / times.len() as u64;
+    BenchResult { name: name.to_string(), min_ns, median_ns, mean_ns, reps }
+}
+
+/// Black-box to keep the optimizer from eliding benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordering() {
+        let r = bench("noop", 1, 16, || {
+            black_box(1 + 1);
+        });
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.reps == 16);
+    }
+}

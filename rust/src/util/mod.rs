@@ -1,0 +1,8 @@
+//! Small shared substrates: JSON codec, deterministic RNG, bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

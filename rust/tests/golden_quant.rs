@@ -1,0 +1,78 @@
+//! Cross-language golden test: rust quantizers must reproduce the python
+//! reference (`ref.py`) bit-for-bit on fixtures emitted by `make
+//! artifacts` (artifacts/golden_quant.json).
+
+use std::path::PathBuf;
+
+use plum::quant::{quantize_binary, quantize_signed_binary, quantize_ternary};
+use plum::tensor::Tensor;
+use plum::util::Json;
+
+fn golden() -> Option<Json> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden_quant.json");
+    let text = std::fs::read_to_string(p).ok()?;
+    Some(Json::parse(&text).expect("golden_quant.json parses"))
+}
+
+#[test]
+fn rust_quantizers_match_python_reference() {
+    let Some(g) = golden() else {
+        eprintln!("artifacts not built; skipping golden test");
+        return;
+    };
+    let cases = g.req_arr("cases").unwrap();
+    assert!(!cases.is_empty());
+    let mut checked = 0;
+    for case in cases {
+        let scheme = case.req_str("scheme").unwrap();
+        let shape: Vec<usize> = case
+            .req_arr("shape")
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect();
+        let w: Vec<f32> = case
+            .req_arr("w")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let beta: Vec<f32> = case
+            .req_arr("beta")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let expected: Vec<f32> = case
+            .req_arr("wq")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let wt = Tensor::new(&shape, w);
+        let got = match scheme {
+            "binary" => quantize_binary(&wt),
+            "ternary" => quantize_ternary(&wt, 0.05),
+            "sb" => quantize_signed_binary(&wt, &beta, 0.05, 1),
+            other => panic!("unknown scheme {other}"),
+        };
+        let mut max_err = 0.0f32;
+        for (a, b) in got.values.data().iter().zip(&expected) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 1e-5,
+            "{scheme} {shape:?}: max err {max_err} vs python reference"
+        );
+        // sparsity pattern must match exactly (not just numerically close)
+        for (i, (a, b)) in got.values.data().iter().zip(&expected).enumerate() {
+            assert_eq!(
+                *a == 0.0,
+                *b == 0.0,
+                "{scheme} {shape:?}: effectuality mismatch at {i}"
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 6, "expected >= 6 golden cases, got {checked}");
+}

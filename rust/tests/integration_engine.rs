@@ -1,0 +1,109 @@
+//! Integration: trained-checkpoint latent weights -> rust quantizer ->
+//! repetition engine, cross-checked against the AOT infer path where the
+//! shapes line up, plus the §5.1 op-count shape claims on the real model
+//! geometry.
+
+use std::path::PathBuf;
+
+use plum::quant::{self, Scheme};
+use plum::repetition::{arithmetic_reduction, execute_conv2d, plan_layer, EngineConfig};
+use plum::tensor::{conv2d_gemm, Tensor};
+use plum::util::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("resnet20_sb.manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts not built; skipping");
+        None
+    }
+}
+
+/// Run the quantized conv layers of resnet20_sb's *initial* latent
+/// weights (params.bin) through the engine and compare to dense GEMM.
+#[test]
+fn engine_runs_real_model_weights() {
+    let Some(dir) = artifacts() else { return };
+    let man = plum::runtime::Manifest::load(&dir, "resnet20_sb").unwrap();
+    let state = man.load_initial_state().unwrap();
+    let mut rng = Rng::new(99);
+    let mut tested = 0;
+    for layer in man.conv_layers.iter().filter(|l| l.quantized).take(4) {
+        let wname = format!("{}.w", layer.name);
+        let bname = format!("{}.beta", layer.name);
+        let (wspec, wdata) = state
+            .iter()
+            .find(|(s, _)| s.name == wname)
+            .expect("weight in state");
+        let beta = state
+            .iter()
+            .find(|(s, _)| s.name == bname)
+            .map(|(_, d)| d.clone())
+            .expect("beta in state");
+        let w = Tensor::new(&wspec.shape, wdata.clone());
+        let q = quant::quantize_signed_binary(
+            &w,
+            &beta,
+            man.config.delta_frac as f32,
+            man.config.regions_per_filter,
+        );
+        let mut geom = layer.geom;
+        geom.n = 1;
+        let x = Tensor::rand_normal(&[1, geom.c, geom.h, geom.w], 1.0, &mut rng);
+        let dense = conv2d_gemm(&x, &q.values, geom.stride, geom.padding);
+        let plan = plan_layer(&q, geom, EngineConfig::default());
+        let out = execute_conv2d(&plan, &x);
+        assert!(
+            dense.max_abs_diff(&out) < 1e-3,
+            "layer {} diverges",
+            layer.name
+        );
+        // signed-binary invariant on the real model's quantized weights
+        assert!(q.sparsity() > 0.1, "layer {} unexpectedly dense", layer.name);
+        tested += 1;
+    }
+    assert!(tested >= 3);
+}
+
+/// §5.1 shape on the real resnet20 geometry: SB (w/ sparsity) needs fewer
+/// ops than binary; ternary needs more than SB.
+#[test]
+fn op_shape_on_model_geometry() {
+    let Some(dir) = artifacts() else { return };
+    let man = plum::runtime::Manifest::load(&dir, "resnet20_sb").unwrap();
+    let mut rng = Rng::new(7);
+    let cfg = EngineConfig { subtile: 8, sparsity_support: true };
+    let (mut ops_b, mut ops_t, mut ops_s) = (0u64, 0u64, 0u64);
+    for layer in man.conv_layers.iter().filter(|l| l.quantized) {
+        let g = layer.geom;
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        ops_b += plan_layer(&quant::quantize(&w, Scheme::Binary, None), g, cfg)
+            .op_counts()
+            .total();
+        ops_t += plan_layer(&quant::quantize(&w, Scheme::ternary_default(), None), g, cfg)
+            .op_counts()
+            .total();
+        ops_s += plan_layer(&quant::quantize(&w, Scheme::sb_default(), None), g, cfg)
+            .op_counts()
+            .total();
+    }
+    assert!(ops_s < ops_b, "SB {ops_s} !< B {ops_b}");
+    assert!(ops_t > ops_s, "T {ops_t} !> SB {ops_s}");
+}
+
+/// Arithmetic reduction is meaningful (>1x) on every quantized layer of
+/// the real model geometry for SB.
+#[test]
+fn reduction_positive_across_model() {
+    let Some(dir) = artifacts() else { return };
+    let man = plum::runtime::Manifest::load(&dir, "resnet20_sb").unwrap();
+    let mut rng = Rng::new(8);
+    for layer in man.conv_layers.iter().filter(|l| l.quantized) {
+        let g = layer.geom;
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let q = quant::quantize(&w, Scheme::sb_default(), None);
+        let red = arithmetic_reduction(&plan_layer(&q, g, EngineConfig::default()));
+        assert!(red > 1.0, "{}: reduction {red}", layer.name);
+    }
+}

@@ -1,0 +1,95 @@
+//! Integration: AOT artifacts (python-built) -> rust PJRT load/compile ->
+//! train steps + inference. Skips (with a notice) if artifacts are absent.
+
+use std::path::PathBuf;
+
+use plum::data::SyntheticDataset;
+use plum::runtime::Runtime;
+use plum::training::{load_checkpoint, save_checkpoint, Schedule, Trainer};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("r8sb_p050.manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts not built — run `make artifacts`; skipping");
+        None
+    }
+}
+
+#[test]
+fn train_steps_reduce_loss_and_checkpoint_roundtrips() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut tr = Trainer::new(&rt, &dir, "r8sb_p050").unwrap();
+    let ds = SyntheticDataset::new("cifar", 10, 3, tr.image_size(), 1);
+
+    let log = tr
+        .train(&ds, 40, &Schedule::Constant { lr: 5e-3 }, 10, 2, true)
+        .unwrap();
+    let first = log.curve.first().unwrap().loss;
+    let last = log.final_train_loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(last.is_finite());
+
+    // quantized export: every sb filter single-signed, density < 1
+    let layers = tr.export_quantized().unwrap();
+    assert!(!layers.is_empty());
+    let density = tr.quantized_density().unwrap();
+    assert!(density > 0.05 && density < 0.95, "density {density}");
+
+    // checkpoint roundtrip preserves logits exactly
+    let (xs, _) = ds.batch(0, tr.batch_size());
+    let logits_before = tr.infer_logits(&xs).unwrap();
+    let tmp = std::env::temp_dir().join("plum_it_ckpt.bin");
+    let state = tr.state_to_host().unwrap();
+    save_checkpoint(&tmp, tr.step, &state).unwrap();
+    let (step, loaded) = load_checkpoint(&tmp).unwrap();
+    assert_eq!(step, tr.step);
+    let mut tr2 = Trainer::new(&rt, &dir, "r8sb_p050").unwrap();
+    tr2.state_from_host(&loaded).unwrap();
+    let logits_after = tr2.infer_logits(&xs).unwrap();
+    assert_eq!(logits_before, logits_after);
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn eval_accuracy_better_than_chance_after_short_training() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut tr = Trainer::new(&rt, &dir, "r8sb_p050").unwrap();
+    let ds = SyntheticDataset::new("cifar", 10, 3, tr.image_size(), 2);
+    tr.train(&ds, 120, &Schedule::Constant { lr: 5e-3 }, 50, 0, true)
+        .unwrap();
+    let acc = tr.evaluate(&ds, 4).unwrap();
+    assert!(acc > 0.2, "eval acc {acc} not above chance (0.1)");
+}
+
+#[test]
+fn sb_matmul_kernel_artifact_runs() {
+    let Some(dir) = artifacts() else { return };
+    if !dir.join("sb_matmul.hlo.txt").exists() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.compile_hlo_file(&dir.join("sb_matmul.hlo.txt")).unwrap();
+    let (m, k, n) = (256usize, 1152usize, 128usize);
+    let mut rng = plum::util::Rng::new(3);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let u: Vec<f32> = (0..k * n).map(|_| if rng.coin(0.5) { 0.4 } else { 0.0 }).collect();
+    let beta: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let al = plum::runtime::literal_f32(&[m, k], &a).unwrap();
+    let ul = plum::runtime::literal_f32(&[k, n], &u).unwrap();
+    let bl = plum::runtime::literal_f32(&[n], &beta).unwrap();
+    let out = plum::runtime::execute_tuple(&exe, &[al, ul, bl]).unwrap();
+    let o = plum::runtime::literal_to_f32(&out[0]).unwrap();
+    assert_eq!(o.len(), m * n);
+    // spot check one element against a host dot product
+    let (i, j) = (3usize, 5usize);
+    let mut acc = 0.0f32;
+    for p in 0..k {
+        acc += a[i * k + p] * u[p * n + j];
+    }
+    acc *= beta[j];
+    assert!((acc - o[i * n + j]).abs() < 1e-2 * acc.abs().max(1.0));
+}

@@ -1,0 +1,132 @@
+//! Cross-check: the rust model-zoo descriptors (S9) must agree with the
+//! conv-layer geometry the python Tape recorded into the manifests —
+//! guarding against the two sides drifting apart.
+
+use std::path::PathBuf;
+
+use plum::models;
+use plum::runtime::Manifest;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("resnet20_sb.manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts not built; skipping");
+        None
+    }
+}
+
+#[test]
+fn cifar_resnet20_descriptor_matches_manifest() {
+    let Some(dir) = artifacts() else { return };
+    let man = Manifest::load(&dir, "resnet20_sb").unwrap();
+    let desc = models::cifar_resnet_layers(20, 1.0, man.config.image_size, 1);
+    assert_eq!(desc.len(), man.conv_layers.len(), "layer count");
+    for (d, m) in desc.iter().zip(&man.conv_layers) {
+        assert_eq!(d.geom.k, m.geom.k, "{}: K", m.name);
+        assert_eq!(d.geom.c, m.geom.c, "{}: C", m.name);
+        assert_eq!(d.geom.h, m.geom.h, "{}: H", m.name);
+        assert_eq!(d.geom.stride, m.geom.stride, "{}: stride", m.name);
+        assert_eq!(d.quantized, m.quantized, "{}: quantized", m.name);
+    }
+}
+
+#[test]
+fn resnet18_descriptor_matches_manifest() {
+    let Some(dir) = artifacts() else { return };
+    if !dir.join("resnet18sb.manifest.json").exists() {
+        return;
+    }
+    let man = Manifest::load(&dir, "resnet18sb").unwrap();
+    let desc = models::resnet18_layers(man.config.width_mult, man.config.image_size, 1);
+    assert_eq!(desc.len(), man.conv_layers.len(), "layer count");
+    for (d, m) in desc.iter().zip(&man.conv_layers) {
+        assert_eq!(d.geom.k, m.geom.k, "{}: K", m.name);
+        assert_eq!(d.geom.c, m.geom.c, "{}: C", m.name);
+        assert_eq!(d.geom.h, m.geom.h, "{}: H", m.name);
+    }
+}
+
+#[test]
+fn manifest_param_counts_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let man = Manifest::load(&dir, "resnet20_sb").unwrap();
+    // params.bin must slice exactly into the state specs
+    let state = man.load_initial_state().unwrap();
+    let total: usize = state
+        .iter()
+        .filter(|(s, _)| s.group == "params")
+        .map(|(s, _)| s.elements())
+        .sum();
+    assert_eq!(total, man.param_count);
+    // effectual <= quantized weight count
+    let qtotal: usize = man
+        .conv_layers
+        .iter()
+        .filter(|l| l.quantized)
+        .map(|l| l.geom.weight_count())
+        .sum();
+    assert!(man.effectual_params_init <= qtotal);
+    assert!(man.effectual_params_init > 0);
+}
+
+#[test]
+fn vgg_alexnet_descriptors_match_manifests() {
+    let Some(dir) = artifacts() else { return };
+    for (name, layers) in [
+        ("vgg_small_cifar_sb", models::vgg_small_layers(0.5, 32, 1)),
+        ("alexnet_small_svhn_sb", models::alexnet_small_layers(0.5, 32, 1)),
+    ] {
+        if !dir.join(format!("{name}.manifest.json")).exists() {
+            continue;
+        }
+        let man = Manifest::load(&dir, name).unwrap();
+        assert_eq!(layers.len(), man.conv_layers.len(), "{name}: layer count");
+        for (d, m) in layers.iter().zip(&man.conv_layers) {
+            assert_eq!(d.geom.k, m.geom.k, "{name}/{}: K", m.name);
+            assert_eq!(d.geom.c, m.geom.c, "{name}/{}: C", m.name);
+            assert_eq!(d.geom.h, m.geom.h, "{name}/{}: H", m.name);
+            assert_eq!(d.quantized, m.quantized, "{name}/{}", m.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// failure injection: corrupt/missing artifacts must error, not panic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_manifest_is_an_error() {
+    let dir = std::env::temp_dir();
+    assert!(Manifest::load(&dir, "no_such_model").is_err());
+}
+
+#[test]
+fn corrupt_manifest_is_an_error() {
+    let dir = std::env::temp_dir().join("plum_corrupt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.manifest.json"), b"{ not json").unwrap();
+    assert!(Manifest::load(&dir, "bad").is_err());
+    std::fs::write(dir.join("bad2.manifest.json"), b"{\"name\": \"bad2\"}").unwrap();
+    assert!(Manifest::load(&dir, "bad2").is_err(), "missing fields must error");
+}
+
+#[test]
+fn truncated_params_bin_is_an_error() {
+    let Some(src) = artifacts() else { return };
+    let dir = std::env::temp_dir().join("plum_trunc_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    for f in std::fs::read_dir(&src).unwrap().flatten() {
+        let name = f.file_name().into_string().unwrap();
+        if name.starts_with("r8sb_p050.") {
+            std::fs::copy(f.path(), dir.join(&name)).unwrap();
+        }
+    }
+    // truncate the params blob
+    let pb = dir.join("r8sb_p050.params.bin");
+    let bytes = std::fs::read(&pb).unwrap();
+    std::fs::write(&pb, &bytes[..bytes.len() / 2]).unwrap();
+    let man = Manifest::load(&dir, "r8sb_p050").unwrap();
+    assert!(man.load_initial_state().is_err());
+}

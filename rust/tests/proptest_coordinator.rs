@@ -1,0 +1,188 @@
+//! Property-style tests on coordinator invariants (routing, batching,
+//! response integrity) and on quantizer/engine invariants.
+//!
+//! proptest is not in the offline vendor set, so this uses the same
+//! technique with the repo's deterministic RNG: many seeded random
+//! configurations per property, with the failing seed printed on assert.
+
+use std::time::Duration;
+
+use plum::coordinator::{spawn_worker, BatchPolicy, MockBackend, Router};
+use plum::quant::{self, default_beta, Scheme};
+use plum::repetition::{execute_conv2d, plan_layer, EngineConfig};
+use plum::tensor::{conv2d_gemm, Conv2dGeometry, Tensor};
+use plum::util::Rng;
+
+const CASES: usize = 25;
+
+/// Property: for any (bs, #requests, batching policy), every request is
+/// answered exactly once with its own payload's logits.
+#[test]
+fn prop_every_request_answered_with_own_result() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(1000 + case as u64);
+        let bs = 1 + rng.below(8);
+        let sample = 1 + rng.below(6);
+        let classes = 1 + rng.below(4);
+        let n_req = 1 + rng.below(60);
+        let max_batch = 1 + rng.below(12);
+        let max_wait = Duration::from_micros(rng.below(3000) as u64);
+        let delay = Duration::from_micros(rng.below(300) as u64);
+        let w = spawn_worker(
+            move || Ok(MockBackend { bs, sample, classes, delay }),
+            BatchPolicy { max_batch, max_wait },
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..n_req {
+            let x: Vec<f32> = (0..sample).map(|j| (i * 31 + j) as f32).collect();
+            let expect: f32 = x.iter().sum();
+            rxs.push((expect, w.submit(x).unwrap()));
+        }
+        for (expect, rx) in rxs {
+            let logits = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("case {case}: dropped reply"))
+                .unwrap_or_else(|e| panic!("case {case}: error reply {e}"));
+            assert_eq!(logits.len(), classes, "case {case}");
+            assert_eq!(logits[0], expect, "case {case}: cross-wired response");
+        }
+        drop(w.tx);
+        w.join.join().unwrap();
+    }
+}
+
+/// Property: the router never loses requests and completes them all,
+/// for any replica count and load pattern.
+#[test]
+fn prop_router_conserves_requests() {
+    for case in 0..10 {
+        let mut rng = Rng::new(2000 + case as u64);
+        let replicas = 1 + rng.below(4);
+        let n_req = 1 + rng.below(80);
+        let workers = (0..replicas)
+            .map(|_| {
+                spawn_worker(
+                    move || {
+                        Ok(MockBackend {
+                            bs: 4,
+                            sample: 2,
+                            classes: 1,
+                            delay: Duration::from_micros(200),
+                        })
+                    },
+                    BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                )
+                .unwrap()
+            })
+            .collect();
+        let router = Router::new(workers);
+        let mut rxs = Vec::new();
+        for i in 0..n_req {
+            let (rx, _) = router.submit(vec![i as f32, 1.0]).unwrap();
+            rxs.push((i, rx));
+        }
+        for (i, rx) in rxs {
+            let v = rx.recv().unwrap().unwrap();
+            assert_eq!(v[0], i as f32 + 1.0, "case {case}");
+        }
+        assert_eq!(router.completed(), n_req as u64, "case {case}");
+        router.shutdown().unwrap();
+    }
+}
+
+/// Property: signed-binary quantization never mixes signs within a
+/// region and its packed form round-trips, for random shapes/p_pos/delta.
+#[test]
+fn prop_sb_quantization_invariants() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(3000 + case as u64);
+        let k = 1 + rng.below(12);
+        let c = 1 + rng.below(12);
+        let r = 1 + 2 * rng.below(2); // 1 or 3
+        let p_pos = [0.0, 0.25, 0.5, 1.0][rng.below(4)];
+        let delta = [0.01f32, 0.05, 0.2][rng.below(3)];
+        let w = Tensor::rand_normal(&[k, c, r, r], 1.0, &mut rng);
+        let beta = default_beta(k, p_pos);
+        let q = quant::quantize_signed_binary(&w, &beta, delta, 1);
+        let e = c * r * r;
+        for fi in 0..k {
+            let row = &q.values.data()[fi * e..(fi + 1) * e];
+            let pos = row.iter().any(|v| *v > 0.0);
+            let neg = row.iter().any(|v| *v < 0.0);
+            assert!(!(pos && neg), "case {case}: mixed signs in filter {fi}");
+            if beta[fi] >= 0.0 {
+                assert!(!neg, "case {case}");
+            } else {
+                assert!(!pos, "case {case}");
+            }
+        }
+        let packed = quant::PackedSignedBinary::pack(&q);
+        assert_eq!(packed.effectual(), q.effectual(), "case {case}");
+        assert_eq!(packed.unpack(), q.values.data(), "case {case}");
+    }
+}
+
+/// Property: the repetition engine equals dense GEMM for random
+/// geometry / scheme / subtile / sparsity-support combinations.
+#[test]
+fn prop_engine_matches_dense() {
+    for case in 0..15 {
+        let mut rng = Rng::new(4000 + case as u64);
+        let g = Conv2dGeometry {
+            n: 1 + rng.below(2),
+            c: 1 + rng.below(10),
+            h: 3 + rng.below(6),
+            w: 3 + rng.below(6),
+            k: 1 + rng.below(16),
+            r: 3,
+            s: 3,
+            stride: 1 + rng.below(2),
+            padding: 1,
+        };
+        let scheme = [Scheme::Binary, Scheme::ternary_default(), Scheme::sb_default()]
+            [rng.below(3)];
+        let subtile = [3usize, 8, 16, 64][rng.below(4)];
+        let sparsity_support = rng.coin(0.5);
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.6, &mut rng);
+        let q = quant::quantize(&w, scheme, None);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let dense = conv2d_gemm(&x, &q.values, g.stride, g.padding);
+        let plan = plan_layer(&q, g, EngineConfig { subtile, sparsity_support });
+        let out = execute_conv2d(&plan, &x);
+        let diff = dense.max_abs_diff(&out);
+        assert!(
+            diff < 1e-3,
+            "case {case}: {} subtile={subtile} sp={sparsity_support} diff={diff}",
+            scheme.name()
+        );
+    }
+}
+
+/// Property: op accounting — sparsity support never increases ops.
+#[test]
+fn prop_opcount_monotonicity() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(5000 + case as u64);
+        let g = Conv2dGeometry {
+            n: 1,
+            c: 4 + rng.below(28),
+            h: 6,
+            w: 6,
+            k: 4 + rng.below(60),
+            r: 3,
+            s: 3,
+            stride: 1,
+            padding: 1,
+        };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.6, &mut rng);
+        let q = quant::quantize(&w, Scheme::sb_default(), None);
+        let st = 4 + rng.below(16);
+        let on = plan_layer(&q, g, EngineConfig { subtile: st, sparsity_support: true });
+        let off = plan_layer(&q, g, EngineConfig { subtile: st, sparsity_support: false });
+        assert!(
+            on.op_counts().total() <= off.op_counts().total(),
+            "case {case}: sparsity support increased ops"
+        );
+    }
+}
