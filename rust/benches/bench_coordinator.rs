@@ -6,8 +6,6 @@
 use std::time::{Duration, Instant};
 
 use plum::coordinator::{spawn_worker, BatchPolicy, MockBackend, Router};
-use plum::config::RunConfig;
-use plum::experiments::serving;
 
 fn mock_roundtrip(replicas: usize, n_req: usize, max_batch: usize) -> (f64, f64) {
     let workers = (0..replicas)
@@ -51,17 +49,22 @@ fn main() {
         );
     }
 
-    // end-to-end with PJRT if artifacts are present
-    let cfg = RunConfig::default();
-    if cfg.artifacts.join("resnet20_sb.manifest.json").exists() {
-        match serving::drive(&cfg, "resnet20_sb", 64, None) {
-            Ok(r) => println!(
-                "RESULT bench_coordinator pjrt_rps={:.1} mean_ms={:.1} p95_ms={:.1}",
-                r.throughput_rps, r.mean_ms, r.p95_ms
-            ),
-            Err(e) => println!("pjrt serve skipped: {e:#}"),
+    // end-to-end with PJRT if the feature is on and artifacts are present
+    #[cfg(feature = "pjrt")]
+    {
+        let cfg = plum::config::RunConfig::default();
+        if cfg.artifacts.join("resnet20_sb.manifest.json").exists() {
+            match plum::experiments::serving::drive(&cfg, "resnet20_sb", 64, None) {
+                Ok(r) => println!(
+                    "RESULT bench_coordinator pjrt_rps={:.1} mean_ms={:.1} p95_ms={:.1}",
+                    r.throughput_rps, r.mean_ms, r.p95_ms
+                ),
+                Err(e) => println!("pjrt serve skipped: {e:#}"),
+            }
+        } else {
+            println!("pjrt serve skipped: artifacts not built");
         }
-    } else {
-        println!("pjrt serve skipped: artifacts not built");
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt serve skipped: built without the `pjrt` feature");
 }

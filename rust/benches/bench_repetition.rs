@@ -1,12 +1,20 @@
-//! `cargo bench` target for Figure 7 / §5.1: the repetition-sparsity
-//! engine on the ResNet-18 conv workload, B/T/SB x sparsity on/off.
+//! `cargo bench` target for Figure 7 / §5.1 plus the parallel-backend
+//! scaling study.
 //!
 //! criterion is not in the offline vendor set; this is a `harness = false`
 //! bench binary using the repo's min-of-N harness (paper supp. A
 //! methodology: unloaded machine, report the minimum).
+//!
+//! Emits `BENCH_repetition.json` (op, shape, threads, min_ns, GFLOP/s)
+//! so the perf trajectory is tracked across commits. Env knobs:
+//! `PLUM_BENCH_REPS` (default 10), `PLUM_BENCH_THREADS` (max pool width
+//! for the scaling ladder; default = available parallelism).
+
+use std::path::Path;
 
 use plum::config::RunConfig;
 use plum::experiments::figures;
+use plum::util::bench::{write_bench_json, BenchRecord};
 
 fn main() {
     let mut cfg = RunConfig::default();
@@ -14,14 +22,51 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(10);
+
+    // Figure 7 workload (runs on the process-wide pool, like serving)
     println!("# bench_repetition — Figure 7 workload (reps={})", cfg.bench_reps);
     let rows = figures::fig7(&cfg, 1, 8, None).expect("fig7");
-    // machine-readable summary line for EXPERIMENTS.md tooling
     let b: f64 = rows.iter().map(|r| r.t_binary_ms).sum();
     let s: f64 = rows.iter().map(|r| r.t_sb_sp_ms).sum();
     let t: f64 = rows.iter().map(|r| r.t_ternary_sp_ms).sum();
+
+    // dense-vs-engine, 1-thread-vs-N-thread scaling on the ResNet block
+    let cap = std::env::var("PLUM_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let geom = figures::resnet_block_geometry(1);
+    let threads = figures::default_thread_ladder(cap);
+    let points = figures::engine_scaling(&cfg, geom, &threads).expect("engine_scaling");
+
+    let records: Vec<BenchRecord> = points
+        .iter()
+        .map(|p| BenchRecord {
+            op: p.op.clone(),
+            shape: p.shape.clone(),
+            threads: p.threads,
+            min_ns: p.min_ns,
+            gflops: p.gflops,
+        })
+        .collect();
+    let out = Path::new("BENCH_repetition.json");
+    write_bench_json(out, &records).expect("write BENCH_repetition.json");
+    println!("wrote {} records to {}", records.len(), out.display());
+
+    let engine_ns = |th: usize| {
+        points
+            .iter()
+            .find(|p| p.op == "engine_sb" && p.threads == th)
+            .map(|p| p.min_ns)
+    };
+    let max_t = *threads.last().unwrap();
+    let scale = match (engine_ns(1), engine_ns(max_t)) {
+        (Some(t1), Some(tn)) if tn > 0 => t1 as f64 / tn as f64,
+        _ => 1.0,
+    };
+    // machine-readable summary line for EXPERIMENTS.md tooling
     println!(
-        "RESULT bench_repetition aggregate_speedup_sb={:.3} aggregate_speedup_ternary={:.3}",
+        "RESULT bench_repetition aggregate_speedup_sb={:.3} aggregate_speedup_ternary={:.3} engine_thread_scaling_{max_t}t={scale:.3}",
         b / s,
         b / t
     );

@@ -48,17 +48,19 @@ fn main() {
     let ds = SyntheticDataset::cifar_like(3);
     let bs = tr.batch_size();
     let (xs, ys) = ds.batch(0, bs);
-    let r = bench("resnet20_sb infer (pallas path) bs32", 1, 10, || {
+    // keep the infer and train measurements in separate bindings: the
+    // RESULT line reports both, so neither may overwrite the other
+    let r_infer = bench("resnet20_sb infer (pallas path) bs32", 1, 10, || {
         black_box(tr.infer_logits(&xs).unwrap());
     });
-    println!("{}", r.row());
-    let r = bench("resnet20_sb train step bs32", 1, 10, || {
+    println!("{}", r_infer.row());
+    let r_train = bench("resnet20_sb train step bs32", 1, 10, || {
         black_box(tr.train_step(&xs, &ys, 1e-3, 0.5).unwrap());
     });
-    println!("{}", r.row());
+    println!("{}", r_train.row());
     println!(
         "RESULT bench_runtime train_step_ms={:.2} infer_ms={:.2}",
-        r.min_ms(),
-        r.min_ms()
+        r_train.min_ms(),
+        r_infer.min_ms()
     );
 }

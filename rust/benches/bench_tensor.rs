@@ -1,31 +1,53 @@
 //! `cargo bench` target: dense substrate baselines (GEMM, im2col conv)
 //! that the repetition engine is compared against — the "naive dense"
-//! denominator of the paper's arithmetic-reduction metric, timed.
+//! denominator of the paper's arithmetic-reduction metric, timed at
+//! 1 thread and at full pool width (the GEMM row dimension is
+//! parallelized through the shared worker pool).
 
-use plum::tensor::{conv2d_gemm, conv2d_naive, gemm, Tensor};
+use plum::tensor::{conv2d_gemm_pool, conv2d_naive, gemm_into_pool, Tensor};
 use plum::util::bench::{bench, black_box};
-use plum::util::Rng;
+use plum::util::{Pool, Rng};
 
 fn main() {
-    println!("# bench_tensor — dense baselines");
+    println!("# bench_tensor — dense baselines (1 thread vs N threads)");
     let mut rng = Rng::new(11);
+    let nthreads = Pool::global().threads();
+    let widths: Vec<usize> = if nthreads > 1 { vec![1, nthreads] } else { vec![1] };
 
     for (m, k, n) in [(64, 576, 64), (256, 1152, 128), (1024, 2304, 256)] {
         let a = Tensor::rand_normal(&[m, k], 1.0, &mut rng);
         let b = Tensor::rand_normal(&[k, n], 1.0, &mut rng);
-        let r = bench(&format!("gemm {m}x{k}x{n}"), 1, 10, || {
-            black_box(gemm(&a, &b));
-        });
         let flops = 2.0 * (m * k * n) as f64;
-        println!("{}   {:.2} GFLOP/s", r.row(), flops / r.min_ns as f64);
+        let mut ns_1t = 0u64;
+        for &threads in &widths {
+            let pool = Pool::new(threads);
+            let mut c = vec![0.0f32; m * n];
+            let r = bench(&format!("gemm {m}x{k}x{n} t{threads}"), 1, 10, || {
+                c.fill(0.0);
+                gemm_into_pool(a.data(), b.data(), &mut c, m, k, n, &pool);
+                black_box(&c);
+            });
+            if threads == 1 {
+                ns_1t = r.min_ns;
+            }
+            println!(
+                "{}   {:.2} GFLOP/s   speedup {:.2}x",
+                r.row(),
+                flops / r.min_ns as f64,
+                ns_1t as f64 / r.min_ns as f64
+            );
+        }
     }
 
     let x = Tensor::rand_normal(&[1, 64, 32, 32], 1.0, &mut rng);
     let w = Tensor::rand_normal(&[64, 64, 3, 3], 0.5, &mut rng);
-    let r = bench("conv2d_gemm 64x64x3x3@32", 1, 10, || {
-        black_box(conv2d_gemm(&x, &w, 1, 1));
-    });
-    println!("{}", r.row());
+    for &threads in &widths {
+        let pool = Pool::new(threads);
+        let r = bench(&format!("conv2d_gemm 64x64x3x3@32 t{threads}"), 1, 10, || {
+            black_box(conv2d_gemm_pool(&x, &w, 1, 1, &pool));
+        });
+        println!("{}", r.row());
+    }
     let xs = Tensor::rand_normal(&[1, 16, 16, 16], 1.0, &mut rng);
     let ws = Tensor::rand_normal(&[16, 16, 3, 3], 0.5, &mut rng);
     let r = bench("conv2d_naive 16x16x3x3@16", 1, 5, || {

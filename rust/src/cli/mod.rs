@@ -1,4 +1,10 @@
 //! Launcher CLI (S10): subcommand dispatch for the `plum` binary.
+//!
+//! Commands that execute through PJRT (train, serve, quantize, the
+//! accuracy tables) require the `pjrt` feature; on a default build they
+//! fail with a pointer to the build matrix in rust/README.md. Engine and
+//! simulator harnesses (fig7/fig9/fig10, energy, cse, scaling, pareto,
+//! registry, report) are always available.
 
 pub mod args;
 
@@ -6,9 +12,14 @@ use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::ModelRegistry;
-use crate::experiments::{self, figures, serving, tables};
+use crate::experiments::{self, figures, tables};
+#[cfg(feature = "pjrt")]
+use crate::experiments::serving;
+#[cfg(feature = "pjrt")]
 use crate::quant::PackedSignedBinary;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
+#[cfg(feature = "pjrt")]
 use crate::training::{save_checkpoint, Schedule, Trainer};
 
 use args::Args;
@@ -20,18 +31,22 @@ USAGE:
   plum <command> [options]
 
 COMMANDS:
-  train --model NAME [--steps N] [--lr F]   train one artifact, save ckpt
+  train --model NAME [--steps N] [--lr F]   train one artifact, save ckpt [pjrt]
   bench <target> [--steps N] [--fresh]      regenerate a paper table/figure:
-         table1..table12 | tables | pareto | fig7 | fig9 | fig10 | energy | cse | all
-  serve --model NAME [--requests N] [--replicas R] [--ckpt PATH]
+         table1..table12 | tables | all  [pjrt]
+         pareto | fig7 | fig9 | fig10 | energy | cse | scaling
+  serve --model NAME [--requests N] [--replicas R] [--ckpt PATH]       [pjrt]
   report weights --model NAME               figure 6/11 distributions
-  quantize --model NAME                     density/repetition/bit report
+  quantize --model NAME                     density/repetition/bit report [pjrt]
   registry                                  list artifacts + footprints
   help
+
+Commands marked [pjrt] need `cargo build --features pjrt` (see rust/README.md).
 
 GLOBAL OPTIONS:
   --artifacts DIR (default artifacts)   --out-dir DIR (default out)
   --config FILE  --steps N  --seed N  --reps N  --eval-batches N
+  --threads N (scaling: max pool width)
 ";
 
 pub fn run(argv: Vec<String>) -> Result<()> {
@@ -54,6 +69,15 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_required(what: &str) -> anyhow::Error {
+    anyhow!(
+        "`{what}` needs the PJRT runtime — rebuild with `cargo build --release \
+         --features pjrt` (requires xla_extension; see rust/README.md)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
     let model = args
         .get("model")
@@ -87,36 +111,54 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_cfg: &RunConfig, _args: &Args) -> Result<()> {
+    Err(pjrt_required("plum train"))
+}
+
 fn cmd_bench(cfg: &RunConfig, args: &Args) -> Result<()> {
     let target = args
         .positionals
         .first()
         .map(String::as_str)
         .ok_or_else(|| anyhow!("bench target required — see `plum help`"))?;
-    let fresh = args.has("fresh");
-    let needs_rt = matches!(
-        target,
-        "table1" | "table2" | "table3" | "table4" | "table5" | "table6" | "table7"
-            | "table8" | "table9" | "table10" | "table11" | "table12" | "tables" | "all"
-    );
-    let rt = if needs_rt { Some(Runtime::cpu()?) } else { None };
-    let rt = rt.as_ref();
     let subtile = args.get_usize("subtile", 0); // 0 = auto-tuned
     match target {
-        "table1" => drop(tables::table1(cfg, rt.unwrap(), fresh)?),
-        "table2" => drop(tables::table_mix(cfg, rt.unwrap(), fresh, false)?),
-        "table3" => drop(tables::table_ede(cfg, rt.unwrap(), fresh, false)?),
-        "table4" => drop(tables::table4(cfg, rt.unwrap(), fresh)?),
-        "table5" => drop(tables::table_delta(cfg, rt.unwrap(), fresh, false)?),
-        "table6" => drop(tables::table6(cfg, rt.unwrap(), fresh)?),
-        "table7" => drop(tables::table7(cfg, rt.unwrap(), fresh)?),
-        "table8" => drop(tables::table8(cfg, rt.unwrap(), fresh)?),
-        "table9" => drop(tables::table9(cfg, rt.unwrap(), fresh)?),
-        "table10" => drop(tables::table_mix(cfg, rt.unwrap(), fresh, true)?),
-        "table11" => drop(tables::table_ede(cfg, rt.unwrap(), fresh, true)?),
-        "table12" => drop(tables::table_delta(cfg, rt.unwrap(), fresh, true)?),
+        "pareto" => tables::pareto(cfg),
+        "fig7" => figures::fig7(cfg, args.get_usize("batch", 1), subtile, None).map(drop),
+        "fig9" => figures::fig9(cfg, subtile),
+        "fig10" => figures::fig10(cfg, subtile, args.get_usize("points", 20)),
+        "energy" => figures::energy(cfg, args.get_f32("sparsity", 0.65) as f64),
+        "cse" => figures::cse_ablation(cfg, args.get_usize("rounds", 3000)),
+        "scaling" => {
+            let geom = figures::resnet_block_geometry(args.get_usize("batch", 1));
+            let threads = figures::default_thread_ladder(args.get_usize("threads", 0));
+            figures::engine_scaling(cfg, geom, &threads).map(drop)
+        }
+        other => bench_trained(cfg, args, other, subtile),
+    }
+}
+
+/// Table targets (and `all`) train through PJRT.
+#[cfg(feature = "pjrt")]
+fn bench_trained(cfg: &RunConfig, args: &Args, target: &str, subtile: usize) -> Result<()> {
+    let fresh = args.has("fresh");
+    let rt = Runtime::cpu()?;
+    let rt = &rt;
+    match target {
+        "table1" => drop(tables::table1(cfg, rt, fresh)?),
+        "table2" => drop(tables::table_mix(cfg, rt, fresh, false)?),
+        "table3" => drop(tables::table_ede(cfg, rt, fresh, false)?),
+        "table4" => drop(tables::table4(cfg, rt, fresh)?),
+        "table5" => drop(tables::table_delta(cfg, rt, fresh, false)?),
+        "table6" => drop(tables::table6(cfg, rt, fresh)?),
+        "table7" => drop(tables::table7(cfg, rt, fresh)?),
+        "table8" => drop(tables::table8(cfg, rt, fresh)?),
+        "table9" => drop(tables::table9(cfg, rt, fresh)?),
+        "table10" => drop(tables::table_mix(cfg, rt, fresh, true)?),
+        "table11" => drop(tables::table_ede(cfg, rt, fresh, true)?),
+        "table12" => drop(tables::table_delta(cfg, rt, fresh, true)?),
         "tables" => {
-            let rt = rt.unwrap();
             tables::table1(cfg, rt, fresh)?;
             tables::table_mix(cfg, rt, fresh, false)?;
             tables::table_ede(cfg, rt, fresh, false)?;
@@ -128,14 +170,7 @@ fn cmd_bench(cfg: &RunConfig, args: &Args) -> Result<()> {
             tables::table9(cfg, rt, fresh)?;
             tables::pareto(cfg)?;
         }
-        "pareto" => tables::pareto(cfg)?,
-        "fig7" => drop(figures::fig7(cfg, args.get_usize("batch", 1), subtile, None)?),
-        "fig9" => figures::fig9(cfg, subtile)?,
-        "fig10" => figures::fig10(cfg, subtile, args.get_usize("points", 20))?,
-        "energy" => figures::energy(cfg, args.get_f32("sparsity", 0.65) as f64)?,
-        "cse" => figures::cse_ablation(cfg, args.get_usize("rounds", 3000))?,
         "all" => {
-            let rt = rt.unwrap();
             tables::table1(cfg, rt, fresh)?;
             tables::table_mix(cfg, rt, fresh, false)?;
             tables::table_ede(cfg, rt, fresh, false)?;
@@ -159,6 +194,18 @@ fn cmd_bench(cfg: &RunConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn bench_trained(_cfg: &RunConfig, _args: &Args, target: &str, _subtile: usize) -> Result<()> {
+    match target {
+        "table1" | "table2" | "table3" | "table4" | "table5" | "table6" | "table7"
+        | "table8" | "table9" | "table10" | "table11" | "table12" | "tables" | "all" => {
+            Err(pjrt_required(&format!("plum bench {target}")))
+        }
+        other => Err(anyhow!("unknown bench target '{other}'")),
+    }
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
     let model = args.get_or("model", "resnet20_sb").to_string();
     let requests = args.get_usize("requests", 256);
@@ -171,6 +218,11 @@ fn cmd_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_cfg: &RunConfig, _args: &Args) -> Result<()> {
+    Err(pjrt_required("plum serve"))
+}
+
 fn cmd_report(cfg: &RunConfig, args: &Args) -> Result<()> {
     match args.positionals.first().map(String::as_str) {
         Some("weights") => {
@@ -181,6 +233,7 @@ fn cmd_report(cfg: &RunConfig, args: &Args) -> Result<()> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_quantize(cfg: &RunConfig, args: &Args) -> Result<()> {
     let model = args
         .get("model")
@@ -219,6 +272,11 @@ fn cmd_quantize(cfg: &RunConfig, args: &Args) -> Result<()> {
         bits / 8 / 1024
     );
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_quantize(_cfg: &RunConfig, _args: &Args) -> Result<()> {
+    Err(pjrt_required("plum quantize"))
 }
 
 fn cmd_registry(cfg: &RunConfig) -> Result<()> {

@@ -12,11 +12,15 @@
 //! bit-accounting.
 
 mod batcher;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 mod registry;
 mod router;
 mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
 pub use registry::{ModelEntry, ModelRegistry};
 pub use router::Router;
-pub use server::{spawn_worker, InferBackend, InferRequest, MockBackend, PjrtBackend, WorkerHandle};
+pub use server::{spawn_worker, InferBackend, InferRequest, MockBackend, WorkerHandle};

@@ -1,0 +1,81 @@
+//! PJRT-backed inference backend for the coordinator (`pjrt` feature).
+
+use anyhow::Result;
+
+use crate::runtime::{literal_f32, literal_to_f32, ModelHandle, Runtime, TensorSpec};
+
+use super::server::InferBackend;
+
+/// PJRT-backed backend: infer executable + resident state literals.
+pub struct PjrtBackend {
+    model: ModelHandle,
+    state: Vec<xla::Literal>,
+    sample: usize,
+    out: usize,
+}
+
+impl PjrtBackend {
+    /// A `Send` factory for `spawn_worker`: creates the PJRT client and
+    /// compiles the artifact inside the worker thread.
+    pub fn factory(
+        dir: std::path::PathBuf,
+        name: String,
+        checkpoint: Option<std::path::PathBuf>,
+    ) -> impl FnOnce() -> Result<PjrtBackend> + Send + 'static {
+        move || {
+            let rt = Runtime::cpu()?;
+            PjrtBackend::load(&rt, &dir, &name, checkpoint.as_deref())
+        }
+    }
+
+    /// Load from artifacts; state comes from `params.bin` or, if given,
+    /// a trained checkpoint.
+    pub fn load(
+        rt: &Runtime,
+        dir: &std::path::Path,
+        name: &str,
+        checkpoint: Option<&std::path::Path>,
+    ) -> Result<PjrtBackend> {
+        let model = ModelHandle::load(rt, dir, name, false)?;
+        let host: Vec<(TensorSpec, Vec<f32>)> = match checkpoint {
+            Some(p) => crate::training::load_checkpoint(p)?.1,
+            None => model.manifest.load_initial_state()?,
+        };
+        let state = host
+            .iter()
+            .map(|(spec, data)| literal_f32(&spec.shape, data))
+            .collect::<Result<Vec<_>>>()?;
+        let cfg = &model.manifest.config;
+        let sample = cfg.in_channels * cfg.image_size * cfg.image_size;
+        let out = cfg.num_classes;
+        Ok(PjrtBackend { model, state, sample, out })
+    }
+}
+
+impl InferBackend for PjrtBackend {
+    fn batch_size(&self) -> usize {
+        self.model.manifest.config.batch_size
+    }
+
+    fn sample_elems(&self) -> usize {
+        self.sample
+    }
+
+    fn out_elems(&self) -> usize {
+        self.out
+    }
+
+    fn infer_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let cfg = &self.model.manifest.config;
+        let bs = cfg.batch_size;
+        assert_eq!(x.len(), bs * self.sample);
+        let xl = literal_f32(
+            &[bs, cfg.in_channels, cfg.image_size, cfg.image_size],
+            x,
+        )?;
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.push(&xl);
+        let outs = self.model.infer(&inputs)?;
+        literal_to_f32(&outs[0])
+    }
+}

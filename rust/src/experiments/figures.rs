@@ -9,11 +9,14 @@ use crate::quant::stats::render_histogram;
 use crate::quant::{
     self, default_beta, filter_repetition_stats, weight_histogram, QuantizedWeights, Scheme,
 };
-use crate::repetition::{arithmetic_reduction, execute_conv2d, plan_layer, plan_layer_auto, EngineConfig, LayerPlan};
+use crate::repetition::{
+    arithmetic_reduction, execute_conv2d, execute_conv2d_pool, plan_layer, plan_layer_auto,
+    EngineConfig, LayerPlan,
+};
 use crate::simulator::{energy_reduction, simulate_conv, throughput_speedup, AcceleratorConfig};
-use crate::tensor::{Conv2dGeometry, Tensor};
+use crate::tensor::{conv2d_gemm_pool, Conv2dGeometry, Tensor};
 use crate::util::bench::bench;
-use crate::util::Rng;
+use crate::util::{Pool, Rng};
 
 use super::print_table;
 
@@ -371,6 +374,144 @@ mod tests {
             assert!(!(row.iter().any(|v| *v > 0.0) && row.iter().any(|v| *v < 0.0)));
         }
     }
+}
+
+/// One measured point of the thread-scaling study (dense baseline or
+/// repetition engine at a fixed pool width).
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    /// "dense_gemm" or "engine_sb"
+    pub op: String,
+    /// workload geometry, e.g. "64x64x28x28 3x3"
+    pub shape: String,
+    pub threads: usize,
+    pub min_ns: u64,
+    /// dense-equivalent GFLOP/s (2 * dense MACs / min time) — the same
+    /// numerator for both ops, so the ratio is the honest speedup
+    pub gflops: f64,
+}
+
+/// The scaling study's default workload: a ResNet-shaped mid-network
+/// block (64x64x28x28, 3x3).
+pub fn resnet_block_geometry(batch: usize) -> Conv2dGeometry {
+    Conv2dGeometry {
+        n: batch.max(1),
+        c: 64,
+        h: 28,
+        w: 28,
+        k: 64,
+        r: 3,
+        s: 3,
+        stride: 1,
+        padding: 1,
+    }
+}
+
+/// Thread ladder {1, 2, 4, ..., max}; `cap = 0` uses the machine's
+/// available parallelism.
+pub fn default_thread_ladder(cap: usize) -> Vec<usize> {
+    let max = if cap > 0 {
+        cap
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    let mut ladder = vec![1];
+    let mut t = 2;
+    while t < max {
+        ladder.push(t);
+        t *= 2;
+    }
+    if max > 1 {
+        ladder.push(max);
+    }
+    ladder
+}
+
+/// Dense-vs-engine thread scaling on one conv block: times
+/// `conv2d_gemm` and the repetition engine at each pool width, checks
+/// that every engine output is bit-identical to the first width's, and
+/// prints speedup columns. `bench_repetition` wraps this and persists
+/// the points as BENCH_repetition.json.
+pub fn engine_scaling(
+    cfg: &RunConfig,
+    geom: Conv2dGeometry,
+    threads: &[usize],
+) -> Result<Vec<ScalingPoint>> {
+    if threads.is_empty() {
+        return Err(anyhow!("no thread counts requested"));
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let w = latent_weights(&geom, &mut rng);
+    let x = Tensor::rand_normal(&[geom.n, geom.c, geom.h, geom.w], 1.0, &mut rng);
+    let q = quant::quantize(&w, Scheme::sb_default(), None);
+    let plan = plan_layer_auto(&q, geom, true);
+    let shape = format!(
+        "{}x{}x{}x{} {}x{}",
+        geom.k, geom.c, geom.h, geom.w, geom.r, geom.s
+    );
+    let flops = 2.0 * geom.dense_macs() as f64;
+    let reps = cfg.bench_reps;
+    let mut points = Vec::new();
+    let mut printed = Vec::new();
+    let mut base_out: Option<Vec<f32>> = None;
+    let mut base_engine_ns = 0u64;
+    let mut base_dense_ns = 0u64;
+    for &t in threads {
+        let pool = Pool::new(t);
+        let rd = bench(&format!("dense t{t}"), 1, reps, || {
+            std::hint::black_box(conv2d_gemm_pool(&x, &q.values, geom.stride, geom.padding, &pool));
+        });
+        let re = bench(&format!("engine t{t}"), 1, reps, || {
+            std::hint::black_box(execute_conv2d_pool(&plan, &x, &pool));
+        });
+        // determinism guarantee: every width produces the same bits
+        let out = execute_conv2d_pool(&plan, &x, &pool);
+        if base_out.is_none() {
+            base_out = Some(out.into_data());
+            base_engine_ns = re.min_ns;
+            base_dense_ns = rd.min_ns;
+        } else if Some(out.data()) != base_out.as_deref() {
+            return Err(anyhow!(
+                "engine output at {t} threads differs from {} threads",
+                threads[0]
+            ));
+        }
+        printed.push(vec![
+            format!("{t}"),
+            format!("{:.2}", rd.min_ns as f64 / 1e6),
+            format!("{:.2}x", base_dense_ns as f64 / rd.min_ns as f64),
+            format!("{:.2}", re.min_ns as f64 / 1e6),
+            format!("{:.2}x", base_engine_ns as f64 / re.min_ns as f64),
+            format!("{:.2}x", rd.min_ns as f64 / re.min_ns as f64),
+        ]);
+        points.push(ScalingPoint {
+            op: "dense_gemm".into(),
+            shape: shape.clone(),
+            threads: t,
+            min_ns: rd.min_ns,
+            gflops: flops / rd.min_ns as f64,
+        });
+        points.push(ScalingPoint {
+            op: "engine_sb".into(),
+            shape: shape.clone(),
+            threads: t,
+            min_ns: re.min_ns,
+            gflops: flops / re.min_ns as f64,
+        });
+    }
+    print_table(
+        &format!("Thread scaling — {shape} (SB engine vs dense GEMM, min of {reps} reps)"),
+        &[
+            "Threads",
+            "dense ms",
+            "dense speedup",
+            "engine ms",
+            "engine speedup",
+            "engine vs dense",
+        ],
+        &printed,
+    );
+    Ok(points)
 }
 
 /// Design-choice ablation (DESIGN.md): pattern-memoized planner vs the

@@ -7,6 +7,7 @@
 //! accuracy/latency differ from the paper's ImageNet/Xeon numbers.
 
 pub mod figures;
+#[cfg(feature = "pjrt")]
 pub mod serving;
 pub mod tables;
 
@@ -16,8 +17,12 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::RunConfig;
 use crate::data::SyntheticDataset;
-use crate::runtime::{Manifest, Runtime};
-use crate::training::{load_checkpoint, save_checkpoint, Schedule, Trainer};
+use crate::runtime::Manifest;
+#[cfg(feature = "pjrt")]
+use crate::runtime::Runtime;
+use crate::training::load_checkpoint;
+#[cfg(feature = "pjrt")]
+use crate::training::{save_checkpoint, Schedule, Trainer};
 use crate::util::json::{self, Json};
 
 /// Outcome of training + evaluating one artifact.
@@ -101,6 +106,7 @@ pub fn dataset_for_run(cfg: &RunConfig, man: &Manifest) -> SyntheticDataset {
     ds
 }
 
+#[cfg(feature = "pjrt")]
 fn result_path(cfg: &RunConfig, name: &str) -> PathBuf {
     cfg.out_dir.join(format!("{name}.result.json"))
 }
@@ -111,6 +117,7 @@ fn ckpt_path(cfg: &RunConfig, name: &str) -> PathBuf {
 
 /// Train (or reuse a cached result), evaluate, measure trained
 /// effectual-parameter counts, persist checkpoint + result row.
+#[cfg(feature = "pjrt")]
 pub fn train_and_measure(
     cfg: &RunConfig,
     rt: &Runtime,

@@ -6,12 +6,19 @@
 //! *shapes* (FP >= T >= B ~= SB, P=0.5 best, EDE on > off, ...) are noted
 //! per table; absolutes differ on the synthetic substrate.
 
+//! The training harnesses execute through PJRT and are gated on the
+//! `pjrt` feature; the Pareto report and shape checkers only read
+//! persisted result rows and are always available.
+
 use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 
-use super::{load_index, print_table, train_and_measure, TrainedRow};
+#[cfg(feature = "pjrt")]
+use super::{load_index, train_and_measure};
+use super::{print_table, TrainedRow};
 
 fn pct(acc: f64) -> String {
     format!("{:.1}", acc * 100.0)
@@ -22,6 +29,7 @@ fn keff(row: &TrainedRow) -> String {
 }
 
 /// Table 1: FP/T/B/SB across ResNet depths (CIFAR-family).
+#[cfg(feature = "pjrt")]
 pub fn table1(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let entries = index.req_arr("table1")?;
@@ -54,6 +62,7 @@ pub fn table1(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedR
 }
 
 /// Tables 2 / 10: {0,1} vs {0,-1} filter-mix ablation.
+#[cfg(feature = "pjrt")]
 pub fn table_mix(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let mut rows = Vec::new();
@@ -91,6 +100,7 @@ pub fn table_mix(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -> 
 }
 
 /// Tables 3 / 11: EDE enabled vs disabled.
+#[cfg(feature = "pjrt")]
 pub fn table_ede(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let key = if imagenet { "table11" } else { "table3" };
@@ -114,6 +124,7 @@ pub fn table_ede(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -> 
 }
 
 /// Table 4: region size C_t.
+#[cfg(feature = "pjrt")]
 pub fn table4(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let t = index.get("table4").ok_or_else(|| anyhow!("no table4"))?;
@@ -131,6 +142,7 @@ pub fn table4(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedR
 }
 
 /// Tables 5 / 12: Delta threshold sensitivity.
+#[cfg(feature = "pjrt")]
 pub fn table_delta(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let key = if imagenet { "table12" } else { "table5" };
@@ -152,6 +164,7 @@ pub fn table_delta(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -
 }
 
 /// Table 6: SB vs FP on additional dataset families.
+#[cfg(feature = "pjrt")]
 pub fn table6(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let mut rows = Vec::new();
@@ -177,6 +190,7 @@ pub fn table6(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedR
 }
 
 /// Table 7: SB vs B with comparable effectual params (depth & width).
+#[cfg(feature = "pjrt")]
 pub fn table7(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let t = index.get("table7").ok_or_else(|| anyhow!("no table7"))?;
@@ -211,6 +225,7 @@ pub fn table7(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedR
 }
 
 /// Table 8: batch-size and non-linearity ablations.
+#[cfg(feature = "pjrt")]
 pub fn table8(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let mut rows = Vec::new();
@@ -242,6 +257,7 @@ pub fn table8(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedR
 }
 
 /// Table 9: latent-weight standardization strategies.
+#[cfg(feature = "pjrt")]
 pub fn table9(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let t = index.get("table9").ok_or_else(|| anyhow!("no table9 — rebuild artifacts"))?;

@@ -1,126 +1,182 @@
-//! Timed executor for a `LayerPlan`.
+//! Tiled, parallel executor for a `LayerPlan`.
 //!
-//! Per output pixel (one im2col patch row):
-//!   1. for every sub-tile, evaluate each *distinct* pattern's partial sum
-//!      once into an arena (this is where repetition pays: the sum is
-//!      shared by all filters using the pattern);
-//!   2. for every *unique* filter, combine its per-sub-tile partial sums
-//!      and multiply by alpha once;
-//!   3. scatter unique-filter results to the original filter slots
-//!      (inter-filter dedup).
+//! The output-pixel axis is cut into fixed tiles ([`DEFAULT_TILE`]
+//! pixels); tiles are distributed over the scoped-thread worker pool
+//! (`util::pool`). Per tile, one worker:
+//!
+//!   1. **fuses im2col**: builds just the tile's patch rows into its own
+//!      scratch buffer (`im2col_rows`) — the full `[N*OH*OW, C*R*S]`
+//!      patch matrix is never materialized, cutting peak memory and
+//!      DRAM traffic by `pixels / tile`;
+//!   2. walks the plan's CSR index arena in `PIXEL_BLOCK`-pixel blocks:
+//!      every *distinct* pattern's partial sum is evaluated once into a
+//!      thread-local psum arena (this is where repetition pays — the sum
+//!      is shared by all filters using the pattern), streaming one flat
+//!      column buffer instead of per-pattern heap vectors;
+//!   3. combines per *unique* filter through the flat `combine` table
+//!      and multiplies by alpha once;
+//!   4. scatters unique-filter results to the original filter slots
+//!      (inter-filter dedup) — each tile owns a disjoint set of output
+//!      pixels, so workers write without synchronization.
+//!
+//! Tile partitioning depends only on the tile size, never on the thread
+//! count, and each worker owns its psum/usum/patch arenas, so N-thread
+//! output is **bit-identical** to 1-thread output (asserted in tests and
+//! the scaling harness).
 //!
 //! With sparsity support ON, zero entries never enter a sum and all-zero
 //! patterns are skipped. OFF, the zero group is summed and multiplied by
 //! zero — faithfully modelling a repetition-only system (paper §5.1
 //! config 1).
 
-use crate::tensor::{im2col, Tensor};
+use crate::tensor::{im2col_rows, Tensor};
+use crate::util::{Pool, UnsafeSlice};
 
 use super::plan::LayerPlan;
 
-/// Output pixels processed together. Amortizes the plan walk (pattern
-/// index loads, slot lookups) across a block and lets the inner
+/// Output pixels processed together inside a tile. Amortizes the plan
+/// walk (span loads, combine lookups) across a block and lets the inner
 /// accumulations vectorize — the §Perf pixel-blocking optimization
 /// (EXPERIMENTS.md §Perf records the before/after).
 pub const PIXEL_BLOCK: usize = 8;
 
-/// Execute one conv layer through the repetition engine.
+/// Output pixels per parallel work item. A multiple of [`PIXEL_BLOCK`]
+/// so block boundaries (and therefore f32 accumulation order) match the
+/// pre-tiling executor; small enough that a tile's patch scratch
+/// (`tile * C*R*S` floats) stays cache-resident.
+pub const DEFAULT_TILE: usize = 32;
+
+/// Execute one conv layer through the repetition engine on the
+/// process-wide pool.
 pub fn execute_conv2d(plan: &LayerPlan, x: &Tensor) -> Tensor {
+    execute_conv2d_pool(plan, x, Pool::global())
+}
+
+/// Execute on an explicit pool (benchmarks pin 1-thread vs N-thread).
+pub fn execute_conv2d_pool(plan: &LayerPlan, x: &Tensor, pool: &Pool) -> Tensor {
+    execute_conv2d_tiled(plan, x, pool, DEFAULT_TILE)
+}
+
+/// Fully-parameterized entry point: `tile` output pixels per work item.
+pub fn execute_conv2d_tiled(
+    plan: &LayerPlan,
+    x: &Tensor,
+    pool: &Pool,
+    tile: usize,
+) -> Tensor {
+    assert!(tile > 0, "tile size must be positive");
     let g = plan.geom;
     assert_eq!(x.shape(), &[g.n, g.c, g.h, g.w], "input does not match plan geometry");
-    let patches = im2col(x, g.r, g.s, g.stride, g.padding);
     let e = g.c * g.r * g.s;
     let (oh, ow) = (g.out_h(), g.out_w());
     let pixels = g.n * oh * ow;
+    let plane = oh * ow;
     let nu = plan.num_unique_filters;
-
-    // arena: partial sums of distinct patterns x pixel block
-    let slots: Vec<usize> = plan
-        .tables
-        .iter()
-        .scan(0usize, |acc, t| {
-            let base = *acc;
-            *acc += t.patterns.len();
-            Some(base)
-        })
-        .collect();
-    let total_patterns: usize = plan.tables.iter().map(|t| t.patterns.len()).sum();
+    let np = plan.arena.num_patterns();
+    let nt = plan.num_tables;
     const PB: usize = PIXEL_BLOCK;
-    let mut psums = vec![0.0f32; total_patterns * PB];
-    let mut usums = vec![0.0f32; nu * PB];
 
     let mut out = Tensor::zeros(&[g.n, g.k, oh, ow]);
-    let od = out.data_mut();
-    let plane = oh * ow;
-    let pdata = patches.data();
+    if pixels == 0 {
+        return out;
+    }
+    let od = UnsafeSlice::new(out.data_mut());
+    let jobs = pixels.div_ceil(tile);
 
-    let mut px0 = 0usize;
-    while px0 < pixels {
-        let pb = PB.min(pixels - px0);
+    struct Scratch {
+        patch: Vec<f32>,
+        psums: Vec<f32>,
+        usums: Vec<f32>,
+    }
+    let cols = &plan.arena.cols;
+    let spans = &plan.arena.spans;
 
-        // 1. distinct-pattern partial sums, blocked over pixels
-        for (ti, t) in plan.tables.iter().enumerate() {
-            let base = slots[ti] * PB;
-            let tb = t.base;
-            for (pi, p) in t.patterns.iter().enumerate() {
-                let acc = &mut psums[base + pi * PB..base + pi * PB + PB];
-                acc.fill(0.0);
-                for &off in &p.pos {
-                    let col = tb + off as usize;
-                    for (b, a) in acc.iter_mut().enumerate().take(pb) {
-                        *a += pdata[(px0 + b) * e + col];
-                    }
-                }
-                for &off in &p.neg {
-                    let col = tb + off as usize;
-                    for (b, a) in acc.iter_mut().enumerate().take(pb) {
-                        *a -= pdata[(px0 + b) * e + col];
-                    }
-                }
-                if !plan.cfg.sparsity_support {
-                    // repetition-only mode: the zero group is summed like
-                    // any other repeated value, then multiplied by 0.
-                    let mut z = [0.0f32; PB];
-                    for &off in &p.zero {
-                        let col = tb + off as usize;
-                        for (b, zz) in z.iter_mut().enumerate().take(pb) {
-                            *zz += pdata[(px0 + b) * e + col];
+    pool.run_with(
+        jobs,
+        || Scratch {
+            patch: vec![0.0; tile * e],
+            psums: vec![0.0; np * PB],
+            usums: vec![0.0; nu * PB],
+        },
+        |scr, job| {
+            let px0 = job * tile;
+            let tp = tile.min(pixels - px0);
+            // 0. fused im2col: only this tile's patch rows
+            im2col_rows(x, g.r, g.s, g.stride, g.padding, px0, tp, &mut scr.patch);
+            let patch = &scr.patch;
+
+            let mut b0 = 0usize;
+            while b0 < tp {
+                let pb = PB.min(tp - b0);
+
+                // 1. distinct-pattern partial sums, blocked over pixels —
+                // one streaming pass over the CSR arena
+                for (gp, sp) in spans.iter().enumerate() {
+                    let acc = &mut scr.psums[gp * PB..gp * PB + PB];
+                    acc.fill(0.0);
+                    let s = sp.start as usize;
+                    let p_end = s + sp.pos as usize;
+                    let n_end = p_end + sp.neg as usize;
+                    for &col in &cols[s..p_end] {
+                        let col = col as usize;
+                        for (b, a) in acc.iter_mut().enumerate().take(pb) {
+                            *a += patch[(b0 + b) * e + col];
                         }
                     }
-                    for (a, zz) in acc.iter_mut().zip(z.iter()) {
-                        *a += zz * 0.0;
+                    for &col in &cols[p_end..n_end] {
+                        let col = col as usize;
+                        for (b, a) in acc.iter_mut().enumerate().take(pb) {
+                            *a -= patch[(b0 + b) * e + col];
+                        }
+                    }
+                    if !plan.cfg.sparsity_support {
+                        // repetition-only mode: the zero group is summed
+                        // like any other repeated value, then multiplied
+                        // by 0.
+                        let z_end = n_end + sp.zero as usize;
+                        let mut z = [0.0f32; PB];
+                        for &col in &cols[n_end..z_end] {
+                            let col = col as usize;
+                            for (b, zz) in z.iter_mut().enumerate().take(pb) {
+                                *zz += patch[(b0 + b) * e + col];
+                            }
+                        }
+                        for (a, zz) in acc.iter_mut().zip(z.iter()) {
+                            *a += zz * 0.0;
+                        }
                     }
                 }
-            }
-        }
 
-        // 2. combine per unique filter (blocked)
-        usums[..nu * PB].fill(0.0);
-        for (ti, t) in plan.tables.iter().enumerate() {
-            let base = slots[ti] * PB;
-            for (ui, &slot) in t.slot_of_filter.iter().enumerate() {
-                let src = &psums[base + slot as usize * PB..base + slot as usize * PB + PB];
-                let dst = &mut usums[ui * PB..ui * PB + PB];
-                for (d, s) in dst.iter_mut().zip(src) {
-                    *d += s;
+                // 2. combine per unique filter (blocked): each filter's
+                // pattern slots are adjacent in the flat combine table
+                for ui in 0..nu {
+                    let dst = &mut scr.usums[ui * PB..ui * PB + PB];
+                    dst.fill(0.0);
+                    for &gp in &plan.combine[ui * nt..(ui + 1) * nt] {
+                        let src = &scr.psums[gp as usize * PB..gp as usize * PB + PB];
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
                 }
-            }
-        }
 
-        // 3. scatter to original filters with per-filter alpha
-        for (fi, &uslot) in plan.unique_of_filter.iter().enumerate() {
-            let a = plan.alpha[fi];
-            let src = &usums[uslot as usize * PB..uslot as usize * PB + PB];
-            for b in 0..pb {
-                let px = px0 + b;
-                let ni = px / plane;
-                let pix = px % plane;
-                od[(ni * g.k + fi) * plane + pix] = a * src[b];
-            }
-        }
+                // 3. scatter to original filters with per-filter alpha;
+                // this tile's pixels are disjoint from every other tile's
+                for (fi, &uslot) in plan.unique_of_filter.iter().enumerate() {
+                    let a = plan.alpha[fi];
+                    let src = &scr.usums[uslot as usize * PB..uslot as usize * PB + PB];
+                    for (b, sv) in src.iter().enumerate().take(pb) {
+                        let px = px0 + b0 + b;
+                        let ni = px / plane;
+                        let pix = px % plane;
+                        unsafe { od.write((ni * g.k + fi) * plane + pix, a * sv) };
+                    }
+                }
 
-        px0 += pb;
-    }
+                b0 += pb;
+            }
+        },
+    );
     out
 }
 
@@ -171,6 +227,42 @@ mod tests {
         let plane = 9;
         for i in 0..plane {
             assert_eq!(out.data()[i], 0.0, "filter 0 must be silent");
+        }
+    }
+
+    #[test]
+    fn ragged_pixel_counts_and_tiny_tiles() {
+        // 5x5 output = 25 pixels: not a multiple of any default tile, and
+        // odd tiles force ragged PIXEL_BLOCK tails inside tiles too
+        let mut rng = Rng::new(33);
+        let g = Conv2dGeometry { n: 1, c: 4, h: 5, w: 5, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let dense = conv2d_gemm(&x, &q.values, g.stride, g.padding);
+        let pool = Pool::new(2);
+        for tile in [1, 3, 7, 25, 100] {
+            let out = execute_conv2d_tiled(&plan, &x, &pool, tile);
+            assert!(dense.max_abs_diff(&out) < 1e-3, "tile {tile}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let mut rng = Rng::new(34);
+        let g = Conv2dGeometry { n: 2, c: 8, h: 9, w: 9, k: 12, r: 3, s: 3, stride: 2, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let base = execute_conv2d_pool(&plan, &x, &Pool::new(1));
+        for threads in [2, 3, 8] {
+            let out = execute_conv2d_pool(&plan, &x, &Pool::new(threads));
+            assert!(
+                out.data() == base.data(),
+                "{threads}-thread output differs from 1-thread"
+            );
         }
     }
 }

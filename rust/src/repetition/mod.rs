@@ -24,14 +24,22 @@
 //! The engine both *executes* (timed, correctness-checked against the
 //! dense GEMM path) and *accounts* (adds/muls), powering Figures 7/9/10
 //! and the §5.1 arithmetic-operation claims.
+//!
+//! Execution backend: plans store their indices in a contiguous
+//! CSR-style arena (`plan::PatternArena`) and the executor (`exec`) runs
+//! tile-fused and parallel — im2col fused per output-pixel tile, tiles
+//! spread over the `util::pool` worker pool, bit-identical for every
+//! thread count.
 
 pub mod cse;
 mod exec;
 mod plan;
 
 pub use cse::{build_cse, CseDag};
-pub use exec::execute_conv2d;
-pub use plan::{LayerPlan, OpCounts, PatternTable};
+pub use exec::{
+    execute_conv2d, execute_conv2d_pool, execute_conv2d_tiled, DEFAULT_TILE, PIXEL_BLOCK,
+};
+pub use plan::{LayerPlan, OpCounts, PatternArena, PatternSpan};
 
 use crate::quant::QuantizedWeights;
 use crate::tensor::Conv2dGeometry;

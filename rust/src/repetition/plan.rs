@@ -1,4 +1,14 @@
 //! Layer plan: pattern extraction, memoization and operation accounting.
+//!
+//! The plan's index data lives in one contiguous CSR-style arena
+//! ([`PatternArena`]): a single `cols` buffer holds every distinct
+//! pattern's absolute C*R*S column indices (+1 run, then -1 run, then
+//! zero run), and fixed-size [`PatternSpan`] records delimit each
+//! pattern. The executor's inner loop therefore streams two flat arrays
+//! instead of chasing per-pattern `Vec` allocations scattered across the
+//! heap — the cache-contiguity lesson of SparseDNN-style sparse-CPU
+//! engines. A flattened `combine` table (`[unique_filter][sub_tile] ->
+//! global pattern slot`) replaces the per-table slot lookups.
 
 use std::collections::HashMap;
 
@@ -12,56 +22,87 @@ use super::EngineConfig;
 pub const PATTERN_OVERHEAD: f64 = 2.0;
 pub const SLOT_OVERHEAD: f64 = 1.0;
 
-/// Sign class of a quantized weight relative to its filter's alpha.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum SignClass {
-    Neg,
-    Zero,
-    Pos,
+/// One distinct pattern's run inside the arena: `cols[start..]` holds
+/// `pos` columns with +1 sign, then `neg` columns with -1 sign, then
+/// `zero` zero-weight columns (materialized only when sparsity support
+/// is OFF — the engine then sums that group and multiplies by 0,
+/// faithfully "not distinguishing zero from non-zero").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PatternSpan {
+    /// start offset of this pattern's run in `PatternArena::cols`
+    pub start: u32,
+    /// number of +1 columns
+    pub pos: u32,
+    /// number of -1 columns
+    pub neg: u32,
+    /// number of zero columns
+    pub zero: u32,
 }
 
-/// One distinct weight pattern within a sub-tile: the list of
-/// (offset-in-subtile, sign) for non-zero entries plus the zero group.
-#[derive(Debug, Clone)]
-pub struct Pattern {
-    /// offsets with +1 sign (relative to subtile start)
-    pub pos: Vec<u16>,
-    /// offsets with -1 sign
-    pub neg: Vec<u16>,
-    /// offsets with zero weight (only materialized when sparsity support
-    /// is OFF — the engine then sums this group and multiplies by 0,
-    /// faithfully "not distinguishing zero from non-zero")
-    pub zero: Vec<u16>,
-}
+impl PatternSpan {
+    pub fn nnz(&self) -> u64 {
+        (self.pos + self.neg) as u64
+    }
 
-impl Pattern {
     pub fn is_all_zero(&self) -> bool {
-        self.pos.is_empty() && self.neg.is_empty()
+        self.pos == 0 && self.neg == 0
+    }
+
+    pub fn len(&self) -> usize {
+        (self.pos + self.neg + self.zero) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// Adds needed to evaluate this pattern's partial sum once.
     pub fn adds(&self, sparsity_support: bool) -> u64 {
-        let nnz = (self.pos.len() + self.neg.len()) as u64;
         if sparsity_support {
-            nnz.saturating_sub(1)
+            self.nnz().saturating_sub(1)
         } else {
             // zero group summed too (then multiplied by 0)
-            (nnz + self.zero.len() as u64).saturating_sub(1)
+            (self.nnz() + self.zero as u64).saturating_sub(1)
         }
     }
 }
 
-/// Per-sub-tile table of distinct patterns + each filter's pattern slot.
-#[derive(Debug, Clone)]
-pub struct PatternTable {
-    /// distinct patterns in this sub-tile
-    pub patterns: Vec<Pattern>,
-    /// filter (unique-filter index) -> pattern slot
-    pub slot_of_filter: Vec<u32>,
-    /// absolute element offset of this sub-tile in the C*R*S axis
-    pub base: usize,
-    /// sub-tile length (last tile may be short)
-    pub len: usize,
+/// Contiguous index arena over every distinct pattern of every sub-tile.
+#[derive(Debug, Clone, Default)]
+pub struct PatternArena {
+    /// absolute C*R*S column indices, pattern-contiguous (pos|neg|zero
+    /// runs back to back); the sub-tile base is already folded in
+    pub cols: Vec<u32>,
+    /// one span per distinct pattern, in sub-tile order
+    pub spans: Vec<PatternSpan>,
+    /// `spans` index where each sub-tile's patterns begin;
+    /// `len == num_tables + 1` (CSR row pointers)
+    pub table_base: Vec<u32>,
+}
+
+impl PatternArena {
+    pub fn num_patterns(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn num_tables(&self) -> usize {
+        self.table_base.len().saturating_sub(1)
+    }
+
+    /// Distinct patterns in sub-tile `ti`.
+    pub fn patterns_in_table(&self, ti: usize) -> usize {
+        (self.table_base[ti + 1] - self.table_base[ti]) as usize
+    }
+
+    /// The (pos, neg, zero) column slices of pattern `gp`.
+    pub fn pattern_cols(&self, gp: usize) -> (&[u32], &[u32], &[u32]) {
+        let sp = self.spans[gp];
+        let s = sp.start as usize;
+        let p = s + sp.pos as usize;
+        let n = p + sp.neg as usize;
+        let z = n + sp.zero as usize;
+        (&self.cols[s..p], &self.cols[p..n], &self.cols[n..z])
+    }
 }
 
 /// Operation counts for one inference pass (all output pixels).
@@ -82,8 +123,16 @@ impl OpCounts {
 pub struct LayerPlan {
     pub geom: Conv2dGeometry,
     pub cfg: EngineConfig,
-    /// per sub-tile pattern tables (indexed over unique filters)
-    pub tables: Vec<PatternTable>,
+    /// CSR pattern arena (one flat buffer for the whole layer)
+    pub arena: PatternArena,
+    /// combine table: `combine[ui * num_tables + ti]` is the global
+    /// pattern slot feeding unique filter `ui` from sub-tile `ti` —
+    /// per-filter accumulation walks it contiguously
+    pub combine: Vec<u32>,
+    /// number of sub-tiles along the C*R*S axis
+    pub num_tables: usize,
+    /// sub-tile lengths (the last may be short)
+    pub table_len: Vec<usize>,
     /// per-filter scale (original filter index -> alpha)
     pub alpha: Vec<f32>,
     /// original filter -> unique filter slot (inter-filter dedup)
@@ -127,38 +176,72 @@ impl LayerPlan {
         }
         let nu = unique_sigs.len();
 
-        // ---- per-sub-tile pattern memoization ----------------------------
-        let mut tables = Vec::new();
+        // ---- per-sub-tile pattern memoization, emitted straight into the
+        // CSR arena ------------------------------------------------------
+        let mut arena = PatternArena { cols: Vec::new(), spans: Vec::new(), table_base: vec![0] };
+        let mut table_len = Vec::new();
+        // slot_by_table[ti][ui] = global pattern slot, flattened below
+        let mut slot_by_table: Vec<Vec<u32>> = Vec::new();
         let mut base = 0usize;
         while base < e {
             let len = cfg.subtile.min(e - base);
-            let mut pat_map: HashMap<Vec<i8>, u32> = HashMap::new();
-            let mut patterns: Vec<Pattern> = Vec::new();
-            let mut slot_of_filter = Vec::with_capacity(nu);
+            let mut pat_map: HashMap<&[i8], u32> = HashMap::new();
+            let mut slots = Vec::with_capacity(nu);
             for sig in &unique_sigs {
                 let window = &sig[base..base + len];
-                let slot = *pat_map.entry(window.to_vec()).or_insert_with(|| {
-                    let mut p = Pattern { pos: vec![], neg: vec![], zero: vec![] };
-                    for (off, s) in window.iter().enumerate() {
-                        match s {
-                            1 => p.pos.push(off as u16),
-                            -1 => p.neg.push(off as u16),
-                            _ => p.zero.push(off as u16),
+                let slot = *pat_map.entry(window).or_insert_with(|| {
+                    // new distinct pattern: append its pos/neg/zero column
+                    // runs (absolute indices) and a span
+                    let start = arena.cols.len() as u32;
+                    let mut pos = 0u32;
+                    let mut neg = 0u32;
+                    let mut zero = 0u32;
+                    for (off, sgn) in window.iter().enumerate() {
+                        if *sgn == 1 {
+                            arena.cols.push((base + off) as u32);
+                            pos += 1;
                         }
                     }
-                    patterns.push(p);
-                    (patterns.len() - 1) as u32
+                    for (off, sgn) in window.iter().enumerate() {
+                        if *sgn == -1 {
+                            arena.cols.push((base + off) as u32);
+                            neg += 1;
+                        }
+                    }
+                    for (off, sgn) in window.iter().enumerate() {
+                        if *sgn == 0 {
+                            arena.cols.push((base + off) as u32);
+                            zero += 1;
+                        }
+                    }
+                    arena.spans.push(PatternSpan { start, pos, neg, zero });
+                    (arena.spans.len() - 1) as u32
                 });
-                slot_of_filter.push(slot);
+                slots.push(slot);
             }
-            tables.push(PatternTable { patterns, slot_of_filter, base, len });
+            arena.table_base.push(arena.spans.len() as u32);
+            slot_by_table.push(slots);
+            table_len.push(len);
             base += len;
+        }
+        let num_tables = table_len.len();
+
+        // flatten to the executor's combine layout: per unique filter, its
+        // pattern slots across sub-tiles are adjacent
+        let mut combine = vec![0u32; nu * num_tables];
+        for (ti, slots) in slot_by_table.iter().enumerate() {
+            for (ui, &slot) in slots.iter().enumerate() {
+                combine[ui * num_tables + ti] = slot;
+            }
         }
 
         LayerPlan {
             geom,
             cfg,
-            tables,
+            arena,
+            combine,
+            num_tables,
+            table_len,
             alpha: per_filter_alpha(q, k, e),
             unique_of_filter,
             num_unique_filters: nu,
@@ -177,19 +260,13 @@ impl LayerPlan {
     ///     sums + 1 mul by alpha.
     pub fn op_counts(&self) -> OpCounts {
         let pixels = (self.geom.n * self.geom.out_h() * self.geom.out_w()) as u64;
-        let mut adds_per_pixel: u64 = 0;
-        for t in &self.tables {
-            for p in &t.patterns {
-                let nnz = (p.pos.len() + p.neg.len()) as u64;
-                if self.cfg.sparsity_support {
-                    adds_per_pixel += nnz.saturating_sub(1);
-                } else {
-                    let total = nnz + p.zero.len() as u64;
-                    adds_per_pixel += total.saturating_sub(1);
-                }
-            }
-        }
-        let nt = self.tables.len() as u64;
+        let adds_per_pixel: u64 = self
+            .arena
+            .spans
+            .iter()
+            .map(|sp| sp.adds(self.cfg.sparsity_support))
+            .sum();
+        let nt = self.num_tables as u64;
         let per_filter_adds = nt.saturating_sub(1);
         let nu = self.num_unique_filters as u64;
         OpCounts {
@@ -204,30 +281,28 @@ impl LayerPlan {
     /// measured layer timings (§Perf).
     pub fn estimated_cost(&self) -> f64 {
         let pixels = (self.geom.n * self.geom.out_h() * self.geom.out_w()) as f64;
-        let total_patterns: usize = self.tables.iter().map(|t| t.patterns.len()).sum();
-        let slots = (self.num_unique_filters * self.tables.len()) as f64;
+        let total_patterns = self.arena.num_patterns() as f64;
+        let slots = self.combine.len() as f64;
         let ops = self.op_counts();
         (ops.adds + ops.muls) as f64
-            + pixels * (PATTERN_OVERHEAD * total_patterns as f64 + SLOT_OVERHEAD * slots)
+            + pixels * (PATTERN_OVERHEAD * total_patterns + SLOT_OVERHEAD * slots)
     }
 
     /// Mean distinct patterns per sub-tile — the repetition diagnostic
     /// (binary << ternary; Figure 3's exponential argument).
     pub fn mean_distinct_patterns(&self) -> f64 {
-        let s: usize = self.tables.iter().map(|t| t.patterns.len()).sum();
-        s as f64 / self.tables.len().max(1) as f64
+        self.arena.num_patterns() as f64 / self.num_tables.max(1) as f64
     }
 
     /// Weight density seen by the plan (nnz / total over unique filters).
     pub fn density(&self) -> f64 {
-        let mut nnz = 0usize;
-        let mut tot = 0usize;
-        for t in &self.tables {
-            for (ui, &slot) in t.slot_of_filter.iter().enumerate() {
-                let _ = ui;
-                let p = &t.patterns[slot as usize];
-                nnz += p.pos.len() + p.neg.len();
-                tot += t.len;
+        let mut nnz = 0u64;
+        let mut tot = 0u64;
+        for ti in 0..self.num_tables {
+            for ui in 0..self.num_unique_filters {
+                let sp = self.arena.spans[self.combine[ui * self.num_tables + ti] as usize];
+                nnz += sp.nnz();
+                tot += self.table_len[ti] as u64;
             }
         }
         nnz as f64 / tot.max(1) as f64
@@ -325,6 +400,84 @@ mod tests {
         let plan = LayerPlan::build(&q, geom(4, 4), EngineConfig::default());
         for (fi, a) in plan.alpha.iter().enumerate() {
             assert!((a - q.alpha[fi]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn arena_is_contiguous_and_consistent() {
+        let mut rng = Rng::new(25);
+        let w = Tensor::rand_normal(&[12, 6, 3, 3], 0.5, &mut rng);
+        let g = geom(6, 12);
+        for scheme in [Scheme::Binary, Scheme::ternary_default(), Scheme::sb_default()] {
+            let q = quantize(&w, scheme, None);
+            let plan = LayerPlan::build(&q, g, EngineConfig { subtile: 8, sparsity_support: true });
+            let e = g.c * g.r * g.s;
+            let a = &plan.arena;
+            // spans tile `cols` exactly, back to back
+            let mut cursor = 0u32;
+            for sp in &a.spans {
+                assert_eq!(sp.start, cursor, "spans must be contiguous");
+                cursor += sp.pos + sp.neg + sp.zero;
+            }
+            assert_eq!(cursor as usize, a.cols.len());
+            // every pattern covers its whole sub-tile once
+            assert_eq!(a.table_base.len(), plan.num_tables + 1);
+            for ti in 0..plan.num_tables {
+                for gp in a.table_base[ti] as usize..a.table_base[ti + 1] as usize {
+                    assert_eq!(a.spans[gp].len(), plan.table_len[ti]);
+                }
+            }
+            // columns are absolute and in range; combine indexes valid slots
+            assert!(a.cols.iter().all(|c| (*c as usize) < e));
+            assert_eq!(plan.combine.len(), plan.num_unique_filters * plan.num_tables);
+            assert!(plan.combine.iter().all(|s| (*s as usize) < a.num_patterns()));
+            // combine's per-table slots stay inside that table's span range
+            for ui in 0..plan.num_unique_filters {
+                for ti in 0..plan.num_tables {
+                    let gp = plan.combine[ui * plan.num_tables + ti];
+                    assert!(gp >= a.table_base[ti] && gp < a.table_base[ti + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_columns_match_signatures() {
+        // reconstruct each unique filter's sign vector from the arena and
+        // compare against the quantized weights directly
+        let mut rng = Rng::new(26);
+        let w = Tensor::rand_normal(&[6, 4, 3, 3], 0.5, &mut rng);
+        let g = geom(4, 6);
+        let q = quantize(&w, Scheme::ternary_default(), None);
+        let plan = LayerPlan::build(&q, g, EngineConfig { subtile: 7, sparsity_support: false });
+        let e = g.c * g.r * g.s;
+        for fi in 0..g.k {
+            let ui = plan.unique_of_filter[fi] as usize;
+            let mut sig = vec![0i8; e];
+            for ti in 0..plan.num_tables {
+                let gp = plan.combine[ui * plan.num_tables + ti] as usize;
+                let (pos, neg, zero) = plan.arena.pattern_cols(gp);
+                for &c in pos {
+                    sig[c as usize] = 1;
+                }
+                for &c in neg {
+                    sig[c as usize] = -1;
+                }
+                for &c in zero {
+                    sig[c as usize] = 0;
+                }
+            }
+            for (ei, s) in sig.iter().enumerate() {
+                let v = q.values.data()[fi * e + ei];
+                let expect = if v > 0.0 {
+                    1
+                } else if v < 0.0 {
+                    -1
+                } else {
+                    0
+                };
+                assert_eq!(*s, expect, "filter {fi} elem {ei}");
+            }
         }
     }
 }

@@ -1,171 +1,20 @@
-//! PJRT runtime (S5): load AOT HLO-text artifacts, compile once per
-//! variant, execute from the rust hot path. Python is never involved.
+//! Runtime layer (S5).
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `client.compile` -> `execute`. Interchange is HLO *text* because
-//! xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id serialized protos.
+//! The artifact *manifest* contract (shapes, dtypes, conv-layer
+//! geometry, initial state) is always compiled — the repetition engine,
+//! registry and checkpoints only need that. The PJRT execution path
+//! (load AOT HLO-text artifacts, compile once per variant, execute from
+//! the rust hot path) depends on the `xla` crate / `xla_extension`
+//! shared library and lives behind the off-by-default `pjrt` feature;
+//! see rust/README.md for the build matrix.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
 pub use manifest::{ConfigEcho, ConvLayerInfo, Dtype, Manifest, TensorSpec};
-
-use std::path::Path;
-
-use anyhow::{anyhow, Context, Result};
-
-/// Wrapper over the PJRT CPU client. One per process; executables are
-/// compiled through it and cached by the caller (`ModelHandle`).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO-text artifact.
-    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
-    }
-}
-
-/// Build an f32 literal of the given shape.
-pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    assert_eq!(shape.iter().product::<usize>(), data.len());
-    if shape.is_empty() {
-        return Ok(xla::Literal::scalar(data[0]));
-    }
-    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
-    xla::Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| anyhow!("reshape literal: {e:?}"))
-}
-
-/// Build an i32 literal of the given shape.
-pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
-    assert_eq!(shape.iter().product::<usize>(), data.len());
-    if shape.is_empty() {
-        return Ok(xla::Literal::scalar(data[0]));
-    }
-    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
-    xla::Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| anyhow!("reshape literal: {e:?}"))
-}
-
-/// Build a literal matching `spec` from raw f32 storage (i32 specs are
-/// converted elementwise — used only for label tensors).
-pub fn literal_for_spec(spec: &TensorSpec, data: &[f32]) -> Result<xla::Literal> {
-    match spec.dtype {
-        Dtype::F32 => literal_f32(&spec.shape, data),
-        Dtype::I32 => {
-            let ints: Vec<i32> = data.iter().map(|v| *v as i32).collect();
-            literal_i32(&spec.shape, &ints)
-        }
-    }
-}
-
-/// A compiled model: manifest + executables.
-pub struct ModelHandle {
-    pub manifest: Manifest,
-    pub train_exe: Option<xla::PjRtLoadedExecutable>,
-    pub infer_exe: xla::PjRtLoadedExecutable,
-}
-
-impl ModelHandle {
-    /// Load a model's artifacts from `dir` and compile. `need_train`
-    /// skips the train executable for serve-only uses.
-    pub fn load(rt: &Runtime, dir: &Path, name: &str, need_train: bool) -> Result<ModelHandle> {
-        let manifest = Manifest::load(dir, name)?;
-        let infer_exe = rt
-            .compile_hlo_file(&manifest.infer_hlo)
-            .context("compiling infer artifact")?;
-        let train_exe = match (&manifest.train_hlo, need_train) {
-            (Some(p), true) => Some(rt.compile_hlo_file(p).context("compiling train artifact")?),
-            _ => None,
-        };
-        Ok(ModelHandle { manifest, train_exe, infer_exe })
-    }
-
-    /// Execute the infer artifact: state literals ++ x.
-    pub fn infer<L: std::borrow::Borrow<xla::Literal>>(
-        &self,
-        inputs: &[L],
-    ) -> Result<Vec<xla::Literal>> {
-        execute_tuple(&self.infer_exe, inputs)
-    }
-
-    /// Execute one train step; returns the flat output tuple
-    /// (loss, acc, params', bn', m', v').
-    pub fn train_step<L: std::borrow::Borrow<xla::Literal>>(
-        &self,
-        inputs: &[L],
-    ) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .train_exe
-            .as_ref()
-            .ok_or_else(|| anyhow!("model loaded without train executable"))?;
-        execute_tuple(exe, inputs)
-    }
-}
-
-/// Execute and flatten the (always-tupled) result.
-pub fn execute_tuple<L: std::borrow::Borrow<xla::Literal>>(
-    exe: &xla::PjRtLoadedExecutable,
-    inputs: &[L],
-) -> Result<Vec<xla::Literal>> {
-    let result = exe
-        .execute::<L>(inputs)
-        .map_err(|e| anyhow!("execute: {e:?}"))?;
-    let lit = result[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-    lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
-}
-
-/// Read back a literal as f32 (converting i32 if needed).
-pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    match lit.ty() {
-        Ok(xla::ElementType::F32) => lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}")),
-        Ok(xla::ElementType::S32) => Ok(lit
-            .to_vec::<i32>()
-            .map_err(|e| anyhow!("{e:?}"))?
-            .into_iter()
-            .map(|v| v as f32)
-            .collect()),
-        other => Err(anyhow!("unsupported literal type {other:?}")),
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn literal_roundtrip_shapes() {
-        let l = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
-        assert_eq!(l.element_count(), 6);
-        let back = l.to_vec::<f32>().unwrap();
-        assert_eq!(back, vec![1., 2., 3., 4., 5., 6.]);
-    }
-
-    #[test]
-    fn scalar_literal() {
-        let l = literal_f32(&[], &[7.5]).unwrap();
-        assert_eq!(l.element_count(), 1);
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{
+    execute_tuple, literal_f32, literal_for_spec, literal_i32, literal_to_f32, ModelHandle,
+    Runtime,
+};

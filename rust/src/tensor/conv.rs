@@ -4,7 +4,9 @@
 //! im2col patch matrix [N*OH*OW, C*R*S] with the (c, r*s) minor order of
 //! `ref.im2col_ref`), so artifacts and golden files cross-check 1:1.
 
-use super::{gemm_into, Tensor};
+use crate::util::Pool;
+
+use super::{gemm_into_pool, Tensor};
 
 /// Geometry of one conv layer — shared by the repetition engine, the
 /// simulator and the model descriptors.
@@ -80,41 +82,83 @@ pub fn conv2d_naive(x: &Tensor, w: &Tensor, stride: usize, padding: usize) -> Te
 }
 
 /// NCHW -> [N*OH*OW, C*R*S] patch matrix, matching `ref.im2col_ref`.
+///
+/// Only the dense GEMM path materializes the full matrix; the tiled
+/// repetition executor builds just the rows of its current pixel tile
+/// via [`im2col_rows`].
 pub fn im2col(x: &Tensor, r: usize, s: usize, stride: usize, padding: usize) -> Tensor {
     let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let oh = (h + 2 * padding - r) / stride + 1;
     let ow = (w + 2 * padding - s) / stride + 1;
     let cols = c * r * s;
     let mut out = Tensor::zeros(&[n * oh * ow, cols]);
-    let od = out.data_mut();
-    for ni in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((ni * oh + oy) * ow + ox) * cols;
-                for ci in 0..c {
-                    for ry in 0..r {
-                        let iy = oy * stride + ry;
-                        let in_y = iy >= padding && iy - padding < h;
-                        for sx in 0..s {
-                            let ix = ox * stride + sx;
-                            let v = if in_y && ix >= padding && ix - padding < w {
-                                x.at4(ni, ci, iy - padding, ix - padding)
-                            } else {
-                                0.0
-                            };
-                            od[row + ci * r * s + ry * s + sx] = v;
-                        }
-                    }
+    im2col_rows(x, r, s, stride, padding, 0, n * oh * ow, out.data_mut());
+    out
+}
+
+/// Fill `dst[0 .. rows * C*R*S]` with the im2col patch rows of output
+/// pixels `[px0, px0 + rows)` (global pixel index `px = ((n*OH)+oy)*OW+ox`).
+/// Row layout is identical to [`im2col`]; every element of the range is
+/// written, so `dst` may hold stale data from a previous tile.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_rows(
+    x: &Tensor,
+    r: usize,
+    s: usize,
+    stride: usize,
+    padding: usize,
+    px0: usize,
+    rows: usize,
+    dst: &mut [f32],
+) {
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let oh = (h + 2 * padding - r) / stride + 1;
+    let ow = (w + 2 * padding - s) / stride + 1;
+    let plane = oh * ow;
+    let cols = c * r * s;
+    debug_assert!(px0 + rows <= n * plane, "pixel range out of bounds");
+    assert!(dst.len() >= rows * cols, "im2col_rows scratch too small");
+    for row in 0..rows {
+        let px = px0 + row;
+        let ni = px / plane;
+        let rem = px % plane;
+        let oy = rem / ow;
+        let ox = rem % ow;
+        let base = row * cols;
+        for ci in 0..c {
+            for ry in 0..r {
+                let iy = oy * stride + ry;
+                let in_y = iy >= padding && iy - padding < h;
+                for sx in 0..s {
+                    let ix = ox * stride + sx;
+                    let v = if in_y && ix >= padding && ix - padding < w {
+                        x.at4(ni, ci, iy - padding, ix - padding)
+                    } else {
+                        0.0
+                    };
+                    dst[base + ci * r * s + ry * s + sx] = v;
                 }
             }
         }
     }
-    out
 }
 
 /// im2col + GEMM convolution. Weight is flattened filter-major to
 /// [C*R*S, K] so output comes out [N*OH*OW, K], then re-laid to NCHW.
+/// Runs the GEMM on the process-wide pool.
 pub fn conv2d_gemm(x: &Tensor, w: &Tensor, stride: usize, padding: usize) -> Tensor {
+    conv2d_gemm_pool(x, w, stride, padding, Pool::global())
+}
+
+/// [`conv2d_gemm`] with an explicit pool — used by the thread-scaling
+/// benchmarks so the dense baseline is timed at a controlled width.
+pub fn conv2d_gemm_pool(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    padding: usize,
+    pool: &Pool,
+) -> Tensor {
     let (n, c, h, wd) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
     let (k, c2, r, s) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
     assert_eq!(c, c2);
@@ -131,7 +175,7 @@ pub fn conv2d_gemm(x: &Tensor, w: &Tensor, stride: usize, padding: usize) -> Ten
     }
     let m = n * oh * ow;
     let mut mm = vec![0.0f32; m * k];
-    gemm_into(patches.data(), &wt, &mut mm, m, crs, k);
+    gemm_into_pool(patches.data(), &wt, &mut mm, m, crs, k, pool);
     // [N*OH*OW, K] -> NCHW
     let mut out = Tensor::zeros(&[n, k, oh, ow]);
     for ni in 0..n {
@@ -191,6 +235,32 @@ mod tests {
         // top-left output pixel: the 3x3 patch has 4 in-bounds ones
         let row0: f32 = p.data()[0..9].iter().sum();
         assert_eq!(row0, 4.0);
+    }
+
+    #[test]
+    fn im2col_rows_matches_full_matrix() {
+        let mut rng = Rng::new(8);
+        let x = Tensor::rand_normal(&[2, 3, 7, 6], 1.0, &mut rng);
+        for (r, s, stride, padding) in [(3, 3, 1, 1), (3, 3, 2, 1), (1, 1, 1, 0)] {
+            let full = im2col(&x, r, s, stride, padding);
+            let pixels = full.dim(0);
+            let cols = full.dim(1);
+            // odd tile width exercises ragged final tiles
+            let tile = 5;
+            let mut scratch = vec![f32::NAN; tile * cols];
+            let mut px0 = 0;
+            while px0 < pixels {
+                let rows = tile.min(pixels - px0);
+                im2col_rows(&x, r, s, stride, padding, px0, rows, &mut scratch);
+                assert_eq!(
+                    &scratch[..rows * cols],
+                    &full.data()[px0 * cols..(px0 + rows) * cols],
+                    "rows [{px0}, {}) r{r} s{s} stride{stride} pad{padding}",
+                    px0 + rows
+                );
+                px0 += rows;
+            }
+        }
     }
 
     #[test]

@@ -2,11 +2,18 @@
 //!
 //! `gemm` is a cache-blocked, unrolled matrix multiply — not a BLAS rival,
 //! but a fair dense baseline on this CPU (the paper's SumMerge also
-//! compares against straightforward dense loops, not MKL).
+//! compares against straightforward dense loops, not MKL). The row
+//! dimension is parallelized over `MC`-row blocks through the shared
+//! worker pool so the dense baseline scales with threads exactly like
+//! the repetition engine — speedup ratios between the two stay honest.
+//! Block boundaries and per-row accumulation order are identical for
+//! every thread count, so results are bit-identical to the serial path.
+
+use crate::util::{Pool, UnsafeSlice};
 
 use super::Tensor;
 
-const MC: usize = 64; // rows of A per L2 block
+const MC: usize = 64; // rows of A per L2 block (also the parallel grain)
 const KC: usize = 256; // depth per block
 const NR: usize = 8; // columns unrolled in the micro-kernel
 
@@ -21,12 +28,49 @@ pub fn gemm(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// Raw-slice GEMM used by both the Tensor API and the inference engines.
+/// Runs on the process-wide pool; see [`gemm_into_pool`] for an explicit
+/// thread count.
 pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_into_pool(a, b, c, m, k, n, Pool::global());
+}
+
+/// GEMM parallelized over `MC`-row blocks of A/C through `pool`. Each
+/// block's C rows are a disjoint contiguous slice, so workers write
+/// without synchronization.
+pub fn gemm_into_pool(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pool: &Pool,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    // cache blocking over (i, p); the inner kernel walks B rows
-    // sequentially which keeps it streaming from L1/L2.
+    if m == 0 || n == 0 {
+        return;
+    }
+    let blocks = m.div_ceil(MC);
+    if pool.threads() <= 1 || blocks <= 1 {
+        gemm_block(a, b, c, m, k, n);
+        return;
+    }
+    let out = UnsafeSlice::new(c);
+    pool.run(blocks, |bi| {
+        let i0 = bi * MC;
+        let rows = MC.min(m - i0);
+        // disjoint contiguous row range of C per block
+        let cb = unsafe { out.slice_mut(i0 * n, rows * n) };
+        gemm_block(&a[i0 * k..(i0 + rows) * k], b, cb, rows, k, n);
+    });
+}
+
+/// Serial cache-blocked kernel on one row block: blocking over (i, p);
+/// the inner kernel walks B rows sequentially which keeps it streaming
+/// from L1/L2.
+fn gemm_block(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     let mut ib = 0;
     while ib < m {
         let i_end = (ib + MC).min(m);
@@ -115,6 +159,22 @@ mod tests {
         let mut rng = Rng::new(3);
         let a = Tensor::rand_normal(&[n, n], 1.0, &mut rng);
         assert!(gemm(&a, &eye).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn parallel_gemm_bit_identical_to_serial() {
+        // multiple MC blocks so the parallel path actually engages
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (3 * MC + 11, 70, 23);
+        let a = Tensor::rand_normal(&[m, k], 0.7, &mut rng);
+        let b = Tensor::rand_normal(&[k, n], 0.7, &mut rng);
+        let mut serial = vec![0.0f32; m * n];
+        gemm_into_pool(a.data(), b.data(), &mut serial, m, k, n, &Pool::new(1));
+        for threads in [2, 3, 8] {
+            let mut par = vec![0.0f32; m * n];
+            gemm_into_pool(a.data(), b.data(), &mut par, m, k, n, &Pool::new(threads));
+            assert!(serial == par, "{threads}-thread gemm differs from serial");
+        }
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! The PJRT training driver (`pjrt` feature): owns a compiled model and
+//! its resident device state.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::SyntheticDataset;
+use crate::quant::{self, QuantizedWeights};
+use crate::runtime::{
+    literal_f32, literal_i32, literal_to_f32, ConvLayerInfo, ModelHandle, Runtime, TensorSpec,
+};
+use crate::tensor::Tensor;
+
+use super::{scheme_from_config, CurvePoint, Schedule, TrainLog};
+
+/// Driver owning a compiled model + resident state.
+pub struct Trainer {
+    pub model: ModelHandle,
+    params: Vec<xla::Literal>,
+    bn: Vec<xla::Literal>,
+    consts: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    param_specs: Vec<TensorSpec>,
+    bn_specs: Vec<TensorSpec>,
+    const_specs: Vec<TensorSpec>,
+    pub step: u64,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, dir: &Path, name: &str) -> Result<Trainer> {
+        let model = ModelHandle::load(rt, dir, name, true)?;
+        let init = model.manifest.load_initial_state()?;
+        let mut params = Vec::new();
+        let mut bn = Vec::new();
+        let mut consts = Vec::new();
+        let mut param_specs = Vec::new();
+        let mut bn_specs = Vec::new();
+        let mut const_specs = Vec::new();
+        for (spec, data) in init {
+            let lit = literal_f32(&spec.shape, &data)?;
+            match spec.group.as_str() {
+                "params" => {
+                    params.push(lit);
+                    param_specs.push(spec);
+                }
+                "bn" => {
+                    bn.push(lit);
+                    bn_specs.push(spec);
+                }
+                "consts" => {
+                    consts.push(lit);
+                    const_specs.push(spec);
+                }
+                g => return Err(anyhow!("unexpected state group {g}")),
+            }
+        }
+        let m = param_specs
+            .iter()
+            .map(|s| literal_f32(&s.shape, &vec![0.0; s.elements()]))
+            .collect::<Result<Vec<_>>>()?;
+        let v = param_specs
+            .iter()
+            .map(|s| literal_f32(&s.shape, &vec![0.0; s.elements()]))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trainer {
+            model,
+            params,
+            bn,
+            consts,
+            m,
+            v,
+            param_specs,
+            bn_specs,
+            const_specs,
+            step: 0,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.model.manifest.config.batch_size
+    }
+
+    pub fn image_size(&self) -> usize {
+        self.model.manifest.config.image_size
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.model.manifest.config.num_classes
+    }
+
+    /// One optimizer step. `progress` in [0,1] drives the EDE schedule.
+    pub fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        progress: f32,
+    ) -> Result<(f32, f32)> {
+        let cfg = &self.model.manifest.config;
+        let bs = cfg.batch_size;
+        let px = cfg.image_size;
+        assert_eq!(x.len(), bs * cfg.in_channels * px * px, "bad batch x");
+        assert_eq!(y.len(), bs, "bad batch y");
+        self.step += 1;
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(
+            self.params.len() * 3 + self.bn.len() + self.consts.len() + 5,
+        );
+        inputs.extend(self.params.iter());
+        inputs.extend(self.bn.iter());
+        inputs.extend(self.consts.iter());
+        inputs.extend(self.m.iter());
+        inputs.extend(self.v.iter());
+        let xl = literal_f32(&[bs, cfg.in_channels, px, px], x)?;
+        let yl = literal_i32(&[bs], y)?;
+        let lrl = literal_f32(&[], &[lr])?;
+        let stepl = literal_f32(&[], &[self.step as f32])?;
+        let progl = literal_f32(&[], &[progress])?;
+        inputs.push(&xl);
+        inputs.push(&yl);
+        inputs.push(&lrl);
+        inputs.push(&stepl);
+        inputs.push(&progl);
+
+        let mut out = self.model.train_step(&inputs)?;
+        let np = self.params.len();
+        let nb = self.bn.len();
+        let expect = 2 + np + nb + np + np;
+        if out.len() != expect {
+            return Err(anyhow!("train step returned {} outputs, expected {expect}", out.len()));
+        }
+        // consume back-to-front to move literals out without reindexing
+        let v_new: Vec<_> = out.split_off(2 + np + nb + np);
+        let m_new: Vec<_> = out.split_off(2 + np + nb);
+        let bn_new: Vec<_> = out.split_off(2 + np);
+        let p_new: Vec<_> = out.split_off(2);
+        let acc = literal_to_f32(&out[1])?[0];
+        let loss = literal_to_f32(&out[0])?[0];
+        self.params = p_new;
+        self.bn = bn_new;
+        self.m = m_new;
+        self.v = v_new;
+        Ok((loss, acc))
+    }
+
+    /// Full training loop over a dataset.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &mut self,
+        ds: &SyntheticDataset,
+        steps: u64,
+        schedule: &Schedule,
+        log_every: u64,
+        eval_batches: usize,
+        quiet: bool,
+    ) -> Result<TrainLog> {
+        let t0 = std::time::Instant::now();
+        let bs = self.batch_size();
+        let mut curve = Vec::new();
+        let mut last_loss = f32::NAN;
+        for i in 0..steps {
+            let progress = i as f32 / steps.max(1) as f32;
+            let lr = schedule.lr(progress);
+            let (xs, ys) = ds.batch((i as usize) * bs, bs);
+            let (loss, acc) = self.train_step(&xs, &ys, lr, progress)?;
+            last_loss = loss;
+            if i % log_every == 0 || i + 1 == steps {
+                curve.push(CurvePoint { step: i, loss, acc });
+                if !quiet {
+                    println!(
+                        "step {i:>5}  loss {loss:<8.4} acc {acc:<6.3} lr {lr:.2e}"
+                    );
+                }
+            }
+        }
+        let eval_acc = self.evaluate(ds, eval_batches)?;
+        Ok(TrainLog {
+            curve,
+            final_train_loss: last_loss,
+            eval_acc,
+            steps,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Held-out accuracy through the infer executable (eval-mode BN,
+    /// Pallas hot path for sb models).
+    pub fn evaluate(&self, ds: &SyntheticDataset, batches: usize) -> Result<f32> {
+        let cfg = &self.model.manifest.config;
+        let bs = cfg.batch_size;
+        let eval_offset = 1_000_000; // disjoint from any training index
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in 0..batches {
+            let (xs, ys) = ds.eval_batch(eval_offset, b * bs, bs);
+            let logits = self.infer_logits(&xs)?;
+            let ncls = cfg.num_classes;
+            for (bi, y) in ys.iter().enumerate() {
+                let row = &logits[bi * ncls..(bi + 1) * ncls];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == *y as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total.max(1) as f32)
+    }
+
+    /// Run the infer executable on one batch; returns flat logits.
+    pub fn infer_logits(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let cfg = &self.model.manifest.config;
+        let bs = cfg.batch_size;
+        let px = cfg.image_size;
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.params.len() + self.bn.len() + self.consts.len() + 1);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.bn.iter());
+        inputs.extend(self.consts.iter());
+        let xl = literal_f32(&[bs, cfg.in_channels, px, px], x)?;
+        inputs.push(&xl);
+        let out = self.model.infer(&inputs)?;
+        literal_to_f32(&out[0])
+    }
+
+    /// Host copy of the full state (params ++ bn ++ consts) for
+    /// checkpointing; order matches the manifest.
+    pub fn state_to_host(&self) -> Result<Vec<(TensorSpec, Vec<f32>)>> {
+        let mut out = Vec::new();
+        for (spec, lit) in self
+            .param_specs
+            .iter()
+            .zip(&self.params)
+            .chain(self.bn_specs.iter().zip(&self.bn))
+            .chain(self.const_specs.iter().zip(&self.consts))
+        {
+            out.push((spec.clone(), literal_to_f32(lit)?));
+        }
+        Ok(out)
+    }
+
+    /// Restore state from host values (inverse of `state_to_host`).
+    pub fn state_from_host(&mut self, state: &[(TensorSpec, Vec<f32>)]) -> Result<()> {
+        let np = self.param_specs.len();
+        let nb = self.bn_specs.len();
+        let nc = self.const_specs.len();
+        if state.len() != np + nb + nc {
+            return Err(anyhow!("state has {} tensors, expected {}", state.len(), np + nb + nc));
+        }
+        for (i, (spec, data)) in state.iter().enumerate() {
+            let lit = literal_f32(&spec.shape, data)?;
+            if i < np {
+                self.params[i] = lit;
+            } else if i < np + nb {
+                self.bn[i - np] = lit;
+            } else {
+                self.consts[i - np - nb] = lit;
+            }
+        }
+        Ok(())
+    }
+
+    /// Quantize the current latent weights host-side (S2), yielding per
+    /// quantized conv layer the dense quantized weights for the
+    /// repetition engine and reports. The manifest's beta consts are used
+    /// for sb so the assignment matches training exactly.
+    pub fn export_quantized(&self) -> Result<Vec<(ConvLayerInfo, QuantizedWeights)>> {
+        let man = &self.model.manifest;
+        let cfg = &man.config;
+        let scheme = scheme_from_config(&cfg.scheme, cfg.delta_frac, cfg.regions_per_filter);
+        let mut out = Vec::new();
+        for layer in man.conv_layers.iter().filter(|l| l.quantized) {
+            let wname = format!("{}.w", layer.name);
+            let idx = self
+                .param_specs
+                .iter()
+                .position(|s| s.name == wname)
+                .ok_or_else(|| anyhow!("weight {wname} not in params"))?;
+            let w = Tensor::new(
+                &self.param_specs[idx].shape,
+                literal_to_f32(&self.params[idx])?,
+            );
+            let beta_name = format!("{}.beta", layer.name);
+            let beta = self
+                .const_specs
+                .iter()
+                .position(|s| s.name == beta_name)
+                .map(|ci| literal_to_f32(&self.consts[ci]))
+                .transpose()?;
+            let q = quant::quantize(&w, scheme, beta.as_deref());
+            out.push((layer.clone(), q));
+        }
+        Ok(out)
+    }
+
+    /// Aggregate density over all quantized layers (paper §5.2: counts
+    /// zero-valued quantized weights / total quantized weights).
+    pub fn quantized_density(&self) -> Result<f64> {
+        let layers = self.export_quantized()?;
+        let (mut nnz, mut tot) = (0usize, 0usize);
+        for (_, q) in &layers {
+            nnz += q.effectual();
+            tot += q.values.len();
+        }
+        Ok(nnz as f64 / tot.max(1) as f64)
+    }
+}

@@ -4,8 +4,15 @@
 //! `reps` times on an unloaded machine and the *minimum* wall time is
 //! reported, plus median/mean for context. Used by `cargo bench` targets
 //! (which are `harness = false` binaries) and the CLI bench subcommands.
+//!
+//! Bench binaries persist their key series as machine-readable JSON
+//! (`BENCH_<target>.json`, see [`write_bench_json`]) so the perf
+//! trajectory can be tracked across commits.
 
+use std::path::Path;
 use std::time::Instant;
+
+use super::json::{self, Json};
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -58,6 +65,52 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One machine-readable measurement of a bench series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// operation id, e.g. "engine_sb", "dense_gemm"
+    pub op: String,
+    /// workload shape, e.g. "64x64x28x28 3x3"
+    pub shape: String,
+    pub threads: usize,
+    pub min_ns: u64,
+    /// dense-equivalent GFLOP/s
+    pub gflops: f64,
+}
+
+impl BenchRecord {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("op", json::s(&self.op)),
+            ("shape", json::s(&self.shape)),
+            ("threads", json::num(self.threads as f64)),
+            ("min_ns", json::num(self.min_ns as f64)),
+            ("gflops", json::num(self.gflops)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<BenchRecord> {
+        Ok(BenchRecord {
+            op: j.req_str("op")?.to_string(),
+            shape: j.req_str("shape")?.to_string(),
+            threads: j.req_usize("threads")?,
+            min_ns: j.req_usize("min_ns")? as u64,
+            gflops: j.req_f64("gflops")?,
+        })
+    }
+}
+
+/// Persist a bench series as `{"records": [...]}` — the format tooling
+/// and EXPERIMENTS.md diffs consume (one file per bench target, e.g.
+/// `BENCH_repetition.json`).
+pub fn write_bench_json(path: &Path, records: &[BenchRecord]) -> std::io::Result<()> {
+    let j = json::obj(vec![(
+        "records",
+        Json::Arr(records.iter().map(BenchRecord::to_json).collect()),
+    )]);
+    std::fs::write(path, j.to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,5 +122,36 @@ mod tests {
         });
         assert!(r.min_ns <= r.median_ns);
         assert!(r.reps == 16);
+    }
+
+    #[test]
+    fn bench_record_json_roundtrip() {
+        let recs = vec![
+            BenchRecord {
+                op: "engine_sb".into(),
+                shape: "64x64x28x28 3x3".into(),
+                threads: 4,
+                min_ns: 1_250_000,
+                gflops: 3.5,
+            },
+            BenchRecord {
+                op: "dense_gemm".into(),
+                shape: "64x64x28x28 3x3".into(),
+                threads: 1,
+                min_ns: 9_000_000,
+                gflops: 0.5,
+            },
+        ];
+        let path = std::env::temp_dir().join("plum_bench_json_test.json");
+        write_bench_json(&path, &recs).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let back: Vec<BenchRecord> = j
+            .req_arr("records")
+            .unwrap()
+            .iter()
+            .map(|r| BenchRecord::from_json(r).unwrap())
+            .collect();
+        assert_eq!(back, recs);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,8 +1,11 @@
-//! Small shared substrates: JSON codec, deterministic RNG, bench harness.
+//! Small shared substrates: JSON codec, deterministic RNG, bench
+//! harness, scoped-thread worker pool.
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod rng;
 
 pub use json::Json;
+pub use pool::{Pool, UnsafeSlice};
 pub use rng::Rng;

@@ -1,0 +1,224 @@
+//! Dependency-free scoped-thread worker pool.
+//!
+//! rayon/crossbeam are not in the offline vendor set, so the parallel
+//! hot paths (tiled repetition executor, blocked GEMM) share this small
+//! pool built on `std::thread::scope`:
+//!
+//! * work is expressed as `jobs` indexed items; workers pull the next
+//!   index from a shared atomic counter (self-balancing — a slow tile
+//!   does not stall the other workers);
+//! * each worker builds its scratch state once via `init` and reuses it
+//!   across every job it claims (`run_with`), so per-tile arenas are
+//!   allocated `threads` times, not `jobs` times;
+//! * what gets computed for job `j` depends only on `j`, never on which
+//!   worker claims it, so results are bit-identical for every thread
+//!   count — the engine's N-thread output equals its 1-thread output.
+//!
+//! The default pool size is `std::thread::available_parallelism`,
+//! overridable with `PLUM_THREADS` (e.g. `PLUM_THREADS=1` to force the
+//! serial path for A/B timing).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// A fixed-width scoped-thread pool. Threads live only for the duration
+/// of each `run*` call (scoped), so the pool itself is just a width.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with an explicit width (clamped to >= 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Process-wide pool: `PLUM_THREADS` env override, else
+    /// `available_parallelism`, else 1.
+    pub fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let threads = std::env::var("PLUM_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|t| *t > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                });
+            Pool::new(threads)
+        })
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run jobs `0..jobs` across the pool. Each worker calls `init` once
+    /// for its private scratch, then claims job indices off a shared
+    /// counter until none remain. With one thread (or one job) everything
+    /// runs inline on the caller's thread — no spawn overhead.
+    pub fn run_with<S, I, F>(&self, jobs: usize, init: I, f: F)
+    where
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) + Sync,
+    {
+        if jobs == 0 {
+            return;
+        }
+        let workers = self.threads.min(jobs);
+        if workers <= 1 {
+            let mut scratch = init();
+            for j in 0..jobs {
+                f(&mut scratch, j);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let mut scratch = init();
+                    loop {
+                        let j = next.fetch_add(1, Ordering::Relaxed);
+                        if j >= jobs {
+                            break;
+                        }
+                        f(&mut scratch, j);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Scratch-free variant of [`Pool::run_with`].
+    pub fn run<F>(&self, jobs: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run_with(jobs, || (), |_, j| f(j));
+    }
+}
+
+/// Shared mutable view of an `f32` buffer for workers that write
+/// *disjoint* index sets (the conv executor's output scatter is strided
+/// across filter planes, so per-job regions are disjoint but not
+/// contiguous — they cannot be handed out as `split_at_mut` slices).
+///
+/// All methods are `unsafe`: the caller must guarantee that no index is
+/// written by two jobs and nothing reads the buffer until the pool run
+/// returns. Both executors uphold this by partitioning over output
+/// pixels (executor) or row blocks (GEMM).
+#[derive(Clone, Copy)]
+pub struct UnsafeSlice<'a> {
+    ptr: *mut f32,
+    len: usize,
+    marker: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for UnsafeSlice<'_> {}
+unsafe impl Sync for UnsafeSlice<'_> {}
+
+impl<'a> UnsafeSlice<'a> {
+    pub fn new(data: &'a mut [f32]) -> UnsafeSlice<'a> {
+        UnsafeSlice {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            marker: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// `i` must be in bounds and not concurrently written by any other
+    /// job of the same pool run.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: f32) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = v }
+    }
+
+    /// Reborrow a contiguous sub-range as `&mut [f32]`.
+    ///
+    /// # Safety
+    /// Ranges handed to concurrently-running jobs must not overlap.
+    #[inline]
+    #[allow(clippy::mut_from_ref)] // aliasing contract is the Safety section
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &'a mut [f32] {
+        debug_assert!(start + len <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_covers_every_job_exactly_once() {
+        for threads in [1, 2, 4] {
+            let pool = Pool::new(threads);
+            let hits: Vec<AtomicUsize> = (0..57).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(hits.len(), |j| {
+                hits[j].fetch_add(1, Ordering::SeqCst);
+            });
+            for (j, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "job {j} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn run_with_reuses_scratch_per_worker() {
+        let pool = Pool::new(3);
+        let inits = AtomicUsize::new(0);
+        pool.run_with(
+            64,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                0usize
+            },
+            |s, _| *s += 1,
+        );
+        let n = inits.load(Ordering::SeqCst);
+        assert!(n <= 3, "scratch built {n} times for a 3-thread pool");
+    }
+
+    #[test]
+    fn zero_jobs_is_a_noop() {
+        Pool::new(4).run(0, |_| panic!("no jobs to run"));
+    }
+
+    #[test]
+    fn unsafe_slice_disjoint_writes() {
+        let mut buf = vec![0.0f32; 100];
+        let pool = Pool::new(4);
+        let out = UnsafeSlice::new(&mut buf);
+        pool.run(100, |j| unsafe { out.write(j, j as f32) });
+        for (j, v) in buf.iter().enumerate() {
+            assert_eq!(*v, j as f32);
+        }
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let pool = Pool::global();
+        assert!(pool.threads() >= 1);
+        let sum = AtomicUsize::new(0);
+        pool.run(10, |j| {
+            sum.fetch_add(j, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+}

@@ -1,0 +1,105 @@
+//! Integration tests for the tile-fused parallel execution backend:
+//! ragged tiles, degenerate tile sizes, thread-count sweeps, and the
+//! exact-equality guarantee (N-thread output == 1-thread output, bit for
+//! bit), plus parallel-GEMM determinism of the dense baseline.
+
+use plum::quant::{self, default_beta, quantize_signed_binary, Scheme};
+use plum::repetition::{
+    execute_conv2d_pool, execute_conv2d_tiled, plan_layer, plan_layer_auto, EngineConfig,
+    DEFAULT_TILE,
+};
+use plum::tensor::{conv2d_gemm_pool, Conv2dGeometry, Tensor};
+use plum::util::{Pool, Rng};
+
+fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn workload(g: Conv2dGeometry, seed: u64) -> (Tensor, quant::QuantizedWeights) {
+    let mut rng = Rng::new(seed);
+    let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+    let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+    (x, quant::quantize(&w, Scheme::sb_default(), None))
+}
+
+#[test]
+fn pixel_count_not_multiple_of_tile() {
+    // 1x6x11x7 with 3x3/pad 1 -> 77 output pixels: prime-ish, never a
+    // multiple of the default tile or of PIXEL_BLOCK
+    let g = Conv2dGeometry { n: 1, c: 6, h: 11, w: 7, k: 10, r: 3, s: 3, stride: 1, padding: 1 };
+    let (x, q) = workload(g, 40);
+    let plan = plan_layer(&q, g, EngineConfig::default());
+    let pool = Pool::new(2);
+    let dense = conv2d_gemm_pool(&x, &q.values, g.stride, g.padding, &pool);
+    assert_eq!(g.out_h() * g.out_w(), 77);
+    for tile in [DEFAULT_TILE, 5, 76, 77, 78, 1000] {
+        let out = execute_conv2d_tiled(&plan, &x, &pool, tile);
+        assert!(dense.max_abs_diff(&out) < 1e-3, "tile {tile}");
+    }
+}
+
+#[test]
+fn tile_size_one() {
+    let g = Conv2dGeometry { n: 2, c: 4, h: 6, w: 6, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
+    let (x, q) = workload(g, 41);
+    let plan = plan_layer(&q, g, EngineConfig::default());
+    let dense = conv2d_gemm_pool(&x, &q.values, g.stride, g.padding, &Pool::new(1));
+    for threads in [1, 2, num_cpus()] {
+        let out = execute_conv2d_tiled(&plan, &x, &Pool::new(threads), 1);
+        assert!(dense.max_abs_diff(&out) < 1e-3, "{threads} threads, tile 1");
+    }
+}
+
+#[test]
+fn thread_counts_one_two_numcpus_match_dense() {
+    let g = Conv2dGeometry { n: 1, c: 16, h: 14, w: 14, k: 32, r: 3, s: 3, stride: 1, padding: 1 };
+    let (x, q) = workload(g, 42);
+    let plan = plan_layer_auto(&q, g, true);
+    let dense = conv2d_gemm_pool(&x, &q.values, g.stride, g.padding, &Pool::new(1));
+    for threads in [1, 2, num_cpus()] {
+        let out = execute_conv2d_pool(&plan, &x, &Pool::new(threads));
+        assert!(
+            dense.max_abs_diff(&out) < 1e-3,
+            "{threads} threads diverge from dense"
+        );
+    }
+}
+
+#[test]
+fn n_thread_exactly_equals_one_thread_on_strided_conv() {
+    // the acceptance-criterion case: strided conv, exact bit equality
+    let g = Conv2dGeometry { n: 2, c: 12, h: 15, w: 15, k: 24, r: 3, s: 3, stride: 2, padding: 1 };
+    let mut rng = Rng::new(43);
+    let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+    let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+    let q = quantize_signed_binary(&w, &default_beta(g.k, 0.5), 0.05, 1);
+    for sparsity in [true, false] {
+        let plan = plan_layer(&q, g, EngineConfig { subtile: 8, sparsity_support: sparsity });
+        let base = execute_conv2d_pool(&plan, &x, &Pool::new(1));
+        for threads in [2, num_cpus(), 2 * num_cpus() + 1] {
+            let out = execute_conv2d_pool(&plan, &x, &Pool::new(threads));
+            assert!(
+                out.data() == base.data(),
+                "sparsity={sparsity}: {threads}-thread bits differ from 1-thread"
+            );
+        }
+        // ragged tiles must preserve exactness across widths too
+        let t1 = execute_conv2d_tiled(&plan, &x, &Pool::new(1), 7);
+        let tn = execute_conv2d_tiled(&plan, &x, &Pool::new(num_cpus()), 7);
+        assert!(t1.data() == tn.data(), "sparsity={sparsity}: tile-7 widths differ");
+    }
+}
+
+#[test]
+fn dense_baseline_deterministic_across_threads() {
+    let g = Conv2dGeometry { n: 1, c: 8, h: 20, w: 20, k: 160, r: 3, s: 3, stride: 1, padding: 1 };
+    let (x, q) = workload(g, 44);
+    let base = conv2d_gemm_pool(&x, &q.values, g.stride, g.padding, &Pool::new(1));
+    for threads in [2, num_cpus()] {
+        let out = conv2d_gemm_pool(&x, &q.values, g.stride, g.padding, &Pool::new(threads));
+        assert!(
+            out.data() == base.data(),
+            "{threads}-thread dense conv differs from serial"
+        );
+    }
+}
