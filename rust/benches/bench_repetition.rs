@@ -1,27 +1,43 @@
 //! `cargo bench` target for Figure 7 / §5.1 plus the parallel-backend
-//! scaling study.
+//! scaling studies (executor thread scaling *and* plan-build cold-start
+//! scaling).
 //!
 //! criterion is not in the offline vendor set; this is a `harness = false`
 //! bench binary using the repo's min-of-N harness (paper supp. A
 //! methodology: unloaded machine, report the minimum).
 //!
-//! Emits `BENCH_repetition.json` (op, shape, threads, min_ns, GFLOP/s)
-//! so the perf trajectory is tracked across commits. Env knobs:
-//! `PLUM_BENCH_REPS` (default 10), `PLUM_BENCH_THREADS` (max pool width
-//! for the scaling ladder; default = available parallelism).
+//! Emits `BENCH_current.json` (op, shape, threads, min_ns, GFLOP/s)
+//! so the perf trajectory is tracked across commits — CI uploads it as
+//! an artifact and gates on `plum bench compare` against the committed
+//! `BENCH_repetition.json` baseline (overwrite that one only
+//! deliberately). Knobs (flag first, env fallback): `--reps N` /
+//! `PLUM_BENCH_REPS` (default 10), `--threads N` / `PLUM_BENCH_THREADS`
+//! (max pool width for the scaling ladders; default = available
+//! parallelism). Example:
+//!
+//! ```text
+//! cargo bench --bench bench_repetition -- --threads 4 --reps 20
+//! ```
 
 use std::path::Path;
 
+use plum::cli::args::Args;
 use plum::config::RunConfig;
 use plum::experiments::figures;
-use plum::util::bench::{write_bench_json, BenchRecord};
 
-fn main() {
-    let mut cfg = RunConfig::default();
-    cfg.bench_reps = std::env::var("PLUM_BENCH_REPS")
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(10);
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = RunConfig {
+        bench_reps: args.get_usize("reps", env_usize("PLUM_BENCH_REPS", 10)),
+        ..RunConfig::default()
+    };
 
     // Figure 7 workload (runs on the process-wide pool, like serving)
     println!("# bench_repetition — Figure 7 workload (reps={})", cfg.bench_reps);
@@ -30,43 +46,35 @@ fn main() {
     let s: f64 = rows.iter().map(|r| r.t_sb_sp_ms).sum();
     let t: f64 = rows.iter().map(|r| r.t_ternary_sp_ms).sum();
 
-    // dense-vs-engine, 1-thread-vs-N-thread scaling on the ResNet block
-    let cap = std::env::var("PLUM_BENCH_THREADS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0);
-    let geom = figures::resnet_block_geometry(1);
-    let threads = figures::default_thread_ladder(cap);
-    let points = figures::engine_scaling(&cfg, geom, &threads).expect("engine_scaling");
+    // dense-vs-engine executor scaling + plan-build cold-start scaling
+    // (byte-identical outputs/arenas at every width, or the harness
+    // errors out) — the same orchestration `plum bench repetition` runs
+    let cap = args.get_usize("threads", env_usize("PLUM_BENCH_THREADS", 0));
+    let (threads, points) = figures::repetition_study(&cfg, 1, cap).expect("repetition_study");
 
-    let records: Vec<BenchRecord> = points
-        .iter()
-        .map(|p| BenchRecord {
-            op: p.op.clone(),
-            shape: p.shape.clone(),
-            threads: p.threads,
-            min_ns: p.min_ns,
-            gflops: p.gflops,
-        })
-        .collect();
-    let out = Path::new("BENCH_repetition.json");
-    write_bench_json(out, &records).expect("write BENCH_repetition.json");
-    println!("wrote {} records to {}", records.len(), out.display());
+    // BENCH_current.json, not BENCH_repetition.json: the latter is the
+    // committed CI regression baseline — overwrite it only deliberately
+    // (`plum bench repetition --out BENCH_repetition.json`)
+    let out = Path::new("BENCH_current.json");
+    let n = figures::write_scaling_records(&points, out).expect("write BENCH_current.json");
+    println!("wrote {n} records to {}", out.display());
 
-    let engine_ns = |th: usize| {
+    let op_ns = |op: &str, th: usize| {
         points
             .iter()
-            .find(|p| p.op == "engine_sb" && p.threads == th)
+            .find(|p| p.op == op && p.threads == th)
             .map(|p| p.min_ns)
     };
     let max_t = *threads.last().unwrap();
-    let scale = match (engine_ns(1), engine_ns(max_t)) {
+    let ratio = |op: &str| match (op_ns(op, 1), op_ns(op, max_t)) {
         (Some(t1), Some(tn)) if tn > 0 => t1 as f64 / tn as f64,
         _ => 1.0,
     };
+    let scale = ratio("engine_sb");
+    let plan_scale = ratio("plan_build");
     // machine-readable summary line for EXPERIMENTS.md tooling
     println!(
-        "RESULT bench_repetition aggregate_speedup_sb={:.3} aggregate_speedup_ternary={:.3} engine_thread_scaling_{max_t}t={scale:.3}",
+        "RESULT bench_repetition aggregate_speedup_sb={:.3} aggregate_speedup_ternary={:.3} engine_thread_scaling_{max_t}t={scale:.3} plan_build_scaling_{max_t}t={plan_scale:.3}",
         b / s,
         b / t
     );

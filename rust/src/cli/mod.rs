@@ -35,6 +35,9 @@ COMMANDS:
   bench <target> [--steps N] [--fresh]      regenerate a paper table/figure:
          table1..table12 | tables | all  [pjrt]
          pareto | fig7 | fig9 | fig10 | energy | cse | scaling
+         repetition [--out FILE]            scaling studies -> BENCH_current.json
+         compare --current FILE [--baseline FILE] [--tolerance F]
+                                            fail on perf regression vs baseline
   serve --model NAME [--requests N] [--replicas R] [--ckpt PATH]       [pjrt]
   report weights --model NAME               figure 6/11 distributions
   quantize --model NAME                     density/repetition/bit report [pjrt]
@@ -46,7 +49,9 @@ Commands marked [pjrt] need `cargo build --features pjrt` (see rust/README.md).
 GLOBAL OPTIONS:
   --artifacts DIR (default artifacts)   --out-dir DIR (default out)
   --config FILE  --steps N  --seed N  --reps N  --eval-batches N
-  --threads N (scaling: max pool width)
+  --threads N   pin the worker-pool width for this run (engine, GEMM and
+                plan build; equivalent to the PLUM_THREADS env var; for
+                the scaling studies it also caps the thread ladder)
 ";
 
 pub fn run(argv: Vec<String>) -> Result<()> {
@@ -54,6 +59,12 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     let cmd = it.next().unwrap_or_else(|| "help".to_string());
     let args = Args::parse(it);
     let cfg = RunConfig::resolve(&args)?;
+    if cfg.threads > 0 {
+        // pin the process-wide pool before anything dispatches on it
+        if let Err(e) = crate::util::Pool::init_global(cfg.threads) {
+            eprintln!("warning: --threads {} ignored: {e}", cfg.threads);
+        }
+    }
     match cmd.as_str() {
         "train" => cmd_train(&cfg, &args),
         "bench" => cmd_bench(&cfg, &args),
@@ -95,7 +106,8 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         cfg.steps,
         tr.batch_size()
     );
-    let log = tr.train(&ds, cfg.steps, &schedule, (cfg.steps / 20).max(1), cfg.eval_batches, false)?;
+    let log =
+        tr.train(&ds, cfg.steps, &schedule, (cfg.steps / 20).max(1), cfg.eval_batches, false)?;
     println!(
         "final: loss {:.4}, eval acc {:.3}, density {:.2}, {:.1}s ({:.0} ms/step)",
         log.final_train_loss,
@@ -135,7 +147,54 @@ fn cmd_bench(cfg: &RunConfig, args: &Args) -> Result<()> {
             let threads = figures::default_thread_ladder(args.get_usize("threads", 0));
             figures::engine_scaling(cfg, geom, &threads).map(drop)
         }
+        // the full perf-trajectory run CI gates on: executor scaling +
+        // plan-build scaling, persisted as BENCH_repetition.json
+        "repetition" => bench_repetition(cfg, args),
+        "compare" => bench_compare(args),
         other => bench_trained(cfg, args, other, subtile),
+    }
+}
+
+fn bench_repetition(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let (_, points) =
+        figures::repetition_study(cfg, args.get_usize("batch", 1), args.get_usize("threads", 0))?;
+    // default away from BENCH_repetition.json: that path is the
+    // committed CI baseline, and re-baselining should be an explicit act
+    let out = std::path::PathBuf::from(args.get_or("out", "BENCH_current.json"));
+    let n = figures::write_scaling_records(&points, &out)?;
+    println!("wrote {n} records to {}", out.display());
+    Ok(())
+}
+
+fn bench_compare(args: &Args) -> Result<()> {
+    use crate::util::bench::{compare_bench, read_bench_json};
+    let current_path = args.get("current").ok_or_else(|| {
+        anyhow!("usage: plum bench compare --current FILE [--baseline FILE] [--tolerance F]")
+    })?;
+    let baseline_path = args.get_or("baseline", "BENCH_repetition.json");
+    let tolerance = args.get_f32("tolerance", 0.25) as f64;
+    let baseline = read_bench_json(std::path::Path::new(baseline_path))?;
+    let current = read_bench_json(std::path::Path::new(current_path))?;
+    let regressions = compare_bench(&baseline, &current, tolerance);
+    if regressions.is_empty() {
+        println!(
+            "bench compare: {} baseline records within {:.0}% ({} vs {})",
+            baseline.len(),
+            tolerance * 100.0,
+            current_path,
+            baseline_path
+        );
+        Ok(())
+    } else {
+        for r in &regressions {
+            eprintln!("REGRESSION {r}");
+        }
+        Err(anyhow!(
+            "{} perf regression(s) vs {} (tolerance {:.0}%)",
+            regressions.len(),
+            baseline_path,
+            tolerance * 100.0
+        ))
     }
 }
 

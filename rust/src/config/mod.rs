@@ -29,6 +29,10 @@ pub struct RunConfig {
     pub data_noise: f32,
     /// Benchmark repetitions (paper runs 50, reports min).
     pub bench_reps: usize,
+    /// Worker-pool width (0 = auto: `PLUM_THREADS` env, else all
+    /// cores). Non-zero pins the process-wide pool before first use —
+    /// the `--threads` CLI flag.
+    pub threads: usize,
     /// Serving: replicas / batching.
     pub replicas: usize,
     pub max_batch: usize,
@@ -45,6 +49,7 @@ impl Default for RunConfig {
             seed: 7,
             data_noise: 0.55,
             bench_reps: 20,
+            threads: 0,
             replicas: 1,
             max_batch: 8,
             max_wait_ms: 2,
@@ -84,6 +89,9 @@ impl RunConfig {
         if let Some(v) = j.get("bench_reps").and_then(Json::as_usize) {
             self.bench_reps = v;
         }
+        if let Some(v) = j.get("threads").and_then(Json::as_usize) {
+            self.threads = v;
+        }
         if let Some(v) = j.get("replicas").and_then(Json::as_usize) {
             self.replicas = v;
         }
@@ -112,6 +120,7 @@ impl RunConfig {
         cfg.seed = args.get_u64("seed", cfg.seed);
         cfg.data_noise = args.get_f32("data-noise", cfg.data_noise);
         cfg.bench_reps = args.get_usize("reps", cfg.bench_reps);
+        cfg.threads = args.get_usize("threads", cfg.threads);
         cfg.replicas = args.get_usize("replicas", cfg.replicas);
         cfg.max_batch = args.get_usize("max-batch", cfg.max_batch);
         cfg.max_wait_ms = args.get_u64("max-wait-ms", cfg.max_wait_ms);

@@ -15,7 +15,7 @@ use crate::repetition::{
 };
 use crate::simulator::{energy_reduction, simulate_conv, throughput_speedup, AcceleratorConfig};
 use crate::tensor::{conv2d_gemm_pool, Conv2dGeometry, Tensor};
-use crate::util::bench::bench;
+use crate::util::bench::{bench, BenchRecord};
 use crate::util::{Pool, Rng};
 
 use super::print_table;
@@ -299,8 +299,9 @@ pub fn energy(_cfg: &RunConfig, sparsity: f64) -> Result<()> {
 
 /// Figures 6 & 11 — weight-distribution report from a trained checkpoint.
 pub fn report_weights(cfg: &RunConfig, name: &str) -> Result<()> {
-    let (_, state) = super::trained_state(cfg, name)
-        .ok_or_else(|| anyhow!("no checkpoint for {name} in {} — train it first", cfg.out_dir.display()))?;
+    let (_, state) = super::trained_state(cfg, name).ok_or_else(|| {
+        anyhow!("no checkpoint for {name} in {} — train it first", cfg.out_dir.display())
+    })?;
     // group conv weights and betas
     let mut printed = Vec::new();
     let mut all_latent: Vec<f32> = Vec::new();
@@ -353,7 +354,8 @@ mod tests {
 
     #[test]
     fn synthetic_quantized_hits_target_sparsity() {
-        let geom = Conv2dGeometry { n: 1, c: 64, h: 4, w: 4, k: 64, r: 3, s: 3, stride: 1, padding: 1 };
+        let geom =
+            Conv2dGeometry { n: 1, c: 64, h: 4, w: 4, k: 64, r: 3, s: 3, stride: 1, padding: 1 };
         let mut rng = Rng::new(1);
         let q = synthetic_quantized(&geom, Scheme::sb_default(), 0.6, &mut rng);
         let sp = q.sparsity();
@@ -365,7 +367,8 @@ mod tests {
 
     #[test]
     fn sb_synthetic_single_signed_per_filter() {
-        let geom = Conv2dGeometry { n: 1, c: 16, h: 4, w: 4, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
+        let geom =
+            Conv2dGeometry { n: 1, c: 16, h: 4, w: 4, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
         let mut rng = Rng::new(2);
         let q = synthetic_quantized(&geom, Scheme::sb_default(), 0.3, &mut rng);
         let e = 16 * 9;
@@ -389,6 +392,49 @@ pub struct ScalingPoint {
     /// dense-equivalent GFLOP/s (2 * dense MACs / min time) — the same
     /// numerator for both ops, so the ratio is the honest speedup
     pub gflops: f64,
+}
+
+impl ScalingPoint {
+    /// The persisted (`BENCH_*.json`) form of this measurement — the one
+    /// mapping shared by `plum bench repetition` and the bench binary.
+    pub fn to_record(&self) -> BenchRecord {
+        BenchRecord {
+            op: self.op.clone(),
+            shape: self.shape.clone(),
+            threads: self.threads,
+            min_ns: self.min_ns,
+            gflops: self.gflops,
+        }
+    }
+}
+
+/// The full perf-trajectory study behind `BENCH_repetition.json`:
+/// executor scaling (dense vs engine) plus plan-build cold-start
+/// scaling on one thread ladder. The single orchestration shared by
+/// `plum bench repetition` and the `bench_repetition` cargo-bench
+/// binary, so the CI artifact and the local bench can never diverge.
+/// Returns the ladder and every measured point.
+pub fn repetition_study(
+    cfg: &RunConfig,
+    batch: usize,
+    thread_cap: usize,
+) -> Result<(Vec<usize>, Vec<ScalingPoint>)> {
+    let geom = resnet_block_geometry(batch);
+    let threads = default_thread_ladder(thread_cap);
+    let mut points = engine_scaling(cfg, geom, &threads)?;
+    points.extend(plan_build_scaling(cfg, &threads)?);
+    Ok((threads, points))
+}
+
+/// Persist a scaling series in the `BENCH_*.json` record format;
+/// returns the record count.
+pub fn write_scaling_records(
+    points: &[ScalingPoint],
+    out: &std::path::Path,
+) -> std::io::Result<usize> {
+    let records: Vec<BenchRecord> = points.iter().map(ScalingPoint::to_record).collect();
+    crate::util::bench::write_bench_json(out, &records)?;
+    Ok(records.len())
 }
 
 /// The scaling study's default workload: a ResNet-shaped mid-network
@@ -509,6 +555,86 @@ pub fn engine_scaling(
             "engine speedup",
             "engine vs dense",
         ],
+        &printed,
+    );
+    Ok(points)
+}
+
+/// Plan-construction thread scaling: builds the engine plans for every
+/// quantized 3x3 conv of ResNet-18 at each pool width, asserts the
+/// arenas are **byte-identical** across widths (the parallel build's
+/// determinism contract), and reports cold-start build time. The
+/// `gflops` field carries the dense-equivalent GFLOP/s the built plans
+/// *represent* per second of planning — a machine-scaled throughput
+/// number comparable across commits, like the executor records.
+pub fn plan_build_scaling(cfg: &RunConfig, threads: &[usize]) -> Result<Vec<ScalingPoint>> {
+    use crate::repetition::plan_layer_pool;
+    if threads.is_empty() {
+        return Err(anyhow!("no thread counts requested"));
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let layers: Vec<(Conv2dGeometry, QuantizedWeights)> = models::resnet18_layers(1.0, 64, 1)
+        .into_iter()
+        .filter(|l| l.quantized && l.geom.r == 3)
+        .map(|l| {
+            let w = latent_weights(&l.geom, &mut rng);
+            (l.geom, quant::quantize(&w, Scheme::sb_default(), None))
+        })
+        .collect();
+    let ecfg = EngineConfig::default();
+    let shape = format!("resnet18 {}x3x3 layers", layers.len());
+    let flops: f64 = layers.iter().map(|(g, _)| 2.0 * g.dense_macs() as f64).sum();
+    let reps = cfg.bench_reps;
+    let mut points = Vec::new();
+    let mut printed = Vec::new();
+    let mut base_plans: Option<Vec<LayerPlan>> = None;
+    let mut base_ns = 0u64;
+    for &t in threads {
+        let pool = Pool::new(t);
+        let r = bench(&format!("plan build t{t}"), 1, reps, || {
+            for (g, q) in &layers {
+                std::hint::black_box(plan_layer_pool(q, *g, ecfg, &pool));
+            }
+        });
+        let plans: Vec<LayerPlan> = layers
+            .iter()
+            .map(|(g, q)| plan_layer_pool(q, *g, ecfg, &pool))
+            .collect();
+        match &base_plans {
+            None => {
+                base_plans = Some(plans);
+                base_ns = r.min_ns;
+            }
+            Some(base) => {
+                for (li, (a, b)) in base.iter().zip(&plans).enumerate() {
+                    if a.arena != b.arena
+                        || a.combine != b.combine
+                        || a.unique_of_filter != b.unique_of_filter
+                    {
+                        return Err(anyhow!(
+                            "plan for layer {li} at {t} threads differs from {} threads",
+                            threads[0]
+                        ));
+                    }
+                }
+            }
+        }
+        printed.push(vec![
+            format!("{t}"),
+            format!("{:.2}", r.min_ns as f64 / 1e6),
+            format!("{:.2}x", base_ns as f64 / r.min_ns as f64),
+        ]);
+        points.push(ScalingPoint {
+            op: "plan_build".into(),
+            shape: shape.clone(),
+            threads: t,
+            min_ns: r.min_ns,
+            gflops: flops / r.min_ns as f64,
+        });
+    }
+    print_table(
+        &format!("Plan-build scaling — {shape} (byte-identical arena at every width)"),
+        &["Threads", "build ms", "speedup"],
         &printed,
     );
     Ok(points)

@@ -1,44 +1,47 @@
-//! Tiled, parallel executor for a `LayerPlan`.
+//! Tiled, parallel, **pixel-major** executor for a `LayerPlan`.
 //!
 //! The output-pixel axis is cut into fixed tiles ([`DEFAULT_TILE`]
-//! pixels); tiles are distributed over the scoped-thread worker pool
+//! pixels); tiles are distributed over the persistent worker pool
 //! (`util::pool`). Per tile, one worker:
 //!
-//!   1. **fuses im2col**: builds just the tile's patch rows into its own
-//!      scratch buffer (`im2col_rows`) — the full `[N*OH*OW, C*R*S]`
-//!      patch matrix is never materialized, cutting peak memory and
-//!      DRAM traffic by `pixels / tile`;
-//!   2. walks the plan's CSR index arena in `PIXEL_BLOCK`-pixel blocks:
-//!      every *distinct* pattern's partial sum is evaluated once into a
+//!   1. **fuses im2col, transposed**: builds just the tile's patch rows
+//!      into its own scratch buffer via `im2col_rows_transposed` — as
+//!      `[C*R*S, PIXEL_BLOCK]` blocks with pixels minor, so the full
+//!      `[N*OH*OW, C*R*S]` patch matrix is never materialized *and*
+//!      every later column access is a contiguous SIMD-width run;
+//!   2. walks the plan's CSR index arena once per pixel block: every
+//!      *distinct* pattern's partial sum is evaluated once into a
 //!      thread-local psum arena (this is where repetition pays — the sum
-//!      is shared by all filters using the pattern), streaming one flat
-//!      column buffer instead of per-pattern heap vectors;
-//!   3. combines per *unique* filter through the flat `combine` table
-//!      and multiplies by alpha once;
+//!      is shared by all filters using the pattern). A pattern column's
+//!      gather is now a contiguous `PIXEL_BLOCK`-wide f32 load + add
+//!      (`[f32; PIXEL_BLOCK]` array windows, which LLVM lowers to one
+//!      AVX2 vector op), where the row-major layout forced a
+//!      stride-`C*R*S` walk that defeated vectorization exactly where
+//!      repetition pays;
+//!   3. combines per *unique* filter through the flat `combine` table on
+//!      the same block layout and multiplies by alpha once;
 //!   4. scatters unique-filter results to the original filter slots
 //!      (inter-filter dedup) — each tile owns a disjoint set of output
 //!      pixels, so workers write without synchronization.
 //!
-//! Tile partitioning depends only on the tile size, never on the thread
-//! count, and each worker owns its psum/usum/patch arenas, so N-thread
-//! output is **bit-identical** to 1-thread output (asserted in tests and
-//! the scaling harness).
+//! Tile and block partitioning depend only on the tile size, never on
+//! the thread count, each worker owns its psum/usum/patch arenas, and
+//! ragged final blocks are zero-padded to full SIMD width, so per-lane
+//! f32 accumulation order is fixed and N-thread output is
+//! **bit-identical** to 1-thread output (asserted in tests and the
+//! scaling harness).
 //!
 //! With sparsity support ON, zero entries never enter a sum and all-zero
 //! patterns are skipped. OFF, the zero group is summed and multiplied by
 //! zero — faithfully modelling a repetition-only system (paper §5.1
 //! config 1).
 
-use crate::tensor::{im2col_rows, Tensor};
+use crate::tensor::{im2col_rows_transposed, Tensor};
 use crate::util::{Pool, UnsafeSlice};
 
-use super::plan::LayerPlan;
+pub use crate::tensor::PIXEL_BLOCK;
 
-/// Output pixels processed together inside a tile. Amortizes the plan
-/// walk (span loads, combine lookups) across a block and lets the inner
-/// accumulations vectorize — the §Perf pixel-blocking optimization
-/// (EXPERIMENTS.md §Perf records the before/after).
-pub const PIXEL_BLOCK: usize = 8;
+use super::plan::LayerPlan;
 
 /// Output pixels per parallel work item. A multiple of [`PIXEL_BLOCK`]
 /// so block boundaries (and therefore f32 accumulation order) match the
@@ -82,6 +85,7 @@ pub fn execute_conv2d_tiled(
     }
     let od = UnsafeSlice::new(out.data_mut());
     let jobs = pixels.div_ceil(tile);
+    let blocks_per_tile = tile.div_ceil(PB);
 
     struct Scratch {
         patch: Vec<f32>,
@@ -94,39 +98,47 @@ pub fn execute_conv2d_tiled(
     pool.run_with(
         jobs,
         || Scratch {
-            patch: vec![0.0; tile * e],
+            patch: vec![0.0; blocks_per_tile * e * PB],
             psums: vec![0.0; np * PB],
             usums: vec![0.0; nu * PB],
         },
         |scr, job| {
             let px0 = job * tile;
             let tp = tile.min(pixels - px0);
-            // 0. fused im2col: only this tile's patch rows
-            im2col_rows(x, g.r, g.s, g.stride, g.padding, px0, tp, &mut scr.patch);
-            let patch = &scr.patch;
+            // 0. fused transposed im2col: only this tile's patch rows,
+            // pixel-major ([e][PB] blocks, ragged lanes zeroed)
+            im2col_rows_transposed(x, g.r, g.s, g.stride, g.padding, px0, tp, &mut scr.patch);
 
-            let mut b0 = 0usize;
-            while b0 < tp {
+            for blk in 0..tp.div_ceil(PB) {
+                let b0 = blk * PB;
                 let pb = PB.min(tp - b0);
+                let bpatch = &scr.patch[blk * e * PB..(blk + 1) * e * PB];
 
-                // 1. distinct-pattern partial sums, blocked over pixels —
-                // one streaming pass over the CSR arena
+                // 1. distinct-pattern partial sums — one streaming pass
+                // over the CSR arena; each column gather is a contiguous
+                // PB-wide load + add (ragged lanes are zero-padded, so
+                // full-width ops are safe and deterministic)
                 for (gp, sp) in spans.iter().enumerate() {
-                    let acc = &mut scr.psums[gp * PB..gp * PB + PB];
-                    acc.fill(0.0);
+                    let acc: &mut [f32; PB] =
+                        (&mut scr.psums[gp * PB..gp * PB + PB]).try_into().unwrap();
+                    *acc = [0.0; PB];
                     let s = sp.start as usize;
                     let p_end = s + sp.pos as usize;
                     let n_end = p_end + sp.neg as usize;
                     for &col in &cols[s..p_end] {
-                        let col = col as usize;
-                        for (b, a) in acc.iter_mut().enumerate().take(pb) {
-                            *a += patch[(b0 + b) * e + col];
+                        let src: &[f32; PB] = bpatch[col as usize * PB..col as usize * PB + PB]
+                            .try_into()
+                            .unwrap();
+                        for b in 0..PB {
+                            acc[b] += src[b];
                         }
                     }
                     for &col in &cols[p_end..n_end] {
-                        let col = col as usize;
-                        for (b, a) in acc.iter_mut().enumerate().take(pb) {
-                            *a -= patch[(b0 + b) * e + col];
+                        let src: &[f32; PB] = bpatch[col as usize * PB..col as usize * PB + PB]
+                            .try_into()
+                            .unwrap();
+                        for b in 0..PB {
+                            acc[b] -= src[b];
                         }
                     }
                     if !plan.cfg.sparsity_support {
@@ -136,26 +148,33 @@ pub fn execute_conv2d_tiled(
                         let z_end = n_end + sp.zero as usize;
                         let mut z = [0.0f32; PB];
                         for &col in &cols[n_end..z_end] {
-                            let col = col as usize;
-                            for (b, zz) in z.iter_mut().enumerate().take(pb) {
-                                *zz += patch[(b0 + b) * e + col];
+                            let src: &[f32; PB] = bpatch
+                                [col as usize * PB..col as usize * PB + PB]
+                                .try_into()
+                                .unwrap();
+                            for b in 0..PB {
+                                z[b] += src[b];
                             }
                         }
-                        for (a, zz) in acc.iter_mut().zip(z.iter()) {
-                            *a += zz * 0.0;
+                        for b in 0..PB {
+                            acc[b] += z[b] * 0.0;
                         }
                     }
                 }
 
-                // 2. combine per unique filter (blocked): each filter's
-                // pattern slots are adjacent in the flat combine table
+                // 2. combine per unique filter (same block layout): each
+                // filter's pattern slots are adjacent in the flat table
                 for ui in 0..nu {
-                    let dst = &mut scr.usums[ui * PB..ui * PB + PB];
-                    dst.fill(0.0);
+                    let dst: &mut [f32; PB] =
+                        (&mut scr.usums[ui * PB..ui * PB + PB]).try_into().unwrap();
+                    *dst = [0.0; PB];
                     for &gp in &plan.combine[ui * nt..(ui + 1) * nt] {
-                        let src = &scr.psums[gp as usize * PB..gp as usize * PB + PB];
-                        for (d, s) in dst.iter_mut().zip(src) {
-                            *d += s;
+                        let src: &[f32; PB] = scr.psums
+                            [gp as usize * PB..gp as usize * PB + PB]
+                            .try_into()
+                            .unwrap();
+                        for b in 0..PB {
+                            dst[b] += src[b];
                         }
                     }
                 }
@@ -172,8 +191,6 @@ pub fn execute_conv2d_tiled(
                         unsafe { od.write((ni * g.k + fi) * plane + pix, a * sv) };
                     }
                 }
-
-                b0 += pb;
             }
         },
     );

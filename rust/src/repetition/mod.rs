@@ -26,10 +26,12 @@
 //! and the §5.1 arithmetic-operation claims.
 //!
 //! Execution backend: plans store their indices in a contiguous
-//! CSR-style arena (`plan::PatternArena`) and the executor (`exec`) runs
-//! tile-fused and parallel — im2col fused per output-pixel tile, tiles
-//! spread over the `util::pool` worker pool, bit-identical for every
-//! thread count.
+//! CSR-style arena (`plan::PatternArena`, built in parallel per
+//! sub-tile) and the executor (`exec`) runs tile-fused and parallel —
+//! im2col fused per output-pixel tile in the pixel-major (transposed)
+//! layout so pattern gathers are contiguous SIMD-width loads, tiles
+//! spread over the persistent `util::pool` workers, bit-identical for
+//! every thread count.
 
 pub mod cse;
 mod exec;
@@ -60,13 +62,26 @@ impl Default for EngineConfig {
     }
 }
 
-/// Build a plan for one conv layer from its quantized weights.
+/// Build a plan for one conv layer from its quantized weights
+/// (per-sub-tile memoization runs on the process-wide pool).
 pub fn plan_layer(
     q: &QuantizedWeights,
     geom: Conv2dGeometry,
     cfg: EngineConfig,
 ) -> LayerPlan {
     LayerPlan::build(q, geom, cfg)
+}
+
+/// [`plan_layer`] on an explicit pool — benchmarks pin the build's
+/// 1-thread vs N-thread cold-start cost; the resulting plan is
+/// byte-identical at every width.
+pub fn plan_layer_pool(
+    q: &QuantizedWeights,
+    geom: Conv2dGeometry,
+    cfg: EngineConfig,
+    pool: &crate::util::Pool,
+) -> LayerPlan {
+    LayerPlan::build_pool(q, geom, cfg, pool)
 }
 
 /// Candidate sub-tile sizes searched by the auto-tuner. Sizes below 8
@@ -85,16 +100,27 @@ pub fn plan_layer_auto(
     geom: Conv2dGeometry,
     sparsity_support: bool,
 ) -> LayerPlan {
+    plan_layer_auto_pool(q, geom, sparsity_support, crate::util::Pool::global())
+}
+
+/// [`plan_layer_auto`] on an explicit pool.
+pub fn plan_layer_auto_pool(
+    q: &QuantizedWeights,
+    geom: Conv2dGeometry,
+    sparsity_support: bool,
+    pool: &crate::util::Pool,
+) -> LayerPlan {
     let e = geom.c * geom.r * geom.s;
     let mut best: Option<LayerPlan> = None;
     for &st in SUBTILE_CANDIDATES {
         if st > e && best.is_some() {
             break;
         }
-        let plan = LayerPlan::build(
+        let plan = LayerPlan::build_pool(
             q,
             geom,
             EngineConfig { subtile: st.min(e), sparsity_support },
+            pool,
         );
         if best
             .as_ref()

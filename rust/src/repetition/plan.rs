@@ -9,11 +9,19 @@
 //! heap — the cache-contiguity lesson of SparseDNN-style sparse-CPU
 //! engines. A flattened `combine` table (`[unique_filter][sub_tile] ->
 //! global pattern slot`) replaces the per-table slot lookups.
+//!
+//! Plan *construction* is parallel: sub-tiles are memoized independently
+//! (each is a self-contained pattern-dedup problem), fanned over the
+//! worker pool, and merged into the arena in sub-tile order — so a
+//! multi-layer cold start scales with cores while the resulting
+//! [`PatternArena`] stays **byte-identical for every thread count**.
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 use crate::quant::QuantizedWeights;
 use crate::tensor::Conv2dGeometry;
+use crate::util::Pool;
 
 use super::EngineConfig;
 
@@ -68,7 +76,11 @@ impl PatternSpan {
 }
 
 /// Contiguous index arena over every distinct pattern of every sub-tile.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq`/`Eq` compare the raw buffers — used by tests and the
+/// plan-build scaling harness to assert the arena is byte-identical
+/// regardless of how many threads built it.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct PatternArena {
     /// absolute C*R*S column indices, pattern-contiguous (pos|neg|zero
     /// runs back to back); the sub-tile base is already folded in
@@ -140,8 +152,36 @@ pub struct LayerPlan {
     pub num_unique_filters: usize,
 }
 
+/// One sub-tile's memoization result, built independently of every
+/// other sub-tile: pattern columns are absolute (the sub-tile base is
+/// folded in), span starts and combine slots are fragment-local until
+/// the deterministic merge offsets them.
+struct SubtileFragment {
+    len: usize,
+    cols: Vec<u32>,
+    spans: Vec<PatternSpan>,
+    /// per unique filter, fragment-local pattern slot
+    slots: Vec<u32>,
+}
+
 impl LayerPlan {
+    /// Build on the process-wide pool (see [`LayerPlan::build_pool`]).
     pub fn build(q: &QuantizedWeights, geom: Conv2dGeometry, cfg: EngineConfig) -> LayerPlan {
+        Self::build_pool(q, geom, cfg, Pool::global())
+    }
+
+    /// Build a plan, fanning per-sub-tile pattern memoization over
+    /// `pool`. Each fragment depends only on its sub-tile index and the
+    /// merge walks fragments in sub-tile order, so the resulting arena,
+    /// combine table and span layout are byte-identical for every pool
+    /// width (asserted by `arena_identical_for_every_thread_count` and
+    /// the `bench_repetition` plan-build study).
+    pub fn build_pool(
+        q: &QuantizedWeights,
+        geom: Conv2dGeometry,
+        cfg: EngineConfig,
+        pool: &Pool,
+    ) -> LayerPlan {
         assert!(cfg.subtile > 0);
         let k = geom.k;
         let e = geom.c * geom.r * geom.s;
@@ -176,63 +216,85 @@ impl LayerPlan {
         }
         let nu = unique_sigs.len();
 
-        // ---- per-sub-tile pattern memoization, emitted straight into the
-        // CSR arena ------------------------------------------------------
-        let mut arena = PatternArena { cols: Vec::new(), spans: Vec::new(), table_base: vec![0] };
-        let mut table_len = Vec::new();
-        // slot_by_table[ti][ui] = global pattern slot, flattened below
-        let mut slot_by_table: Vec<Vec<u32>> = Vec::new();
-        let mut base = 0usize;
-        while base < e {
+        // ---- per-sub-tile pattern memoization, fanned over the pool ----
+        // Sub-tiles are independent pattern-dedup problems; fragment `ti`
+        // depends only on `ti`, so the parallel fill is deterministic.
+        let num_tables = e.div_ceil(cfg.subtile);
+        let frags: Vec<Mutex<Option<SubtileFragment>>> =
+            (0..num_tables).map(|_| Mutex::new(None)).collect();
+        let sigs = &unique_sigs;
+        pool.run(num_tables, |ti| {
+            let base = ti * cfg.subtile;
             let len = cfg.subtile.min(e - base);
+            let mut frag = SubtileFragment {
+                len,
+                cols: Vec::new(),
+                spans: Vec::new(),
+                slots: Vec::with_capacity(nu),
+            };
             let mut pat_map: HashMap<&[i8], u32> = HashMap::new();
-            let mut slots = Vec::with_capacity(nu);
-            for sig in &unique_sigs {
+            for sig in sigs {
                 let window = &sig[base..base + len];
                 let slot = *pat_map.entry(window).or_insert_with(|| {
                     // new distinct pattern: append its pos/neg/zero column
                     // runs (absolute indices) and a span
-                    let start = arena.cols.len() as u32;
+                    let start = frag.cols.len() as u32;
                     let mut pos = 0u32;
                     let mut neg = 0u32;
                     let mut zero = 0u32;
                     for (off, sgn) in window.iter().enumerate() {
                         if *sgn == 1 {
-                            arena.cols.push((base + off) as u32);
+                            frag.cols.push((base + off) as u32);
                             pos += 1;
                         }
                     }
                     for (off, sgn) in window.iter().enumerate() {
                         if *sgn == -1 {
-                            arena.cols.push((base + off) as u32);
+                            frag.cols.push((base + off) as u32);
                             neg += 1;
                         }
                     }
                     for (off, sgn) in window.iter().enumerate() {
                         if *sgn == 0 {
-                            arena.cols.push((base + off) as u32);
+                            frag.cols.push((base + off) as u32);
                             zero += 1;
                         }
                     }
-                    arena.spans.push(PatternSpan { start, pos, neg, zero });
-                    (arena.spans.len() - 1) as u32
+                    frag.spans.push(PatternSpan { start, pos, neg, zero });
+                    (frag.spans.len() - 1) as u32
                 });
-                slots.push(slot);
+                frag.slots.push(slot);
             }
-            arena.table_base.push(arena.spans.len() as u32);
-            slot_by_table.push(slots);
-            table_len.push(len);
-            base += len;
-        }
-        let num_tables = table_len.len();
+            *frags[ti].lock().unwrap() = Some(frag);
+        });
 
-        // flatten to the executor's combine layout: per unique filter, its
-        // pattern slots across sub-tiles are adjacent
+        // ---- deterministic merge: walk fragments in sub-tile order and
+        // offset their local span starts / pattern slots into the one
+        // contiguous CSR arena ------------------------------------------
+        let mut arena = PatternArena { cols: Vec::new(), spans: Vec::new(), table_base: vec![0] };
+        let mut table_len = Vec::with_capacity(num_tables);
         let mut combine = vec![0u32; nu * num_tables];
-        for (ti, slots) in slot_by_table.iter().enumerate() {
-            for (ui, &slot) in slots.iter().enumerate() {
-                combine[ui * num_tables + ti] = slot;
+        for (ti, cell) in frags.iter().enumerate() {
+            let frag = cell
+                .lock()
+                .unwrap()
+                .take()
+                .expect("every sub-tile fragment is filled by the pool run");
+            let col_off = arena.cols.len() as u32;
+            let span_off = arena.spans.len() as u32;
+            arena.cols.extend_from_slice(&frag.cols);
+            arena.spans.extend(
+                frag.spans
+                    .iter()
+                    .map(|sp| PatternSpan { start: sp.start + col_off, ..*sp }),
+            );
+            arena.table_base.push(arena.spans.len() as u32);
+            // per unique filter, its pattern slots across sub-tiles are
+            // adjacent — the executor's combine layout
+            for (ui, &slot) in frag.slots.iter().enumerate() {
+                combine[ui * num_tables + ti] = span_off + slot;
             }
+            table_len.push(frag.len);
         }
 
         LayerPlan {
@@ -436,6 +498,30 @@ mod tests {
                 for ti in 0..plan.num_tables {
                     let gp = plan.combine[ui * plan.num_tables + ti];
                     assert!(gp >= a.table_base[ti] && gp < a.table_base[ti + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_identical_for_every_thread_count() {
+        // the parallel build's merge must be deterministic: any pool
+        // width produces byte-identical plan data
+        let mut rng = Rng::new(27);
+        let w = Tensor::rand_normal(&[24, 8, 3, 3], 0.5, &mut rng);
+        let g = geom(8, 24);
+        for scheme in [Scheme::Binary, Scheme::ternary_default(), Scheme::sb_default()] {
+            let q = quantize(&w, scheme, None);
+            for subtile in [5, 8, 16] {
+                let cfg = EngineConfig { subtile, sparsity_support: true };
+                let base = LayerPlan::build_pool(&q, g, cfg, &crate::util::Pool::new(1));
+                for threads in [2, 3, 7] {
+                    let plan = LayerPlan::build_pool(&q, g, cfg, &crate::util::Pool::new(threads));
+                    assert!(plan.arena == base.arena, "arena differs at {threads} threads");
+                    assert_eq!(plan.combine, base.combine, "{threads} threads");
+                    assert_eq!(plan.table_len, base.table_len, "{threads} threads");
+                    assert_eq!(plan.unique_of_filter, base.unique_of_filter, "{threads} threads");
+                    assert_eq!(plan.alpha, base.alpha, "{threads} threads");
                 }
             }
         }

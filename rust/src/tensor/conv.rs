@@ -143,6 +143,82 @@ pub fn im2col_rows(
     }
 }
 
+/// Output pixels per SIMD lane-block in the pixel-major (transposed)
+/// patch layout: 8 f32 lanes = one AVX2 vector. Shared by
+/// [`im2col_rows_transposed`] and the repetition executor so block
+/// boundaries — and therefore f32 accumulation order — are identical
+/// everywhere, which keeps N-thread output bit-identical to 1-thread.
+pub const PIXEL_BLOCK: usize = 8;
+
+/// Pixel-major (transposed) variant of [`im2col_rows`]: the tile's
+/// patch rows are written as `ceil(rows / PIXEL_BLOCK)` blocks, each an
+/// `[C*R*S, PIXEL_BLOCK]` matrix with pixels minor:
+///
+/// ```text
+/// dst[block * e*PB + col * PB + lane] = patch(px0 + block*PB + lane, col)
+/// ```
+///
+/// so a pattern's column gather in the repetition executor is one
+/// contiguous `PIXEL_BLOCK`-wide f32 load instead of a stride-`C*R*S`
+/// walk. Lanes past the end of a ragged final block are zero-filled;
+/// every element of the `ceil(rows/PB) * C*R*S * PB` range is written,
+/// so `dst` may hold stale data from a previous tile.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_rows_transposed(
+    x: &Tensor,
+    r: usize,
+    s: usize,
+    stride: usize,
+    padding: usize,
+    px0: usize,
+    rows: usize,
+    dst: &mut [f32],
+) {
+    const PB: usize = PIXEL_BLOCK;
+    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let oh = (h + 2 * padding - r) / stride + 1;
+    let ow = (w + 2 * padding - s) / stride + 1;
+    let plane = oh * ow;
+    let cols = c * r * s;
+    let blocks = rows.div_ceil(PB);
+    debug_assert!(px0 + rows <= n * plane, "pixel range out of bounds");
+    assert!(
+        dst.len() >= blocks * cols * PB,
+        "im2col_rows_transposed scratch too small"
+    );
+    for blk in 0..blocks {
+        let base = blk * cols * PB;
+        let lanes = PB.min(rows - blk * PB);
+        if lanes < PB {
+            // ragged final block: zero the whole block once so the
+            // executor can run full-width vector ops over every block
+            dst[base..base + cols * PB].fill(0.0);
+        }
+        for lane in 0..lanes {
+            let px = px0 + blk * PB + lane;
+            let ni = px / plane;
+            let rem = px % plane;
+            let oy = rem / ow;
+            let ox = rem % ow;
+            for ci in 0..c {
+                for ry in 0..r {
+                    let iy = oy * stride + ry;
+                    let in_y = iy >= padding && iy - padding < h;
+                    for sx in 0..s {
+                        let ix = ox * stride + sx;
+                        let v = if in_y && ix >= padding && ix - padding < w {
+                            x.at4(ni, ci, iy - padding, ix - padding)
+                        } else {
+                            0.0
+                        };
+                        dst[base + (ci * r * s + ry * s + sx) * PB + lane] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// im2col + GEMM convolution. Weight is flattened filter-major to
 /// [C*R*S, K] so output comes out [N*OH*OW, K], then re-laid to NCHW.
 /// Runs the GEMM on the process-wide pool.
@@ -198,7 +274,8 @@ mod tests {
 
     #[test]
     fn geometry() {
-        let g = Conv2dGeometry { n: 1, c: 16, h: 32, w: 32, k: 32, r: 3, s: 3, stride: 2, padding: 1 };
+        let g =
+            Conv2dGeometry { n: 1, c: 16, h: 32, w: 32, k: 32, r: 3, s: 3, stride: 2, padding: 1 };
         assert_eq!(g.out_h(), 16);
         assert_eq!(g.out_w(), 16);
         assert_eq!(g.dense_macs(), (32 * 16 * 16) as u64 * (16 * 9) as u64);
@@ -259,6 +336,51 @@ mod tests {
                     px0 + rows
                 );
                 px0 += rows;
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_rows_transposed_matches_row_major() {
+        const PB: usize = PIXEL_BLOCK;
+        let mut rng = Rng::new(9);
+        let x = Tensor::rand_normal(&[2, 3, 7, 6], 1.0, &mut rng);
+        for (r, s, stride, padding) in [(3, 3, 1, 1), (3, 3, 2, 1), (1, 1, 1, 0), (2, 3, 1, 2)] {
+            let full = im2col(&x, r, s, stride, padding);
+            let pixels = full.dim(0);
+            let cols = full.dim(1);
+            // odd tile width exercises ragged blocks inside and at the end
+            for tile in [5, PB, 2 * PB + 3] {
+                let blocks = tile.div_ceil(PB);
+                let mut scratch = vec![f32::NAN; blocks * cols * PB];
+                let mut px0 = 0;
+                while px0 < pixels {
+                    let rows = tile.min(pixels - px0);
+                    im2col_rows_transposed(&x, r, s, stride, padding, px0, rows, &mut scratch);
+                    for row in 0..rows {
+                        let (blk, lane) = (row / PB, row % PB);
+                        for col in 0..cols {
+                            let got = scratch[blk * cols * PB + col * PB + lane];
+                            let want = full.data()[(px0 + row) * cols + col];
+                            assert_eq!(
+                                got, want,
+                                "px {} col {col} r{r} s{s} stride{stride} pad{padding}",
+                                px0 + row
+                            );
+                        }
+                    }
+                    // ragged lanes are zero-filled, never stale
+                    let last_rows = rows % PB;
+                    if last_rows != 0 {
+                        let blk = rows / PB;
+                        for lane in last_rows..PB {
+                            for col in 0..cols {
+                                assert_eq!(scratch[blk * cols * PB + col * PB + lane], 0.0);
+                            }
+                        }
+                    }
+                    px0 += rows;
+                }
             }
         }
     }

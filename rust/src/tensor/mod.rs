@@ -7,11 +7,13 @@
 //! paper's arithmetic-reduction metric divides by (supp. G).
 //!
 //! Parallel layout: `gemm_into` blocks the row dimension over the shared
-//! scoped-thread pool (`util::pool`), and `im2col` exists in two forms —
-//! the full `[N*OH*OW, C*R*S]` matrix for the dense baseline, and
-//! `im2col_rows`, which fills just a pixel tile's rows into
-//! caller-owned scratch. The tiled repetition executor fuses patch
-//! extraction through `im2col_rows`, so its peak memory is one tile of
+//! persistent worker pool (`util::pool`), and `im2col` exists in three
+//! forms — the full `[N*OH*OW, C*R*S]` matrix for the dense baseline,
+//! `im2col_rows`, which fills just a pixel tile's rows into caller-owned
+//! scratch, and `im2col_rows_transposed`, the pixel-major layout the
+//! repetition executor streams (`[C*R*S, PIXEL_BLOCK]` blocks, so a
+//! column gather is one contiguous SIMD-width load). The tiled executor
+//! fuses patch extraction per tile, so its peak memory is one tile of
 //! patches per worker thread instead of the whole matrix. Every parallel
 //! entry point partitions work identically for any thread count, keeping
 //! results bit-identical to the serial path.
@@ -19,7 +21,10 @@
 mod conv;
 mod ops;
 
-pub use conv::{conv2d_gemm, conv2d_gemm_pool, conv2d_naive, im2col, im2col_rows, Conv2dGeometry};
+pub use conv::{
+    conv2d_gemm, conv2d_gemm_pool, conv2d_naive, im2col, im2col_rows, im2col_rows_transposed,
+    Conv2dGeometry, PIXEL_BLOCK,
+};
 pub use ops::{gemm, gemm_into, gemm_into_pool};
 
 /// Row-major dense f32 tensor with an explicit shape.

@@ -111,6 +111,76 @@ pub fn write_bench_json(path: &Path, records: &[BenchRecord]) -> std::io::Result
     std::fs::write(path, j.to_string())
 }
 
+/// Load a bench series written by [`write_bench_json`].
+pub fn read_bench_json(path: &Path) -> anyhow::Result<Vec<BenchRecord>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+    j.req_arr("records")?.iter().map(BenchRecord::from_json).collect()
+}
+
+/// Compare a fresh bench series against a committed baseline and return
+/// one human-readable line per regression (empty = pass). Records are
+/// matched by `(op, shape, threads)`; a record that regresses by more
+/// than `tolerance` (fractional, e.g. `0.25` = 25%) fails:
+///
+/// * throughput records (`gflops > 0` in the baseline) fail when
+///   current GFLOP/s drops below `baseline * (1 - tolerance)`;
+/// * time-only records fail when current min time exceeds
+///   `baseline * (1 + tolerance)`.
+///
+/// Baseline records missing from the current series are regressions too
+/// (a silently dropped series must not pass CI); *extra* current
+/// records are ignored so new studies can land before their baseline.
+pub fn compare_bench(
+    baseline: &[BenchRecord],
+    current: &[BenchRecord],
+    tolerance: f64,
+) -> Vec<String> {
+    let mut regressions = Vec::new();
+    for b in baseline {
+        let Some(c) = current
+            .iter()
+            .find(|c| c.op == b.op && c.shape == b.shape && c.threads == b.threads)
+        else {
+            regressions.push(format!(
+                "{} [{}] t{}: record missing from current series",
+                b.op, b.shape, b.threads
+            ));
+            continue;
+        };
+        if b.gflops > 0.0 {
+            let floor = b.gflops * (1.0 - tolerance);
+            if c.gflops < floor {
+                regressions.push(format!(
+                    "{} [{}] t{}: {:.3} GFLOP/s < baseline {:.3} - {:.0}% = {:.3}",
+                    b.op,
+                    b.shape,
+                    b.threads,
+                    c.gflops,
+                    b.gflops,
+                    tolerance * 100.0,
+                    floor
+                ));
+            }
+        } else {
+            let ceil = b.min_ns as f64 * (1.0 + tolerance);
+            if c.min_ns as f64 > ceil {
+                regressions.push(format!(
+                    "{} [{}] t{}: {} ns > baseline {} ns + {:.0}%",
+                    b.op,
+                    b.shape,
+                    b.threads,
+                    c.min_ns,
+                    b.min_ns,
+                    tolerance * 100.0
+                ));
+            }
+        }
+    }
+    regressions
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +192,59 @@ mod tests {
         });
         assert!(r.min_ns <= r.median_ns);
         assert!(r.reps == 16);
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_missing_records() {
+        let rec = |op: &str, threads: usize, min_ns: u64, gflops: f64| BenchRecord {
+            op: op.into(),
+            shape: "64x64x28x28 3x3".into(),
+            threads,
+            min_ns,
+            gflops,
+        };
+        let baseline = vec![
+            rec("engine_sb", 1, 1_000_000, 4.0),
+            rec("engine_sb", 4, 300_000, 13.0),
+            rec("plan_build", 1, 2_000_000, 0.0),
+        ];
+        // within tolerance: slightly slower engine, slightly slower build
+        let ok = vec![
+            rec("engine_sb", 1, 1_200_000, 3.4),
+            rec("engine_sb", 4, 320_000, 12.0),
+            rec("plan_build", 1, 2_300_000, 0.0),
+        ];
+        assert!(compare_bench(&baseline, &ok, 0.25).is_empty());
+        // 50% gflops drop on one record + missing another + slow build
+        let bad = vec![
+            rec("engine_sb", 1, 2_000_000, 2.0),
+            rec("plan_build", 1, 3_000_000, 0.0),
+        ];
+        let regs = compare_bench(&baseline, &bad, 0.25);
+        assert_eq!(regs.len(), 3, "{regs:?}");
+        // extra current records never fail the gate
+        let extra = vec![
+            rec("engine_sb", 1, 1_000_000, 4.0),
+            rec("engine_sb", 4, 300_000, 13.0),
+            rec("plan_build", 1, 2_000_000, 0.0),
+            rec("new_study", 8, 1, 100.0),
+        ];
+        assert!(compare_bench(&baseline, &extra, 0.25).is_empty());
+    }
+
+    #[test]
+    fn bench_json_read_roundtrip() {
+        let recs = vec![BenchRecord {
+            op: "plan_build".into(),
+            shape: "resnet18 16x3x3 layers".into(),
+            threads: 2,
+            min_ns: 5_000_000,
+            gflops: 1.25,
+        }];
+        let path = std::env::temp_dir().join("plum_bench_read_test.json");
+        write_bench_json(&path, &recs).unwrap();
+        assert_eq!(read_bench_json(&path).unwrap(), recs);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -121,6 +121,7 @@ impl Json {
 
     // ---- writer ---------------------------------------------------------------
 
+    #[allow(clippy::inherent_to_string)] // serialization, not Display formatting
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

@@ -1,5 +1,5 @@
 //! Small shared substrates: JSON codec, deterministic RNG, bench
-//! harness, scoped-thread worker pool.
+//! harness, persistent worker pool.
 
 pub mod bench;
 pub mod json;

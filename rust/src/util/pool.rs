@@ -1,65 +1,288 @@
-//! Dependency-free scoped-thread worker pool.
+//! Dependency-free persistent worker pool.
 //!
 //! rayon/crossbeam are not in the offline vendor set, so the parallel
-//! hot paths (tiled repetition executor, blocked GEMM) share this small
-//! pool built on `std::thread::scope`:
+//! hot paths (tiled repetition executor, blocked GEMM, parallel plan
+//! build) share this small pool. Workers are spawned **once per
+//! `Pool`** and parked on a condvar between dispatches: a `run_with`
+//! call publishes one type-erased task, enlists `min(jobs, threads) - 1`
+//! workers (a tiny dispatch never stalls on the whole pool cycling),
+//! participates in the work itself, then waits for the stragglers.
+//! Small-layer and serving-path dispatches therefore pay a condvar
+//! wakeup, not a thread spawn (the scoped spawn-per-call pool this
+//! replaces paid `threads` spawns + joins on every layer).
 //!
-//! * work is expressed as `jobs` indexed items; workers pull the next
-//!   index from a shared atomic counter (self-balancing — a slow tile
-//!   does not stall the other workers);
-//! * each worker builds its scratch state once via `init` and reuses it
-//!   across every job it claims (`run_with`), so per-tile arenas are
-//!   allocated `threads` times, not `jobs` times;
+//! The execution contract is unchanged:
+//!
+//! * work is `jobs` indexed items; participants pull the next index
+//!   from a shared atomic counter (self-balancing — a slow tile does
+//!   not stall the other workers);
+//! * each participant builds its scratch lazily via `init` on its first
+//!   claimed job and reuses it across every job it claims (`run_with`),
+//!   so per-tile arenas are allocated at most `threads` times, not
+//!   `jobs` times;
 //! * what gets computed for job `j` depends only on `j`, never on which
 //!   worker claims it, so results are bit-identical for every thread
-//!   count — the engine's N-thread output equals its 1-thread output.
+//!   count — the engine's N-thread output equals its 1-thread output;
+//! * a panic inside a job (or `init`) cancels the remaining jobs and is
+//!   re-raised on the dispatching thread once every worker has
+//!   quiesced; the pool stays usable afterwards;
+//! * concurrent `run*` calls from different threads serialize on the
+//!   pool (one CPU's worth of workers — overlapping them would only
+//!   oversubscribe); a re-entrant call from inside a pool job runs
+//!   inline on the calling worker.
 //!
 //! The default pool size is `std::thread::available_parallelism`,
 //! overridable with `PLUM_THREADS` (e.g. `PLUM_THREADS=1` to force the
-//! serial path for A/B timing).
+//! serial path for A/B timing) or programmatically via
+//! [`Pool::init_global`] (the CLI's `--threads` flag).
 
+use std::any::Any;
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
 
-/// A fixed-width scoped-thread pool. Threads live only for the duration
-/// of each `run*` call (scoped), so the pool itself is just a width.
-#[derive(Debug, Clone)]
+thread_local! {
+    /// True while this thread is executing a pool job — used to run
+    /// re-entrant dispatches inline instead of deadlocking on the
+    /// (busy) workers.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Lock that shrugs off poisoning: jobs panic inside `catch_unwind`, so
+/// a poisoned mutex only ever means "a previous dispatch panicked", not
+/// "the protected state is torn".
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One published dispatch: a type-erased pointer to the dispatching
+/// thread's stack-held [`RunState`] plus the monomorphized entry point
+/// that claims job indices from it.
+///
+/// The pointer is only dereferenced by workers between the dispatch
+/// being published and `active` reaching zero — and the dispatching
+/// thread does not drop the `RunState` (or return) until it has
+/// observed `active == 0`, so the pointer never dangles while visible.
+#[derive(Clone, Copy)]
+struct Task {
+    data: *const (),
+    run: unsafe fn(*const ()),
+}
+
+// Safety: `data` points at a `RunState` whose shared parts are only the
+// atomic job counter, `Sync` closures, and a mutex — see `Task` docs
+// for the lifetime argument.
+unsafe impl Send for Task {}
+
+/// Worker-visible dispatch state, guarded by `Inner::state`.
+struct Dispatch {
+    /// Bumped once per published task. A worker acts on a generation at
+    /// most once (it can never lag a full generation behind, because
+    /// the dispatcher waits for the generation to quiesce before
+    /// publishing the next one).
+    generation: u64,
+    task: Option<Task>,
+    /// Worker participation slots left in the current generation — a
+    /// dispatch involves only `min(jobs, threads) - 1` workers, so a
+    /// 2-job dispatch on a wide pool does not stall on the whole pool
+    /// cycling through the mutex.
+    slots: usize,
+    /// Workers still executing the current generation.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<Dispatch>,
+    /// Workers park here waiting for a new generation (or shutdown).
+    work_cv: Condvar,
+    /// The dispatching thread parks here waiting for `active == 0`.
+    done_cv: Condvar,
+}
+
+fn worker_main(inner: Arc<Inner>) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = lock(&inner.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen {
+                    seen = st.generation;
+                    if st.slots > 0 {
+                        st.slots -= 1;
+                        break st.task.expect("task published for active generation");
+                    }
+                    // generation already has its full complement of
+                    // participants — sit this one out
+                }
+                st = inner.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        IN_POOL_JOB.with(|f| f.set(true));
+        // Safety: the dispatcher keeps the RunState alive until this
+        // worker decrements `active` below.
+        unsafe { (task.run)(task.data) };
+        IN_POOL_JOB.with(|f| f.set(false));
+        let mut st = lock(&inner.state);
+        st.active -= 1;
+        if st.active == 0 {
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+/// Shared state of one `run_with` dispatch, held on the dispatching
+/// thread's stack and handed to workers as a type-erased pointer.
+struct RunState<S, I, F> {
+    next: AtomicUsize,
+    jobs: usize,
+    init: *const I,
+    f: *const F,
+    /// First panic payload from any participant, re-raised by the
+    /// dispatcher after the run quiesces.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    _scratch: PhantomData<fn() -> S>,
+}
+
+impl<S, I, F> RunState<S, I, F>
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
+    /// Claim and run job indices until none remain. Scratch is built
+    /// lazily so workers that lose the race for a short job list never
+    /// pay `init`. Panics are captured, cancel the remaining jobs, and
+    /// are re-raised by the dispatcher.
+    fn execute(&self) {
+        // Safety: `init`/`f` outlive the dispatch (they live in the
+        // `run_with` frame that waits for all participants).
+        let (init, f) = unsafe { (&*self.init, &*self.f) };
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            let mut scratch: Option<S> = None;
+            loop {
+                let j = self.next.fetch_add(1, Ordering::Relaxed);
+                if j >= self.jobs {
+                    break;
+                }
+                let s = scratch.get_or_insert_with(init);
+                f(s, j);
+            }
+        }));
+        if let Err(payload) = res {
+            // cancel the remaining jobs; keep only the first payload
+            self.next.store(self.jobs, Ordering::Relaxed);
+            let mut slot = lock(&self.panic);
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+    }
+}
+
+/// Monomorphized trampoline stored in [`Task::run`].
+///
+/// # Safety
+/// `data` must point at a live `RunState<S, I, F>` of exactly these
+/// type parameters.
+unsafe fn run_erased<S, I, F>(data: *const ())
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
+    let run = unsafe { &*(data as *const RunState<S, I, F>) };
+    run.execute();
+}
+
+/// A fixed-width pool of persistent worker threads. `threads - 1`
+/// workers are spawned at construction and parked between dispatches;
+/// the dispatching thread acts as the final worker. Width-1 pools spawn
+/// nothing and always run inline.
 pub struct Pool {
     threads: usize,
+    inner: Option<Arc<Inner>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes dispatches from different caller threads.
+    run_lock: Mutex<()>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
 }
 
 impl Pool {
-    /// Pool with an explicit width (clamped to >= 1).
+    /// Pool with an explicit width (clamped to >= 1). Spawns its
+    /// `threads - 1` persistent workers immediately.
     pub fn new(threads: usize) -> Pool {
-        Pool { threads: threads.max(1) }
+        let threads = threads.max(1);
+        let mut pool = Pool {
+            threads,
+            inner: None,
+            handles: Vec::new(),
+            run_lock: Mutex::new(()),
+        };
+        if threads > 1 {
+            let inner = Arc::new(Inner {
+                state: Mutex::new(Dispatch {
+                    generation: 0,
+                    task: None,
+                    slots: 0,
+                    active: 0,
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            });
+            for _ in 0..threads - 1 {
+                let inner = Arc::clone(&inner);
+                pool.handles.push(std::thread::spawn(move || worker_main(inner)));
+            }
+            pool.inner = Some(inner);
+        }
+        pool
     }
 
     /// Process-wide pool: `PLUM_THREADS` env override, else
-    /// `available_parallelism`, else 1.
+    /// `available_parallelism`, else 1. Built lazily on first use;
+    /// [`Pool::init_global`] can pin the width before that.
     pub fn global() -> &'static Pool {
-        static POOL: OnceLock<Pool> = OnceLock::new();
-        POOL.get_or_init(|| {
-            let threads = std::env::var("PLUM_THREADS")
-                .ok()
-                .and_then(|v| v.parse::<usize>().ok())
-                .filter(|t| *t > 0)
-                .unwrap_or_else(|| {
-                    std::thread::available_parallelism()
-                        .map(|n| n.get())
-                        .unwrap_or(1)
-                });
-            Pool::new(threads)
-        })
+        GLOBAL_POOL.get_or_init(|| Pool::new(default_global_threads()))
+    }
+
+    /// Pin the process-wide pool width (the CLI's `--threads` flag; the
+    /// programmatic equivalent of `PLUM_THREADS`). Must run before the
+    /// first [`Pool::global`] dispatch: once the global pool exists with
+    /// a different width this fails, because resizing a live pool would
+    /// invalidate in-flight timing comparisons.
+    pub fn init_global(threads: usize) -> Result<(), String> {
+        let want = threads.max(1);
+        let pool = GLOBAL_POOL.get_or_init(|| Pool::new(want));
+        if pool.threads() == want {
+            Ok(())
+        } else {
+            Err(format!(
+                "global pool already initialized with {} threads (wanted {want})",
+                pool.threads()
+            ))
+        }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// Run jobs `0..jobs` across the pool. Each worker calls `init` once
-    /// for its private scratch, then claims job indices off a shared
-    /// counter until none remain. With one thread (or one job) everything
-    /// runs inline on the caller's thread — no spawn overhead.
+    /// Run jobs `0..jobs` across the pool. Each participant calls
+    /// `init` once (lazily, before its first job) for its private
+    /// scratch, then claims job indices off a shared counter until none
+    /// remain. Width-1 pools, single jobs, and re-entrant calls from
+    /// inside a pool job all run inline on the caller's thread.
     pub fn run_with<S, I, F>(&self, jobs: usize, init: I, f: F)
     where
         I: Fn() -> S + Sync,
@@ -68,29 +291,65 @@ impl Pool {
         if jobs == 0 {
             return;
         }
-        let workers = self.threads.min(jobs);
-        if workers <= 1 {
-            let mut scratch = init();
-            for j in 0..jobs {
-                f(&mut scratch, j);
+        let inner = match &self.inner {
+            Some(inner) if jobs > 1 && !IN_POOL_JOB.with(Cell::get) => inner,
+            _ => {
+                let mut scratch = init();
+                for j in 0..jobs {
+                    f(&mut scratch, j);
+                }
+                return;
             }
-            return;
+        };
+
+        let run = RunState::<S, I, F> {
+            next: AtomicUsize::new(0),
+            jobs,
+            init: &init,
+            f: &f,
+            panic: Mutex::new(None),
+            _scratch: PhantomData,
+        };
+        let task = Task {
+            data: &run as *const RunState<S, I, F> as *const (),
+            run: run_erased::<S, I, F>,
+        };
+
+        // the dispatcher is one participant; only enough workers to
+        // cover the remaining jobs are enlisted
+        let helpers = self.threads.min(jobs) - 1;
+        let _dispatch = lock(&self.run_lock);
+        {
+            let mut st = lock(&inner.state);
+            st.generation = st.generation.wrapping_add(1);
+            st.task = Some(task);
+            st.slots = helpers;
+            st.active = helpers;
+            if 2 * helpers >= self.handles.len() {
+                inner.work_cv.notify_all();
+            } else {
+                for _ in 0..helpers {
+                    inner.work_cv.notify_one();
+                }
+            }
         }
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| {
-                    let mut scratch = init();
-                    loop {
-                        let j = next.fetch_add(1, Ordering::Relaxed);
-                        if j >= jobs {
-                            break;
-                        }
-                        f(&mut scratch, j);
-                    }
-                });
+        // the dispatching thread is the final worker; mark it as inside
+        // a pool job so nested dispatches run inline
+        let was_in_job = IN_POOL_JOB.with(|c| c.replace(true));
+        run.execute();
+        IN_POOL_JOB.with(|c| c.set(was_in_job));
+        {
+            let mut st = lock(&inner.state);
+            while st.active > 0 {
+                st = inner.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
-        });
+            st.task = None;
+        }
+        // `run` is only dropped (and `run_with` only returns) after
+        // every worker has quiesced — the Task pointer never dangles
+        if let Some(payload) = lock(&run.panic).take() {
+            resume_unwind(payload);
+        }
     }
 
     /// Scratch-free variant of [`Pool::run_with`].
@@ -100,6 +359,35 @@ impl Pool {
     {
         self.run_with(jobs, || (), |_, j| f(j));
     }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if let Some(inner) = &self.inner {
+            {
+                let mut st = lock(&inner.state);
+                st.shutdown = true;
+                inner.work_cv.notify_all();
+            }
+            for h in self.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+static GLOBAL_POOL: OnceLock<Pool> = OnceLock::new();
+
+fn default_global_threads() -> usize {
+    std::env::var("PLUM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|t| *t > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
 }
 
 /// Shared mutable view of an `f32` buffer for workers that write
@@ -220,5 +508,100 @@ mod tests {
             sum.fetch_add(j, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn workers_are_persistent_across_dispatches() {
+        use std::collections::HashSet;
+        let pool = Pool::new(4);
+        let ids = Mutex::new(HashSet::new());
+        for _ in 0..10 {
+            pool.run(64, |_| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        // 3 persistent workers + the dispatching thread; the scoped
+        // spawn-per-call pool would have shown ~30 distinct ids here
+        let n = ids.lock().unwrap().len();
+        assert!(n <= 4, "10 dispatches touched {n} distinct threads — workers not reused");
+    }
+
+    #[test]
+    fn panic_in_job_propagates_and_pool_survives() {
+        for threads in [1, 3] {
+            let pool = Pool::new(threads);
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(16, |j| {
+                    if j == 5 {
+                        panic!("job 5 exploded");
+                    }
+                });
+            }));
+            assert!(res.is_err(), "panic must reach the dispatcher ({threads} threads)");
+            // the pool stays fully usable after a panicked dispatch
+            let sum = AtomicUsize::new(0);
+            pool.run(10, |j| {
+                sum.fetch_add(j, Ordering::SeqCst);
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), 45, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn panic_in_init_propagates() {
+        let pool = Pool::new(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_with(8, || panic!("init exploded"), |_: &mut (), _| {});
+        }));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let pool = Pool::new(4);
+        let hits = AtomicUsize::new(0);
+        pool.run(32, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 32);
+        drop(pool); // must neither hang nor leave detached workers spinning
+    }
+
+    #[test]
+    fn reentrant_dispatch_runs_inline() {
+        let pool = Pool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            // nested dispatch on the busy pool must not deadlock
+            pool.run(3, |_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_serialize_safely() {
+        let pool = Pool::new(2);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|sc| {
+            for _ in 0..4 {
+                sc.spawn(|| {
+                    for _ in 0..8 {
+                        pool.run(16, |_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 8 * 16);
+    }
+
+    #[test]
+    fn init_global_pins_only_before_first_use() {
+        let width = Pool::global().threads();
+        assert!(Pool::init_global(width).is_ok(), "same width is idempotent");
+        assert!(Pool::init_global(width + 1).is_err(), "live pool cannot be resized");
     }
 }

@@ -1,7 +1,8 @@
-//! Integration tests for the tile-fused parallel execution backend:
-//! ragged tiles, degenerate tile sizes, thread-count sweeps, and the
-//! exact-equality guarantee (N-thread output == 1-thread output, bit for
-//! bit), plus parallel-GEMM determinism of the dense baseline.
+//! Integration tests for the tile-fused parallel execution backend (now
+//! the pixel-major / transposed layout): ragged tiles, degenerate tile
+//! sizes, thread-count sweeps, and the exact-equality guarantee
+//! (N-thread output == 1-thread output, bit for bit), plus parallel-GEMM
+//! determinism of the dense baseline.
 
 use plum::quant::{self, default_beta, quantize_signed_binary, Scheme};
 use plum::repetition::{
@@ -87,6 +88,27 @@ fn n_thread_exactly_equals_one_thread_on_strided_conv() {
         let t1 = execute_conv2d_tiled(&plan, &x, &Pool::new(1), 7);
         let tn = execute_conv2d_tiled(&plan, &x, &Pool::new(num_cpus()), 7);
         assert!(t1.data() == tn.data(), "sparsity={sparsity}: tile-7 widths differ");
+    }
+}
+
+#[test]
+fn transposed_path_bit_exact_across_widths_and_ragged_blocks() {
+    // tile sizes chosen to force every PIXEL_BLOCK shape the transposed
+    // layout can produce: sub-block tiles, block-aligned tiles, ragged
+    // final blocks inside a tile, and ragged final tiles
+    use plum::repetition::PIXEL_BLOCK;
+    let g = Conv2dGeometry { n: 1, c: 6, h: 11, w: 7, k: 10, r: 3, s: 3, stride: 1, padding: 1 };
+    let (x, q) = workload(g, 45);
+    let plan = plan_layer(&q, g, EngineConfig::default());
+    for tile in [1, PIXEL_BLOCK - 1, PIXEL_BLOCK, PIXEL_BLOCK + 3, 3 * PIXEL_BLOCK, 77] {
+        let base = execute_conv2d_tiled(&plan, &x, &Pool::new(1), tile);
+        for threads in [2, num_cpus(), num_cpus() + 3] {
+            let out = execute_conv2d_tiled(&plan, &x, &Pool::new(threads), tile);
+            assert!(
+                out.data() == base.data(),
+                "tile {tile}: {threads}-thread bits differ from 1-thread"
+            );
+        }
     }
 }
 

@@ -1,0 +1,85 @@
+//! Randomized-geometry property tests for the pixel-major (transposed)
+//! executor: for arbitrary n/c/k/r/s/stride/padding/sub-tile/tile draws,
+//! the engine must (a) match the dense im2col+GEMM reference, (b) be
+//! bit-identical across pool widths, and (c) agree per pixel with the
+//! literal SumMerge CSE DAG (`CseDag::eval_row`) — three independently
+//! built evaluators of the same quantized conv.
+
+use plum::quant::{self, Scheme};
+use plum::repetition::{build_cse, execute_conv2d_tiled, plan_layer, EngineConfig};
+use plum::tensor::{conv2d_gemm_pool, im2col, Conv2dGeometry, Tensor};
+use plum::util::{Pool, Rng};
+
+fn random_geometry(rng: &mut Rng) -> Conv2dGeometry {
+    let r = [1, 2, 3, 5][rng.below(4)];
+    let s = [1, 2, 3][rng.below(3)];
+    Conv2dGeometry {
+        n: 1 + rng.below(2),
+        c: 1 + rng.below(8),
+        h: r + rng.below(8), // h >= r keeps out_h >= 1 for any padding
+        w: s + rng.below(8),
+        k: 1 + rng.below(12),
+        r,
+        s,
+        stride: 1 + rng.below(2),
+        padding: rng.below(3),
+    }
+}
+
+#[test]
+fn random_geometries_match_gemm_and_cse_dag() {
+    let mut rng = Rng::new(0xD1CE);
+    let serial = Pool::new(1);
+    let wide = Pool::new(3);
+    let schemes = [Scheme::Binary, Scheme::ternary_default(), Scheme::sb_default()];
+    for case in 0..24 {
+        let g = random_geometry(&mut rng);
+        let scheme = schemes[rng.below(schemes.len())];
+        let subtile = [3, 5, 8, 17][rng.below(4)];
+        let tile = [1, 5, 32, 100][rng.below(4)];
+        let sparsity_support = case % 2 == 0;
+        let ctx = format!(
+            "case {case}: {g:?} scheme {} subtile {subtile} tile {tile} sp {sparsity_support}",
+            scheme.name()
+        );
+
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quant::quantize(&w, scheme, None);
+        let plan = plan_layer(&q, g, EngineConfig { subtile, sparsity_support });
+
+        // (a) engine == dense reference
+        let dense = conv2d_gemm_pool(&x, &q.values, g.stride, g.padding, &serial);
+        let out = execute_conv2d_tiled(&plan, &x, &serial, tile);
+        assert!(dense.max_abs_diff(&out) < 1e-3, "engine vs dense: {ctx}");
+
+        // (b) transposed path is bit-identical across pool widths
+        let out_wide = execute_conv2d_tiled(&plan, &x, &wide, tile);
+        assert!(out.data() == out_wide.data(), "thread bits: {ctx}");
+
+        // (c) engine == SumMerge CSE DAG, pixel by pixel
+        let dag = build_cse(&q, g, 120);
+        let patches = im2col(&x, g.r, g.s, g.stride, g.padding);
+        let (oh, ow) = (g.out_h(), g.out_w());
+        let pixels = g.n * oh * ow;
+        let e = g.c * g.r * g.s;
+        let step = (pixels / 5).max(1); // sample ~5 pixels per case
+        let mut px = 0;
+        while px < pixels {
+            let row = &patches.data()[px * e..(px + 1) * e];
+            let per_filter = dag.eval_row(row);
+            let ni = px / (oh * ow);
+            let oy = (px % (oh * ow)) / ow;
+            let ox = px % ow;
+            for fi in 0..g.k {
+                let got = out.at4(ni, fi, oy, ox);
+                assert!(
+                    (got - per_filter[fi]).abs() < 2e-3,
+                    "engine {got} vs dag {} at px {px} filter {fi}: {ctx}",
+                    per_filter[fi]
+                );
+            }
+            px += step;
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Compile-only stub of the `xla` crate (xla_extension bindings).
+//!
+//! Exists so `cargo check --features pjrt` (and the pjrt-gated targets)
+//! build on machines without the xla_extension shared library. The
+//! surface mirrors what plum's `runtime/pjrt.rs` uses:
+//!
+//! * [`Literal`] construction, reshape and host readback are fully
+//!   functional (plain CPU buffers), so literal round-trip tests pass;
+//! * everything that would touch PJRT ([`PjRtClient::cpu`],
+//!   `compile`, `execute`) returns [`Error::Unavailable`] pointing at
+//!   the real bindings — swap the path dependency in rust/Cargo.toml
+//!   for a real xla-rs checkout to actually execute HLO.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Stub error. The real crate's error is also surfaced with `{:?}` by
+/// plum, so a Debug-able enum is all the callers need.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The operation needs the real xla_extension bindings.
+    Unavailable(&'static str),
+    /// Literal-shape misuse that the stub can detect host-side.
+    Shape(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what} is unavailable in the vendored xla stub — point the `xla` \
+                 path dependency at a real xla-rs/xla_extension checkout (see \
+                 rust/README.md build matrix)"
+            ),
+            Error::Shape(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types plum reads back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Backing storage of a [`Literal`]. Public only because the
+/// [`NativeType`] trait mentions it; treat as an implementation detail.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    #[allow(dead_code)] // constructed only by real executions
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal: the one part of the xla surface the stub
+/// implements for real (construction, reshape, readback).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+/// Scalar/vector element types [`Literal`]s are built from and read
+/// back into.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            LiteralData::F32(v) => Ok(v.clone()),
+            other => Err(Error::Shape(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::S32(data)
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            LiteralData::S32(v) => Ok(v.clone()),
+            other => Err(Error::Shape(format!("literal is not s32: {other:?}"))),
+        }
+    }
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { data: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error::Shape(format!(
+                "cannot reshape {have} elements to {dims:?}"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::S32(v) => v.len(),
+            LiteralData::Tuple(ts) => ts.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        match &self.data {
+            LiteralData::F32(_) => Ok(ElementType::F32),
+            LiteralData::S32(_) => Ok(ElementType::S32),
+            LiteralData::Tuple(_) => Err(Error::Shape("tuple literal has no element type".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(ts) => Ok(ts),
+            other => Err(Error::Shape(format!("literal is not a tuple: {other:?}"))),
+        }
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation wrapper around a parsed proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer returned by executions.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (never constructible in the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle. `cpu()` always errors in the stub: the process
+/// has no xla_extension runtime to attach to.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.ty().unwrap(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn pjrt_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
