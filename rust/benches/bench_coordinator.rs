@@ -49,6 +49,23 @@ fn main() {
         );
     }
 
+    // end-to-end on the repetition engine — always available, no
+    // features, no artifacts (tiny resnet8 keeps `cargo bench` fast)
+    {
+        let cfg = plum::config::RunConfig {
+            replicas: 2,
+            max_batch: 4,
+            ..plum::config::RunConfig::default()
+        };
+        match plum::experiments::serving::drive_engine(&cfg, "resnet8", 128) {
+            Ok(r) => println!(
+                "RESULT bench_coordinator engine_rps={:.1} mean_ms={:.1} p95_ms={:.1}",
+                r.throughput_rps, r.mean_ms, r.p95_ms
+            ),
+            Err(e) => println!("engine serve failed: {e:#}"),
+        }
+    }
+
     // end-to-end with PJRT if the feature is on and artifacts are present
     #[cfg(feature = "pjrt")]
     {

@@ -10,22 +10,39 @@ pub struct Args {
     pub flags: BTreeMap<String, String>,
 }
 
+/// A token opens a new flag (rather than serving as the pending flag's
+/// value) only when it carries the `--` prefix *and* the rest is not a
+/// number. Bare `-`-prefixed tokens — negative values like `-0.05`
+/// after `--delta` — are never switches, and a numeric tail (`--0.5`)
+/// never names a flag.
+fn opens_flag(tok: &str) -> bool {
+    match tok.strip_prefix("--") {
+        Some(rest) => rest.parse::<f64>().is_err(),
+        None => false,
+    }
+}
+
 impl Args {
     /// Parse everything after the subcommand.
     pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
         let mut out = Args::default();
         let mut it = items.into_iter().peekable();
         while let Some(tok) = it.next() {
-            if let Some(name) = tok.strip_prefix("--") {
+            if opens_flag(&tok) {
+                let name = tok.strip_prefix("--").expect("flag tokens carry the -- prefix");
                 // --k=v or --k v or --switch
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
+                } else if it.peek().map(|n| !opens_flag(n)).unwrap_or(false) {
                     let v = it.next().unwrap();
+                    // a double-dashed number reaching the value slot is a
+                    // negative number with a doubled dash — store the
+                    // parseable form so numeric getters see it
+                    let v = if v.starts_with("--") && v[1..].parse::<f64>().is_ok() {
+                        v[1..].to_string()
+                    } else {
+                        v
+                    };
                     out.flags.insert(name.to_string(), v);
                 } else {
                     out.flags.insert(name.to_string(), "true".to_string());
@@ -98,5 +115,33 @@ mod tests {
         let a = parse("");
         assert_eq!(a.get_or("x", "d"), "d");
         assert_eq!(a.get_u64("n", 7), 7);
+    }
+
+    #[test]
+    fn negative_number_values_are_not_switches() {
+        let a = parse("--delta -0.05 --quiet");
+        assert_eq!(a.get_f32("delta", 0.0), -0.05);
+        assert!(a.has("quiet"));
+        // equals form too
+        let b = parse("--delta=-0.05");
+        assert_eq!(b.get_f32("delta", 0.0), -0.05);
+        // negative integers
+        let c = parse("--offset -3 --steps 10");
+        assert_eq!(c.get("offset"), Some("-3"));
+        assert_eq!(c.get_usize("steps", 0), 10);
+        // a numeric tail never names a flag, even with the -- prefix;
+        // the doubled dash is normalized so numeric getters parse it
+        let d = parse("--delta --0.5");
+        assert!(!d.has("0.5"));
+        assert_eq!(d.get("delta"), Some("-0.5"));
+        assert_eq!(d.get_f32("delta", 0.0), -0.5);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_stays_a_switch() {
+        let a = parse("--fresh --steps 5");
+        assert!(a.has("fresh"));
+        assert_eq!(a.get("fresh"), Some("true"));
+        assert_eq!(a.get_usize("steps", 0), 5);
     }
 }

@@ -1,10 +1,12 @@
 //! Launcher CLI (S10): subcommand dispatch for the `plum` binary.
 //!
-//! Commands that execute through PJRT (train, serve, quantize, the
-//! accuracy tables) require the `pjrt` feature; on a default build they
-//! fail with a pointer to the build matrix in rust/README.md. Engine and
-//! simulator harnesses (fig7/fig9/fig10, energy, cse, scaling, pareto,
-//! registry, report) are always available.
+//! Commands that execute through PJRT (train, quantize, the accuracy
+//! tables, `serve --backend pjrt`) require the `pjrt` feature; on a
+//! default build they fail with a pointer to the build matrix in
+//! rust/README.md. Engine and simulator harnesses (fig7/fig9/fig10,
+//! energy, cse, scaling, repetition, network, pareto, registry, report)
+//! and engine-backed serving (`serve`, default backend) are always
+//! available.
 
 pub mod args;
 
@@ -12,9 +14,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::ModelRegistry;
-use crate::experiments::{self, figures, tables};
-#[cfg(feature = "pjrt")]
-use crate::experiments::serving;
+use crate::experiments::{self, figures, serving, tables};
 #[cfg(feature = "pjrt")]
 use crate::quant::PackedSignedBinary;
 #[cfg(feature = "pjrt")]
@@ -36,9 +36,14 @@ COMMANDS:
          table1..table12 | tables | all  [pjrt]
          pareto | fig7 | fig9 | fig10 | energy | cse | scaling
          repetition [--out FILE]            scaling studies -> BENCH_current.json
+         network [--depth N] [--batch N] [--out FILE]
+                                            full-network forward scaling on the
+                                            repetition engine (CIFAR ResNet)
          compare --current FILE [--baseline FILE] [--tolerance F]
                                             fail on perf regression vs baseline
-  serve --model NAME [--requests N] [--replicas R] [--ckpt PATH]       [pjrt]
+  serve [--backend engine|pjrt] --model NAME [--requests N] [--replicas R]
+        [--ckpt PATH]                       engine: CIFAR ResNet on plain CPU
+                                            (default); pjrt needs the feature
   report weights --model NAME               figure 6/11 distributions
   quantize --model NAME                     density/repetition/bit report [pjrt]
   registry                                  list artifacts + footprints
@@ -150,6 +155,9 @@ fn cmd_bench(cfg: &RunConfig, args: &Args) -> Result<()> {
         // the full perf-trajectory run CI gates on: executor scaling +
         // plan-build scaling, persisted as BENCH_repetition.json
         "repetition" => bench_repetition(cfg, args),
+        // whole-network forward through the network executor — the
+        // `network_forward` series, gated like the repetition series
+        "network" => bench_network(cfg, args),
         "compare" => bench_compare(args),
         other => bench_trained(cfg, args, other, subtile),
     }
@@ -161,6 +169,20 @@ fn bench_repetition(cfg: &RunConfig, args: &Args) -> Result<()> {
     // default away from BENCH_repetition.json: that path is the
     // committed CI baseline, and re-baselining should be an explicit act
     let out = std::path::PathBuf::from(args.get_or("out", "BENCH_current.json"));
+    let n = figures::write_scaling_records(&points, &out)?;
+    println!("wrote {n} records to {}", out.display());
+    Ok(())
+}
+
+fn bench_network(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let depth = args.get_usize("depth", 20);
+    let batch = args.get_usize("batch", 1);
+    let subtile = args.get_usize("subtile", 0); // 0 = auto-tuned
+    let threads = args.get_usize("threads", 0);
+    let (_, points) = figures::network_forward_study(cfg, depth, batch, subtile, threads)?;
+    // like `bench repetition`, default away from the committed baseline
+    // (BENCH_network.json) so re-baselining stays an explicit act
+    let out = std::path::PathBuf::from(args.get_or("out", "BENCH_network_current.json"));
     let n = figures::write_scaling_records(&points, &out)?;
     println!("wrote {n} records to {}", out.display());
     Ok(())
@@ -264,12 +286,23 @@ fn bench_trained(_cfg: &RunConfig, _args: &Args, target: &str, _subtile: usize) 
     }
 }
 
-#[cfg(feature = "pjrt")]
+/// Serve on the repetition engine by default (plain CPU, no features);
+/// `--backend pjrt` routes to the AOT runtime when it is compiled in.
+/// Default model is per backend: the engine compiles zoo geometry
+/// ("resnet20"), pjrt loads the artifact by name ("resnet20_sb").
 fn cmd_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
-    let model = args.get_or("model", "resnet20_sb").to_string();
     let requests = args.get_usize("requests", 256);
-    let ckpt = args.get("ckpt").map(std::path::PathBuf::from);
-    let report = serving::drive(cfg, &model, requests, ckpt)?;
+    let report = match args.get_or("backend", "engine") {
+        "engine" => {
+            let model = args.get_or("model", "resnet20");
+            serving::drive_engine(cfg, model, requests)?
+        }
+        "pjrt" => {
+            let model = args.get_or("model", "resnet20_sb").to_string();
+            serve_pjrt(cfg, args, &model, requests)?
+        }
+        other => return Err(anyhow!("unknown serve backend '{other}' — engine | pjrt")),
+    };
     println!(
         "\nserved {} requests on {} replica(s): {:.1} req/s, mean {:.1} ms, p95 {:.1} ms",
         report.requests, report.replicas, report.throughput_rps, report.mean_ms, report.p95_ms
@@ -277,9 +310,25 @@ fn cmd_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(
+    cfg: &RunConfig,
+    args: &Args,
+    model: &str,
+    requests: usize,
+) -> Result<serving::ServeReport> {
+    let ckpt = args.get("ckpt").map(std::path::PathBuf::from);
+    serving::drive(cfg, model, requests, ckpt)
+}
+
 #[cfg(not(feature = "pjrt"))]
-fn cmd_serve(_cfg: &RunConfig, _args: &Args) -> Result<()> {
-    Err(pjrt_required("plum serve"))
+fn serve_pjrt(
+    _cfg: &RunConfig,
+    _args: &Args,
+    _model: &str,
+    _requests: usize,
+) -> Result<serving::ServeReport> {
+    Err(pjrt_required("plum serve --backend pjrt"))
 }
 
 fn cmd_report(cfg: &RunConfig, args: &Args) -> Result<()> {

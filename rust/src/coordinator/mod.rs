@@ -1,13 +1,19 @@
 //! Serving coordinator (S7): request router + dynamic batcher + model
-//! workers over the PJRT runtime. Pure std threads/channels (tokio is not
-//! in the offline vendor set); the architecture mirrors a vLLM-style
-//! router: clients submit single-sample requests, a batcher groups them
-//! under a size/deadline policy, workers run the AOT infer executable,
+//! workers over a pluggable [`InferBackend`]. Pure std threads/channels
+//! (tokio is not in the offline vendor set); the architecture mirrors a
+//! vLLM-style router: clients submit single-sample requests, a batcher
+//! groups them under a size/deadline policy, workers run the backend,
 //! and a router spreads load across replicas.
 //!
-//! PLUM integration: each worker serves a *quantized* model artifact —
-//! the signed-binary infer HLO whose hot path is the L1 Pallas kernel —
-//! and the registry reports the packed one-bit footprint (S2's
+//! Backends: `network::EngineBackend` serves whole models compiled onto
+//! the repetition engine on plain CPU (the default, no features);
+//! [`PjrtBackend`] (feature `pjrt`) runs the AOT infer executable;
+//! [`MockBackend`] keeps the batching/routing invariants property-
+//! testable in isolation.
+//!
+//! PLUM integration: each worker serves a *quantized* model — the
+//! engine path executes the signed-binary plans directly — and the
+//! registry reports the packed one-bit footprint (S2's
 //! `PackedSignedBinary`) so deployment density matches the paper's
 //! bit-accounting.
 

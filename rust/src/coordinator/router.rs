@@ -78,8 +78,9 @@ mod tests {
 
     #[test]
     fn router_spreads_load() {
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
         let workers = (0..3)
-            .map(|_| spawn_worker(move || Ok(slow_mock()), BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) }).unwrap())
+            .map(|_| spawn_worker(move || Ok(slow_mock()), policy).unwrap())
             .collect();
         let router = Router::new(workers);
         let mut rxs = Vec::new();

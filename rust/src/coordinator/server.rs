@@ -198,7 +198,8 @@ mod tests {
 
     #[test]
     fn many_requests_all_answered_correctly() {
-        let w = spawn_worker(move || Ok(mock()), BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }).unwrap();
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        let w = spawn_worker(move || Ok(mock()), policy).unwrap();
         let mut rxs = Vec::new();
         for i in 0..37 {
             rxs.push((i, w.submit(vec![i as f32, 0.0, 0.0]).unwrap()));

@@ -109,7 +109,12 @@ impl SyntheticDataset {
     }
 
     /// Evaluation batches draw from a disjoint index range.
-    pub fn eval_batch(&self, eval_offset: usize, start: usize, batch: usize) -> (Vec<f32>, Vec<i32>) {
+    pub fn eval_batch(
+        &self,
+        eval_offset: usize,
+        start: usize,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<i32>) {
         self.batch(eval_offset + start, batch)
     }
 }

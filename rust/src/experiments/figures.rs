@@ -640,6 +640,95 @@ pub fn plan_build_scaling(cfg: &RunConfig, threads: &[usize]) -> Result<Vec<Scal
     Ok(points)
 }
 
+/// `plum bench network`: full-network forward scaling through the
+/// network executor — a whole CIFAR ResNet (sb scheme) compiled once,
+/// then timed end-to-end at each pool width. Verifies the forward pass
+/// is bit-identical at every width and records the `network_forward`
+/// series for the perf-trajectory gate (committed baseline:
+/// BENCH_network.json).
+pub fn network_forward_study(
+    cfg: &RunConfig,
+    depth: usize,
+    batch: usize,
+    subtile: usize,
+    thread_cap: usize,
+) -> Result<(Vec<usize>, Vec<ScalingPoint>)> {
+    use crate::network::{NetworkExecutor, NetworkPlan};
+    use std::sync::Arc;
+
+    let batch = batch.max(1);
+    let layers = models::cifar_resnet_layers(depth, 1.0, 32, batch);
+    let ecfg = EngineConfig { subtile, sparsity_support: true };
+    let t_compile = std::time::Instant::now();
+    let plan = Arc::new(NetworkPlan::compile_seeded(
+        &layers,
+        ecfg,
+        Scheme::sb_default(),
+        cfg.seed,
+    )?);
+    let compile_ms = t_compile.elapsed().as_secs_f64() * 1e3;
+    let ops = plan.op_counts().total();
+    let dense_ops = 2 * plan.dense_macs();
+    println!(
+        "resnet{depth} b{batch}: {} layers compiled in {compile_ms:.1} ms; {} engine ops/pass \
+         vs {} dense ops ({:.1}x arithmetic reduction); packed weights {} KiB",
+        plan.num_layers(),
+        ops,
+        dense_ops,
+        dense_ops as f64 / ops.max(1) as f64,
+        plan.weight_bits / 8 / 1024
+    );
+
+    let threads = default_thread_ladder(thread_cap);
+    let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+    let mut input = vec![0.0f32; plan.input_elems()];
+    rng.fill_normal(&mut input, 1.0);
+    let flops = dense_ops as f64;
+    let shape = format!("resnet{depth} b{batch} 32px");
+    let reps = cfg.bench_reps;
+    let mut points = Vec::new();
+    let mut printed = Vec::new();
+    let mut base_out: Option<Vec<f32>> = None;
+    let mut base_ns = 0u64;
+    for &t in &threads {
+        let pool = Pool::new(t);
+        let mut exec = NetworkExecutor::new(Arc::clone(&plan));
+        let r = bench(&format!("network t{t}"), 1, reps, || {
+            std::hint::black_box(exec.forward_pool(&input, &pool));
+        });
+        // determinism guarantee: every width produces the same bits
+        let out = exec.forward_pool(&input, &pool).to_vec();
+        if base_out.is_none() {
+            base_out = Some(out);
+            base_ns = r.min_ns;
+        } else if Some(&out) != base_out.as_ref() {
+            return Err(anyhow!(
+                "network forward at {t} threads differs from {} threads",
+                threads[0]
+            ));
+        }
+        printed.push(vec![
+            format!("{t}"),
+            format!("{:.2}", r.min_ns as f64 / 1e6),
+            format!("{:.2}x", base_ns as f64 / r.min_ns as f64),
+            format!("{:.1}", batch as f64 * 1e9 / r.min_ns as f64),
+        ]);
+        points.push(ScalingPoint {
+            op: "network_forward".into(),
+            shape: shape.clone(),
+            threads: t,
+            min_ns: r.min_ns,
+            gflops: flops / r.min_ns as f64,
+        });
+    }
+    print_table(
+        &format!("Network forward scaling — {shape} (bit-identical at every width)"),
+        &["Threads", "forward ms", "speedup", "img/s"],
+        &printed,
+    );
+    Ok((threads, points))
+}
+
 /// Design-choice ablation (DESIGN.md): pattern-memoized planner vs the
 /// literal SumMerge greedy-CSE DAG, per scheme, on mid-size blocks.
 /// Prints arithmetic reduction for both plus the CSE DAG size.

@@ -7,7 +7,6 @@
 //! accuracy/latency differ from the paper's ImageNet/Xeon numbers.
 
 pub mod figures;
-#[cfg(feature = "pjrt")]
 pub mod serving;
 pub mod tables;
 

@@ -1,14 +1,32 @@
-//! Serving load driver: drives the coordinator (router + batcher +
-//! PJRT workers) with an open-loop synthetic request stream and reports
+//! Serving load drivers: drive the coordinator (router + batcher +
+//! workers) with an open-loop synthetic request stream and report
 //! latency/throughput — the end-to-end serving validation.
+//!
+//! Two backends share one driver:
+//!
+//! * [`drive_engine`] — the repetition engine ([`EngineBackend`]):
+//!   compiles a CIFAR ResNet onto the engine **once**, shares the plan
+//!   across all replicas, and serves on plain CPU with no features and
+//!   no artifacts (`plum serve --backend engine`).
+//! * [`drive`] — the PJRT runtime (`--features pjrt`): each worker
+//!   compiles the AOT infer executable from the artifact directory
+//!   (`plum serve --backend pjrt`).
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
-use crate::coordinator::{spawn_worker, BatchPolicy, PjrtBackend, Router};
+#[cfg(feature = "pjrt")]
+use crate::coordinator::PjrtBackend;
+use crate::coordinator::{spawn_worker, BatchPolicy, Router};
 use crate::data::SyntheticDataset;
+use crate::models;
+use crate::network::{EngineBackend, NetworkPlan};
+use crate::quant::Scheme;
+use crate::repetition::EngineConfig;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Manifest;
 
 /// Result of one load run.
@@ -22,8 +40,104 @@ pub struct ServeReport {
     pub replicas: usize,
 }
 
-/// Serve `requests` synthetic samples through `replicas` PJRT workers.
-pub fn drive(cfg: &RunConfig, model: &str, requests: usize, checkpoint: Option<std::path::PathBuf>) -> Result<ServeReport> {
+/// Open-loop driver shared by every backend: submit `requests` synthetic
+/// samples through the router, collect all replies, report latency and
+/// throughput, then shut the replicas down.
+fn drive_router(
+    router: Router,
+    ds: &SyntheticDataset,
+    sample: usize,
+    requests: usize,
+) -> Result<ServeReport> {
+    let replicas = router.replicas();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    let mut buf = vec![0.0f32; sample];
+    for i in 0..requests {
+        ds.render(i, &mut buf);
+        let (rx, _) = router.submit(buf.clone())?;
+        pending.push((Instant::now(), rx));
+    }
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
+    for (t_submit, rx) in pending {
+        rx.recv()??;
+        lat_ms.push(t_submit.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p95_ms = if lat_ms.is_empty() {
+        0.0
+    } else {
+        lat_ms[((lat_ms.len() as f64 * 0.95) as usize).min(lat_ms.len() - 1)]
+    };
+    let report = ServeReport {
+        requests,
+        wall_secs: wall,
+        throughput_rps: requests as f64 / wall,
+        mean_ms: lat_ms.iter().sum::<f64>() / lat_ms.len().max(1) as f64,
+        p95_ms,
+        replicas,
+    };
+    for i in 0..router.replicas() {
+        println!("  {}", router.worker(i).latency.report(&format!("replica{i}")));
+    }
+    router.shutdown()?;
+    Ok(report)
+}
+
+/// CIFAR ResNet depth from a model name like `resnet20` / `resnet20_sb`.
+fn resnet_depth(model: &str) -> Option<usize> {
+    let rest = model.strip_prefix("resnet")?;
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok().filter(|d| *d >= 8 && (*d - 2) % 6 == 0)
+}
+
+/// Serve `requests` synthetic samples through `cfg.replicas` repetition-
+/// engine workers — no `pjrt` feature, no artifacts. The device batch is
+/// `cfg.max_batch`; one [`NetworkPlan`] is compiled up front and shared.
+pub fn drive_engine(cfg: &RunConfig, model: &str, requests: usize) -> Result<ServeReport> {
+    let depth = resnet_depth(model).ok_or_else(|| {
+        anyhow!("engine backend serves CIFAR ResNets ('resnetN', N = 6n+2) — got '{model}'")
+    })?;
+    let batch = cfg.max_batch.max(1);
+    let layers = models::cifar_resnet_layers(depth, 1.0, 32, batch);
+    eprintln!(
+        "compiling resnet{depth} (batch {batch}, {} conv layers) onto the repetition engine...",
+        layers.len()
+    );
+    // subtile 0 = auto-tuned per layer: serving compiles once and then
+    // runs hot, exactly where the tuner's one-time cost amortizes
+    let ecfg = EngineConfig { subtile: 0, sparsity_support: true };
+    let plan = Arc::new(NetworkPlan::compile_seeded(
+        &layers,
+        ecfg,
+        Scheme::sb_default(),
+        cfg.seed,
+    )?);
+    println!(
+        "plan: {} layers, {} ops/pass vs {} dense MACs, {} KiB packed weights",
+        plan.num_layers(),
+        plan.op_counts().total(),
+        plan.dense_macs(),
+        plan.weight_bits / 8 / 1024
+    );
+    let sample = plan.sample_elems();
+    let ds = SyntheticDataset::new("serve", 10, 3, 32, cfg.seed);
+    let policy = BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(cfg.max_wait_ms) };
+    let workers = (0..cfg.replicas.max(1))
+        .map(|_| spawn_worker(EngineBackend::factory(Arc::clone(&plan)), policy))
+        .collect::<Result<Vec<_>>>()?;
+    drive_router(Router::new(workers), &ds, sample, requests)
+}
+
+/// Serve `requests` synthetic samples through `cfg.replicas` PJRT workers.
+#[cfg(feature = "pjrt")]
+pub fn drive(
+    cfg: &RunConfig,
+    model: &str,
+    requests: usize,
+    checkpoint: Option<std::path::PathBuf>,
+) -> Result<ServeReport> {
     let man = Manifest::load(&cfg.artifacts, model)?;
     let ds = SyntheticDataset::new(
         "serve",
@@ -50,36 +164,45 @@ pub fn drive(cfg: &RunConfig, model: &str, requests: usize, checkpoint: Option<s
             )
         })
         .collect::<Result<Vec<_>>>()?;
-    let router = Router::new(workers);
+    drive_router(Router::new(workers), &ds, sample, requests)
+}
 
-    // open-loop submit, then collect
-    let t0 = Instant::now();
-    let mut pending = Vec::with_capacity(requests);
-    let mut buf = vec![0.0f32; sample];
-    for i in 0..requests {
-        ds.render(i, &mut buf);
-        let (rx, _) = router.submit(buf.clone())?;
-        pending.push((Instant::now(), rx));
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_depth_parsing() {
+        assert_eq!(resnet_depth("resnet20"), Some(20));
+        assert_eq!(resnet_depth("resnet8"), Some(8));
+        assert_eq!(resnet_depth("resnet20_sb"), Some(20));
+        assert_eq!(resnet_depth("resnet21"), None); // not 6n+2
+        assert_eq!(resnet_depth("vgg_small"), None);
+        assert_eq!(resnet_depth("resnet"), None);
     }
-    let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
-    for (t_submit, rx) in pending {
-        let reply = rx.recv()??;
-        debug_assert_eq!(reply.len(), man.config.num_classes);
-        lat_ms.push(t_submit.elapsed().as_secs_f64() * 1e3);
+
+    #[test]
+    fn engine_serving_end_to_end_smoke() {
+        // tiny load run: 2 replicas of a resnet8 on 8px images
+        let cfg = RunConfig { replicas: 2, max_batch: 2, max_wait_ms: 1, ..RunConfig::default() };
+        // compile a small plan directly (drive_engine pins 32px CIFAR
+        // geometry; the smoke test shrinks the image for speed)
+        let layers = models::cifar_resnet_layers(8, 0.5, 8, cfg.max_batch);
+        let plan = Arc::new(
+            NetworkPlan::compile(&layers, EngineConfig::default(), Scheme::sb_default()).unwrap(),
+        );
+        let policy = BatchPolicy {
+            max_batch: cfg.max_batch,
+            max_wait: Duration::from_millis(cfg.max_wait_ms),
+        };
+        let workers = (0..cfg.replicas)
+            .map(|_| spawn_worker(EngineBackend::factory(Arc::clone(&plan)), policy).unwrap())
+            .collect();
+        let ds = SyntheticDataset::new("serve", 10, 3, 8, cfg.seed);
+        let report = drive_router(Router::new(workers), &ds, plan.sample_elems(), 17).unwrap();
+        assert_eq!(report.requests, 17);
+        assert_eq!(report.replicas, 2);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p95_ms >= 0.0 && report.mean_ms >= 0.0);
     }
-    let wall = t0.elapsed().as_secs_f64();
-    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let report = ServeReport {
-        requests,
-        wall_secs: wall,
-        throughput_rps: requests as f64 / wall,
-        mean_ms: lat_ms.iter().sum::<f64>() / lat_ms.len().max(1) as f64,
-        p95_ms: lat_ms[((lat_ms.len() as f64 * 0.95) as usize).min(lat_ms.len() - 1)],
-        replicas: cfg.replicas,
-    };
-    for i in 0..router.replicas() {
-        println!("  {}", router.worker(i).latency.report(&format!("replica{i}")));
-    }
-    router.shutdown()?;
-    Ok(report)
 }

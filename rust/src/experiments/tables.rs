@@ -63,13 +63,19 @@ pub fn table1(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedR
 
 /// Tables 2 / 10: {0,1} vs {0,-1} filter-mix ablation.
 #[cfg(feature = "pjrt")]
-pub fn table_mix(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -> Result<Vec<TrainedRow>> {
+pub fn table_mix(
+    cfg: &RunConfig,
+    rt: &Runtime,
+    fresh: bool,
+    imagenet: bool,
+) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let mut rows = Vec::new();
     let mut printed = Vec::new();
     if imagenet {
         let t = index.get("table10").ok_or_else(|| anyhow!("no table10"))?;
-        for (label, key) in [("1.00 / 0.00", "p100"), ("0.25 / 0.75", "p025"), ("0.50 / 0.50", "p050")] {
+        let mixes = [("1.00 / 0.00", "p100"), ("0.25 / 0.75", "p025"), ("0.50 / 0.50", "p050")];
+        for (label, key) in mixes {
             let r = train_and_measure(cfg, rt, t.req_str(key)?, fresh, true)?;
             printed.push(vec![label.to_string(), pct(r.eval_acc)]);
             rows.push(r);
@@ -101,7 +107,12 @@ pub fn table_mix(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -> 
 
 /// Tables 3 / 11: EDE enabled vs disabled.
 #[cfg(feature = "pjrt")]
-pub fn table_ede(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -> Result<Vec<TrainedRow>> {
+pub fn table_ede(
+    cfg: &RunConfig,
+    rt: &Runtime,
+    fresh: bool,
+    imagenet: bool,
+) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let key = if imagenet { "table11" } else { "table3" };
     let t = index.get(key).ok_or_else(|| anyhow!("no {key}"))?;
@@ -143,7 +154,12 @@ pub fn table4(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedR
 
 /// Tables 5 / 12: Delta threshold sensitivity.
 #[cfg(feature = "pjrt")]
-pub fn table_delta(cfg: &RunConfig, rt: &Runtime, fresh: bool, imagenet: bool) -> Result<Vec<TrainedRow>> {
+pub fn table_delta(
+    cfg: &RunConfig,
+    rt: &Runtime,
+    fresh: bool,
+    imagenet: bool,
+) -> Result<Vec<TrainedRow>> {
     let index = load_index(&cfg.artifacts)?;
     let key = if imagenet { "table12" } else { "table5" };
     let t = index.get(key).ok_or_else(|| anyhow!("no {key}"))?;
@@ -284,7 +300,8 @@ pub fn table9(cfg: &RunConfig, rt: &Runtime, fresh: bool) -> Result<Vec<TrainedR
 pub fn pareto(cfg: &RunConfig) -> Result<()> {
     let rows = super::all_results(cfg);
     if rows.is_empty() {
-        return Err(anyhow!("no results in {} — run the table harnesses first", cfg.out_dir.display()));
+        let dir = cfg.out_dir.display();
+        return Err(anyhow!("no results in {dir} — run the table harnesses first"));
     }
     let mut printed = Vec::new();
     // pareto front over (effectual asc, acc desc)

@@ -7,8 +7,10 @@
 //! * L1/L2 (build-time python): Pallas signed-binary kernels + JAX ResNet
 //!   fwd/bwd, AOT-lowered to HLO text (`make artifacts`).
 //! * L3 (this crate): PJRT runtime, training driver, repetition-sparsity
-//!   inference engine, sparse-accelerator energy simulator, serving
-//!   coordinator, benchmark harnesses for every paper table/figure.
+//!   inference engine, the network-level executor that compiles whole
+//!   models onto it (`network`), sparse-accelerator energy simulator,
+//!   serving coordinator, benchmark harnesses for every paper
+//!   table/figure.
 //!
 //! See DESIGN.md for the system inventory and experiment index.
 pub mod cli;
@@ -18,6 +20,7 @@ pub mod data;
 pub mod experiments;
 pub mod metrics;
 pub mod models;
+pub mod network;
 pub mod quant;
 pub mod repetition;
 pub mod runtime;

@@ -24,15 +24,42 @@ impl ConvLayerDesc {
     pub fn weights(&self) -> usize {
         self.geom.weight_count()
     }
+
+    /// Output shape `(channels, height, width)` — what a chained next
+    /// layer must accept as input. The network compiler
+    /// (`network::NetworkPlan`) validates whole descriptor lists with
+    /// this; descriptor builders that insert pooling (vgg/alexnet
+    /// trunks) intentionally break the chain.
+    pub fn out_shape(&self) -> (usize, usize, usize) {
+        (self.geom.k, self.geom.out_h(), self.geom.out_w())
+    }
+
+    /// Input activation elements (batch included).
+    pub fn input_elems(&self) -> usize {
+        self.geom.n * self.geom.c * self.geom.h * self.geom.w
+    }
+
+    /// Output activation elements (batch included).
+    pub fn output_elems(&self) -> usize {
+        self.geom.n * self.geom.k * self.geom.out_h() * self.geom.out_w()
+    }
 }
 
-fn conv(name: String, n: usize, c: usize, h: usize, w: usize, k: usize, ks: usize,
-        stride: usize, quantized: bool) -> ConvLayerDesc {
+#[allow(clippy::too_many_arguments)]
+fn conv(
+    name: String,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    ks: usize,
+    stride: usize,
+    quantized: bool,
+) -> ConvLayerDesc {
     ConvLayerDesc {
         name,
-        geom: Conv2dGeometry {
-            n, c, h, w, k, r: ks, s: ks, stride, padding: ks / 2,
-        },
+        geom: Conv2dGeometry { n, c, h, w, k, r: ks, s: ks, stride, padding: ks / 2 },
         quantized,
     }
 }
@@ -46,13 +73,18 @@ fn scaled(widths: &[usize], mult: f64, floor: usize) -> Vec<usize> {
 
 /// CIFAR ResNet (He et al.): depth = 6n+2, option-A shortcuts (no conv),
 /// stem unquantized. Mirrors `model.Tape.forward`'s cifar_resnet branch.
-pub fn cifar_resnet_layers(depth: usize, width_mult: f64, image: usize, batch: usize) -> Vec<ConvLayerDesc> {
+pub fn cifar_resnet_layers(
+    depth: usize,
+    width_mult: f64,
+    image: usize,
+    batch: usize,
+) -> Vec<ConvLayerDesc> {
     assert_eq!((depth - 2) % 6, 0, "depth must be 6n+2");
     let n = (depth - 2) / 6;
     let widths = scaled(&[16, 32, 64], width_mult, 4);
     let mut layers = Vec::new();
     let mut idx = 0usize;
-    let mut push = |c: usize, h: usize, w: usize, k: usize, ks: usize, st: usize, q: bool, idx: &mut usize| {
+    let mut push = |c, h, w, k, ks, st, q, idx: &mut usize| {
         layers.push(conv(format!("{idx:03}.conv"), batch, c, h, w, k, ks, st, q));
         *idx += 1;
     };
@@ -80,7 +112,7 @@ pub fn resnet18_layers(width_mult: f64, image: usize, batch: usize) -> Vec<ConvL
     let widths = scaled(&[64, 128, 256, 512], width_mult, 8);
     let mut layers = Vec::new();
     let mut idx = 0usize;
-    let mut push = |c: usize, h: usize, w: usize, k: usize, ks: usize, st: usize, q: bool, idx: &mut usize| {
+    let mut push = |c, h, w, k, ks, st, q, idx: &mut usize| {
         layers.push(conv(format!("{idx:03}.conv"), batch, c, h, w, k, ks, st, q));
         *idx += 1;
     };
@@ -128,7 +160,12 @@ pub fn alexnet_small_layers(width_mult: f64, image: usize, batch: usize) -> Vec<
 
 /// Shared builder for plain conv-pool trunks: entries are (channels,
 /// quantized); channels == 0 marks a 2x2 pool.
-fn plan_layers(plan: &[(usize, bool)], width_mult: f64, image: usize, batch: usize) -> Vec<ConvLayerDesc> {
+fn plan_layers(
+    plan: &[(usize, bool)],
+    width_mult: f64,
+    image: usize,
+    batch: usize,
+) -> Vec<ConvLayerDesc> {
     let mut layers = Vec::new();
     let (mut h, mut w) = (image, image);
     let mut in_ch = 3usize;
@@ -222,6 +259,25 @@ mod tests {
         // pools halve spatial dims between stages
         assert_eq!(layers[2].geom.h, 16);
         assert_eq!(layers[4].geom.h, 8);
+    }
+
+    #[test]
+    fn cifar_resnet_layers_chain_contiguously() {
+        // the invariant the network compiler builds on: every layer's
+        // input shape is exactly its predecessor's out_shape()
+        for depth in [8, 20, 32] {
+            let layers = cifar_resnet_layers(depth, 1.0, 32, 2);
+            for i in 1..layers.len() {
+                let (k, oh, ow) = layers[i - 1].out_shape();
+                let g = layers[i].geom;
+                assert_eq!((g.c, g.h, g.w), (k, oh, ow), "depth {depth} layer {i}");
+                assert_eq!(layers[i].output_elems(), 2 * k_next_elems(&layers[i]));
+            }
+        }
+    }
+
+    fn k_next_elems(l: &ConvLayerDesc) -> usize {
+        l.geom.k * l.geom.out_h() * l.geom.out_w()
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Engine-native serving backend: implements the coordinator's
+//! [`InferBackend`] over a [`NetworkExecutor`], so the batcher / router /
+//! server stack serves real repetition-engine traffic on plain CPU — no
+//! `pjrt` feature, no artifacts.
+//!
+//! One [`NetworkPlan`] is compiled once and shared (`Arc`) across every
+//! replica; each worker thread builds its own executor (its own
+//! activation arena) via [`EngineBackend::factory`], mirroring the
+//! one-backend-per-worker deployment shape of the PJRT path. The model
+//! head is a global average pool over the final conv feature map —
+//! `out_elems == K` of the last layer — which keeps the backend fully
+//! determined by the conv descriptors the model zoo provides.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::InferBackend;
+use crate::util::Pool;
+
+use super::{NetworkExecutor, NetworkPlan};
+
+/// [`InferBackend`] over the network executor. Deliberately not `Sync`
+/// (the arena is single-threaded state); the coordinator constructs one
+/// per worker thread, like every other backend.
+pub struct EngineBackend {
+    exec: RefCell<NetworkExecutor>,
+    batch: usize,
+    sample: usize,
+    classes: usize,
+    plane: usize,
+}
+
+impl EngineBackend {
+    pub fn new(plan: Arc<NetworkPlan>) -> EngineBackend {
+        let g = plan.out_geom();
+        EngineBackend {
+            batch: plan.batch(),
+            sample: plan.sample_elems(),
+            classes: g.k,
+            plane: g.out_h() * g.out_w(),
+            exec: RefCell::new(NetworkExecutor::new(plan)),
+        }
+    }
+
+    /// Worker factory for `spawn_worker`: every replica shares the
+    /// compiled plan and owns a private activation arena.
+    pub fn factory(
+        plan: Arc<NetworkPlan>,
+    ) -> impl FnOnce() -> Result<EngineBackend> + Send + 'static {
+        move || Ok(EngineBackend::new(plan))
+    }
+}
+
+impl InferBackend for EngineBackend {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn sample_elems(&self) -> usize {
+        self.sample
+    }
+
+    fn out_elems(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        ensure!(
+            x.len() == self.batch * self.sample,
+            "batch buffer {} != {} x {}",
+            x.len(),
+            self.batch,
+            self.sample
+        );
+        let mut exec = self.exec.borrow_mut();
+        let feat = exec.forward_pool(x, Pool::global());
+        // head: global average pool over the final feature planes
+        let mut logits = vec![0.0f32; self.batch * self.classes];
+        let inv = 1.0 / self.plane as f32;
+        for b in 0..self.batch {
+            for kf in 0..self.classes {
+                let base = (b * self.classes + kf) * self.plane;
+                let s: f32 = feat[base..base + self.plane].iter().sum();
+                logits[b * self.classes + kf] = s * inv;
+            }
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::quant::Scheme;
+    use crate::repetition::EngineConfig;
+
+    fn tiny_plan(batch: usize) -> Arc<NetworkPlan> {
+        let descs = models::cifar_resnet_layers(8, 0.5, 8, batch);
+        let plan = NetworkPlan::compile(&descs, EngineConfig::default(), Scheme::sb_default());
+        Arc::new(plan.unwrap())
+    }
+
+    #[test]
+    fn backend_shapes_follow_the_plan() {
+        let plan = tiny_plan(3);
+        let be = EngineBackend::new(Arc::clone(&plan));
+        assert_eq!(be.batch_size(), 3);
+        assert_eq!(be.sample_elems(), 3 * 8 * 8);
+        assert_eq!(be.out_elems(), plan.out_geom().k);
+    }
+
+    #[test]
+    fn infer_batch_is_deterministic_and_per_sample_independent() {
+        let plan = tiny_plan(2);
+        let be = EngineBackend::new(Arc::clone(&plan));
+        let sample = be.sample_elems();
+        let mut rng = crate::util::Rng::new(50);
+        let mut a = vec![0.0f32; sample];
+        let mut b = vec![0.0f32; sample];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let mut batch_ab = a.clone();
+        batch_ab.extend_from_slice(&b);
+        let mut batch_a0 = a.clone();
+        batch_a0.extend_from_slice(&vec![0.0; sample]);
+        let la = be.infer_batch(&batch_ab).unwrap();
+        let lb = be.infer_batch(&batch_a0).unwrap();
+        let classes = be.out_elems();
+        // sample 0's logits do not depend on what shares its batch
+        assert!(la[..classes] == lb[..classes], "batch slots are not independent");
+        // deterministic across repeated calls
+        let lc = be.infer_batch(&batch_ab).unwrap();
+        assert!(la == lc);
+    }
+
+    #[test]
+    fn wrong_batch_len_errors() {
+        let be = EngineBackend::new(tiny_plan(2));
+        assert!(be.infer_batch(&[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,693 @@
+//! Network-level compilation & execution: whole models on the
+//! repetition engine.
+//!
+//! Everything below `repetition::` executes one conv at a time; this
+//! module is the co-design closure the paper argues for — the
+//! repetition-sparsity trade-off is a *model-level* property, so the
+//! engine should serve whole networks. Two pieces:
+//!
+//! * [`NetworkPlan::compile`] takes the model zoo's geometry descriptors
+//!   (`models::ConvLayerDesc`), quantizes every quantized layer's
+//!   weights under one [`Scheme`], and builds all per-layer
+//!   [`LayerPlan`]s **once**, fanning layers over the persistent worker
+//!   pool (each layer's sub-tile memoization then runs inline on its
+//!   worker). Unquantized layers (the fp stem) compile to a transposed
+//!   dense weight block executed by the same tile-fused machinery.
+//!   Inter-layer wiring (ReLU after every conv; option-A residual
+//!   shortcuts for the CIFAR ResNet stem + 2-conv-block shape) is
+//!   derived from the descriptor list, SparseDNN-style: whole-network
+//!   code generation with buffer reuse decided at compile time.
+//! * [`NetworkExecutor`] runs a full forward pass through
+//!   `execute_conv2d_into` using a preallocated **ping-pong activation
+//!   arena** (three buffers: input, output, and a pinned residual
+//!   source). No per-layer `Tensor` is allocated, per-worker scratch is
+//!   thread-cached (`util::scratch`), and ReLU/residual-add are fused
+//!   into each layer's output scatter — a steady-state forward pass
+//!   performs no heap allocation of activations at all.
+//!
+//! Determinism contract: like the single-layer executor, the forward
+//! pass is **bit-identical for every pool width** (fusion is
+//! elementwise; tile partitioning depends only on tile size), asserted
+//! end-to-end by `tests/integration_network.rs` and re-checked by
+//! `plum bench network`.
+
+mod backend;
+
+pub use backend::EngineBackend;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::models::ConvLayerDesc;
+use crate::quant::{quantize, Scheme};
+use crate::repetition::{
+    execute_conv2d_into, plan_layer_auto_pool, EngineConfig, LayerPlan, OpCounts, PostOp,
+    Residual, DEFAULT_TILE,
+};
+use crate::tensor::{im2col_rows_into, Conv2dGeometry, Tensor};
+use crate::util::{Pool, Rng, ScratchVec, UnsafeSlice};
+
+/// Weight seed for [`NetworkPlan::compile`] when the caller does not
+/// provide one — the supp. G synthetic-latents methodology shared by the
+/// figure harnesses.
+pub const DEFAULT_WEIGHT_SEED: u64 = 0x9e37;
+
+/// Deterministic per-layer gaussian latents (supp. G methodology):
+/// layer `i` draws from an independent RNG stream, so one layer's
+/// weights never depend on how many layers precede it.
+pub fn seeded_latents(layers: &[ConvLayerDesc], seed: u64) -> Vec<Tensor> {
+    layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let mut rng = Rng::new(seed).fork(i as u64 + 1);
+            Tensor::rand_normal(&[l.geom.k, l.geom.c, l.geom.r, l.geom.s], 0.5, &mut rng)
+        })
+        .collect()
+}
+
+/// One compiled layer of a [`NetworkPlan`].
+#[derive(Debug, Clone)]
+pub struct NetworkLayer {
+    pub name: String,
+    pub geom: Conv2dGeometry,
+    /// engine plan (quantized layers); `None` = dense fp fallback
+    pub plan: Option<LayerPlan>,
+    /// fp fallback weights, transposed to `[C*R*S, K]` at compile time
+    dense_wt: Option<Vec<f32>>,
+    /// the dense weights this layer executes (quantized values for
+    /// engine layers, latents for fp layers) — reference checks/reports
+    pub weights: Tensor,
+    /// apply ReLU in the fused epilogue
+    pub relu: bool,
+    /// activation index whose option-A shortcut is added before ReLU
+    /// (activation `i` is the *input* of layer `i`; `0` = network input)
+    pub residual_from: Option<usize>,
+}
+
+/// A whole model compiled onto the repetition engine: per-layer plans
+/// built once, wiring and arena sizing decided at compile time.
+#[derive(Debug, Clone)]
+pub struct NetworkPlan {
+    pub layers: Vec<NetworkLayer>,
+    pub scheme: Scheme,
+    /// element count of activation `a[i]` (`a[0]` = input, `a[L]` = output)
+    act_elems: Vec<usize>,
+    /// `residual_needed[i]`: some later layer reads activation `a[i]`
+    residual_needed: Vec<bool>,
+    /// §6 deployment footprint of all weights under `scheme`
+    pub weight_bits: usize,
+}
+
+impl NetworkPlan {
+    /// Compile with deterministic seeded latents ([`DEFAULT_WEIGHT_SEED`])
+    /// on the process-wide pool.
+    pub fn compile(
+        layers: &[ConvLayerDesc],
+        cfg: EngineConfig,
+        scheme: Scheme,
+    ) -> Result<NetworkPlan> {
+        Self::compile_seeded(layers, cfg, scheme, DEFAULT_WEIGHT_SEED)
+    }
+
+    /// Compile with seeded latents drawn from `seed`.
+    pub fn compile_seeded(
+        layers: &[ConvLayerDesc],
+        cfg: EngineConfig,
+        scheme: Scheme,
+        seed: u64,
+    ) -> Result<NetworkPlan> {
+        let latents = seeded_latents(layers, seed);
+        Self::compile_with_weights(layers, &latents, cfg, scheme, Pool::global())
+    }
+
+    /// Compile from explicit latent weights with the default wiring:
+    /// ReLU after every conv, plus [`resnet_wiring`]'s option-A
+    /// shortcuts **when the descriptor list has the CIFAR ResNet
+    /// shape** (stem + 2-conv blocks). Custom topologies that happen to
+    /// pair-match but must *not* get shortcuts should use
+    /// [`NetworkPlan::compile_with_wiring`] and pass their wiring
+    /// explicitly.
+    pub fn compile_with_weights(
+        descs: &[ConvLayerDesc],
+        latents: &[Tensor],
+        cfg: EngineConfig,
+        scheme: Scheme,
+        pool: &Pool,
+    ) -> Result<NetworkPlan> {
+        Self::compile_with_wiring(descs, latents, &resnet_wiring(descs), cfg, scheme, pool)
+    }
+
+    /// Core compile: quantize + plan every layer from explicit latent
+    /// weights and explicit wiring — one `(relu, residual_from)` pair
+    /// per layer, `residual_from` naming the activation index (`i` =
+    /// input of layer `i`, `0` = network input) whose option-A shortcut
+    /// is added before that layer's ReLU. Layers are fanned over `pool`;
+    /// `cfg.subtile == 0` auto-tunes the sub-tile size per layer (paper
+    /// §6), a fixed value pins it.
+    pub fn compile_with_wiring(
+        descs: &[ConvLayerDesc],
+        latents: &[Tensor],
+        wiring: &[(bool, Option<usize>)],
+        cfg: EngineConfig,
+        scheme: Scheme,
+        pool: &Pool,
+    ) -> Result<NetworkPlan> {
+        ensure!(!descs.is_empty(), "cannot compile an empty network");
+        ensure!(
+            wiring.len() == descs.len(),
+            "{} wiring entries for {} layers",
+            wiring.len(),
+            descs.len()
+        );
+        for (li, (_, rf)) in wiring.iter().enumerate() {
+            if let Some(ai) = rf {
+                ensure!(
+                    *ai <= li,
+                    "layer {li} shortcut reads activation {ai}, which is not computed yet"
+                );
+            }
+        }
+        // the executor pins at most ONE shortcut source in its arena at a
+        // time: each activation may feed one shortcut, and pin live
+        // ranges [source, consumer] must be strictly disjoint — reject
+        // anything else here rather than corrupt the arena at run time
+        let mut shortcuts: Vec<(usize, usize)> = wiring
+            .iter()
+            .enumerate()
+            .filter_map(|(li, (_, rf))| rf.map(|ai| (ai, li)))
+            .collect();
+        shortcuts.sort_unstable();
+        for pair in shortcuts.windows(2) {
+            let (a0, c0) = pair[0];
+            let (a1, c1) = pair[1];
+            ensure!(
+                a1 > c0,
+                "shortcut a[{a1}]->layer {c1} overlaps shortcut a[{a0}]->layer {c0}: the \
+                 executor holds one pinned residual source at a time"
+            );
+        }
+        ensure!(
+            latents.len() == descs.len(),
+            "{} weight tensors for {} layers",
+            latents.len(),
+            descs.len()
+        );
+        if matches!(scheme, Scheme::Fp) {
+            bail!("the repetition engine executes quantized networks — pick a non-fp scheme");
+        }
+        let batch = descs[0].geom.n;
+        for (i, d) in descs.iter().enumerate() {
+            ensure!(d.geom.n == batch, "layer {i} batch {} != network batch {batch}", d.geom.n);
+            let ws = latents[i].shape();
+            let want = [d.geom.k, d.geom.c, d.geom.r, d.geom.s];
+            ensure!(ws == &want[..], "layer {i} weights {ws:?} do not match its geometry");
+            if i > 0 {
+                let (pk, ph, pw) = descs[i - 1].out_shape();
+                let g = d.geom;
+                ensure!(
+                    g.c == pk && g.h == ph && g.w == pw,
+                    "layer {i} ({}) input {}x{}x{} does not chain from layer {} output \
+                     {pk}x{ph}x{pw} — pooled or branching topologies are not supported",
+                    descs[i].name,
+                    g.c,
+                    g.h,
+                    g.w,
+                    i - 1
+                );
+            }
+        }
+        // quantize + plan, one layer per pool job (a layer's own
+        // sub-tile fan-out then runs inline on its worker)
+        let slots: Vec<Mutex<Option<NetworkLayer>>> =
+            (0..descs.len()).map(|_| Mutex::new(None)).collect();
+        pool.run(descs.len(), |li| {
+            let d = &descs[li];
+            let w = &latents[li];
+            let (plan, dense_wt, weights) = if d.quantized {
+                let q = quantize(w, scheme, None);
+                let plan = if cfg.subtile == 0 {
+                    plan_layer_auto_pool(&q, d.geom, cfg.sparsity_support, pool)
+                } else {
+                    LayerPlan::build_pool(&q, d.geom, cfg, pool)
+                };
+                (Some(plan), None, q.values)
+            } else {
+                // fp fallback: transpose OIHW -> [C*R*S, K] once here
+                let e = d.geom.c * d.geom.r * d.geom.s;
+                let k = d.geom.k;
+                let mut wt = vec![0.0f32; e * k];
+                for ki in 0..k {
+                    for ei in 0..e {
+                        wt[ei * k + ki] = w.data()[ki * e + ei];
+                    }
+                }
+                (None, Some(wt), w.clone())
+            };
+            let (relu, residual_from) = wiring[li];
+            *slots[li].lock().unwrap() = Some(NetworkLayer {
+                name: d.name.clone(),
+                geom: d.geom,
+                plan,
+                dense_wt,
+                weights,
+                relu,
+                residual_from,
+            });
+        });
+        let layers: Vec<NetworkLayer> = slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("every layer compiled by the pool run"))
+            .collect();
+
+        let mut act_elems = Vec::with_capacity(descs.len() + 1);
+        act_elems.push(batch * descs[0].geom.c * descs[0].geom.h * descs[0].geom.w);
+        for d in descs {
+            act_elems.push(batch * d.geom.k * d.geom.out_h() * d.geom.out_w());
+        }
+        let mut residual_needed = vec![false; descs.len() + 1];
+        for l in &layers {
+            if let Some(ai) = l.residual_from {
+                residual_needed[ai] = true;
+            }
+        }
+        let weight_bits = descs.iter().map(|d| layer_weight_bits(d, scheme)).sum();
+        Ok(NetworkPlan { layers, scheme, act_elems, residual_needed, weight_bits })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Network batch size (every layer shares it).
+    pub fn batch(&self) -> usize {
+        self.layers[0].geom.n
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.act_elems[0]
+    }
+
+    pub fn output_elems(&self) -> usize {
+        *self.act_elems.last().unwrap()
+    }
+
+    /// Input elements per sample (C*H*W).
+    pub fn sample_elems(&self) -> usize {
+        self.input_elems() / self.batch()
+    }
+
+    /// Geometry of the final conv (its `k`/`out_h`/`out_w` shape the
+    /// network output `[n, k, oh, ow]`).
+    pub fn out_geom(&self) -> Conv2dGeometry {
+        self.layers.last().unwrap().geom
+    }
+
+    /// Largest activation the arena must hold.
+    pub fn max_act_elems(&self) -> usize {
+        *self.act_elems.iter().max().unwrap()
+    }
+
+    /// Elements of activation `a[i]`.
+    pub fn act_elems(&self, i: usize) -> usize {
+        self.act_elems[i]
+    }
+
+    /// Dense MACs of one full forward pass (arithmetic-reduction
+    /// denominator, supp. G).
+    pub fn dense_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.geom.dense_macs()).sum()
+    }
+
+    /// Accounted engine operations of one full forward pass; fp layers
+    /// count their dense MACs as one add + one mul each.
+    pub fn op_counts(&self) -> OpCounts {
+        let mut total = OpCounts::default();
+        for l in &self.layers {
+            let c = match &l.plan {
+                Some(p) => p.op_counts(),
+                None => OpCounts { adds: l.geom.dense_macs(), muls: l.geom.dense_macs() },
+            };
+            total.adds += c.adds;
+            total.muls += c.muls;
+        }
+        total
+    }
+}
+
+/// §6 deployment bit accounting per layer: sb = 1-bit bitmap + one sign
+/// bit per region; binary = 1 bit/weight; ternary = 2; fp layers 32.
+fn layer_weight_bits(desc: &ConvLayerDesc, scheme: Scheme) -> usize {
+    let wc = desc.geom.weight_count();
+    if !desc.quantized {
+        return 32 * wc;
+    }
+    match scheme {
+        Scheme::Fp => 32 * wc,
+        Scheme::Binary => wc,
+        Scheme::Ternary { .. } => 2 * wc,
+        Scheme::SignedBinary { regions_per_filter, .. } => wc + desc.geom.k * regions_per_filter,
+    }
+}
+
+/// Derive the default inter-layer wiring from a descriptor list: ReLU
+/// after every conv; when the list has the CIFAR ResNet shape (stem +
+/// 2-conv blocks whose second conv keeps channels and stride 1), each
+/// block's second conv gains an option-A shortcut from the block input.
+/// This is a *shape heuristic* — chains that match it but are not
+/// residual networks should build their wiring by hand and compile via
+/// [`NetworkPlan::compile_with_wiring`].
+pub fn resnet_wiring(descs: &[ConvLayerDesc]) -> Vec<(bool, Option<usize>)> {
+    let n = descs.len();
+    let mut wiring = vec![(true, None); n];
+    if n >= 3 && (n - 1) % 2 == 0 {
+        let paired = (1..n).step_by(2).all(|i| {
+            let a = descs[i].geom;
+            let b = descs[i + 1].geom;
+            b.c == a.k && b.k == a.k && b.stride == 1 && b.r == a.r && b.s == a.s
+        });
+        if paired {
+            for i in (1..n).step_by(2) {
+                // activation i is the input of block conv i; it shortcuts
+                // into the second conv's output
+                wiring[i + 1].1 = Some(i);
+            }
+        }
+    }
+    wiring
+}
+
+/// Tile-fused dense conv for fp layers (the unquantized stem): per pixel
+/// tile, im2col rows into thread-cached scratch, then a direct product
+/// in ascending C*R*S order — the same accumulation order as
+/// `conv2d_naive`, with the same fused [`PostOp`] epilogue as the engine
+/// path. Per-pixel accumulation never crosses a tile, so N-thread output
+/// is bit-identical to 1-thread.
+fn dense_conv_into(
+    g: Conv2dGeometry,
+    wt: &[f32],
+    x: &[f32],
+    out: &mut [f32],
+    pool: &Pool,
+    tile: usize,
+    post: PostOp<'_>,
+) {
+    let e = g.c * g.r * g.s;
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let plane = oh * ow;
+    let pixels = g.n * plane;
+    assert_eq!(wt.len(), e * g.k, "transposed weights do not match geometry");
+    assert_eq!(x.len(), g.n * g.c * g.h * g.w, "input does not match geometry");
+    assert_eq!(out.len(), g.n * g.k * plane, "output buffer does not match geometry");
+    post.validate(g.n, g.k, oh, ow);
+    if pixels == 0 {
+        return;
+    }
+    let od = UnsafeSlice::new(out);
+    let jobs = pixels.div_ceil(tile);
+    pool.run_with(
+        jobs,
+        || ScratchVec::take(tile * e),
+        |patch, job| {
+            let px0 = job * tile;
+            let tp = tile.min(pixels - px0);
+            im2col_rows_into(x, &g, px0, tp, patch);
+            for row in 0..tp {
+                let px = px0 + row;
+                let ni = px / plane;
+                let pix = px % plane;
+                let prow = &patch[row * e..(row + 1) * e];
+                for ki in 0..g.k {
+                    let mut acc = 0.0f32;
+                    for (ei, pv) in prow.iter().enumerate() {
+                        acc += pv * wt[ei * g.k + ki];
+                    }
+                    let v = post.apply(acc, ni, ki, pix, ow);
+                    unsafe { od.write((ni * g.k + ki) * plane + pix, v) };
+                }
+            }
+        },
+    );
+}
+
+/// Disjoint views of the three arena slots: mutable output, shared
+/// current input, optionally the pinned residual source (which may alias
+/// the input while a block's first conv runs — both are shared reads).
+fn arena_views(
+    bufs: &mut [Vec<f32>; 3],
+    out: usize,
+    cur: usize,
+    held: Option<usize>,
+) -> (&mut Vec<f32>, &Vec<f32>, Option<&Vec<f32>>) {
+    debug_assert!(out != cur && Some(out) != held, "output slot must be free");
+    let mut ov = None;
+    let mut xv = None;
+    let mut hv = None;
+    for (i, b) in bufs.iter_mut().enumerate() {
+        if i == out {
+            ov = Some(b);
+        } else {
+            let view: &Vec<f32> = b;
+            if i == cur {
+                xv = Some(view);
+            }
+            if held == Some(i) {
+                hv = Some(view);
+            }
+        }
+    }
+    (ov.expect("output slot"), xv.expect("input slot"), hv)
+}
+
+/// Runs full forward passes of one [`NetworkPlan`] through a reusable
+/// three-buffer activation arena. Construct once per serving replica;
+/// `forward` never allocates activations.
+#[derive(Debug)]
+pub struct NetworkExecutor {
+    plan: Arc<NetworkPlan>,
+    bufs: [Vec<f32>; 3],
+    tile: usize,
+}
+
+impl NetworkExecutor {
+    pub fn new(plan: Arc<NetworkPlan>) -> NetworkExecutor {
+        let m = plan.max_act_elems();
+        NetworkExecutor {
+            plan,
+            bufs: [vec![0.0; m], vec![0.0; m], vec![0.0; m]],
+            tile: DEFAULT_TILE,
+        }
+    }
+
+    pub fn plan(&self) -> &NetworkPlan {
+        &self.plan
+    }
+
+    /// Full forward pass on the process-wide pool. Returns the final
+    /// activation `[n, k, oh, ow]`, borrowed from the arena.
+    pub fn forward(&mut self, input: &[f32]) -> &[f32] {
+        self.forward_pool(input, Pool::global())
+    }
+
+    /// Full forward pass on an explicit pool (benchmarks pin widths).
+    pub fn forward_pool(&mut self, input: &[f32], pool: &Pool) -> &[f32] {
+        let plan = Arc::clone(&self.plan);
+        assert_eq!(input.len(), plan.input_elems(), "input does not match network geometry");
+        let mut cur = 0usize;
+        self.bufs[cur][..input.len()].copy_from_slice(input);
+        // (arena slot, activation index) pinned for a pending shortcut
+        let mut held: Option<(usize, usize)> = None;
+        for (li, layer) in plan.layers.iter().enumerate() {
+            if plan.residual_needed[li] {
+                held = Some((cur, li));
+            }
+            let held_buf = held.map(|(hb, _)| hb);
+            let out_idx = (0..3usize)
+                .find(|b| *b != cur && Some(*b) != held_buf)
+                .expect("three buffers always leave a free slot");
+            let in_len = plan.act_elems[li];
+            let out_len = plan.act_elems[li + 1];
+            let (ov, xv, hv) = arena_views(&mut self.bufs, out_idx, cur, held_buf);
+            let residual = layer.residual_from.map(|ai| {
+                let (_, ha) = held.expect("shortcut source pinned in the arena");
+                debug_assert_eq!(ha, ai, "hold/wiring mismatch");
+                let sg = plan.layers[ai].geom;
+                let st = (sg.h / layer.geom.out_h()).max(1);
+                Residual {
+                    src: &hv.expect("held arena view")[..plan.act_elems[ai]],
+                    c: sg.c,
+                    h: sg.h,
+                    w: sg.w,
+                    stride: st,
+                }
+            });
+            let post = PostOp { relu: layer.relu, residual };
+            match &layer.plan {
+                Some(lp) => execute_conv2d_into(
+                    lp,
+                    &xv[..in_len],
+                    &mut ov[..out_len],
+                    pool,
+                    self.tile,
+                    post,
+                ),
+                None => dense_conv_into(
+                    layer.geom,
+                    layer.dense_wt.as_ref().expect("fp layer keeps dense weights"),
+                    &xv[..in_len],
+                    &mut ov[..out_len],
+                    pool,
+                    self.tile,
+                    post,
+                ),
+            }
+            cur = out_idx;
+            if layer.residual_from.is_some() {
+                held = None;
+            }
+        }
+        &self.bufs[cur][..plan.output_elems()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::repetition::{execute_conv2d_pool, plan_layer};
+
+    fn sb() -> Scheme {
+        Scheme::sb_default()
+    }
+
+    #[test]
+    fn resnet8_wiring_and_layer_kinds() {
+        let descs = models::cifar_resnet_layers(8, 0.5, 16, 1);
+        let plan = NetworkPlan::compile(&descs, EngineConfig::default(), sb()).unwrap();
+        assert_eq!(plan.num_layers(), 7);
+        // fp stem executes dense; every block conv has an engine plan
+        assert!(plan.layers[0].plan.is_none());
+        assert!(plan.layers[1..].iter().all(|l| l.plan.is_some()));
+        // option-A shortcut on each block's second conv, from block input
+        assert_eq!(plan.layers[2].residual_from, Some(1));
+        assert_eq!(plan.layers[4].residual_from, Some(3));
+        assert_eq!(plan.layers[6].residual_from, Some(5));
+        assert!(plan.layers.iter().all(|l| l.relu));
+        // arena must fit the widest activation
+        assert!(plan.max_act_elems() >= plan.input_elems());
+        assert!(plan.op_counts().total() > 0);
+        assert!(plan.weight_bits > 0);
+    }
+
+    #[test]
+    fn pooled_topologies_are_rejected() {
+        let descs = models::vgg_small_layers(0.5, 32, 1);
+        let err = NetworkPlan::compile(&descs, EngineConfig::default(), sb());
+        assert!(err.is_err(), "pooling gaps must not compile");
+    }
+
+    #[test]
+    fn fp_scheme_is_rejected() {
+        let descs = models::cifar_resnet_layers(8, 0.5, 16, 1);
+        assert!(NetworkPlan::compile(&descs, EngineConfig::default(), Scheme::Fp).is_err());
+    }
+
+    #[test]
+    fn plain_chain_matches_layer_by_layer_engine() {
+        // two quantized convs, no residual pattern: forward must
+        // bit-match unfused per-layer execution + ReLU
+        let g1 = Conv2dGeometry { n: 2, c: 3, h: 8, w: 8, k: 4, r: 3, s: 3, stride: 1, padding: 1 };
+        let g2 = Conv2dGeometry { n: 2, c: 4, h: 8, w: 8, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
+        let descs = vec![
+            ConvLayerDesc { name: "a".into(), geom: g1, quantized: true },
+            ConvLayerDesc { name: "b".into(), geom: g2, quantized: true },
+        ];
+        let latents = seeded_latents(&descs, 7);
+        let cfg = EngineConfig::default();
+        let pool = Pool::new(2);
+        let plan = NetworkPlan::compile_with_weights(&descs, &latents, cfg, sb(), &pool).unwrap();
+        let plan = Arc::new(plan);
+        assert!(plan.layers.iter().all(|l| l.residual_from.is_none()));
+
+        let mut rng = Rng::new(41);
+        let x = Tensor::rand_normal(&[2, 3, 8, 8], 1.0, &mut rng);
+        let mut exec = NetworkExecutor::new(Arc::clone(&plan));
+        let out = exec.forward_pool(x.data(), &pool).to_vec();
+
+        let q1 = quantize(&latents[0], sb(), None);
+        let q2 = quantize(&latents[1], sb(), None);
+        let mut y1 = execute_conv2d_pool(&plan_layer(&q1, g1, cfg), &x, &pool);
+        y1.data_mut().iter_mut().for_each(|v| *v = v.max(0.0));
+        let mut y2 = execute_conv2d_pool(&plan_layer(&q2, g2, cfg), &y1, &pool);
+        y2.data_mut().iter_mut().for_each(|v| *v = v.max(0.0));
+        assert!(out == y2.data(), "network forward differs from layer-by-layer reference");
+    }
+
+    #[test]
+    fn explicit_wiring_overrides_the_resnet_heuristic() {
+        let g1 = Conv2dGeometry { n: 1, c: 3, h: 6, w: 6, k: 4, r: 3, s: 3, stride: 1, padding: 1 };
+        let g2 = Conv2dGeometry { n: 1, c: 4, h: 6, w: 6, k: 4, r: 3, s: 3, stride: 1, padding: 1 };
+        let descs = vec![
+            ConvLayerDesc { name: "a".into(), geom: g1, quantized: true },
+            ConvLayerDesc { name: "b".into(), geom: g2, quantized: true },
+            ConvLayerDesc { name: "c".into(), geom: g2, quantized: true },
+        ];
+        let latents = seeded_latents(&descs, 9);
+        let pool = Pool::new(1);
+        let cfg = EngineConfig::default();
+        // the heuristic wires a shortcut into this pair-matching 3-chain
+        let auto = NetworkPlan::compile_with_weights(&descs, &latents, cfg, sb(), &pool).unwrap();
+        assert_eq!(auto.layers[2].residual_from, Some(1));
+        // explicit all-None wiring keeps it a plain chain
+        let plain = vec![(true, None); 3];
+        let p = NetworkPlan::compile_with_wiring(&descs, &latents, &plain, cfg, sb(), &pool);
+        assert!(p.unwrap().layers.iter().all(|l| l.residual_from.is_none()));
+        // future-activation shortcuts are rejected
+        let bad = vec![(true, None), (true, Some(2)), (true, None)];
+        let err = NetworkPlan::compile_with_wiring(&descs, &latents, &bad, cfg, sb(), &pool);
+        assert!(err.is_err());
+        // overlapping pin ranges (two pending shortcut sources at once,
+        // or one activation feeding two shortcuts) are rejected: the
+        // executor pins a single residual source
+        let overlap = vec![(true, None), (true, Some(0)), (true, Some(1))];
+        let err = NetworkPlan::compile_with_wiring(&descs, &latents, &overlap, cfg, sb(), &pool);
+        assert!(err.is_err());
+        let dup = vec![(true, None), (true, Some(0)), (true, Some(0))];
+        let err = NetworkPlan::compile_with_wiring(&descs, &latents, &dup, cfg, sb(), &pool);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn forward_reuses_the_arena_and_is_deterministic() {
+        let descs = models::cifar_resnet_layers(8, 0.5, 8, 1);
+        let plan = Arc::new(NetworkPlan::compile(&descs, EngineConfig::default(), sb()).unwrap());
+        let pool = Pool::new(2);
+        let mut exec = NetworkExecutor::new(Arc::clone(&plan));
+        let mut rng = Rng::new(42);
+        let mut input = vec![0.0f32; plan.input_elems()];
+        rng.fill_normal(&mut input, 1.0);
+        let (p1, o1) = {
+            let o = exec.forward_pool(&input, &pool);
+            (o.as_ptr(), o.to_vec())
+        };
+        let (p2, o2) = {
+            let o = exec.forward_pool(&input, &pool);
+            (o.as_ptr(), o.to_vec())
+        };
+        assert_eq!(p1, p2, "second forward must land in the same arena slot");
+        assert!(o1 == o2, "repeated forwards must be bit-identical");
+        assert_eq!(o1.len(), plan.output_elems());
+    }
+
+    #[test]
+    fn seeded_latents_are_per_layer_stable() {
+        let d20 = models::cifar_resnet_layers(20, 1.0, 32, 1);
+        let d8 = models::cifar_resnet_layers(8, 1.0, 32, 1);
+        let l20 = seeded_latents(&d20, 3);
+        let l8 = seeded_latents(&d8, 3);
+        // shared prefix geometry -> identical weights per layer index
+        assert_eq!(l20[0].data(), l8[0].data());
+        assert_eq!(l20[1].data(), l8[1].data());
+    }
+}

@@ -5,8 +5,8 @@
 //! (`util::pool`). Per tile, one worker:
 //!
 //!   1. **fuses im2col, transposed**: builds just the tile's patch rows
-//!      into its own scratch buffer via `im2col_rows_transposed` — as
-//!      `[C*R*S, PIXEL_BLOCK]` blocks with pixels minor, so the full
+//!      into its own scratch buffer via `im2col_rows_transposed_into` —
+//!      as `[C*R*S, PIXEL_BLOCK]` blocks with pixels minor, so the full
 //!      `[N*OH*OW, C*R*S]` patch matrix is never materialized *and*
 //!      every later column access is a contiguous SIMD-width run;
 //!   2. walks the plan's CSR index arena once per pixel block: every
@@ -22,22 +22,28 @@
 //!      the same block layout and multiplies by alpha once;
 //!   4. scatters unique-filter results to the original filter slots
 //!      (inter-filter dedup) — each tile owns a disjoint set of output
-//!      pixels, so workers write without synchronization.
+//!      pixels, so workers write without synchronization. The optional
+//!      [`PostOp`] epilogue (residual add, ReLU — the network executor's
+//!      inter-layer fusion) is applied elementwise right here, so a
+//!      fused multi-layer forward never makes a second pass over the
+//!      activations.
 //!
 //! Tile and block partitioning depend only on the tile size, never on
 //! the thread count, each worker owns its psum/usum/patch arenas, and
 //! ragged final blocks are zero-padded to full SIMD width, so per-lane
 //! f32 accumulation order is fixed and N-thread output is
 //! **bit-identical** to 1-thread output (asserted in tests and the
-//! scaling harness).
+//! scaling harness). Worker scratch is drawn from the thread-local
+//! [`ScratchVec`] cache: the pool's workers are persistent, so a
+//! steady-state serving loop performs no per-layer heap allocation.
 //!
 //! With sparsity support ON, zero entries never enter a sum and all-zero
 //! patterns are skipped. OFF, the zero group is summed and multiplied by
 //! zero — faithfully modelling a repetition-only system (paper §5.1
 //! config 1).
 
-use crate::tensor::{im2col_rows_transposed, Tensor};
-use crate::util::{Pool, UnsafeSlice};
+use crate::tensor::{im2col_rows_transposed_into, Tensor};
+use crate::util::{Pool, ScratchVec, UnsafeSlice};
 
 pub use crate::tensor::PIXEL_BLOCK;
 
@@ -48,6 +54,72 @@ use super::plan::LayerPlan;
 /// pre-tiling executor; small enough that a tile's patch scratch
 /// (`tile * C*R*S` floats) stays cache-resident.
 pub const DEFAULT_TILE: usize = 32;
+
+/// An option-A residual shortcut fused into the output scatter: before
+/// the epilogue's ReLU, channel `fi < c` of each output pixel gains the
+/// spatially-subsampled source value. Channels `>= c` are zero-padded
+/// (He et al. option A — no projection weights).
+#[derive(Debug, Clone, Copy)]
+pub struct Residual<'a> {
+    /// source activation, NCHW `[n, c, h, w]`
+    pub src: &'a [f32],
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// spatial subsampling factor (`h / out_h`, 1 for identity)
+    pub stride: usize,
+}
+
+/// Elementwise epilogue fused into the executor's scatter stage —
+/// applied per output element in `residual → ReLU` order, matching a
+/// separate-pass reference bit for bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PostOp<'a> {
+    pub relu: bool,
+    pub residual: Option<Residual<'a>>,
+}
+
+impl PostOp<'_> {
+    /// Assert the epilogue is consistent with an `[n, k, oh, ow]`
+    /// output — shared by every kernel that fuses this epilogue.
+    pub(crate) fn validate(&self, n: usize, k: usize, oh: usize, ow: usize) {
+        if let Some(res) = &self.residual {
+            assert_eq!(res.src.len(), n * res.c * res.h * res.w, "residual buffer mismatch");
+            assert_eq!(res.h, oh * res.stride, "residual height / stride mismatch");
+            assert_eq!(res.w, ow * res.stride, "residual width / stride mismatch");
+            assert!(res.c <= k, "residual has more channels than the output");
+        }
+    }
+
+    /// Apply to one output element (channel `fi` of pixel `pix` within
+    /// sample `ni`, output width `ow`): residual add, then ReLU — one
+    /// definition of the option-A index math for every kernel.
+    #[inline]
+    pub(crate) fn apply(&self, v: f32, ni: usize, fi: usize, pix: usize, ow: usize) -> f32 {
+        let mut v = v;
+        if let Some(res) = &self.residual {
+            if fi < res.c {
+                let oy = pix / ow;
+                let ox = pix % ow;
+                v += res.src
+                    [((ni * res.c + fi) * res.h + oy * res.stride) * res.w + ox * res.stride];
+            }
+        }
+        if self.relu {
+            v = v.max(0.0);
+        }
+        v
+    }
+}
+
+/// Per-worker scratch, drawn from (and returned to) the thread-local
+/// [`ScratchVec`] cache. Every element read is written first within the
+/// same tile, so recycled stale contents are harmless.
+struct Scratch {
+    patch: ScratchVec,
+    psums: ScratchVec,
+    usums: ScratchVec,
+}
 
 /// Execute one conv layer through the repetition engine on the
 /// process-wide pool.
@@ -60,54 +132,66 @@ pub fn execute_conv2d_pool(plan: &LayerPlan, x: &Tensor, pool: &Pool) -> Tensor 
     execute_conv2d_tiled(plan, x, pool, DEFAULT_TILE)
 }
 
-/// Fully-parameterized entry point: `tile` output pixels per work item.
-pub fn execute_conv2d_tiled(
-    plan: &LayerPlan,
-    x: &Tensor,
-    pool: &Pool,
-    tile: usize,
-) -> Tensor {
-    assert!(tile > 0, "tile size must be positive");
+/// Tensor-in/Tensor-out entry point: `tile` output pixels per work item.
+pub fn execute_conv2d_tiled(plan: &LayerPlan, x: &Tensor, pool: &Pool, tile: usize) -> Tensor {
     let g = plan.geom;
     assert_eq!(x.shape(), &[g.n, g.c, g.h, g.w], "input does not match plan geometry");
+    let mut out = Tensor::zeros(&[g.n, g.k, g.out_h(), g.out_w()]);
+    execute_conv2d_into(plan, x.data(), out.data_mut(), pool, tile, PostOp::default());
+    out
+}
+
+/// Slice core: run the plan over an NCHW activation buffer and write
+/// every output element of `out` (callers may hand in a recycled arena
+/// slice — no zeroing required). `post` fuses the elementwise epilogue
+/// into the scatter. This is the network executor's per-layer kernel:
+/// activations stay in the caller's ping-pong arena and no `Tensor` is
+/// allocated per layer.
+pub fn execute_conv2d_into(
+    plan: &LayerPlan,
+    x: &[f32],
+    out: &mut [f32],
+    pool: &Pool,
+    tile: usize,
+    post: PostOp<'_>,
+) {
+    assert!(tile > 0, "tile size must be positive");
+    let g = plan.geom;
+    assert_eq!(x.len(), g.n * g.c * g.h * g.w, "input does not match plan geometry");
     let e = g.c * g.r * g.s;
     let (oh, ow) = (g.out_h(), g.out_w());
     let pixels = g.n * oh * ow;
     let plane = oh * ow;
+    assert_eq!(out.len(), g.n * g.k * plane, "output buffer does not match plan geometry");
+    post.validate(g.n, g.k, oh, ow);
     let nu = plan.num_unique_filters;
     let np = plan.arena.num_patterns();
     let nt = plan.num_tables;
     const PB: usize = PIXEL_BLOCK;
 
-    let mut out = Tensor::zeros(&[g.n, g.k, oh, ow]);
     if pixels == 0 {
-        return out;
+        return;
     }
-    let od = UnsafeSlice::new(out.data_mut());
+    let od = UnsafeSlice::new(out);
     let jobs = pixels.div_ceil(tile);
     let blocks_per_tile = tile.div_ceil(PB);
 
-    struct Scratch {
-        patch: Vec<f32>,
-        psums: Vec<f32>,
-        usums: Vec<f32>,
-    }
     let cols = &plan.arena.cols;
     let spans = &plan.arena.spans;
 
     pool.run_with(
         jobs,
         || Scratch {
-            patch: vec![0.0; blocks_per_tile * e * PB],
-            psums: vec![0.0; np * PB],
-            usums: vec![0.0; nu * PB],
+            patch: ScratchVec::take(blocks_per_tile * e * PB),
+            psums: ScratchVec::take(np * PB),
+            usums: ScratchVec::take(nu * PB),
         },
         |scr, job| {
             let px0 = job * tile;
             let tp = tile.min(pixels - px0);
             // 0. fused transposed im2col: only this tile's patch rows,
             // pixel-major ([e][PB] blocks, ragged lanes zeroed)
-            im2col_rows_transposed(x, g.r, g.s, g.stride, g.padding, px0, tp, &mut scr.patch);
+            im2col_rows_transposed_into(x, &g, px0, tp, &mut scr.patch);
 
             for blk in 0..tp.div_ceil(PB) {
                 let b0 = blk * PB;
@@ -179,8 +263,10 @@ pub fn execute_conv2d_tiled(
                     }
                 }
 
-                // 3. scatter to original filters with per-filter alpha;
-                // this tile's pixels are disjoint from every other tile's
+                // 3. scatter to original filters with per-filter alpha and
+                // the fused epilogue (residual, then ReLU — elementwise,
+                // so thread count still cannot change bits); this tile's
+                // pixels are disjoint from every other tile's
                 for (fi, &uslot) in plan.unique_of_filter.iter().enumerate() {
                     let a = plan.alpha[fi];
                     let src = &scr.usums[uslot as usize * PB..uslot as usize * PB + PB];
@@ -188,13 +274,13 @@ pub fn execute_conv2d_tiled(
                         let px = px0 + b0 + b;
                         let ni = px / plane;
                         let pix = px % plane;
-                        unsafe { od.write((ni * g.k + fi) * plane + pix, a * sv) };
+                        let v = post.apply(a * sv, ni, fi, pix, ow);
+                        unsafe { od.write((ni * g.k + fi) * plane + pix, v) };
                     }
                 }
             }
         },
     );
-    out
 }
 
 #[cfg(test)]
@@ -281,5 +367,60 @@ mod tests {
                 "{threads}-thread output differs from 1-thread"
             );
         }
+    }
+
+    #[test]
+    fn into_writes_every_element_over_stale_buffer() {
+        let mut rng = Rng::new(35);
+        let g = Conv2dGeometry { n: 1, c: 3, h: 6, w: 6, k: 5, r: 3, s: 3, stride: 1, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let fresh = execute_conv2d(&plan, &x);
+        // recycled arena full of NaN sentinels: every element must be
+        // overwritten, never read
+        let mut out = vec![f32::NAN; fresh.len()];
+        let pool = Pool::new(2);
+        execute_conv2d_into(&plan, x.data(), &mut out, &pool, DEFAULT_TILE, PostOp::default());
+        assert!(out == fresh.data(), "into-variant differs from allocating variant");
+    }
+
+    #[test]
+    fn fused_postop_matches_separate_passes() {
+        let mut rng = Rng::new(36);
+        // stride-2 conv doubling channels — the option-A shortcut case
+        let g = Conv2dGeometry { n: 2, c: 4, h: 8, w: 8, k: 8, r: 3, s: 3, stride: 2, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let pool = Pool::new(3);
+        let (oh, ow) = (g.out_h(), g.out_w());
+
+        // reference: unfused conv, then residual add, then relu
+        let mut reference = execute_conv2d_pool(&plan, &x, &pool);
+        for ni in 0..g.n {
+            for fi in 0..g.c.min(g.k) {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let v = reference.at4(ni, fi, oy, ox)
+                            + x.at4(ni, fi, oy * g.stride, ox * g.stride);
+                        reference.set4(ni, fi, oy, ox, v);
+                    }
+                }
+            }
+        }
+        for v in reference.data_mut() {
+            *v = v.max(0.0);
+        }
+
+        let mut out = vec![f32::NAN; g.n * g.k * oh * ow];
+        let post = PostOp {
+            relu: true,
+            residual: Some(Residual { src: x.data(), c: g.c, h: g.h, w: g.w, stride: g.stride }),
+        };
+        execute_conv2d_into(&plan, x.data(), &mut out, &pool, DEFAULT_TILE, post);
+        assert!(out == reference.data(), "fused epilogue differs from separate passes");
     }
 }

@@ -39,7 +39,8 @@ mod plan;
 
 pub use cse::{build_cse, CseDag};
 pub use exec::{
-    execute_conv2d, execute_conv2d_pool, execute_conv2d_tiled, DEFAULT_TILE, PIXEL_BLOCK,
+    execute_conv2d, execute_conv2d_into, execute_conv2d_pool, execute_conv2d_tiled, PostOp,
+    Residual, DEFAULT_TILE, PIXEL_BLOCK,
 };
 pub use plan::{LayerPlan, OpCounts, PatternArena, PatternSpan};
 

@@ -84,7 +84,13 @@ impl SimReport {
 
 /// Simulate `C[M,N] = A[M,K] x B[K,N]` where B (weights) has the given
 /// density in [0, 1]. Dense runs use density = 1.0.
-pub fn simulate_gemm(m: usize, k: usize, n: usize, density: f64, cfg: &AcceleratorConfig) -> SimReport {
+pub fn simulate_gemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    density: f64,
+    cfg: &AcceleratorConfig,
+) -> SimReport {
     assert!((0.0..=1.0).contains(&density));
     let total_macs = (m as u64) * (k as u64) * (n as u64);
     let effectual_macs = ((total_macs as f64) * density).round() as u64;

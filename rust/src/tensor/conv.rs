@@ -111,7 +111,39 @@ pub fn im2col_rows(
     rows: usize,
     dst: &mut [f32],
 ) {
-    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    im2col_rows_into(x.data(), &patch_geometry(x, r, s, stride, padding), px0, rows, dst);
+}
+
+/// The `Conv2dGeometry` a raw activation buffer + kernel parameters
+/// describe (k is irrelevant to patch extraction and set to 0).
+fn patch_geometry(
+    x: &Tensor,
+    r: usize,
+    s: usize,
+    stride: usize,
+    padding: usize,
+) -> Conv2dGeometry {
+    Conv2dGeometry {
+        n: x.dim(0),
+        c: x.dim(1),
+        h: x.dim(2),
+        w: x.dim(3),
+        k: 0,
+        r,
+        s,
+        stride,
+        padding,
+    }
+}
+
+/// Slice core of [`im2col_rows`]: `x` is an NCHW activation buffer
+/// described by `g` (whose `k` is ignored). The network executor
+/// streams its ping-pong activation arena through this entry point — no
+/// `Tensor` wrapper and no allocation on the per-request path.
+pub fn im2col_rows_into(x: &[f32], g: &Conv2dGeometry, px0: usize, rows: usize, dst: &mut [f32]) {
+    let (n, c, h, w) = (g.n, g.c, g.h, g.w);
+    let (r, s, stride, padding) = (g.r, g.s, g.stride, g.padding);
+    assert_eq!(x.len(), n * c * h * w, "activation buffer does not match dims");
     let oh = (h + 2 * padding - r) / stride + 1;
     let ow = (w + 2 * padding - s) / stride + 1;
     let plane = oh * ow;
@@ -132,7 +164,7 @@ pub fn im2col_rows(
                 for sx in 0..s {
                     let ix = ox * stride + sx;
                     let v = if in_y && ix >= padding && ix - padding < w {
-                        x.at4(ni, ci, iy - padding, ix - padding)
+                        x[((ni * c + ci) * h + (iy - padding)) * w + (ix - padding)]
                     } else {
                         0.0
                     };
@@ -174,8 +206,25 @@ pub fn im2col_rows_transposed(
     rows: usize,
     dst: &mut [f32],
 ) {
+    let g = patch_geometry(x, r, s, stride, padding);
+    im2col_rows_transposed_into(x.data(), &g, px0, rows, dst);
+}
+
+/// Slice core of [`im2col_rows_transposed`] over an NCHW activation
+/// buffer described by `g` (whose `k` is ignored) — the entry point the
+/// repetition executor uses so multi-layer forward passes can feed it
+/// arena slices directly (no per-layer `Tensor`).
+pub fn im2col_rows_transposed_into(
+    x: &[f32],
+    g: &Conv2dGeometry,
+    px0: usize,
+    rows: usize,
+    dst: &mut [f32],
+) {
     const PB: usize = PIXEL_BLOCK;
-    let (n, c, h, w) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let (n, c, h, w) = (g.n, g.c, g.h, g.w);
+    let (r, s, stride, padding) = (g.r, g.s, g.stride, g.padding);
+    assert_eq!(x.len(), n * c * h * w, "activation buffer does not match dims");
     let oh = (h + 2 * padding - r) / stride + 1;
     let ow = (w + 2 * padding - s) / stride + 1;
     let plane = oh * ow;
@@ -207,7 +256,7 @@ pub fn im2col_rows_transposed(
                     for sx in 0..s {
                         let ix = ox * stride + sx;
                         let v = if in_y && ix >= padding && ix - padding < w {
-                            x.at4(ni, ci, iy - padding, ix - padding)
+                            x[((ni * c + ci) * h + (iy - padding)) * w + (ix - padding)]
                         } else {
                             0.0
                         };

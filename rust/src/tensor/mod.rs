@@ -22,8 +22,8 @@ mod conv;
 mod ops;
 
 pub use conv::{
-    conv2d_gemm, conv2d_gemm_pool, conv2d_naive, im2col, im2col_rows, im2col_rows_transposed,
-    Conv2dGeometry, PIXEL_BLOCK,
+    conv2d_gemm, conv2d_gemm_pool, conv2d_naive, im2col, im2col_rows, im2col_rows_into,
+    im2col_rows_transposed, im2col_rows_transposed_into, Conv2dGeometry, PIXEL_BLOCK,
 };
 pub use ops::{gemm, gemm_into, gemm_into_pool};
 

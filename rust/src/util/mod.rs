@@ -5,7 +5,9 @@ pub mod bench;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod scratch;
 
 pub use json::Json;
 pub use pool::{Pool, UnsafeSlice};
 pub use rng::Rng;
+pub use scratch::ScratchVec;

@@ -1,0 +1,106 @@
+//! Thread-cached f32 scratch buffers.
+//!
+//! The tiled executors allocate per-worker scratch (patch tiles, partial
+//! sums) inside every pool dispatch. On the multi-layer serving path
+//! that would mean fresh heap allocations for every layer of every
+//! request, so dropped [`ScratchVec`]s park their backing storage in a
+//! thread-local cache instead: the pool's workers are persistent, and a
+//! steady-state forward pass reuses the same capacity dispatch after
+//! dispatch. Contents are *not* cleared between uses — callers must
+//! fully overwrite (or zero) what they read, exactly like the executor
+//! scratch contract.
+
+use std::cell::RefCell;
+
+thread_local! {
+    static CACHE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Buffers parked per thread; the executors hold at most three at once,
+/// so a small cap bounds memory on long-lived worker threads.
+const MAX_CACHED: usize = 8;
+
+/// An owned `Vec<f32>` whose storage returns to the thread-local cache
+/// on drop. Dereferences to `[f32]` at exactly the requested length.
+pub struct ScratchVec(Vec<f32>);
+
+impl ScratchVec {
+    /// Take a buffer of exactly `len` elements, reusing cached storage
+    /// when available. New elements are zero-filled; recycled elements
+    /// keep their previous contents (see module docs).
+    pub fn take(len: usize) -> ScratchVec {
+        let mut v = CACHE
+            .with(|c| c.borrow_mut().pop())
+            .unwrap_or_default();
+        v.resize(len, 0.0);
+        ScratchVec(v)
+    }
+}
+
+impl Drop for ScratchVec {
+    fn drop(&mut self) {
+        let v = std::mem::take(&mut self.0);
+        CACHE.with(|c| {
+            let mut cache = c.borrow_mut();
+            if cache.len() < MAX_CACHED {
+                cache.push(v);
+            }
+        });
+    }
+}
+
+impl std::ops::Deref for ScratchVec {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl std::ops::DerefMut for ScratchVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_has_requested_len_and_zeroed_growth() {
+        let s = ScratchVec::take(16);
+        assert_eq!(s.len(), 16);
+        // a fresh buffer is all zeros
+        assert!(s.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn storage_is_reused_across_take_drop_cycles() {
+        let ptr = {
+            let mut s = ScratchVec::take(32);
+            s[0] = 7.0;
+            s.as_ptr()
+        };
+        // same length -> resize cannot reallocate -> same storage
+        let s = ScratchVec::take(32);
+        assert_eq!(s.as_ptr(), ptr, "scratch storage was not recycled");
+        // recycled contents are stale by contract
+        assert_eq!(s[0], 7.0);
+    }
+
+    #[test]
+    fn shrinking_keeps_capacity_growing_zero_fills() {
+        {
+            let mut big = ScratchVec::take(64);
+            big.iter_mut().for_each(|v| *v = 1.0);
+        }
+        let small = ScratchVec::take(8);
+        assert_eq!(small.len(), 8);
+        drop(small);
+        let grown = ScratchVec::take(20);
+        assert_eq!(grown.len(), 20);
+        // resize truncated to 8, so regrowth past that point zero-fills
+        assert!(grown[8..].iter().all(|v| *v == 0.0));
+    }
+}

@@ -1,0 +1,169 @@
+//! End-to-end network-executor equality on a small CIFAR ResNet
+//! (depth 8):
+//!
+//! * the fused, arena-based `NetworkExecutor` forward pass must
+//!   **bit-match** a layer-by-layer reference built from the public
+//!   single-layer primitives (`execute_conv2d_pool` for engine layers,
+//!   `conv2d_naive` for the fp stem) with separate ReLU / option-A
+//!   residual passes — at thread counts {1, 2, ncpu};
+//! * a fully `conv2d_naive` reference (quantized dense weights) must
+//!   agree within a small relative tolerance — the engine re-associates
+//!   f32 sums (shared pattern partial sums), so exact bit equality
+//!   against the naive order is not defined there.
+
+use std::sync::Arc;
+
+use plum::models::{self, ConvLayerDesc};
+use plum::network::{seeded_latents, NetworkExecutor, NetworkPlan};
+use plum::repetition::{execute_conv2d_pool, EngineConfig};
+use plum::tensor::{conv2d_naive, Tensor};
+use plum::util::{Pool, Rng};
+
+fn relu(t: &mut Tensor) {
+    for v in t.data_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// Option-A shortcut: spatial subsample by the stride ratio, zero-pad
+/// extra channels — applied before the block's final ReLU.
+fn add_option_a(out: &mut Tensor, src: &Tensor) {
+    let (n, k, oh, ow) = (out.dim(0), out.dim(1), out.dim(2), out.dim(3));
+    let (_, c, h, _) = (src.dim(0), src.dim(1), src.dim(2), src.dim(3));
+    let st = h / oh;
+    assert_eq!(h, oh * st, "shortcut stride must divide evenly");
+    for ni in 0..n {
+        for ci in 0..c.min(k) {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let v = out.at4(ni, ci, oy, ox) + src.at4(ni, ci, oy * st, ox * st);
+                    out.set4(ni, ci, oy, ox, v);
+                }
+            }
+        }
+    }
+}
+
+/// Layer-by-layer reference over the compiled plan: engine layers run
+/// unfused through `execute_conv2d_pool`, the fp stem through
+/// `conv2d_naive`; residual and ReLU are separate passes in the same
+/// elementwise order the fused executor uses.
+fn reference_forward(plan: &NetworkPlan, x: &Tensor, pool: &Pool) -> Tensor {
+    let mut acts: Vec<Tensor> = vec![x.clone()];
+    for layer in &plan.layers {
+        let xin = acts.last().unwrap();
+        let mut y = match &layer.plan {
+            Some(lp) => execute_conv2d_pool(lp, xin, pool),
+            None => conv2d_naive(xin, &layer.weights, layer.geom.stride, layer.geom.padding),
+        };
+        if let Some(ai) = layer.residual_from {
+            add_option_a(&mut y, &acts[ai]);
+        }
+        if layer.relu {
+            relu(&mut y);
+        }
+        acts.push(y);
+    }
+    acts.pop().unwrap()
+}
+
+/// Fully-naive reference: every conv through `conv2d_naive` on the
+/// quantized dense weights (engine layers) / latents (stem).
+fn naive_forward(plan: &NetworkPlan, x: &Tensor) -> Tensor {
+    let mut acts: Vec<Tensor> = vec![x.clone()];
+    for layer in &plan.layers {
+        let xin = acts.last().unwrap();
+        let mut y = conv2d_naive(xin, &layer.weights, layer.geom.stride, layer.geom.padding);
+        if let Some(ai) = layer.residual_from {
+            add_option_a(&mut y, &acts[ai]);
+        }
+        if layer.relu {
+            relu(&mut y);
+        }
+        acts.push(y);
+    }
+    acts.pop().unwrap()
+}
+
+fn compile_resnet8(batch: usize, image: usize) -> (Arc<NetworkPlan>, Vec<ConvLayerDesc>) {
+    let descs = models::cifar_resnet_layers(8, 0.5, image, batch);
+    let latents = seeded_latents(&descs, 0xBEEF);
+    let cfg = EngineConfig { subtile: 8, sparsity_support: true };
+    let plan = NetworkPlan::compile_with_weights(
+        &descs,
+        &latents,
+        cfg,
+        plum::quant::Scheme::sb_default(),
+        &Pool::new(1),
+    )
+    .unwrap();
+    (Arc::new(plan), descs)
+}
+
+#[test]
+fn network_forward_bit_matches_layer_reference_at_every_width() {
+    let (plan, _) = compile_resnet8(2, 16);
+    let mut rng = Rng::new(99);
+    let x = Tensor::rand_normal(&[2, 3, 16, 16], 1.0, &mut rng);
+
+    let reference = reference_forward(&plan, &x, &Pool::new(1));
+    assert_eq!(reference.len(), plan.output_elems());
+
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for threads in [1, 2, ncpu] {
+        let pool = Pool::new(threads);
+        let mut exec = NetworkExecutor::new(Arc::clone(&plan));
+        let out = exec.forward_pool(x.data(), &pool);
+        assert!(
+            out == reference.data(),
+            "{threads}-thread fused forward differs from the layer-by-layer reference"
+        );
+    }
+}
+
+#[test]
+fn network_forward_agrees_with_naive_chain() {
+    let (plan, _) = compile_resnet8(1, 16);
+    let mut rng = Rng::new(100);
+    let x = Tensor::rand_normal(&[1, 3, 16, 16], 1.0, &mut rng);
+
+    let naive = naive_forward(&plan, &x);
+    let mut exec = NetworkExecutor::new(Arc::clone(&plan));
+    let out = exec.forward_pool(x.data(), &Pool::new(2));
+
+    let scale = naive.data().iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+    let max_diff = out
+        .iter()
+        .zip(naive.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff < 1e-3 * scale,
+        "fused network diverged from naive chain: {max_diff} (scale {scale})"
+    );
+}
+
+#[test]
+fn plans_are_built_once_and_reused_across_requests() {
+    // the compiled plan is shared; repeated forwards on one executor are
+    // bit-identical and land in the same arena storage (no per-request
+    // activation allocation)
+    let (plan, descs) = compile_resnet8(2, 16);
+    assert_eq!(plan.num_layers(), descs.len());
+    let pool = Pool::new(2);
+    let mut exec = NetworkExecutor::new(Arc::clone(&plan));
+    let mut rng = Rng::new(101);
+    let mut a = vec![0.0f32; plan.input_elems()];
+    let mut b = vec![0.0f32; plan.input_elems()];
+    rng.fill_normal(&mut a, 1.0);
+    rng.fill_normal(&mut b, 1.0);
+
+    let (ptr_a, out_a) = {
+        let o = exec.forward_pool(&a, &pool);
+        (o.as_ptr(), o.to_vec())
+    };
+    let ptr_b = exec.forward_pool(&b, &pool).as_ptr();
+    assert_eq!(ptr_a, ptr_b, "requests must reuse the same activation arena");
+    let out_a2 = exec.forward_pool(&a, &pool).to_vec();
+    assert!(out_a == out_a2, "same input must reproduce the same bits");
+}

@@ -5,9 +5,12 @@
 //! technique with the repo's deterministic RNG: many seeded random
 //! configurations per property, with the failing seed printed on assert.
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use plum::coordinator::{spawn_worker, BatchPolicy, MockBackend, Router};
+use plum::coordinator::{spawn_worker, BatchPolicy, InferBackend, MockBackend, Router};
+use plum::models;
+use plum::network::{EngineBackend, NetworkPlan};
 use plum::quant::{self, default_beta, Scheme};
 use plum::repetition::{execute_conv2d, plan_layer, EngineConfig};
 use plum::tensor::{conv2d_gemm, Conv2dGeometry, Tensor};
@@ -89,6 +92,107 @@ fn prop_router_conserves_requests() {
         assert_eq!(router.completed(), n_req as u64, "case {case}");
         router.shutdown().unwrap();
     }
+}
+
+/// One tiny engine-compiled network (resnet8 on 8px images), shared by
+/// the EngineBackend properties below.
+fn tiny_engine_plan(batch: usize) -> Arc<NetworkPlan> {
+    let descs = models::cifar_resnet_layers(8, 0.5, 8, batch);
+    Arc::new(NetworkPlan::compile(&descs, EngineConfig::default(), Scheme::sb_default()).unwrap())
+}
+
+/// Expected logits for one sample under a plan: run it alone in slot 0
+/// of a zero-padded device batch. Convs are per-sample independent and
+/// pixel-block lanes never mix samples, so the slot-0 logits of any
+/// co-batched run must be bit-identical to this.
+fn expected_logits(plan: &Arc<NetworkPlan>, sample: &[f32]) -> Vec<f32> {
+    let backend = EngineBackend::new(Arc::clone(plan));
+    let mut batch = vec![0.0f32; backend.batch_size() * backend.sample_elems()];
+    batch[..sample.len()].copy_from_slice(sample);
+    backend.infer_batch(&batch).unwrap()[..backend.out_elems()].to_vec()
+}
+
+/// Property: the server/batcher invariants hold against the *real*
+/// repetition-engine backend — every request answered exactly once with
+/// its own logits (bit-exact vs a direct executor run), wrong-size
+/// requests error instead of hanging, all without the `pjrt` feature.
+#[test]
+fn prop_engine_backend_every_request_answered_with_own_result() {
+    for case in 0..4 {
+        let mut rng = Rng::new(6000 + case as u64);
+        let batch = 1 + rng.below(4);
+        let plan = tiny_engine_plan(batch);
+        let sample = plan.sample_elems();
+        let n_req = 1 + rng.below(12);
+        let max_wait = Duration::from_micros(rng.below(2000) as u64);
+        let mut samples = Vec::new();
+        for _ in 0..n_req {
+            let mut x = vec![0.0f32; sample];
+            rng.fill_normal(&mut x, 1.0);
+            samples.push(x);
+        }
+        let expects: Vec<Vec<f32>> = samples.iter().map(|x| expected_logits(&plan, x)).collect();
+
+        let w = spawn_worker(
+            EngineBackend::factory(Arc::clone(&plan)),
+            BatchPolicy { max_batch: batch, max_wait },
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for x in &samples {
+            rxs.push(w.submit(x.clone()).unwrap());
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let logits = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("case {case}: dropped reply"))
+                .unwrap_or_else(|e| panic!("case {case}: error reply {e}"));
+            assert!(
+                logits == expects[i],
+                "case {case}: request {i} got another sample's logits"
+            );
+        }
+        // wrong-size request errors, never hangs
+        let bad = w.submit(vec![0.0; sample + 1]).unwrap();
+        assert!(bad.recv().unwrap().is_err(), "case {case}");
+        drop(w.tx);
+        w.join.join().unwrap();
+    }
+}
+
+/// Property: the router conserves requests across engine replicas, and
+/// replies stay bit-exact regardless of which replica/batch served them.
+#[test]
+fn prop_router_with_engine_backend_conserves_requests() {
+    let mut rng = Rng::new(6100);
+    let batch = 2;
+    let plan = tiny_engine_plan(batch);
+    let sample = plan.sample_elems();
+    let n_req = 19;
+    let workers = (0..2)
+        .map(|_| {
+            spawn_worker(
+                EngineBackend::factory(Arc::clone(&plan)),
+                BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(1) },
+            )
+            .unwrap()
+        })
+        .collect();
+    let router = Router::new(workers);
+    let mut pending = Vec::new();
+    for i in 0..n_req {
+        let mut x = vec![0.0f32; sample];
+        rng.fill_normal(&mut x, 1.0);
+        let expect = expected_logits(&plan, &x);
+        let (rx, _) = router.submit(x).unwrap();
+        pending.push((i, expect, rx));
+    }
+    for (i, expect, rx) in pending {
+        let logits = rx.recv().unwrap().unwrap();
+        assert!(logits == expect, "request {i} cross-wired or non-deterministic");
+    }
+    assert_eq!(router.completed(), n_req as u64);
+    router.shutdown().unwrap();
 }
 
 /// Property: signed-binary quantization never mixes signs within a
