@@ -38,12 +38,15 @@ COMMANDS:
          repetition [--out FILE]            scaling studies -> BENCH_current.json
          network [--depth N] [--batch N] [--out FILE]
                                             full-network forward scaling on the
-                                            repetition engine (CIFAR ResNet)
+                                            repetition engine: CIFAR ResNet +
+                                            a 1x1 chain with patch reuse off/on
+                                            (network_forward_fused series)
          compare --current FILE [--baseline FILE] [--tolerance F]
                                             fail on perf regression vs baseline
   serve [--backend engine|pjrt] --model NAME [--requests N] [--replicas R]
-        [--ckpt PATH]                       engine: CIFAR ResNet on plain CPU
-                                            (default); pjrt needs the feature
+        [--ckpt PATH]                       engine (default, plain CPU): resnetN,
+                                            resnet18c (projection shortcuts) or
+                                            chain1x1; pjrt needs the feature
   report weights --model NAME               figure 6/11 distributions
   quantize --model NAME                     density/repetition/bit report [pjrt]
   registry                                  list artifacts + footprints

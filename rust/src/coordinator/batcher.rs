@@ -8,7 +8,9 @@ use std::time::{Duration, Instant};
 /// Batching policy knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
+    /// flush when this many requests are queued
     pub max_batch: usize,
+    /// flush when the oldest queued request has waited this long
     pub max_wait: Duration,
 }
 
@@ -21,10 +23,12 @@ impl Default for BatchPolicy {
 /// Pulls batches off an mpsc receiver under the policy.
 pub struct Batcher<T> {
     rx: Receiver<T>,
+    /// the size-or-deadline policy this batcher flushes under
     pub policy: BatchPolicy,
 }
 
 impl<T> Batcher<T> {
+    /// Batcher over a request receiver (`policy.max_batch` must be > 0).
     pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
         assert!(policy.max_batch > 0);
         Batcher { rx, policy }

@@ -11,11 +11,17 @@ use crate::runtime::Manifest;
 /// One registered model artifact set.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// artifact name, e.g. `resnet20_sb`
     pub name: String,
+    /// quantization scheme string from the manifest
     pub scheme: String,
+    /// architecture name from the manifest
     pub arch: String,
+    /// device batch size the artifact was lowered at
     pub batch_size: usize,
+    /// total parameter count
     pub param_count: usize,
+    /// effectual (non-zero quantized) parameters at init
     pub effectual_params_init: usize,
     /// one-bit packed weight bits for sb models (paper §6 formula);
     /// 32-bit dense bits otherwise.
@@ -25,7 +31,9 @@ pub struct ModelEntry {
 /// Registry over an artifact directory.
 #[derive(Debug)]
 pub struct ModelRegistry {
+    /// the scanned directory
     pub dir: PathBuf,
+    /// discovered artifacts, name-sorted
     pub entries: Vec<ModelEntry>,
 }
 
@@ -81,10 +89,12 @@ impl ModelRegistry {
         }
     }
 
+    /// Entry with exactly this name, if registered.
     pub fn by_name(&self, name: &str) -> Option<&ModelEntry> {
         self.entries.iter().find(|e| e.name == name)
     }
 
+    /// All entries quantized under `scheme`.
     pub fn by_scheme(&self, scheme: &str) -> Vec<&ModelEntry> {
         self.entries.iter().filter(|e| e.scheme == scheme).collect()
     }

@@ -14,11 +14,13 @@ pub struct Router {
 }
 
 impl Router {
+    /// Router over a non-empty replica set.
     pub fn new(workers: Vec<WorkerHandle>) -> Self {
         assert!(!workers.is_empty());
         Router { workers }
     }
 
+    /// Number of replicas behind this router.
     pub fn replicas(&self) -> usize {
         self.workers.len()
     }
@@ -43,6 +45,7 @@ impl Router {
         Ok((rx, idx))
     }
 
+    /// Handle of replica `i` (load/latency introspection).
     pub fn worker(&self, i: usize) -> &WorkerHandle {
         &self.workers[i]
     }

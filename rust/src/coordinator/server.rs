@@ -16,7 +16,9 @@ use super::batcher::{BatchPolicy, Batcher};
 /// One inference request: a single sample (flattened CHW) and a reply
 /// channel for its logits.
 pub struct InferRequest {
+    /// the sample, flattened CHW
     pub x: Vec<f32>,
+    /// where this request's logits (or error) are delivered
     pub resp: SyncSender<Result<Vec<f32>>>,
 }
 
@@ -43,8 +45,11 @@ pub trait InferBackend: 'static {
 /// Deterministic mock backend for coordinator tests: logit j of sample i
 /// is `sum(x_i) + j`.
 pub struct MockBackend {
+    /// device batch size
     pub bs: usize,
+    /// elements per sample
     pub sample: usize,
+    /// logits per sample
     pub classes: usize,
     /// optional artificial latency per batch
     pub delay: std::time::Duration,
@@ -80,9 +85,13 @@ impl InferBackend for MockBackend {
 
 /// Handle to a spawned worker: submit requests, inspect load, join.
 pub struct WorkerHandle {
+    /// request channel into the worker's batcher
     pub tx: Sender<InferRequest>,
+    /// requests submitted but not yet replied to (router load signal)
     pub outstanding: Arc<AtomicUsize>,
+    /// per-batch service-time histogram
     pub latency: Arc<LatencyHistogram>,
+    /// worker thread handle (joins after `tx` is dropped)
     pub join: JoinHandle<()>,
 }
 

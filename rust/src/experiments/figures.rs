@@ -4,7 +4,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::config::RunConfig;
-use crate::models;
+use crate::models::{self, CHAIN1X1_DEPTH, CHAIN1X1_WIDTH};
 use crate::quant::stats::render_histogram;
 use crate::quant::{
     self, default_beta, filter_repetition_stats, weight_histogram, QuantizedWeights, Scheme,
@@ -640,11 +640,82 @@ pub fn plan_build_scaling(cfg: &RunConfig, threads: &[usize]) -> Result<Vec<Scal
     Ok(points)
 }
 
+/// Time one compiled network's full forward at every pool width,
+/// asserting cross-width bit-equality (and, when `expect` is given,
+/// bit-equality against that baseline — the fused-vs-unfused check).
+/// Returns the measured points plus the first-width output.
+fn network_forward_ladder(
+    plan: &std::sync::Arc<crate::network::NetworkPlan>,
+    op: &str,
+    shape: &str,
+    threads: &[usize],
+    input: &[f32],
+    reps: usize,
+    expect: Option<&[f32]>,
+) -> Result<(Vec<ScalingPoint>, Vec<f32>)> {
+    use crate::network::NetworkExecutor;
+    let flops = 2.0 * plan.dense_macs() as f64;
+    let batch = plan.batch();
+    let mut points = Vec::new();
+    let mut printed = Vec::new();
+    let mut base_out: Option<Vec<f32>> = None;
+    let mut base_ns = 0u64;
+    for &t in threads {
+        let pool = Pool::new(t);
+        let mut exec = NetworkExecutor::new(std::sync::Arc::clone(plan));
+        let r = bench(&format!("{op} t{t}"), 1, reps, || {
+            std::hint::black_box(exec.forward_pool(input, &pool));
+        });
+        // determinism guarantee: every width produces the same bits
+        let out = exec.forward_pool(input, &pool).to_vec();
+        if let Some(e) = expect {
+            if out != e {
+                return Err(anyhow!("{op} at {t} threads differs from the unfused baseline"));
+            }
+        }
+        if base_out.is_none() {
+            base_out = Some(out);
+            base_ns = r.min_ns;
+        } else if Some(&out) != base_out.as_ref() {
+            return Err(anyhow!("{op} at {t} threads differs from {} threads", threads[0]));
+        }
+        printed.push(vec![
+            format!("{t}"),
+            format!("{:.2}", r.min_ns as f64 / 1e6),
+            format!("{:.2}x", base_ns as f64 / r.min_ns as f64),
+            format!("{:.1}", batch as f64 * 1e9 / r.min_ns as f64),
+        ]);
+        points.push(ScalingPoint {
+            op: op.into(),
+            shape: shape.into(),
+            threads: t,
+            min_ns: r.min_ns,
+            gflops: flops / r.min_ns as f64,
+        });
+    }
+    print_table(
+        &format!("Network forward scaling — {op} [{shape}] (bit-identical at every width)"),
+        &["Threads", "forward ms", "speedup", "img/s"],
+        &printed,
+    );
+    Ok((points, base_out.unwrap()))
+}
+
 /// `plum bench network`: full-network forward scaling through the
-/// network executor — a whole CIFAR ResNet (sb scheme) compiled once,
-/// then timed end-to-end at each pool width. Verifies the forward pass
-/// is bit-identical at every width and records the `network_forward`
-/// series for the perf-trajectory gate (committed baseline:
+/// network executor. Two workloads, compiled once each and timed
+/// end-to-end at each pool width:
+///
+/// * a whole CIFAR ResNet-`depth` (sb scheme, option-A shortcuts) —
+///   the `network_forward` series;
+/// * the consecutive-1x1 `chain1x1` model (the exact shape serving
+///   uses: `models::{CHAIN1X1_DEPTH, CHAIN1X1_WIDTH}`), timed with
+///   cross-layer patch reuse **disabled** (`network_forward`) and
+///   **enabled** (`network_forward_fused`), so the reuse win stays
+///   visible in `plum bench compare`.
+///
+/// Every series is verified bit-identical across pool widths, and the
+/// fused chain is verified bit-identical to the unfused baseline.
+/// Records feed the perf-trajectory gate (committed baseline:
 /// BENCH_network.json).
 pub fn network_forward_study(
     cfg: &RunConfig,
@@ -653,12 +724,18 @@ pub fn network_forward_study(
     subtile: usize,
     thread_cap: usize,
 ) -> Result<(Vec<usize>, Vec<ScalingPoint>)> {
-    use crate::network::{NetworkExecutor, NetworkPlan};
+    use crate::network::NetworkPlan;
     use std::sync::Arc;
 
     let batch = batch.max(1);
-    let layers = models::cifar_resnet_layers(depth, 1.0, 32, batch);
     let ecfg = EngineConfig { subtile, sparsity_support: true };
+    let threads = default_thread_ladder(thread_cap);
+    let reps = cfg.bench_reps;
+    let mut rng = Rng::new(cfg.seed ^ 0x5eed);
+    let mut points = Vec::new();
+
+    // ---- workload 1: CIFAR ResNet-{depth} (option-A shortcuts) --------
+    let layers = models::cifar_resnet_layers(depth, 1.0, 32, batch);
     let t_compile = std::time::Instant::now();
     let plan = Arc::new(NetworkPlan::compile_seeded(
         &layers,
@@ -678,54 +755,53 @@ pub fn network_forward_study(
         dense_ops as f64 / ops.max(1) as f64,
         plan.weight_bits / 8 / 1024
     );
-
-    let threads = default_thread_ladder(thread_cap);
-    let mut rng = Rng::new(cfg.seed ^ 0x5eed);
     let mut input = vec![0.0f32; plan.input_elems()];
     rng.fill_normal(&mut input, 1.0);
-    let flops = dense_ops as f64;
     let shape = format!("resnet{depth} b{batch} 32px");
-    let reps = cfg.bench_reps;
-    let mut points = Vec::new();
-    let mut printed = Vec::new();
-    let mut base_out: Option<Vec<f32>> = None;
-    let mut base_ns = 0u64;
-    for &t in &threads {
-        let pool = Pool::new(t);
-        let mut exec = NetworkExecutor::new(Arc::clone(&plan));
-        let r = bench(&format!("network t{t}"), 1, reps, || {
-            std::hint::black_box(exec.forward_pool(&input, &pool));
-        });
-        // determinism guarantee: every width produces the same bits
-        let out = exec.forward_pool(&input, &pool).to_vec();
-        if base_out.is_none() {
-            base_out = Some(out);
-            base_ns = r.min_ns;
-        } else if Some(&out) != base_out.as_ref() {
-            return Err(anyhow!(
-                "network forward at {t} threads differs from {} threads",
-                threads[0]
-            ));
-        }
-        printed.push(vec![
-            format!("{t}"),
-            format!("{:.2}", r.min_ns as f64 / 1e6),
-            format!("{:.2}x", base_ns as f64 / r.min_ns as f64),
-            format!("{:.1}", batch as f64 * 1e9 / r.min_ns as f64),
-        ]);
-        points.push(ScalingPoint {
-            op: "network_forward".into(),
-            shape: shape.clone(),
-            threads: t,
-            min_ns: r.min_ns,
-            gflops: flops / r.min_ns as f64,
-        });
-    }
-    print_table(
-        &format!("Network forward scaling — {shape} (bit-identical at every width)"),
-        &["Threads", "forward ms", "speedup", "img/s"],
-        &printed,
+    let (pts, _) =
+        network_forward_ladder(&plan, "network_forward", &shape, &threads, &input, reps, None)?;
+    points.extend(pts);
+
+    // ---- workload 2: consecutive-1x1 chain, patch reuse off vs on -----
+    let chain = models::conv1x1_chain_layers(CHAIN1X1_DEPTH, CHAIN1X1_WIDTH, 32, batch);
+    let fused = Arc::new(NetworkPlan::compile_seeded(
+        &chain,
+        ecfg,
+        Scheme::sb_default(),
+        cfg.seed,
+    )?);
+    let unfused = Arc::new(fused.without_patch_fusion());
+    println!(
+        "\nchain1x1 d{CHAIN1X1_DEPTH} w{CHAIN1X1_WIDTH} b{batch}: {} layers, {} patch-fused \
+         edge(s) (baseline runs the same plan with reuse disabled)",
+        fused.num_layers(),
+        fused.patch_fused_edges()
     );
+    let mut cinput = vec![0.0f32; fused.input_elems()];
+    rng.fill_normal(&mut cinput, 1.0);
+    let cshape = format!("chain1x1 d{CHAIN1X1_DEPTH} w{CHAIN1X1_WIDTH} b{batch} 32px");
+    let (pts, base) = network_forward_ladder(
+        &unfused,
+        "network_forward",
+        &cshape,
+        &threads,
+        &cinput,
+        reps,
+        None,
+    )?;
+    points.extend(pts);
+    // patch reuse must change the time, never the bits
+    let (pts, _) = network_forward_ladder(
+        &fused,
+        "network_forward_fused",
+        &cshape,
+        &threads,
+        &cinput,
+        reps,
+        Some(&base),
+    )?;
+    points.extend(pts);
+
     Ok((threads, points))
 }
 

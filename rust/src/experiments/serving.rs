@@ -5,9 +5,11 @@
 //! Two backends share one driver:
 //!
 //! * [`drive_engine`] — the repetition engine ([`EngineBackend`]):
-//!   compiles a CIFAR ResNet onto the engine **once**, shares the plan
-//!   across all replicas, and serves on plain CPU with no features and
-//!   no artifacts (`plum serve --backend engine`).
+//!   compiles an engine-zoo model (CIFAR `resnetN`, projection-shortcut
+//!   `resnet18c`, or the patch-reuse `chain1x1`) onto the engine
+//!   **once**, shares the plan across all replicas, and serves on plain
+//!   CPU with no features and no artifacts (`plum serve --backend
+//!   engine`).
 //! * [`drive`] — the PJRT runtime (`--features pjrt`): each worker
 //!   compiles the AOT infer executable from the artifact directory
 //!   (`plum serve --backend pjrt`).
@@ -85,24 +87,22 @@ fn drive_router(
     Ok(report)
 }
 
-/// CIFAR ResNet depth from a model name like `resnet20` / `resnet20_sb`.
-fn resnet_depth(model: &str) -> Option<usize> {
-    let rest = model.strip_prefix("resnet")?;
-    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
-    digits.parse().ok().filter(|d| *d >= 8 && (*d - 2) % 6 == 0)
-}
-
 /// Serve `requests` synthetic samples through `cfg.replicas` repetition-
 /// engine workers — no `pjrt` feature, no artifacts. The device batch is
 /// `cfg.max_batch`; one [`NetworkPlan`] is compiled up front and shared.
+/// Models come from the engine zoo (`models::engine_model_layers`):
+/// CIFAR `resnetN` (option-A), `resnet18c` (projection shortcuts) and
+/// `chain1x1` (the patch-reuse workload).
 pub fn drive_engine(cfg: &RunConfig, model: &str, requests: usize) -> Result<ServeReport> {
-    let depth = resnet_depth(model).ok_or_else(|| {
-        anyhow!("engine backend serves CIFAR ResNets ('resnetN', N = 6n+2) — got '{model}'")
-    })?;
     let batch = cfg.max_batch.max(1);
-    let layers = models::cifar_resnet_layers(depth, 1.0, 32, batch);
+    let layers = models::engine_model_layers(model, 32, batch).ok_or_else(|| {
+        anyhow!(
+            "engine backend serves 'resnetN' (N = 6n+2), 'resnet18c' or 'chain1x1' — \
+             got '{model}'"
+        )
+    })?;
     eprintln!(
-        "compiling resnet{depth} (batch {batch}, {} conv layers) onto the repetition engine...",
+        "compiling {model} (batch {batch}, {} conv layers) onto the repetition engine...",
         layers.len()
     );
     // subtile 0 = auto-tuned per layer: serving compiles once and then
@@ -115,11 +115,14 @@ pub fn drive_engine(cfg: &RunConfig, model: &str, requests: usize) -> Result<Ser
         cfg.seed,
     )?);
     println!(
-        "plan: {} layers, {} ops/pass vs {} dense MACs, {} KiB packed weights",
+        "plan: {} layers, {} ops/pass vs {} dense MACs, {} KiB packed weights, \
+         {} patch-fused edge(s), {} arena buffer(s)",
         plan.num_layers(),
         plan.op_counts().total(),
         plan.dense_macs(),
-        plan.weight_bits / 8 / 1024
+        plan.weight_bits / 8 / 1024,
+        plan.patch_fused_edges(),
+        plan.num_arena_slots()
     );
     let sample = plan.sample_elems();
     let ds = SyntheticDataset::new("serve", 10, 3, 32, cfg.seed);
@@ -172,13 +175,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn resnet_depth_parsing() {
-        assert_eq!(resnet_depth("resnet20"), Some(20));
-        assert_eq!(resnet_depth("resnet8"), Some(8));
-        assert_eq!(resnet_depth("resnet20_sb"), Some(20));
-        assert_eq!(resnet_depth("resnet21"), None); // not 6n+2
-        assert_eq!(resnet_depth("vgg_small"), None);
-        assert_eq!(resnet_depth("resnet"), None);
+    fn unknown_engine_models_error() {
+        let cfg = RunConfig::default();
+        assert!(drive_engine(&cfg, "resnet21", 1).is_err()); // not 6n+2
+        assert!(drive_engine(&cfg, "vgg_small", 1).is_err());
     }
 
     #[test]

@@ -8,23 +8,43 @@
 //!   fwd/bwd, AOT-lowered to HLO text (`make artifacts`).
 //! * L3 (this crate): PJRT runtime, training driver, repetition-sparsity
 //!   inference engine, the network-level executor that compiles whole
-//!   models onto it (`network`), sparse-accelerator energy simulator,
-//!   serving coordinator, benchmark harnesses for every paper
+//!   models onto it (`network` — residual and projection-shortcut
+//!   topologies, cross-layer patch reuse), sparse-accelerator energy
+//!   simulator, serving coordinator, benchmark harnesses for every paper
 //!   table/figure.
 //!
-//! See DESIGN.md for the system inventory and experiment index.
+//! See ARCHITECTURE.md for the top-to-bottom tour (quant → plan →
+//! executor → network → serving) and DESIGN.md for the system inventory
+//! and experiment index.
+
+// The public API carries docs; CI escalates this to an error (clippy
+// `-D warnings` and the `cargo doc` job's `RUSTDOCFLAGS="-D warnings"`),
+// so the gate lives in CI rather than failing local builds outright.
+// Modules still carrying `allow` predate the rustdoc sweep (ROADMAP).
+#![warn(missing_docs)]
+
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod cli;
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod config;
 pub mod coordinator;
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod data;
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod experiments;
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod metrics;
 pub mod models;
 pub mod network;
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod quant;
 pub mod repetition;
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod runtime;
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod simulator;
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod tensor;
+#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod training;
 pub mod util;

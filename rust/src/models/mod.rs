@@ -15,12 +15,16 @@ use crate::tensor::Conv2dGeometry;
 /// One conv layer of a described network.
 #[derive(Debug, Clone)]
 pub struct ConvLayerDesc {
+    /// layer name, e.g. `003.conv` / `005.proj`
     pub name: String,
+    /// full conv geometry (batch included)
     pub geom: Conv2dGeometry,
+    /// false for full-precision layers (the stem)
     pub quantized: bool,
 }
 
 impl ConvLayerDesc {
+    /// Weight count of this layer (K*C*R*S).
     pub fn weights(&self) -> usize {
         self.geom.weight_count()
     }
@@ -104,6 +108,98 @@ pub fn cifar_resnet_layers(
         }
     }
     layers
+}
+
+/// ResNet-18-shaped CIFAR variant, **network-compile order**: each
+/// stage holds 2 blocks; stage-boundary blocks carry a quantized 1x1
+/// *projection* shortcut (option B) emitted **between** the block's two
+/// convs — `[conv1, proj, conv2]` — so the list is executable in order
+/// (the projection's output exists before the conv that adds it).
+/// `network::resnet18_wiring` derives the branching wiring from this
+/// shape. First-stage blocks (stride 1, equal channels) use identity
+/// shortcuts and emit no projection. Stem unquantized, widths
+/// `[16, 32, 64, 128] * width_mult`.
+pub fn cifar_resnet18_layers(width_mult: f64, image: usize, batch: usize) -> Vec<ConvLayerDesc> {
+    let widths = scaled(&[16, 32, 64, 128], width_mult, 8);
+    let mut layers = Vec::new();
+    let mut idx = 0usize;
+    let mut push = |c, h, w, k, ks, st, q, name: &str, idx: &mut usize| {
+        layers.push(conv(format!("{idx:03}.{name}"), batch, c, h, w, k, ks, st, q));
+        *idx += 1;
+    };
+    let (mut h, mut w) = (image, image);
+    push(3, h, w, widths[0], 3, 1, false, "conv", &mut idx);
+    let mut in_ch = widths[0];
+    for (si, &wd) in widths.iter().enumerate() {
+        for bi in 0..2 {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            push(in_ch, h, w, wd, 3, stride, true, "conv", &mut idx);
+            if stride != 1 || in_ch != wd {
+                // projection shortcut 1x1 (quantized), reading the same
+                // activation as the block's first conv
+                push(in_ch, h, w, wd, 1, stride, true, "proj", &mut idx);
+            }
+            if stride == 2 {
+                h /= 2;
+                w /= 2;
+            }
+            push(wd, h, w, wd, 3, 1, true, "conv", &mut idx);
+            in_ch = wd;
+        }
+    }
+    layers
+}
+
+/// Canonical depth of the `chain1x1` model — shared by
+/// [`engine_model_layers`] (serving) and `plum bench network` (the
+/// `network_forward_fused` series), so the benched and served shapes
+/// can never diverge.
+pub const CHAIN1X1_DEPTH: usize = 12;
+/// Canonical channel width of the `chain1x1` model (see
+/// [`CHAIN1X1_DEPTH`]).
+pub const CHAIN1X1_WIDTH: usize = 64;
+
+/// Fp 3x3 stem + a contiguous chain of `depth - 1` quantized 1x1
+/// convs (`width` channels, stride 1) — the consecutive-1x1 workload
+/// where the network executor's cross-layer patch reuse pays: every
+/// inter-1x1 edge is fusable, so one patch scatter replaces each
+/// per-layer im2col pass.
+pub fn conv1x1_chain_layers(
+    depth: usize,
+    width: usize,
+    image: usize,
+    batch: usize,
+) -> Vec<ConvLayerDesc> {
+    assert!(depth >= 2, "chain needs a stem plus at least one 1x1 conv");
+    let mut layers = vec![conv("000.conv".into(), batch, 3, image, image, width, 3, 1, false)];
+    for i in 1..depth {
+        layers.push(conv(format!("{i:03}.conv"), batch, width, image, image, width, 1, 1, true));
+    }
+    layers
+}
+
+/// CIFAR ResNet depth from a model name like `resnet20` / `resnet20_sb`.
+pub fn cifar_resnet_depth(model: &str) -> Option<usize> {
+    let rest = model.strip_prefix("resnet")?;
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok().filter(|d| *d >= 8 && (*d - 2) % 6 == 0)
+}
+
+/// Engine-servable zoo lookup by name — the models `plum serve
+/// --backend engine` and `plum bench network` accept:
+///
+/// * `resnetN` (N = 6n+2, e.g. `resnet20`): CIFAR ResNet with option-A
+///   shortcuts; a trailing suffix is tolerated (`resnet20_sb`);
+/// * `resnet18c`: the CIFAR-scaled resnet18-shaped net with 1x1
+///   projection shortcuts ([`cifar_resnet18_layers`]);
+/// * `chain1x1`: fp stem + a [`CHAIN1X1_DEPTH`]-deep 1x1 chain — the
+///   cross-layer patch-reuse showcase ([`conv1x1_chain_layers`]).
+pub fn engine_model_layers(name: &str, image: usize, batch: usize) -> Option<Vec<ConvLayerDesc>> {
+    match name {
+        "resnet18c" => Some(cifar_resnet18_layers(1.0, image, batch)),
+        "chain1x1" => Some(conv1x1_chain_layers(CHAIN1X1_DEPTH, CHAIN1X1_WIDTH, image, batch)),
+        _ => cifar_resnet_depth(name).map(|d| cifar_resnet_layers(d, 1.0, image, batch)),
+    }
 }
 
 /// ResNet-18 for `image`px inputs, projection shortcuts (quantized),
@@ -286,5 +382,60 @@ mod tests {
         assert_eq!(layers.len(), 5);
         assert_eq!(layers[1].geom.h, 16); // after first pool
         assert_eq!(layers.last().unwrap().geom.h, 8);
+    }
+
+    #[test]
+    fn cifar_resnet18_block_structure() {
+        let layers = cifar_resnet18_layers(1.0, 32, 1);
+        // stem + 8 blocks of 2 convs + 3 stage-boundary projections
+        assert_eq!(layers.len(), 1 + 16 + 3);
+        assert!(!layers[0].quantized);
+        assert!(layers[1..].iter().all(|l| l.quantized));
+        let projs: Vec<&ConvLayerDesc> =
+            layers.iter().filter(|l| l.name.ends_with(".proj")).collect();
+        assert_eq!(projs.len(), 3);
+        for p in &projs {
+            assert_eq!((p.geom.r, p.geom.s, p.geom.stride), (1, 1, 2));
+        }
+        // final stage: 128 channels at 4px
+        let last = layers.last().unwrap();
+        assert_eq!((last.geom.k, last.geom.h), (128, 4));
+        // a projection reads the same activation as its block's first
+        // conv and produces its block's output shape
+        for (i, l) in layers.iter().enumerate() {
+            if l.name.ends_with(".proj") {
+                let a = layers[i - 1].geom;
+                assert_eq!((l.geom.c, l.geom.h, l.geom.w), (a.c, a.h, a.w));
+                assert_eq!(l.out_shape(), layers[i + 1].out_shape());
+            }
+        }
+    }
+
+    #[test]
+    fn conv1x1_chain_is_contiguous() {
+        let layers = conv1x1_chain_layers(12, 64, 32, 2);
+        assert_eq!(layers.len(), 12);
+        assert!(!layers[0].quantized);
+        for i in 1..layers.len() {
+            let g = layers[i].geom;
+            assert_eq!((g.r, g.s, g.stride, g.padding), (1, 1, 1, 0));
+            let (k, oh, ow) = layers[i - 1].out_shape();
+            assert_eq!((g.c, g.h, g.w), (k, oh, ow), "layer {i}");
+        }
+    }
+
+    #[test]
+    fn engine_model_lookup() {
+        assert_eq!(cifar_resnet_depth("resnet20"), Some(20));
+        assert_eq!(cifar_resnet_depth("resnet8"), Some(8));
+        assert_eq!(cifar_resnet_depth("resnet20_sb"), Some(20));
+        assert_eq!(cifar_resnet_depth("resnet21"), None); // not 6n+2
+        assert_eq!(cifar_resnet_depth("vgg_small"), None);
+        assert_eq!(cifar_resnet_depth("resnet"), None);
+        assert_eq!(engine_model_layers("resnet20", 32, 1).unwrap().len(), 19);
+        assert!(engine_model_layers("resnet18c", 32, 1).unwrap().len() > 16);
+        assert_eq!(engine_model_layers("chain1x1", 32, 1).unwrap().len(), 12);
+        assert!(engine_model_layers("resnet18", 32, 1).is_none()); // not 6n+2
+        assert!(engine_model_layers("mlp", 32, 1).is_none());
     }
 }

@@ -33,6 +33,8 @@ pub struct EngineBackend {
 }
 
 impl EngineBackend {
+    /// Backend over one compiled plan: allocates this replica's private
+    /// activation arena.
     pub fn new(plan: Arc<NetworkPlan>) -> EngineBackend {
         let g = plan.out_geom();
         EngineBackend {

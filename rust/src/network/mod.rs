@@ -13,23 +13,55 @@
 //!   pool (each layer's sub-tile memoization then runs inline on its
 //!   worker). Unquantized layers (the fp stem) compile to a transposed
 //!   dense weight block executed by the same tile-fused machinery.
-//!   Inter-layer wiring (ReLU after every conv; option-A residual
-//!   shortcuts for the CIFAR ResNet stem + 2-conv-block shape) is
-//!   derived from the descriptor list, SparseDNN-style: whole-network
-//!   code generation with buffer reuse decided at compile time.
+//!   Inter-layer wiring is explicit ([`LayerWiring`]: input activation,
+//!   fused ReLU, residual source) and supports **branching**: a layer
+//!   may read any earlier activation, so a residual edge can carry a
+//!   1x1 *projection* conv (option-B / resnet18-style shortcuts) next
+//!   to the option-A identity view. Compile also marks **fusable
+//!   edges** for cross-layer patch reuse: when every consumer of an
+//!   activation is a 1x1 / stride-1 / pad-0 engine layer, the producer
+//!   scatters straight into pixel-major patch blocks and the consumers
+//!   skip their im2col pass entirely (SparseDNN's lesson: fuse the
+//!   layout transform across layers instead of re-packing per layer).
 //! * [`NetworkExecutor`] runs a full forward pass through
-//!   `execute_conv2d_into` using a preallocated **ping-pong activation
-//!   arena** (three buffers: input, output, and a pinned residual
-//!   source). No per-layer `Tensor` is allocated, per-worker scratch is
+//!   `execute_conv2d_layout` using a preallocated **live-range-allocated
+//!   activation arena**: compile assigns every activation a buffer slot
+//!   by linear-scan over its live range, so plain chains use two
+//!   buffers, residual topologies (identity or projection) three, and
+//!   arbitrary branching wirings however many they truly need. No
+//!   per-layer `Tensor` is allocated, per-worker scratch is
 //!   thread-cached (`util::scratch`), and ReLU/residual-add are fused
 //!   into each layer's output scatter — a steady-state forward pass
 //!   performs no heap allocation of activations at all.
 //!
 //! Determinism contract: like the single-layer executor, the forward
 //! pass is **bit-identical for every pool width** (fusion is
-//! elementwise; tile partitioning depends only on tile size), asserted
+//! elementwise; tile partitioning depends only on tile size) *and*
+//! bit-identical with patch fusion on or off (reuse changes where
+//! values live, never the values or their accumulation order), asserted
 //! end-to-end by `tests/integration_network.rs` and re-checked by
 //! `plum bench network`.
+//!
+//! # Compile and execute a model
+//!
+//! ```
+//! use plum::models::ConvLayerDesc;
+//! use plum::network::{NetworkExecutor, NetworkPlan};
+//! use plum::quant::Scheme;
+//! use plum::repetition::EngineConfig;
+//! use plum::tensor::Conv2dGeometry;
+//! use std::sync::Arc;
+//!
+//! let g = Conv2dGeometry { n: 1, c: 3, h: 6, w: 6, k: 4, r: 3, s: 3, stride: 1, padding: 1 };
+//! let descs = vec![ConvLayerDesc { name: "conv0".into(), geom: g, quantized: true }];
+//! let plan = NetworkPlan::compile(&descs, EngineConfig::default(), Scheme::sb_default()).unwrap();
+//! assert_eq!(plan.num_layers(), 1);
+//!
+//! let mut exec = NetworkExecutor::new(Arc::new(plan));
+//! let input = vec![0.5f32; 3 * 6 * 6];
+//! let out = exec.forward(&input);
+//! assert_eq!(out.len(), 4 * 6 * 6);
+//! ```
 
 mod backend;
 
@@ -42,8 +74,8 @@ use anyhow::{bail, ensure, Result};
 use crate::models::ConvLayerDesc;
 use crate::quant::{quantize, Scheme};
 use crate::repetition::{
-    execute_conv2d_into, plan_layer_auto_pool, EngineConfig, LayerPlan, OpCounts, PostOp,
-    Residual, DEFAULT_TILE,
+    execute_conv2d_layout, plan_layer_auto_pool, EngineConfig, LayerPlan, OpCounts, PostOp,
+    Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
 };
 use crate::tensor::{im2col_rows_into, Conv2dGeometry, Tensor};
 use crate::util::{Pool, Rng, ScratchVec, UnsafeSlice};
@@ -67,10 +99,41 @@ pub fn seeded_latents(layers: &[ConvLayerDesc], seed: u64) -> Vec<Tensor> {
         .collect()
 }
 
+/// Wiring of one layer inside a [`NetworkPlan`]. Activation `0` is the
+/// network input; activation `j` (for `j >= 1`) is the output of layer
+/// `j - 1`; the network output is the last layer's activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerWiring {
+    /// activation index this layer convolves — any already-computed
+    /// activation, so residual edges can branch (`<=` the layer index)
+    pub input: usize,
+    /// apply ReLU in the fused epilogue (after the residual add)
+    pub relu: bool,
+    /// activation added into the output before ReLU: an option-A view
+    /// (stride subsample + zero channel pad) of a raw activation, or —
+    /// when it names a projection layer's output — an exact-shape add
+    pub residual_from: Option<usize>,
+}
+
+impl LayerWiring {
+    /// Plain chain step for layer `i`: read the previous activation,
+    /// ReLU, no shortcut.
+    pub fn chain(i: usize) -> LayerWiring {
+        LayerWiring { input: i, relu: true, residual_from: None }
+    }
+}
+
+/// Plain-chain wiring for `n` layers (ReLU everywhere, no shortcuts).
+pub fn chain_wiring(n: usize) -> Vec<LayerWiring> {
+    (0..n).map(LayerWiring::chain).collect()
+}
+
 /// One compiled layer of a [`NetworkPlan`].
 #[derive(Debug, Clone)]
 pub struct NetworkLayer {
+    /// descriptor name (diagnostics)
     pub name: String,
+    /// conv geometry of this layer
     pub geom: Conv2dGeometry,
     /// engine plan (quantized layers); `None` = dense fp fallback
     pub plan: Option<LayerPlan>,
@@ -79,23 +142,42 @@ pub struct NetworkLayer {
     /// the dense weights this layer executes (quantized values for
     /// engine layers, latents for fp layers) — reference checks/reports
     pub weights: Tensor,
+    /// activation index this layer reads ([`LayerWiring::input`])
+    pub input: usize,
     /// apply ReLU in the fused epilogue
     pub relu: bool,
-    /// activation index whose option-A shortcut is added before ReLU
-    /// (activation `i` is the *input* of layer `i`; `0` = network input)
+    /// activation whose shortcut is added before ReLU (option-A view of
+    /// a raw activation, or a projection layer's exact-shape output)
     pub residual_from: Option<usize>,
+    /// consume the input as pre-transposed pixel-major patch blocks
+    /// (cross-layer patch reuse; the producer scattered them)
+    pub in_blocked: bool,
+    /// scatter the output as pixel-major patch blocks for the next
+    /// layer(s) instead of NCHW
+    pub out_blocked: bool,
 }
 
 /// A whole model compiled onto the repetition engine: per-layer plans
-/// built once, wiring and arena sizing decided at compile time.
+/// built once, wiring, arena slots and fusable edges decided at compile
+/// time.
 #[derive(Debug, Clone)]
 pub struct NetworkPlan {
+    /// compiled layers, in execution order
     pub layers: Vec<NetworkLayer>,
+    /// quantization scheme every quantized layer was compiled under
     pub scheme: Scheme,
-    /// element count of activation `a[i]` (`a[0]` = input, `a[L]` = output)
+    /// logical element count of activation `a[i]` (`a[0]` = input)
     act_elems: Vec<usize>,
-    /// `residual_needed[i]`: some later layer reads activation `a[i]`
-    residual_needed: Vec<bool>,
+    /// arena bytes-worth of activation `a[i]`: equals `act_elems[i]`
+    /// for NCHW activations, the PIXEL_BLOCK-padded block size for
+    /// fused (blocked) activations
+    act_buf_elems: Vec<usize>,
+    /// `(c, h, w)` of activation `a[i]` (batch excluded)
+    act_shape: Vec<(usize, usize, usize)>,
+    /// arena slot of activation `a[i]` (live-range linear scan)
+    slot_of_act: Vec<usize>,
+    /// arena slot sizes (max buf elems over the slot's activations)
+    slot_elems: Vec<usize>,
     /// §6 deployment footprint of all weights under `scheme`
     pub weight_bits: usize,
 }
@@ -122,11 +204,12 @@ impl NetworkPlan {
         Self::compile_with_weights(layers, &latents, cfg, scheme, Pool::global())
     }
 
-    /// Compile from explicit latent weights with the default wiring:
-    /// ReLU after every conv, plus [`resnet_wiring`]'s option-A
-    /// shortcuts **when the descriptor list has the CIFAR ResNet
-    /// shape** (stem + 2-conv blocks). Custom topologies that happen to
-    /// pair-match but must *not* get shortcuts should use
+    /// Compile from explicit latent weights with derived wiring
+    /// ([`derive_wiring`]): contiguous chains get [`resnet_wiring`]'s
+    /// ReLU chain + option-A pair heuristic; lists carrying inline 1x1
+    /// projection layers are parsed as resnet18-style blocks
+    /// ([`resnet18_wiring`]). Custom topologies that happen to
+    /// shape-match but must wire differently should use
     /// [`NetworkPlan::compile_with_wiring`] and pass their wiring
     /// explicitly.
     pub fn compile_with_weights(
@@ -136,93 +219,98 @@ impl NetworkPlan {
         scheme: Scheme,
         pool: &Pool,
     ) -> Result<NetworkPlan> {
-        Self::compile_with_wiring(descs, latents, &resnet_wiring(descs), cfg, scheme, pool)
+        Self::compile_with_wiring(descs, latents, &derive_wiring(descs)?, cfg, scheme, pool)
     }
 
     /// Core compile: quantize + plan every layer from explicit latent
-    /// weights and explicit wiring — one `(relu, residual_from)` pair
-    /// per layer, `residual_from` naming the activation index (`i` =
-    /// input of layer `i`, `0` = network input) whose option-A shortcut
-    /// is added before that layer's ReLU. Layers are fanned over `pool`;
-    /// `cfg.subtile == 0` auto-tunes the sub-tile size per layer (paper
-    /// §6), a fixed value pins it.
+    /// weights and explicit wiring (one [`LayerWiring`] per layer).
+    /// Validates that every wired edge is geometrically sound (inputs
+    /// chain from already-computed activations, residual sources are
+    /// option-A-compatible with their consumer's output, every
+    /// intermediate activation is consumed), assigns arena slots by
+    /// live range, and marks fusable edges for cross-layer patch
+    /// reuse. Layers are fanned over `pool`; `cfg.subtile == 0`
+    /// auto-tunes the sub-tile size per layer (paper §6), a fixed value
+    /// pins it.
     pub fn compile_with_wiring(
         descs: &[ConvLayerDesc],
         latents: &[Tensor],
-        wiring: &[(bool, Option<usize>)],
+        wiring: &[LayerWiring],
         cfg: EngineConfig,
         scheme: Scheme,
         pool: &Pool,
     ) -> Result<NetworkPlan> {
-        ensure!(!descs.is_empty(), "cannot compile an empty network");
-        ensure!(
-            wiring.len() == descs.len(),
-            "{} wiring entries for {} layers",
-            wiring.len(),
-            descs.len()
-        );
-        for (li, (_, rf)) in wiring.iter().enumerate() {
-            if let Some(ai) = rf {
-                ensure!(
-                    *ai <= li,
-                    "layer {li} shortcut reads activation {ai}, which is not computed yet"
-                );
-            }
-        }
-        // the executor pins at most ONE shortcut source in its arena at a
-        // time: each activation may feed one shortcut, and pin live
-        // ranges [source, consumer] must be strictly disjoint — reject
-        // anything else here rather than corrupt the arena at run time
-        let mut shortcuts: Vec<(usize, usize)> = wiring
-            .iter()
-            .enumerate()
-            .filter_map(|(li, (_, rf))| rf.map(|ai| (ai, li)))
-            .collect();
-        shortcuts.sort_unstable();
-        for pair in shortcuts.windows(2) {
-            let (a0, c0) = pair[0];
-            let (a1, c1) = pair[1];
-            ensure!(
-                a1 > c0,
-                "shortcut a[{a1}]->layer {c1} overlaps shortcut a[{a0}]->layer {c0}: the \
-                 executor holds one pinned residual source at a time"
-            );
-        }
-        ensure!(
-            latents.len() == descs.len(),
-            "{} weight tensors for {} layers",
-            latents.len(),
-            descs.len()
-        );
+        let n = descs.len();
+        ensure!(n > 0, "cannot compile an empty network");
+        ensure!(wiring.len() == n, "{} wiring entries for {n} layers", wiring.len());
+        ensure!(latents.len() == n, "{} weight tensors for {n} layers", latents.len());
         if matches!(scheme, Scheme::Fp) {
             bail!("the repetition engine executes quantized networks — pick a non-fp scheme");
         }
         let batch = descs[0].geom.n;
-        for (i, d) in descs.iter().enumerate() {
-            ensure!(d.geom.n == batch, "layer {i} batch {} != network batch {batch}", d.geom.n);
-            let ws = latents[i].shape();
-            let want = [d.geom.k, d.geom.c, d.geom.r, d.geom.s];
-            ensure!(ws == &want[..], "layer {i} weights {ws:?} do not match its geometry");
-            if i > 0 {
-                let (pk, ph, pw) = descs[i - 1].out_shape();
-                let g = d.geom;
+
+        // ---- wiring + geometry validation over the activation graph ----
+        // act_shape[j] is (c, h, w) of activation j; act 0 is defined by
+        // layer 0's input geometry, act j+1 by layer j's output.
+        let mut act_shape = Vec::with_capacity(n + 1);
+        act_shape.push((descs[0].geom.c, descs[0].geom.h, descs[0].geom.w));
+        for (li, d) in descs.iter().enumerate() {
+            let g = d.geom;
+            let w = wiring[li];
+            ensure!(g.n == batch, "layer {li} batch {} != network batch {batch}", g.n);
+            let ws = latents[li].shape();
+            let want = [g.k, g.c, g.r, g.s];
+            ensure!(ws == &want[..], "layer {li} weights {ws:?} do not match its geometry");
+            ensure!(
+                w.input <= li,
+                "layer {li} reads activation {}, which is not computed yet",
+                w.input
+            );
+            let (sc, sh, sw) = act_shape[w.input];
+            ensure!(
+                g.c == sc && g.h == sh && g.w == sw,
+                "layer {li} ({}) input {}x{}x{} does not match activation {} ({sc}x{sh}x{sw})",
+                d.name,
+                g.c,
+                g.h,
+                g.w,
+                w.input
+            );
+            if let Some(ai) = w.residual_from {
                 ensure!(
-                    g.c == pk && g.h == ph && g.w == pw,
-                    "layer {i} ({}) input {}x{}x{} does not chain from layer {} output \
-                     {pk}x{ph}x{pw} — pooled or branching topologies are not supported",
-                    descs[i].name,
-                    g.c,
-                    g.h,
-                    g.w,
-                    i - 1
+                    ai <= li,
+                    "layer {li} shortcut reads activation {ai}, which is not computed yet"
+                );
+                let (rc, rh, rw) = act_shape[ai];
+                let (oh, ow) = (g.out_h(), g.out_w());
+                ensure!(rh >= oh && rw >= ow, "layer {li} shortcut source smaller than output");
+                let st = (rh / oh).max(1);
+                ensure!(
+                    rh == st * oh && rw == st * ow && rc <= g.k,
+                    "layer {li} shortcut from activation {ai} ({rc}x{rh}x{rw}) is not an \
+                     option-A view of its {}x{oh}x{ow} output",
+                    g.k
                 );
             }
+            act_shape.push((g.k, g.out_h(), g.out_w()));
         }
-        // quantize + plan, one layer per pool job (a layer's own
-        // sub-tile fan-out then runs inline on its worker)
-        let slots: Vec<Mutex<Option<NetworkLayer>>> =
-            (0..descs.len()).map(|_| Mutex::new(None)).collect();
-        pool.run(descs.len(), |li| {
+        // every intermediate activation must feed something: a dead layer
+        // output is a wiring bug, not a feature
+        for j in 1..n {
+            let consumed = wiring
+                .iter()
+                .any(|w| w.input == j || w.residual_from == Some(j));
+            ensure!(
+                consumed,
+                "activation {j} (output of layer {}) is never consumed by any later layer",
+                j - 1
+            );
+        }
+
+        // ---- quantize + plan, one layer per pool job (a layer's own
+        // sub-tile fan-out then runs inline on its worker) --------------
+        let slots: Vec<Mutex<Option<NetworkLayer>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        pool.run(n, |li| {
             let d = &descs[li];
             let w = &latents[li];
             let (plan, dense_wt, weights) = if d.quantized {
@@ -245,37 +333,83 @@ impl NetworkPlan {
                 }
                 (None, Some(wt), w.clone())
             };
-            let (relu, residual_from) = wiring[li];
+            let wire = wiring[li];
             *slots[li].lock().unwrap() = Some(NetworkLayer {
                 name: d.name.clone(),
                 geom: d.geom,
                 plan,
                 dense_wt,
                 weights,
-                relu,
-                residual_from,
+                input: wire.input,
+                relu: wire.relu,
+                residual_from: wire.residual_from,
+                in_blocked: false,
+                out_blocked: false,
             });
         });
-        let layers: Vec<NetworkLayer> = slots
+        let mut layers: Vec<NetworkLayer> = slots
             .into_iter()
             .map(|s| s.into_inner().unwrap().expect("every layer compiled by the pool run"))
             .collect();
 
-        let mut act_elems = Vec::with_capacity(descs.len() + 1);
-        act_elems.push(batch * descs[0].geom.c * descs[0].geom.h * descs[0].geom.w);
-        for d in descs {
-            act_elems.push(batch * d.geom.k * d.geom.out_h() * d.geom.out_w());
-        }
-        let mut residual_needed = vec![false; descs.len() + 1];
-        for l in &layers {
-            if let Some(ai) = l.residual_from {
-                residual_needed[ai] = true;
+        // ---- cross-layer patch reuse: mark fusable edges ---------------
+        // Activation a (not the network output, not a residual source)
+        // can live as pixel-major patch blocks when its producer has an
+        // engine plan and every consumer is a 1x1 / stride-1 / pad-0
+        // engine layer — those blocks ARE each consumer's patch matrix,
+        // so the producer scatters them once and the consumers skip
+        // im2col entirely.
+        for a in 1..n {
+            if layers[a - 1].plan.is_none() {
+                continue;
+            }
+            if wiring.iter().any(|w| w.residual_from == Some(a)) {
+                continue;
+            }
+            let consumers: Vec<usize> = (0..n).filter(|&j| wiring[j].input == a).collect();
+            let all_fusable = !consumers.is_empty()
+                && consumers.iter().all(|&j| {
+                    let g = descs[j].geom;
+                    layers[j].plan.is_some()
+                        && g.r == 1
+                        && g.s == 1
+                        && g.stride == 1
+                        && g.padding == 0
+                });
+            if all_fusable {
+                layers[a - 1].out_blocked = true;
+                for &j in &consumers {
+                    layers[j].in_blocked = true;
+                }
             }
         }
+
+        // ---- activation sizes + live-range arena slot assignment -------
+        let act_elems: Vec<usize> = act_shape.iter().map(|&(c, h, w)| batch * c * h * w).collect();
+        let mut act_buf_elems = act_elems.clone();
+        for (li, l) in layers.iter().enumerate() {
+            if l.out_blocked {
+                let (c, h, w) = act_shape[li + 1];
+                act_buf_elems[li + 1] = blocked_elems(batch * h * w, c);
+            }
+        }
+        let slot_of_act = allocate_slots(n, wiring);
+        let slot_elems = slot_sizes(&slot_of_act, &act_buf_elems);
+
         let weight_bits = descs.iter().map(|d| layer_weight_bits(d, scheme)).sum();
-        Ok(NetworkPlan { layers, scheme, act_elems, residual_needed, weight_bits })
+        Ok(NetworkPlan {
+            layers,
+            scheme,
+            act_elems,
+            act_buf_elems,
+            act_shape,
+            slot_of_act,
+            slot_elems,
+            weight_bits,
+        })
     }
 
+    /// Number of conv layers in the compiled network.
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
@@ -285,10 +419,12 @@ impl NetworkPlan {
         self.layers[0].geom.n
     }
 
+    /// Elements of the network input activation (batch included).
     pub fn input_elems(&self) -> usize {
         self.act_elems[0]
     }
 
+    /// Elements of the network output activation (batch included).
     pub fn output_elems(&self) -> usize {
         *self.act_elems.last().unwrap()
     }
@@ -306,12 +442,39 @@ impl NetworkPlan {
 
     /// Largest activation the arena must hold.
     pub fn max_act_elems(&self) -> usize {
-        *self.act_elems.iter().max().unwrap()
+        *self.act_buf_elems.iter().max().unwrap()
     }
 
     /// Elements of activation `a[i]`.
     pub fn act_elems(&self, i: usize) -> usize {
         self.act_elems[i]
+    }
+
+    /// Activation-arena buffers the executor allocates (live-range
+    /// assignment: 2 for plain chains, 3 for residual topologies).
+    pub fn num_arena_slots(&self) -> usize {
+        self.slot_elems.len()
+    }
+
+    /// Edges fused for cross-layer patch reuse (producers scattering
+    /// pixel-major patch blocks instead of NCHW).
+    pub fn patch_fused_edges(&self) -> usize {
+        self.layers.iter().filter(|l| l.out_blocked).count()
+    }
+
+    /// A copy of this plan with cross-layer patch reuse disabled (every
+    /// handoff through NCHW) — the executor then re-runs im2col per
+    /// layer. Used by benchmarks and tests as the baseline the fused
+    /// path must bit-match.
+    pub fn without_patch_fusion(&self) -> NetworkPlan {
+        let mut p = self.clone();
+        for l in &mut p.layers {
+            l.in_blocked = false;
+            l.out_blocked = false;
+        }
+        p.act_buf_elems = p.act_elems.clone();
+        p.slot_elems = slot_sizes(&p.slot_of_act, &p.act_buf_elems);
+        p
     }
 
     /// Dense MACs of one full forward pass (arithmetic-reduction
@@ -336,6 +499,58 @@ impl NetworkPlan {
     }
 }
 
+/// Elements a pixel-major blocked activation occupies: whole
+/// `PIXEL_BLOCK`-wide lane blocks, ragged tail padded.
+fn blocked_elems(pixels: usize, channels: usize) -> usize {
+    pixels.div_ceil(PIXEL_BLOCK) * PIXEL_BLOCK * channels
+}
+
+/// Live-range linear scan: assign every activation an arena slot such
+/// that no two simultaneously-live activations share one. Activation
+/// `j` is live from the layer that produces it (`j - 1`; the network
+/// input from before layer 0) through its last reader; the network
+/// output is pinned past the final layer. Deterministic: always picks
+/// the lowest free slot.
+fn allocate_slots(n_layers: usize, wiring: &[LayerWiring]) -> Vec<usize> {
+    let n_acts = n_layers + 1;
+    let mut last_use = vec![0usize; n_acts];
+    last_use[n_acts - 1] = n_layers;
+    for (li, w) in wiring.iter().enumerate() {
+        last_use[w.input] = last_use[w.input].max(li);
+        if let Some(ai) = w.residual_from {
+            last_use[ai] = last_use[ai].max(li);
+        }
+    }
+    let mut slot_of_act = vec![0usize; n_acts];
+    // slot_act[s] = activation currently occupying slot s
+    let mut slot_act: Vec<usize> = vec![0];
+    for li in 0..n_layers {
+        let out_act = li + 1;
+        // a slot is free for layer li's output when its occupant was
+        // last read strictly before li (the write overlaps the reads)
+        let slot = match (0..slot_act.len()).find(|&s| last_use[slot_act[s]] < li) {
+            Some(s) => s,
+            None => {
+                slot_act.push(out_act);
+                slot_act.len() - 1
+            }
+        };
+        slot_act[slot] = out_act;
+        slot_of_act[out_act] = slot;
+    }
+    slot_of_act
+}
+
+/// Per-slot buffer size: the largest activation buffer assigned to it.
+fn slot_sizes(slot_of_act: &[usize], act_buf_elems: &[usize]) -> Vec<usize> {
+    let num_slots = slot_of_act.iter().max().map(|m| m + 1).unwrap_or(0);
+    let mut sizes = vec![0usize; num_slots];
+    for (a, &s) in slot_of_act.iter().enumerate() {
+        sizes[s] = sizes[s].max(act_buf_elems[a]);
+    }
+    sizes
+}
+
 /// §6 deployment bit accounting per layer: sb = 1-bit bitmap + one sign
 /// bit per region; binary = 1 bit/weight; ternary = 2; fp layers 32.
 fn layer_weight_bits(desc: &ConvLayerDesc, scheme: Scheme) -> usize {
@@ -351,31 +566,119 @@ fn layer_weight_bits(desc: &ConvLayerDesc, scheme: Scheme) -> usize {
     }
 }
 
-/// Derive the default inter-layer wiring from a descriptor list: ReLU
-/// after every conv; when the list has the CIFAR ResNet shape (stem +
-/// 2-conv blocks whose second conv keeps channels and stride 1), each
-/// block's second conv gains an option-A shortcut from the block input.
-/// This is a *shape heuristic* — chains that match it but are not
-/// residual networks should build their wiring by hand and compile via
-/// [`NetworkPlan::compile_with_wiring`].
-pub fn resnet_wiring(descs: &[ConvLayerDesc]) -> Vec<(bool, Option<usize>)> {
+/// Default wiring derivation used by
+/// [`NetworkPlan::compile_with_weights`]: descriptor lists that chain
+/// contiguously (every layer's input is exactly the previous layer's
+/// output shape) get [`resnet_wiring`]; lists broken by inline 1x1
+/// branch layers are parsed as projection-shortcut blocks via
+/// [`resnet18_wiring`]. Anything else (pooled trunks, arbitrary
+/// branches) is an error — pass explicit wiring to
+/// [`NetworkPlan::compile_with_wiring`] instead.
+pub fn derive_wiring(descs: &[ConvLayerDesc]) -> Result<Vec<LayerWiring>> {
+    ensure!(!descs.is_empty(), "cannot derive wiring for an empty network");
+    let chains = (1..descs.len()).all(|i| {
+        let (k, oh, ow) = descs[i - 1].out_shape();
+        let g = descs[i].geom;
+        g.c == k && g.h == oh && g.w == ow
+    });
+    if chains {
+        Ok(resnet_wiring(descs))
+    } else {
+        resnet18_wiring(descs)
+    }
+}
+
+/// Derive the default inter-layer wiring from a *contiguously chaining*
+/// descriptor list: ReLU after every conv; when the list has the CIFAR
+/// ResNet shape (stem + 2-conv blocks of spatial convs whose second
+/// conv keeps channels and stride 1), each block's second conv gains an
+/// option-A shortcut from the block input. 1x1 pairs never match —
+/// chains of pointwise convs (the patch-reuse workloads) are chains,
+/// not residual blocks. This is a *shape heuristic* — chains that
+/// match it but are not residual networks should build their wiring by
+/// hand and compile via [`NetworkPlan::compile_with_wiring`].
+pub fn resnet_wiring(descs: &[ConvLayerDesc]) -> Vec<LayerWiring> {
     let n = descs.len();
-    let mut wiring = vec![(true, None); n];
+    let mut wiring = chain_wiring(n);
     if n >= 3 && (n - 1) % 2 == 0 {
         let paired = (1..n).step_by(2).all(|i| {
             let a = descs[i].geom;
             let b = descs[i + 1].geom;
-            b.c == a.k && b.k == a.k && b.stride == 1 && b.r == a.r && b.s == a.s
+            b.c == a.k && b.k == a.k && b.stride == 1 && b.r == a.r && b.s == a.s && a.r > 1
         });
         if paired {
             for i in (1..n).step_by(2) {
                 // activation i is the input of block conv i; it shortcuts
                 // into the second conv's output
-                wiring[i + 1].1 = Some(i);
+                wiring[i + 1].residual_from = Some(i);
             }
         }
     }
     wiring
+}
+
+/// Derive projection-shortcut (resnet18-style, option-B) wiring from a
+/// descriptor list shaped `stem, block, block, ...` where each block is
+/// either `[conv, conv]` (identity shortcut) or `[conv, proj 1x1,
+/// conv]` — the 1x1 projection reading the *same* activation as the
+/// block's first conv and riding the residual edge
+/// (`models::cifar_resnet18_layers` emits this order). The projection
+/// is linear (no ReLU of its own); the block's second conv adds the
+/// projection output before its ReLU. Like [`resnet_wiring`] this is a
+/// shape heuristic; lists that match it but mean something else must
+/// pass explicit wiring to [`NetworkPlan::compile_with_wiring`].
+pub fn resnet18_wiring(descs: &[ConvLayerDesc]) -> Result<Vec<LayerWiring>> {
+    ensure!(!descs.is_empty(), "cannot wire an empty network");
+    let mut wiring = vec![LayerWiring::chain(0)];
+    let mut i = 1;
+    while i < descs.len() {
+        let a = descs[i].geom;
+        let is_proj_block = i + 2 < descs.len() && {
+            let p = descs[i + 1].geom;
+            p.r == 1
+                && p.s == 1
+                && p.c == a.c
+                && p.h == a.h
+                && p.w == a.w
+                && p.stride == a.stride
+                && p.k == a.k
+        };
+        if is_proj_block {
+            let (ak, ah, aw) = descs[i].out_shape();
+            let b = descs[i + 2].geom;
+            ensure!(
+                b.c == ak && b.h == ah && b.w == aw && b.stride == 1,
+                "layer {} does not chain from its block's first conv",
+                i + 2
+            );
+            ensure!(
+                descs[i + 1].out_shape() == descs[i + 2].out_shape(),
+                "projection at layer {} does not match its block's output shape",
+                i + 1
+            );
+            wiring.push(LayerWiring::chain(i));
+            wiring.push(LayerWiring { input: i, relu: false, residual_from: None });
+            wiring.push(LayerWiring { input: i + 1, relu: true, residual_from: Some(i + 2) });
+            i += 3;
+        } else if i + 1 < descs.len() && {
+            let b = descs[i + 1].geom;
+            let (ak, ah, aw) = descs[i].out_shape();
+            // like resnet_wiring, 1x1 pairs are chains, never identity
+            // residual blocks (a.r > 1 keeps patch-reuse chains plain)
+            b.c == ak && b.h == ah && b.w == aw && b.k == ak && b.stride == 1 && a.r > 1
+        } {
+            wiring.push(LayerWiring::chain(i));
+            wiring.push(LayerWiring { input: i + 1, relu: true, residual_from: Some(i) });
+            i += 2;
+        } else {
+            bail!(
+                "layer {i} ({}) does not start a recognizable residual block — pass explicit \
+                 wiring via NetworkPlan::compile_with_wiring",
+                descs[i].name
+            );
+        }
+    }
+    Ok(wiring)
 }
 
 /// Tile-fused dense conv for fp layers (the unquantized stem): per pixel
@@ -431,16 +734,16 @@ fn dense_conv_into(
     );
 }
 
-/// Disjoint views of the three arena slots: mutable output, shared
-/// current input, optionally the pinned residual source (which may alias
-/// the input while a block's first conv runs — both are shared reads).
-fn arena_views(
-    bufs: &mut [Vec<f32>; 3],
+/// Disjoint views of the arena slots a layer touches: mutable output,
+/// shared input, optionally the shared residual source (which may alias
+/// the input when a layer adds its own input — both are shared reads).
+fn arena_views<'a>(
+    bufs: &'a mut [Vec<f32>],
     out: usize,
-    cur: usize,
-    held: Option<usize>,
-) -> (&mut Vec<f32>, &Vec<f32>, Option<&Vec<f32>>) {
-    debug_assert!(out != cur && Some(out) != held, "output slot must be free");
+    input: usize,
+    res: Option<usize>,
+) -> (&'a mut Vec<f32>, &'a Vec<f32>, Option<&'a Vec<f32>>) {
+    debug_assert!(out != input && Some(out) != res, "output slot must be free");
     let mut ov = None;
     let mut xv = None;
     let mut hv = None;
@@ -449,10 +752,10 @@ fn arena_views(
             ov = Some(b);
         } else {
             let view: &Vec<f32> = b;
-            if i == cur {
+            if i == input {
                 xv = Some(view);
             }
-            if held == Some(i) {
+            if res == Some(i) {
                 hv = Some(view);
             }
         }
@@ -461,25 +764,24 @@ fn arena_views(
 }
 
 /// Runs full forward passes of one [`NetworkPlan`] through a reusable
-/// three-buffer activation arena. Construct once per serving replica;
-/// `forward` never allocates activations.
+/// live-range-allocated activation arena. Construct once per serving
+/// replica; `forward` never allocates activations.
 #[derive(Debug)]
 pub struct NetworkExecutor {
     plan: Arc<NetworkPlan>,
-    bufs: [Vec<f32>; 3],
+    bufs: Vec<Vec<f32>>,
     tile: usize,
 }
 
 impl NetworkExecutor {
+    /// Allocate the activation arena for `plan` (one buffer per compile-
+    /// time slot, sized to the largest activation assigned to it).
     pub fn new(plan: Arc<NetworkPlan>) -> NetworkExecutor {
-        let m = plan.max_act_elems();
-        NetworkExecutor {
-            plan,
-            bufs: [vec![0.0; m], vec![0.0; m], vec![0.0; m]],
-            tile: DEFAULT_TILE,
-        }
+        let bufs = plan.slot_elems.iter().map(|&m| vec![0.0; m]).collect();
+        NetworkExecutor { plan, bufs, tile: DEFAULT_TILE }
     }
 
+    /// The compiled plan this executor runs.
     pub fn plan(&self) -> &NetworkPlan {
         &self.plan
     }
@@ -494,60 +796,58 @@ impl NetworkExecutor {
     pub fn forward_pool(&mut self, input: &[f32], pool: &Pool) -> &[f32] {
         let plan = Arc::clone(&self.plan);
         assert_eq!(input.len(), plan.input_elems(), "input does not match network geometry");
-        let mut cur = 0usize;
-        self.bufs[cur][..input.len()].copy_from_slice(input);
-        // (arena slot, activation index) pinned for a pending shortcut
-        let mut held: Option<(usize, usize)> = None;
+        self.bufs[plan.slot_of_act[0]][..input.len()].copy_from_slice(input);
         for (li, layer) in plan.layers.iter().enumerate() {
-            if plan.residual_needed[li] {
-                held = Some((cur, li));
-            }
-            let held_buf = held.map(|(hb, _)| hb);
-            let out_idx = (0..3usize)
-                .find(|b| *b != cur && Some(*b) != held_buf)
-                .expect("three buffers always leave a free slot");
-            let in_len = plan.act_elems[li];
-            let out_len = plan.act_elems[li + 1];
-            let (ov, xv, hv) = arena_views(&mut self.bufs, out_idx, cur, held_buf);
+            let in_slot = plan.slot_of_act[layer.input];
+            let out_slot = plan.slot_of_act[li + 1];
+            let res_slot = layer.residual_from.map(|ai| plan.slot_of_act[ai]);
+            let in_len = plan.act_buf_elems[layer.input];
+            let out_len = plan.act_buf_elems[li + 1];
+            let (ov, xv, hv) = arena_views(&mut self.bufs, out_slot, in_slot, res_slot);
             let residual = layer.residual_from.map(|ai| {
-                let (_, ha) = held.expect("shortcut source pinned in the arena");
-                debug_assert_eq!(ha, ai, "hold/wiring mismatch");
-                let sg = plan.layers[ai].geom;
-                let st = (sg.h / layer.geom.out_h()).max(1);
+                let (sc, sh, sw) = plan.act_shape[ai];
+                let st = (sh / layer.geom.out_h()).max(1);
                 Residual {
-                    src: &hv.expect("held arena view")[..plan.act_elems[ai]],
-                    c: sg.c,
-                    h: sg.h,
-                    w: sg.w,
+                    src: &hv.expect("residual slot view")[..plan.act_elems[ai]],
+                    c: sc,
+                    h: sh,
+                    w: sw,
                     stride: st,
                 }
             });
             let post = PostOp { relu: layer.relu, residual };
             match &layer.plan {
-                Some(lp) => execute_conv2d_into(
+                Some(lp) => execute_conv2d_layout(
                     lp,
                     &xv[..in_len],
                     &mut ov[..out_len],
                     pool,
                     self.tile,
                     post,
+                    TileIo {
+                        input_blocked: layer.in_blocked,
+                        output_blocked: layer.out_blocked,
+                    },
                 ),
-                None => dense_conv_into(
-                    layer.geom,
-                    layer.dense_wt.as_ref().expect("fp layer keeps dense weights"),
-                    &xv[..in_len],
-                    &mut ov[..out_len],
-                    pool,
-                    self.tile,
-                    post,
-                ),
-            }
-            cur = out_idx;
-            if layer.residual_from.is_some() {
-                held = None;
+                None => {
+                    debug_assert!(
+                        !layer.in_blocked && !layer.out_blocked,
+                        "fp layers never fuse patch layouts"
+                    );
+                    dense_conv_into(
+                        layer.geom,
+                        layer.dense_wt.as_ref().expect("fp layer keeps dense weights"),
+                        &xv[..in_len],
+                        &mut ov[..out_len],
+                        pool,
+                        self.tile,
+                        post,
+                    )
+                }
             }
         }
-        &self.bufs[cur][..plan.output_elems()]
+        let out_slot = plan.slot_of_act[plan.num_layers()];
+        &self.bufs[out_slot][..plan.output_elems()]
     }
 }
 
@@ -561,6 +861,33 @@ mod tests {
         Scheme::sb_default()
     }
 
+    /// Option-A reference add over raw slices (stride subsample + zero
+    /// channel pad), matching `PostOp::apply`'s index math.
+    #[allow(clippy::too_many_arguments)]
+    fn add_option_a(
+        out: &mut [f32],
+        src: &[f32],
+        n: usize,
+        k: usize,
+        oh: usize,
+        ow: usize,
+        sc: usize,
+        sh: usize,
+        sw: usize,
+    ) {
+        let st = (sh / oh).max(1);
+        for ni in 0..n {
+            for ci in 0..sc.min(k) {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        out[((ni * k + ci) * oh + oy) * ow + ox] +=
+                            src[((ni * sc + ci) * sh + oy * st) * sw + ox * st];
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn resnet8_wiring_and_layer_kinds() {
         let descs = models::cifar_resnet_layers(8, 0.5, 16, 1);
@@ -569,11 +896,16 @@ mod tests {
         // fp stem executes dense; every block conv has an engine plan
         assert!(plan.layers[0].plan.is_none());
         assert!(plan.layers[1..].iter().all(|l| l.plan.is_some()));
+        // every layer chains from the previous activation
+        assert!(plan.layers.iter().enumerate().all(|(i, l)| l.input == i));
         // option-A shortcut on each block's second conv, from block input
         assert_eq!(plan.layers[2].residual_from, Some(1));
         assert_eq!(plan.layers[4].residual_from, Some(3));
         assert_eq!(plan.layers[6].residual_from, Some(5));
         assert!(plan.layers.iter().all(|l| l.relu));
+        // residual topology -> three arena slots; all-3x3 -> no fusion
+        assert_eq!(plan.num_arena_slots(), 3);
+        assert_eq!(plan.patch_fused_edges(), 0);
         // arena must fit the widest activation
         assert!(plan.max_act_elems() >= plan.input_elems());
         assert!(plan.op_counts().total() > 0);
@@ -609,6 +941,9 @@ mod tests {
         let plan = NetworkPlan::compile_with_weights(&descs, &latents, cfg, sb(), &pool).unwrap();
         let plan = Arc::new(plan);
         assert!(plan.layers.iter().all(|l| l.residual_from.is_none()));
+        // 3x3 consumers -> nothing fuses; plain chain -> two slots
+        assert_eq!(plan.patch_fused_edges(), 0);
+        assert_eq!(plan.num_arena_slots(), 2);
 
         let mut rng = Rng::new(41);
         let x = Tensor::rand_normal(&[2, 3, 8, 8], 1.0, &mut rng);
@@ -640,22 +975,208 @@ mod tests {
         let auto = NetworkPlan::compile_with_weights(&descs, &latents, cfg, sb(), &pool).unwrap();
         assert_eq!(auto.layers[2].residual_from, Some(1));
         // explicit all-None wiring keeps it a plain chain
-        let plain = vec![(true, None); 3];
+        let plain = chain_wiring(3);
         let p = NetworkPlan::compile_with_wiring(&descs, &latents, &plain, cfg, sb(), &pool);
         assert!(p.unwrap().layers.iter().all(|l| l.residual_from.is_none()));
         // future-activation shortcuts are rejected
-        let bad = vec![(true, None), (true, Some(2)), (true, None)];
+        let mut bad = chain_wiring(3);
+        bad[1].residual_from = Some(2);
         let err = NetworkPlan::compile_with_wiring(&descs, &latents, &bad, cfg, sb(), &pool);
         assert!(err.is_err());
-        // overlapping pin ranges (two pending shortcut sources at once,
-        // or one activation feeding two shortcuts) are rejected: the
-        // executor pins a single residual source
-        let overlap = vec![(true, None), (true, Some(0)), (true, Some(1))];
-        let err = NetworkPlan::compile_with_wiring(&descs, &latents, &overlap, cfg, sb(), &pool);
-        assert!(err.is_err());
-        let dup = vec![(true, None), (true, Some(0)), (true, Some(0))];
-        let err = NetworkPlan::compile_with_wiring(&descs, &latents, &dup, cfg, sb(), &pool);
-        assert!(err.is_err());
+    }
+
+    #[test]
+    fn overlapping_shortcuts_run_on_the_live_range_arena() {
+        // two overlapping residual edges (a[0] -> layer 1, a[1] ->
+        // layer 2) — the old single-pin ping-pong rejected this shape;
+        // the live-range arena executes it and must match a
+        // layer-by-layer reference bit for bit
+        let g1 = Conv2dGeometry { n: 1, c: 3, h: 6, w: 6, k: 4, r: 3, s: 3, stride: 1, padding: 1 };
+        let g2 = Conv2dGeometry { n: 1, c: 4, h: 6, w: 6, k: 4, r: 3, s: 3, stride: 1, padding: 1 };
+        let descs = vec![
+            ConvLayerDesc { name: "a".into(), geom: g1, quantized: true },
+            ConvLayerDesc { name: "b".into(), geom: g2, quantized: true },
+            ConvLayerDesc { name: "c".into(), geom: g2, quantized: true },
+        ];
+        let latents = seeded_latents(&descs, 11);
+        let pool = Pool::new(2);
+        let cfg = EngineConfig::default();
+        let mut wiring = chain_wiring(3);
+        wiring[1].residual_from = Some(0);
+        wiring[2].residual_from = Some(1);
+        let plan = Arc::new(
+            NetworkPlan::compile_with_wiring(&descs, &latents, &wiring, cfg, sb(), &pool).unwrap(),
+        );
+
+        let mut rng = Rng::new(43);
+        let x = Tensor::rand_normal(&[1, 3, 6, 6], 1.0, &mut rng);
+        let mut exec = NetworkExecutor::new(Arc::clone(&plan));
+        let out = exec.forward_pool(x.data(), &pool).to_vec();
+
+        // layer-by-layer reference with separate residual/ReLU passes
+        let qs: Vec<_> = latents.iter().map(|w| quantize(w, sb(), None)).collect();
+        let y1r = execute_conv2d_pool(&plan_layer(&qs[0], g1, cfg), &x, &pool);
+        let mut y1 = y1r.data().to_vec();
+        y1.iter_mut().for_each(|v| *v = v.max(0.0));
+        let y1t = Tensor::new(&[1, 4, 6, 6], y1.clone());
+        let y2r = execute_conv2d_pool(&plan_layer(&qs[1], g2, cfg), &y1t, &pool);
+        let mut y2 = y2r.data().to_vec();
+        add_option_a(&mut y2, x.data(), 1, 4, 6, 6, 3, 6, 6);
+        y2.iter_mut().for_each(|v| *v = v.max(0.0));
+        let y2t = Tensor::new(&[1, 4, 6, 6], y2);
+        let y3r = execute_conv2d_pool(&plan_layer(&qs[2], g2, cfg), &y2t, &pool);
+        let mut y3 = y3r.data().to_vec();
+        add_option_a(&mut y3, &y1, 1, 4, 6, 6, 4, 6, 6);
+        y3.iter_mut().for_each(|v| *v = v.max(0.0));
+        assert!(out == y3, "overlapping shortcuts differ from the reference");
+    }
+
+    #[test]
+    fn dead_layer_outputs_are_rejected() {
+        let g = Conv2dGeometry { n: 1, c: 3, h: 6, w: 6, k: 3, r: 3, s: 3, stride: 1, padding: 1 };
+        let descs = vec![
+            ConvLayerDesc { name: "a".into(), geom: g, quantized: true },
+            ConvLayerDesc { name: "b".into(), geom: g, quantized: true },
+        ];
+        let latents = seeded_latents(&descs, 13);
+        let pool = Pool::new(1);
+        // layer 1 re-reads the network input, so layer 0's output dies
+        let wiring = vec![LayerWiring::chain(0), LayerWiring::chain(0)];
+        let err = NetworkPlan::compile_with_wiring(
+            &descs,
+            &latents,
+            &wiring,
+            EngineConfig::default(),
+            sb(),
+            &pool,
+        );
+        assert!(err.is_err(), "dead intermediate activations must not compile");
+    }
+
+    #[test]
+    fn patch_fusion_edge_decision() {
+        // 3x3 -> 1x1 -> 1x1 -> 3x3 chain: both edges into the 1x1s fuse,
+        // the edge into the final 3x3 does not, the network output never
+        // does
+        let g0 = Conv2dGeometry { n: 1, c: 3, h: 8, w: 8, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
+        let p1 = Conv2dGeometry { n: 1, c: 8, h: 8, w: 8, k: 8, r: 1, s: 1, stride: 1, padding: 0 };
+        let g3 = Conv2dGeometry { n: 1, c: 8, h: 8, w: 8, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
+        let descs = vec![
+            ConvLayerDesc { name: "a".into(), geom: g0, quantized: true },
+            ConvLayerDesc { name: "b".into(), geom: p1, quantized: true },
+            ConvLayerDesc { name: "c".into(), geom: p1, quantized: true },
+            ConvLayerDesc { name: "d".into(), geom: g3, quantized: true },
+        ];
+        let latents = seeded_latents(&descs, 15);
+        let pool = Pool::new(1);
+        let cfg = EngineConfig::default();
+        let plan = NetworkPlan::compile_with_weights(&descs, &latents, cfg, sb(), &pool).unwrap();
+        assert!(plan.layers[0].out_blocked && !plan.layers[0].in_blocked);
+        assert!(plan.layers[1].in_blocked && plan.layers[1].out_blocked);
+        assert!(plan.layers[2].in_blocked && !plan.layers[2].out_blocked);
+        assert!(!plan.layers[3].in_blocked && !plan.layers[3].out_blocked);
+        assert_eq!(plan.patch_fused_edges(), 2);
+
+        // a 1x1 consumer whose input also feeds a residual edge must NOT
+        // fuse (the residual read needs NCHW)
+        let mut wiring = chain_wiring(4);
+        wiring[2].residual_from = Some(1); // a[1] read as residual by layer 2
+        let plan =
+            NetworkPlan::compile_with_wiring(&descs, &latents, &wiring, cfg, sb(), &pool).unwrap();
+        assert!(!plan.layers[0].out_blocked && !plan.layers[1].in_blocked);
+        // the 1x1 -> 1x1 edge still fuses
+        assert!(plan.layers[1].out_blocked && plan.layers[2].in_blocked);
+        assert_eq!(plan.patch_fused_edges(), 1);
+
+        // an fp producer never fuses, even into a 1x1 consumer
+        let descs_fp = vec![
+            ConvLayerDesc { name: "a".into(), geom: g0, quantized: false },
+            ConvLayerDesc { name: "b".into(), geom: p1, quantized: true },
+        ];
+        let latents_fp = seeded_latents(&descs_fp, 17);
+        let plan =
+            NetworkPlan::compile_with_weights(&descs_fp, &latents_fp, cfg, sb(), &pool).unwrap();
+        assert_eq!(plan.patch_fused_edges(), 0);
+
+        // a strided 1x1 consumer must not fuse (its patch matrix is a
+        // subsample, not the producer's block layout)
+        let p2 = Conv2dGeometry { n: 1, c: 8, h: 8, w: 8, k: 8, r: 1, s: 1, stride: 2, padding: 0 };
+        let g4 = Conv2dGeometry { n: 1, c: 8, h: 4, w: 4, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
+        let descs_st = vec![
+            ConvLayerDesc { name: "a".into(), geom: g0, quantized: true },
+            ConvLayerDesc { name: "b".into(), geom: p2, quantized: true },
+            ConvLayerDesc { name: "c".into(), geom: g4, quantized: true },
+        ];
+        let latents_st = seeded_latents(&descs_st, 19);
+        let plan =
+            NetworkPlan::compile_with_weights(&descs_st, &latents_st, cfg, sb(), &pool).unwrap();
+        assert_eq!(plan.patch_fused_edges(), 0);
+    }
+
+    #[test]
+    fn patch_fused_forward_bit_matches_unfused() {
+        let g0 = Conv2dGeometry { n: 2, c: 3, h: 7, w: 7, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
+        let p1 = Conv2dGeometry { n: 2, c: 8, h: 7, w: 7, k: 8, r: 1, s: 1, stride: 1, padding: 0 };
+        let g3 = Conv2dGeometry { n: 2, c: 8, h: 7, w: 7, k: 5, r: 3, s: 3, stride: 1, padding: 1 };
+        let descs = vec![
+            ConvLayerDesc { name: "a".into(), geom: g0, quantized: true },
+            ConvLayerDesc { name: "b".into(), geom: p1, quantized: true },
+            ConvLayerDesc { name: "c".into(), geom: p1, quantized: true },
+            ConvLayerDesc { name: "d".into(), geom: g3, quantized: true },
+        ];
+        let latents = seeded_latents(&descs, 21);
+        let cfg = EngineConfig::default();
+        let pool1 = Pool::new(1);
+        let fused = Arc::new(
+            NetworkPlan::compile_with_weights(&descs, &latents, cfg, sb(), &pool1).unwrap(),
+        );
+        assert_eq!(fused.patch_fused_edges(), 2);
+        let unfused = Arc::new(fused.without_patch_fusion());
+        assert_eq!(unfused.patch_fused_edges(), 0);
+        assert!(unfused.layers.iter().all(|l| !l.in_blocked && !l.out_blocked));
+
+        let mut rng = Rng::new(45);
+        let mut input = vec![0.0f32; fused.input_elems()];
+        rng.fill_normal(&mut input, 1.0);
+        let base = {
+            let mut exec = NetworkExecutor::new(Arc::clone(&unfused));
+            exec.forward_pool(&input, &pool1).to_vec()
+        };
+        for threads in [1, 2] {
+            let pool = Pool::new(threads);
+            let mut exec = NetworkExecutor::new(Arc::clone(&fused));
+            let out = exec.forward_pool(&input, &pool);
+            assert!(out == base, "{threads}-thread fused forward differs from unfused");
+        }
+    }
+
+    #[test]
+    fn resnet18c_wiring_and_projection_layers() {
+        let descs = models::cifar_resnet18_layers(0.5, 16, 1);
+        let wiring = derive_wiring(&descs).unwrap();
+        let plan = NetworkPlan::compile(&descs, EngineConfig::default(), sb()).unwrap();
+        // projection layers: 1x1, linear, branching from the block input
+        let projs: Vec<usize> = descs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.geom.r == 1)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!projs.is_empty(), "resnet18c must carry projection shortcuts");
+        for &p in &projs {
+            assert!(!wiring[p].relu, "projections are linear");
+            assert_eq!(wiring[p].input, wiring[p - 1].input, "projection branches");
+            assert_eq!(
+                wiring[p + 1].residual_from,
+                Some(p + 1),
+                "the block's second conv adds the projection output"
+            );
+            assert!(plan.layers[p].plan.is_some(), "projections are quantized");
+        }
+        // branching residual topology still fits three arena buffers
+        assert_eq!(plan.num_arena_slots(), 3);
+        // strided projections are not patch-fusable
+        assert_eq!(plan.patch_fused_edges(), 0);
     }
 
     #[test]

@@ -23,14 +23,18 @@ use crate::tensor::Conv2dGeometry;
 /// index) or an internal DAG node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Operand {
+    /// input activation by reduction-axis (C*R*S) index
     Input(u32),
+    /// internal DAG node by index
     Node(u32),
 }
 
 /// One CSE node: left + sign*right.
 #[derive(Debug, Clone, Copy)]
 pub struct Node {
+    /// left operand (always added)
     pub a: Operand,
+    /// right operand
     pub b: Operand,
     /// sign applied to b (+1 / -1); a is always positive within a node —
     /// group signs are normalized before pairing.
@@ -40,10 +44,12 @@ pub struct Node {
 /// The DAG for one conv layer.
 #[derive(Debug)]
 pub struct CseDag {
+    /// internal nodes, topologically ordered
     pub nodes: Vec<Node>,
     /// per original filter: (alpha, signed roots) — the filter output is
     /// alpha * sum(sign * root).
     pub filters: Vec<(f32, Vec<(Operand, bool)>)>,
+    /// the conv geometry the DAG was built for
     pub geom: Conv2dGeometry,
 }
 

@@ -37,6 +37,17 @@
 //! [`ScratchVec`] cache: the pool's workers are persistent, so a
 //! steady-state serving loop performs no per-layer heap allocation.
 //!
+//! **Cross-layer patch reuse** ([`TileIo`], [`execute_conv2d_layout`]):
+//! step 1's patch blocks for a 1x1 / stride-1 / pad-0 layer are exactly
+//! its input activation re-laid pixel-major — so when the network plan
+//! marks an edge as fusable, the *producer* scatters its fused PostOp
+//! output straight into `[ceil(pixels/PB)][K][PB]` block layout
+//! (`output_blocked`) and the *consumer* skips `im2col_rows_transposed`
+//! entirely, reading those blocks as its patch matrix
+//! (`input_blocked`). The values and their accumulation order are
+//! unchanged — only the transform pass disappears — so fused output
+//! stays bit-identical to the unfused path.
+//!
 //! With sparsity support ON, zero entries never enter a sum and all-zero
 //! patterns are skipped. OFF, the zero group is summed and multiplied by
 //! zero — faithfully modelling a repetition-only system (paper §5.1
@@ -63,8 +74,11 @@ pub const DEFAULT_TILE: usize = 32;
 pub struct Residual<'a> {
     /// source activation, NCHW `[n, c, h, w]`
     pub src: &'a [f32],
+    /// source channels (`<=` the output's K; extra channels zero-pad)
     pub c: usize,
+    /// source height
     pub h: usize,
+    /// source width
     pub w: usize,
     /// spatial subsampling factor (`h / out_h`, 1 for identity)
     pub stride: usize,
@@ -75,7 +89,9 @@ pub struct Residual<'a> {
 /// separate-pass reference bit for bit.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PostOp<'a> {
+    /// clamp each output element at zero (after the residual add)
     pub relu: bool,
+    /// optional shortcut source added before the ReLU
     pub residual: Option<Residual<'a>>,
 }
 
@@ -121,6 +137,30 @@ struct Scratch {
     usums: ScratchVec,
 }
 
+/// I/O layout of one [`execute_conv2d_layout`] call — the network
+/// executor's cross-layer patch-reuse contract.
+///
+/// The pixel-major block layout is the one `im2col_rows_transposed`
+/// produces over the *whole* pixel range starting at pixel 0:
+/// `buf[(px / PB) * C * PB + c * PB + px % PB]`, with lanes past the
+/// final pixel zero-filled. For a 1x1 / stride-1 / pad-0 layer that is
+/// exactly its patch matrix, so a producer writing it hands the next
+/// layer its patches for free. Both directions require the tile size to
+/// be a multiple of [`PIXEL_BLOCK`] so every tile starts on a block
+/// boundary ([`DEFAULT_TILE`] is).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TileIo {
+    /// the input buffer already holds `[ceil(pixels/PB)][C][PB]`
+    /// pixel-major blocks (a fused producer wrote them); only valid for
+    /// 1x1 / stride-1 / pad-0 layers, whose patch matrix this is
+    pub input_blocked: bool,
+    /// scatter the output as `[ceil(pixels/PB)][K][PB]` pixel-major
+    /// blocks — the next layer's patch matrix — instead of NCHW; lanes
+    /// past the final pixel are written as zero, mirroring im2col's
+    /// ragged-block padding
+    pub output_blocked: bool,
+}
+
 /// Execute one conv layer through the repetition engine on the
 /// process-wide pool.
 pub fn execute_conv2d(plan: &LayerPlan, x: &Tensor) -> Tensor {
@@ -155,19 +195,58 @@ pub fn execute_conv2d_into(
     tile: usize,
     post: PostOp<'_>,
 ) {
+    execute_conv2d_layout(plan, x, out, pool, tile, post, TileIo::default());
+}
+
+/// [`execute_conv2d_into`] with explicit I/O layouts ([`TileIo`]) — the
+/// cross-layer patch-reuse entry point. With `io.input_blocked` the
+/// per-tile `im2col_rows_transposed` pass (step 0) is skipped and the
+/// tile's patch blocks are read straight out of `x`; with
+/// `io.output_blocked` step 3 scatters pixel-major blocks (the next
+/// layer's patch matrix) instead of NCHW. Either direction changes
+/// neither the values nor their accumulation order, so the output is
+/// bit-identical to the unfused layout at every pool width.
+pub fn execute_conv2d_layout(
+    plan: &LayerPlan,
+    x: &[f32],
+    out: &mut [f32],
+    pool: &Pool,
+    tile: usize,
+    post: PostOp<'_>,
+    io: TileIo,
+) {
     assert!(tile > 0, "tile size must be positive");
     let g = plan.geom;
-    assert_eq!(x.len(), g.n * g.c * g.h * g.w, "input does not match plan geometry");
     let e = g.c * g.r * g.s;
     let (oh, ow) = (g.out_h(), g.out_w());
     let pixels = g.n * oh * ow;
     let plane = oh * ow;
-    assert_eq!(out.len(), g.n * g.k * plane, "output buffer does not match plan geometry");
+    const PB: usize = PIXEL_BLOCK;
+    let total_blocks = pixels.div_ceil(PB);
+    if io.input_blocked {
+        assert!(
+            g.r == 1 && g.s == 1 && g.stride == 1 && g.padding == 0,
+            "blocked input requires a 1x1 / stride-1 / pad-0 layer"
+        );
+        assert_eq!(tile % PB, 0, "blocked input requires a PIXEL_BLOCK-aligned tile");
+        assert_eq!(x.len(), total_blocks * e * PB, "blocked input does not match plan geometry");
+    } else {
+        assert_eq!(x.len(), g.n * g.c * g.h * g.w, "input does not match plan geometry");
+    }
+    if io.output_blocked {
+        assert_eq!(tile % PB, 0, "blocked output requires a PIXEL_BLOCK-aligned tile");
+        assert_eq!(
+            out.len(),
+            total_blocks * g.k * PB,
+            "blocked output buffer does not match plan geometry"
+        );
+    } else {
+        assert_eq!(out.len(), g.n * g.k * plane, "output buffer does not match plan geometry");
+    }
     post.validate(g.n, g.k, oh, ow);
     let nu = plan.num_unique_filters;
     let np = plan.arena.num_patterns();
     let nt = plan.num_tables;
-    const PB: usize = PIXEL_BLOCK;
 
     if pixels == 0 {
         return;
@@ -182,7 +261,9 @@ pub fn execute_conv2d_into(
     pool.run_with(
         jobs,
         || Scratch {
-            patch: ScratchVec::take(blocks_per_tile * e * PB),
+            // blocked input: the patch matrix already exists in `x`, no
+            // per-tile transform scratch is needed
+            patch: ScratchVec::take(if io.input_blocked { 0 } else { blocks_per_tile * e * PB }),
             psums: ScratchVec::take(np * PB),
             usums: ScratchVec::take(nu * PB),
         },
@@ -190,13 +271,23 @@ pub fn execute_conv2d_into(
             let px0 = job * tile;
             let tp = tile.min(pixels - px0);
             // 0. fused transposed im2col: only this tile's patch rows,
-            // pixel-major ([e][PB] blocks, ragged lanes zeroed)
-            im2col_rows_transposed_into(x, &g, px0, tp, &mut scr.patch);
+            // pixel-major ([e][PB] blocks, ragged lanes zeroed) — skipped
+            // entirely when the producer already scattered blocks
+            if !io.input_blocked {
+                im2col_rows_transposed_into(x, &g, px0, tp, &mut scr.patch);
+            }
 
             for blk in 0..tp.div_ceil(PB) {
                 let b0 = blk * PB;
                 let pb = PB.min(tp - b0);
-                let bpatch = &scr.patch[blk * e * PB..(blk + 1) * e * PB];
+                let bpatch: &[f32] = if io.input_blocked {
+                    // tiles are PB-aligned, so this tile's blocks sit at
+                    // global block indices px0/PB + blk
+                    let gb = px0 / PB + blk;
+                    &x[gb * e * PB..(gb + 1) * e * PB]
+                } else {
+                    &scr.patch[blk * e * PB..(blk + 1) * e * PB]
+                };
 
                 // 1. distinct-pattern partial sums — one streaming pass
                 // over the CSR arena; each column gather is a contiguous
@@ -266,16 +357,33 @@ pub fn execute_conv2d_into(
                 // 3. scatter to original filters with per-filter alpha and
                 // the fused epilogue (residual, then ReLU — elementwise,
                 // so thread count still cannot change bits); this tile's
-                // pixels are disjoint from every other tile's
+                // pixels are disjoint from every other tile's. Blocked
+                // output lands pixel-major (the next layer's patch
+                // blocks), with the ragged tail zeroed like im2col's.
                 for (fi, &uslot) in plan.unique_of_filter.iter().enumerate() {
                     let a = plan.alpha[fi];
                     let src = &scr.usums[uslot as usize * PB..uslot as usize * PB + PB];
-                    for (b, sv) in src.iter().enumerate().take(pb) {
-                        let px = px0 + b0 + b;
-                        let ni = px / plane;
-                        let pix = px % plane;
-                        let v = post.apply(a * sv, ni, fi, pix, ow);
-                        unsafe { od.write((ni * g.k + fi) * plane + pix, v) };
+                    if io.output_blocked {
+                        let obase = ((px0 / PB + blk) * g.k + fi) * PB;
+                        for (b, sv) in src.iter().enumerate() {
+                            let v = if b < pb {
+                                let px = px0 + b0 + b;
+                                let ni = px / plane;
+                                let pix = px % plane;
+                                post.apply(a * sv, ni, fi, pix, ow)
+                            } else {
+                                0.0
+                            };
+                            unsafe { od.write(obase + b, v) };
+                        }
+                    } else {
+                        for (b, sv) in src.iter().enumerate().take(pb) {
+                            let px = px0 + b0 + b;
+                            let ni = px / plane;
+                            let pix = px % plane;
+                            let v = post.apply(a * sv, ni, fi, pix, ow);
+                            unsafe { od.write((ni * g.k + fi) * plane + pix, v) };
+                        }
                     }
                 }
             }
@@ -422,5 +530,127 @@ mod tests {
         };
         execute_conv2d_into(&plan, x.data(), &mut out, &pool, DEFAULT_TILE, post);
         assert!(out == reference.data(), "fused epilogue differs from separate passes");
+    }
+
+    #[test]
+    fn blocked_output_is_the_next_layers_patch_matrix() {
+        // a blocked scatter must equal the transposed im2col a 1x1 /
+        // stride-1 / pad-0 consumer would run over the NCHW output,
+        // including the zeroed ragged tail (25 pixels -> 4 blocks)
+        const PB: usize = PIXEL_BLOCK;
+        let mut rng = Rng::new(37);
+        let g = Conv2dGeometry { n: 1, c: 4, h: 5, w: 5, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let pool = Pool::new(2);
+        let pixels = g.n * g.out_h() * g.out_w();
+        let blocks = pixels.div_ceil(PB);
+
+        let nchw = execute_conv2d_pool(&plan, &x, &pool);
+        let mut blocked = vec![f32::NAN; blocks * g.k * PB];
+        let io = TileIo { input_blocked: false, output_blocked: true };
+        execute_conv2d_layout(
+            &plan,
+            x.data(),
+            &mut blocked,
+            &pool,
+            DEFAULT_TILE,
+            PostOp::default(),
+            io,
+        );
+
+        let cg = Conv2dGeometry {
+            n: g.n,
+            c: g.k,
+            h: g.out_h(),
+            w: g.out_w(),
+            k: 0,
+            r: 1,
+            s: 1,
+            stride: 1,
+            padding: 0,
+        };
+        let mut want = vec![f32::NAN; blocks * g.k * PB];
+        im2col_rows_transposed_into(nchw.data(), &cg, 0, pixels, &mut want);
+        assert!(blocked == want, "blocked scatter differs from transposed im2col");
+    }
+
+    #[test]
+    fn blocked_input_bits_match_unblocked_at_every_width() {
+        const PB: usize = PIXEL_BLOCK;
+        let mut rng = Rng::new(38);
+        // 1x1 / stride-1 / pad-0 consumer on a ragged pixel count (50)
+        let g = Conv2dGeometry { n: 2, c: 6, h: 5, w: 5, k: 4, r: 1, s: 1, stride: 1, padding: 0 };
+        let w = Tensor::rand_normal(&[g.k, g.c, 1, 1], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let pixels = g.n * g.h * g.w;
+        let blocks = pixels.div_ceil(PB);
+        let mut patches = vec![f32::NAN; blocks * g.c * PB];
+        im2col_rows_transposed_into(x.data(), &g, 0, pixels, &mut patches);
+        let want = execute_conv2d_pool(&plan, &x, &Pool::new(1));
+        for threads in [1, 2, 3] {
+            let pool = Pool::new(threads);
+            let mut out = vec![f32::NAN; g.n * g.k * g.h * g.w];
+            let io = TileIo { input_blocked: true, output_blocked: false };
+            execute_conv2d_layout(
+                &plan,
+                &patches,
+                &mut out,
+                &pool,
+                DEFAULT_TILE,
+                PostOp::default(),
+                io,
+            );
+            assert!(out == want.data(), "{threads}-thread blocked input differs");
+        }
+    }
+
+    #[test]
+    fn fused_edge_chain_matches_unfused_chain_bitwise() {
+        // 3x3 producer (blocked scatter, fused ReLU) -> 1x1 consumer
+        // (blocked read): final output must bit-match the unfused
+        // NCHW-handoff chain
+        const PB: usize = PIXEL_BLOCK;
+        let mut rng = Rng::new(39);
+        let g1 = Conv2dGeometry { n: 1, c: 3, h: 7, w: 7, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
+        let g2 = Conv2dGeometry { n: 1, c: 8, h: 7, w: 7, k: 5, r: 1, s: 1, stride: 1, padding: 0 };
+        let w1 = Tensor::rand_normal(&[g1.k, g1.c, g1.r, g1.s], 0.5, &mut rng);
+        let w2 = Tensor::rand_normal(&[g2.k, g2.c, 1, 1], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g1.n, g1.c, g1.h, g1.w], 1.0, &mut rng);
+        let q1 = quantize(&w1, Scheme::sb_default(), None);
+        let q2 = quantize(&w2, Scheme::sb_default(), None);
+        let p1 = plan_layer(&q1, g1, EngineConfig::default());
+        let p2 = plan_layer(&q2, g2, EngineConfig::default());
+        let pool = Pool::new(2);
+        let relu = PostOp { relu: true, residual: None };
+        let pixels = g1.n * g1.out_h() * g1.out_w();
+        let blocks = pixels.div_ceil(PB);
+
+        // unfused reference: NCHW handoff
+        let mut mid = vec![f32::NAN; g1.n * g1.k * g1.out_h() * g1.out_w()];
+        execute_conv2d_into(&p1, x.data(), &mut mid, &pool, DEFAULT_TILE, relu);
+        let mut want = vec![f32::NAN; g2.n * g2.k * g2.h * g2.w];
+        execute_conv2d_into(&p2, &mid, &mut want, &pool, DEFAULT_TILE, PostOp::default());
+
+        // fused: producer scatters patch blocks, consumer skips im2col
+        let mut mid_blocks = vec![f32::NAN; blocks * g1.k * PB];
+        let out_io = TileIo { input_blocked: false, output_blocked: true };
+        execute_conv2d_layout(&p1, x.data(), &mut mid_blocks, &pool, DEFAULT_TILE, relu, out_io);
+        let mut got = vec![f32::NAN; g2.n * g2.k * g2.h * g2.w];
+        let in_io = TileIo { input_blocked: true, output_blocked: false };
+        execute_conv2d_layout(
+            &p2,
+            &mid_blocks,
+            &mut got,
+            &pool,
+            DEFAULT_TILE,
+            PostOp::default(),
+            in_io,
+        );
+        assert!(got == want, "fused patch handoff differs from NCHW handoff");
     }
 }

@@ -31,7 +31,31 @@
 //! im2col fused per output-pixel tile in the pixel-major (transposed)
 //! layout so pattern gathers are contiguous SIMD-width loads, tiles
 //! spread over the persistent `util::pool` workers, bit-identical for
-//! every thread count.
+//! every thread count. Consecutive layers can skip the patch transform
+//! entirely: [`execute_conv2d_layout`] scatters a producer's output
+//! straight into the next (1x1 / stride-1) layer's pixel-major patch
+//! blocks and reads such blocks back as input ([`TileIo`]) — the
+//! network executor's cross-layer patch reuse.
+//!
+//! # Plan and execute one layer
+//!
+//! ```
+//! use plum::quant::{quantize, Scheme};
+//! use plum::repetition::{execute_conv2d, plan_layer, EngineConfig};
+//! use plum::tensor::{conv2d_gemm, Conv2dGeometry, Tensor};
+//! use plum::util::Rng;
+//!
+//! let g = Conv2dGeometry { n: 1, c: 4, h: 5, w: 5, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
+//! let mut rng = Rng::new(7);
+//! let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+//! let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+//! let q = quantize(&w, Scheme::sb_default(), None);
+//!
+//! let plan = plan_layer(&q, g, EngineConfig::default());
+//! let out = execute_conv2d(&plan, &x);
+//! let dense = conv2d_gemm(&x, &q.values, g.stride, g.padding);
+//! assert!(dense.max_abs_diff(&out) < 1e-3);
+//! ```
 
 pub mod cse;
 mod exec;
@@ -39,8 +63,8 @@ mod plan;
 
 pub use cse::{build_cse, CseDag};
 pub use exec::{
-    execute_conv2d, execute_conv2d_into, execute_conv2d_pool, execute_conv2d_tiled, PostOp,
-    Residual, DEFAULT_TILE, PIXEL_BLOCK,
+    execute_conv2d, execute_conv2d_into, execute_conv2d_layout, execute_conv2d_pool,
+    execute_conv2d_tiled, PostOp, Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
 };
 pub use plan::{LayerPlan, OpCounts, PatternArena, PatternSpan};
 

@@ -25,9 +25,10 @@ use crate::util::Pool;
 
 use super::EngineConfig;
 
-/// Auto-tuner cost-model constants (ops-equivalents); calibrated against
-/// measured per-layer times on this CPU (EXPERIMENTS.md §Perf).
+/// Auto-tuner cost-model constant (ops-equivalents) per pattern visit;
+/// calibrated against measured per-layer times (EXPERIMENTS.md §Perf).
 pub const PATTERN_OVERHEAD: f64 = 2.0;
+/// Auto-tuner cost-model constant per combine-table slot visit.
 pub const SLOT_OVERHEAD: f64 = 1.0;
 
 /// One distinct pattern's run inside the arena: `cols[start..]` holds
@@ -48,18 +49,22 @@ pub struct PatternSpan {
 }
 
 impl PatternSpan {
+    /// Non-zero columns (the effectual weights of the pattern).
     pub fn nnz(&self) -> u64 {
         (self.pos + self.neg) as u64
     }
 
+    /// True when every column of the pattern is zero.
     pub fn is_all_zero(&self) -> bool {
         self.pos == 0 && self.neg == 0
     }
 
+    /// Total columns (the sub-tile length).
     pub fn len(&self) -> usize {
         (self.pos + self.neg + self.zero) as usize
     }
 
+    /// True for zero-length patterns (degenerate sub-tiles).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -93,10 +98,12 @@ pub struct PatternArena {
 }
 
 impl PatternArena {
+    /// Distinct patterns across every sub-tile.
     pub fn num_patterns(&self) -> usize {
         self.spans.len()
     }
 
+    /// Number of sub-tiles the arena covers.
     pub fn num_tables(&self) -> usize {
         self.table_base.len().saturating_sub(1)
     }
@@ -120,11 +127,14 @@ impl PatternArena {
 /// Operation counts for one inference pass (all output pixels).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OpCounts {
+    /// additions / subtractions
     pub adds: u64,
+    /// multiplications
     pub muls: u64,
 }
 
 impl OpCounts {
+    /// Adds + muls (the paper counts each as one operation).
     pub fn total(&self) -> u64 {
         self.adds + self.muls
     }
@@ -133,7 +143,9 @@ impl OpCounts {
 /// A fully-built plan for one conv layer.
 #[derive(Debug, Clone)]
 pub struct LayerPlan {
+    /// conv geometry the plan executes
     pub geom: Conv2dGeometry,
+    /// engine configuration the plan was built under
     pub cfg: EngineConfig,
     /// CSR pattern arena (one flat buffer for the whole layer)
     pub arena: PatternArena,
@@ -149,6 +161,7 @@ pub struct LayerPlan {
     pub alpha: Vec<f32>,
     /// original filter -> unique filter slot (inter-filter dedup)
     pub unique_of_filter: Vec<u32>,
+    /// distinct structural filters after dedup
     pub num_unique_filters: usize,
 }
 

@@ -14,21 +14,28 @@ use std::time::Instant;
 
 use super::json::{self, Json};
 
+/// Timing summary of one benchmarked closure.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// label the measurement was taken under
     pub name: String,
     /// Minimum over reps — the paper's reported statistic.
     pub min_ns: u64,
+    /// median over reps
     pub median_ns: u64,
+    /// mean over reps
     pub mean_ns: u64,
+    /// measured repetitions (warmup excluded)
     pub reps: usize,
 }
 
 impl BenchResult {
+    /// Minimum time in milliseconds.
     pub fn min_ms(&self) -> f64 {
         self.min_ns as f64 / 1e6
     }
 
+    /// One formatted report line (min / median / mean).
     pub fn row(&self) -> String {
         format!(
             "{:<40} min {:>10.3} ms   median {:>10.3} ms   mean {:>10.3} ms   ({} reps)",
@@ -72,13 +79,16 @@ pub struct BenchRecord {
     pub op: String,
     /// workload shape, e.g. "64x64x28x28 3x3"
     pub shape: String,
+    /// pool width the measurement ran at
     pub threads: usize,
+    /// minimum wall time over reps
     pub min_ns: u64,
     /// dense-equivalent GFLOP/s
     pub gflops: f64,
 }
 
 impl BenchRecord {
+    /// The persisted JSON form ([`write_bench_json`]).
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("op", json::s(&self.op)),
@@ -89,6 +99,7 @@ impl BenchRecord {
         ])
     }
 
+    /// Parse one record back from its persisted JSON form.
     pub fn from_json(j: &Json) -> anyhow::Result<BenchRecord> {
         Ok(BenchRecord {
             op: j.req_str("op")?.to_string(),
@@ -132,6 +143,23 @@ pub fn read_bench_json(path: &Path) -> anyhow::Result<Vec<BenchRecord>> {
 /// Baseline records missing from the current series are regressions too
 /// (a silently dropped series must not pass CI); *extra* current
 /// records are ignored so new studies can land before their baseline.
+///
+/// ```
+/// use plum::util::bench::{compare_bench, BenchRecord};
+///
+/// let base = vec![BenchRecord {
+///     op: "engine_sb".into(),
+///     shape: "64x64x28x28 3x3".into(),
+///     threads: 1,
+///     min_ns: 1_000_000,
+///     gflops: 4.0,
+/// }];
+/// let mut cur = base.clone();
+/// cur[0].gflops = 3.5; // within 25% of baseline -> passes
+/// assert!(compare_bench(&base, &cur, 0.25).is_empty());
+/// cur[0].gflops = 1.0; // collapse -> flagged
+/// assert_eq!(compare_bench(&base, &cur, 0.25).len(), 1);
+/// ```
 pub fn compare_bench(
     baseline: &[BenchRecord],
     current: &[BenchRecord],

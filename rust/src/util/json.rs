@@ -12,17 +12,26 @@ use std::fmt;
 /// deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// every JSON number, kept as f64
     Num(f64),
+    /// a string (escapes already decoded)
     Str(String),
+    /// an array
     Arr(Vec<Json>),
+    /// an object, keys sorted
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with the byte offset it occurred at.
 #[derive(Debug)]
 pub struct JsonError {
+    /// what went wrong
     pub msg: String,
+    /// byte offset into the input
     pub pos: usize,
 }
 
@@ -35,6 +44,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse one complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -48,6 +58,7 @@ impl Json {
 
     // ---- typed accessors ----------------------------------------------------
 
+    /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -55,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -62,6 +74,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -69,10 +82,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -80,6 +95,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -87,6 +103,7 @@ impl Json {
         }
     }
 
+    /// The key-value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -94,25 +111,28 @@ impl Json {
         }
     }
 
-    /// Required-field helpers with decent error messages.
+    /// Required string field, with a decent error message.
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow::anyhow!("missing string field '{key}'"))
     }
 
+    /// Required non-negative integer field.
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
         self.get(key)
             .and_then(Json::as_usize)
             .ok_or_else(|| anyhow::anyhow!("missing numeric field '{key}'"))
     }
 
+    /// Required numeric field.
     pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
         self.get(key)
             .and_then(Json::as_f64)
             .ok_or_else(|| anyhow::anyhow!("missing numeric field '{key}'"))
     }
 
+    /// Required array field.
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.get(key)
             .and_then(Json::as_arr)
@@ -121,6 +141,8 @@ impl Json {
 
     // ---- writer ---------------------------------------------------------------
 
+    /// Serialize to compact JSON text (deterministic: object keys are
+    /// sorted).
     #[allow(clippy::inherent_to_string)] // serialization, not Display formatting
     pub fn to_string(&self) -> String {
         let mut s = String::new();
@@ -167,15 +189,17 @@ impl Json {
     }
 }
 
-/// Convenience constructors for report writers.
+/// Convenience object constructor for report writers.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Convenience number constructor for report writers.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// Convenience string constructor for report writers.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }

@@ -1,5 +1,7 @@
 //! Small shared substrates: JSON codec, deterministic RNG, bench
-//! harness, persistent worker pool.
+//! harness, persistent worker pool ([`pool`]), and the thread-cached
+//! scratch buffers ([`scratch`]) the executors draw per-tile arenas
+//! from.
 
 pub mod bench;
 pub mod json;

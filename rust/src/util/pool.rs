@@ -274,6 +274,7 @@ impl Pool {
         }
     }
 
+    /// Fixed width of this pool (dispatcher included).
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -410,6 +411,7 @@ unsafe impl Send for UnsafeSlice<'_> {}
 unsafe impl Sync for UnsafeSlice<'_> {}
 
 impl<'a> UnsafeSlice<'a> {
+    /// Wrap a mutable buffer for disjoint parallel writes.
     pub fn new(data: &'a mut [f32]) -> UnsafeSlice<'a> {
         UnsafeSlice {
             ptr: data.as_mut_ptr(),
@@ -418,10 +420,12 @@ impl<'a> UnsafeSlice<'a> {
         }
     }
 
+    /// Length of the wrapped buffer.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when the wrapped buffer is empty.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

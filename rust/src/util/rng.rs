@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator; equal seeds produce equal streams.
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
     }
@@ -23,6 +24,7 @@ impl Rng {
         r
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;

@@ -1,11 +1,12 @@
-//! End-to-end network-executor equality on a small CIFAR ResNet
-//! (depth 8):
+//! End-to-end network-executor equality on small CIFAR models:
 //!
 //! * the fused, arena-based `NetworkExecutor` forward pass must
 //!   **bit-match** a layer-by-layer reference built from the public
 //!   single-layer primitives (`execute_conv2d_pool` for engine layers,
-//!   `conv2d_naive` for the fp stem) with separate ReLU / option-A
-//!   residual passes — at thread counts {1, 2, ncpu};
+//!   `conv2d_naive` for the fp stem) with separate ReLU / residual
+//!   passes — at thread counts {1, 2, ncpu}; this covers the option-A
+//!   CIFAR ResNet **and** the projection-shortcut (resnet18-style)
+//!   branching topology, with cross-layer patch reuse both on and off;
 //! * a fully `conv2d_naive` reference (quantized dense weights) must
 //!   agree within a small relative tolerance — the engine re-associates
 //!   f32 sums (shared pattern partial sums), so exact bit equality
@@ -25,9 +26,10 @@ fn relu(t: &mut Tensor) {
     }
 }
 
-/// Option-A shortcut: spatial subsample by the stride ratio, zero-pad
-/// extra channels — applied before the block's final ReLU.
-fn add_option_a(out: &mut Tensor, src: &Tensor) {
+/// Residual shortcut add: identity when shapes match exactly, otherwise
+/// the option-A view (spatial subsample by the stride ratio, zero-pad
+/// extra channels) — applied before the block's final ReLU.
+fn add_shortcut(out: &mut Tensor, src: &Tensor) {
     let (n, k, oh, ow) = (out.dim(0), out.dim(1), out.dim(2), out.dim(3));
     let (_, c, h, _) = (src.dim(0), src.dim(1), src.dim(2), src.dim(3));
     let st = h / oh;
@@ -46,18 +48,19 @@ fn add_option_a(out: &mut Tensor, src: &Tensor) {
 
 /// Layer-by-layer reference over the compiled plan: engine layers run
 /// unfused through `execute_conv2d_pool`, the fp stem through
-/// `conv2d_naive`; residual and ReLU are separate passes in the same
-/// elementwise order the fused executor uses.
+/// `conv2d_naive`; each layer reads the activation its wiring names
+/// (branching included), and residual / ReLU are separate passes in the
+/// same elementwise order the fused executor uses.
 fn reference_forward(plan: &NetworkPlan, x: &Tensor, pool: &Pool) -> Tensor {
     let mut acts: Vec<Tensor> = vec![x.clone()];
     for layer in &plan.layers {
-        let xin = acts.last().unwrap();
+        let xin = &acts[layer.input];
         let mut y = match &layer.plan {
             Some(lp) => execute_conv2d_pool(lp, xin, pool),
             None => conv2d_naive(xin, &layer.weights, layer.geom.stride, layer.geom.padding),
         };
         if let Some(ai) = layer.residual_from {
-            add_option_a(&mut y, &acts[ai]);
+            add_shortcut(&mut y, &acts[ai]);
         }
         if layer.relu {
             relu(&mut y);
@@ -72,10 +75,10 @@ fn reference_forward(plan: &NetworkPlan, x: &Tensor, pool: &Pool) -> Tensor {
 fn naive_forward(plan: &NetworkPlan, x: &Tensor) -> Tensor {
     let mut acts: Vec<Tensor> = vec![x.clone()];
     for layer in &plan.layers {
-        let xin = acts.last().unwrap();
+        let xin = &acts[layer.input];
         let mut y = conv2d_naive(xin, &layer.weights, layer.geom.stride, layer.geom.padding);
         if let Some(ai) = layer.residual_from {
-            add_option_a(&mut y, &acts[ai]);
+            add_shortcut(&mut y, &acts[ai]);
         }
         if layer.relu {
             relu(&mut y);
@@ -85,19 +88,40 @@ fn naive_forward(plan: &NetworkPlan, x: &Tensor) -> Tensor {
     acts.pop().unwrap()
 }
 
-fn compile_resnet8(batch: usize, image: usize) -> (Arc<NetworkPlan>, Vec<ConvLayerDesc>) {
-    let descs = models::cifar_resnet_layers(8, 0.5, image, batch);
-    let latents = seeded_latents(&descs, 0xBEEF);
+fn compile_descs(descs: &[ConvLayerDesc], seed: u64) -> Arc<NetworkPlan> {
+    let latents = seeded_latents(descs, seed);
     let cfg = EngineConfig { subtile: 8, sparsity_support: true };
     let plan = NetworkPlan::compile_with_weights(
-        &descs,
+        descs,
         &latents,
         cfg,
         plum::quant::Scheme::sb_default(),
         &Pool::new(1),
     )
     .unwrap();
-    (Arc::new(plan), descs)
+    Arc::new(plan)
+}
+
+fn compile_resnet8(batch: usize, image: usize) -> (Arc<NetworkPlan>, Vec<ConvLayerDesc>) {
+    let descs = models::cifar_resnet_layers(8, 0.5, image, batch);
+    (compile_descs(&descs, 0xBEEF), descs)
+}
+
+/// Shared bit-equality harness: fused executor vs layer-by-layer
+/// reference at threads {1, 2, ncpu}.
+fn assert_bit_matches_reference(plan: &Arc<NetworkPlan>, x: &Tensor, what: &str) {
+    let reference = reference_forward(plan, x, &Pool::new(1));
+    assert_eq!(reference.len(), plan.output_elems());
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for threads in [1, 2, ncpu] {
+        let pool = Pool::new(threads);
+        let mut exec = NetworkExecutor::new(Arc::clone(plan));
+        let out = exec.forward_pool(x.data(), &pool);
+        assert!(
+            out == reference.data(),
+            "{what}: {threads}-thread fused forward differs from the layer-by-layer reference"
+        );
+    }
 }
 
 #[test]
@@ -105,20 +129,38 @@ fn network_forward_bit_matches_layer_reference_at_every_width() {
     let (plan, _) = compile_resnet8(2, 16);
     let mut rng = Rng::new(99);
     let x = Tensor::rand_normal(&[2, 3, 16, 16], 1.0, &mut rng);
+    assert_bit_matches_reference(&plan, &x, "resnet8");
+}
 
-    let reference = reference_forward(&plan, &x, &Pool::new(1));
-    assert_eq!(reference.len(), plan.output_elems());
+#[test]
+fn projection_shortcut_forward_bit_matches_reference_at_every_width() {
+    // resnet18-style branching: 1x1 projection layers ride the residual
+    // edges; the executor's live-range arena must reproduce the
+    // layer-by-layer reference bit for bit at every pool width
+    let descs = models::cifar_resnet18_layers(0.5, 16, 2);
+    let plan = compile_descs(&descs, 0xD00D);
+    assert!(plan.layers.iter().any(|l| l.geom.r == 1), "plan must carry projections");
+    let mut rng = Rng::new(102);
+    let x = Tensor::rand_normal(&[2, 3, 16, 16], 1.0, &mut rng);
+    assert_bit_matches_reference(&plan, &x, "resnet18c");
+}
 
-    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    for threads in [1, 2, ncpu] {
-        let pool = Pool::new(threads);
-        let mut exec = NetworkExecutor::new(Arc::clone(&plan));
-        let out = exec.forward_pool(x.data(), &pool);
-        assert!(
-            out == reference.data(),
-            "{threads}-thread fused forward differs from the layer-by-layer reference"
-        );
-    }
+#[test]
+fn patch_reuse_chain_bit_matches_reference_at_every_width() {
+    // consecutive-1x1 chain: every inter-1x1 edge fuses (producer
+    // scatters patch blocks, consumers skip im2col); the fused plan and
+    // its fusion-disabled twin must both bit-match the reference
+    // 11px image -> 242 output pixels: a ragged final PIXEL_BLOCK, so
+    // the zero-padded blocked tail is exercised end to end
+    let descs = models::conv1x1_chain_layers(6, 16, 11, 2);
+    let plan = compile_descs(&descs, 0xFACE);
+    assert!(plan.patch_fused_edges() >= 4, "1x1 chain must fuse its inner edges");
+    let mut rng = Rng::new(103);
+    let x = Tensor::rand_normal(&[2, 3, 11, 11], 1.0, &mut rng);
+    assert_bit_matches_reference(&plan, &x, "chain1x1 fused");
+    let unfused = Arc::new(plan.without_patch_fusion());
+    assert_eq!(unfused.patch_fused_edges(), 0);
+    assert_bit_matches_reference(&unfused, &x, "chain1x1 unfused");
 }
 
 #[test]
@@ -140,6 +182,29 @@ fn network_forward_agrees_with_naive_chain() {
     assert!(
         max_diff < 1e-3 * scale,
         "fused network diverged from naive chain: {max_diff} (scale {scale})"
+    );
+}
+
+#[test]
+fn projection_network_agrees_with_naive_chain() {
+    let descs = models::cifar_resnet18_layers(0.5, 16, 1);
+    let plan = compile_descs(&descs, 0xD00D);
+    let mut rng = Rng::new(104);
+    let x = Tensor::rand_normal(&[1, 3, 16, 16], 1.0, &mut rng);
+
+    let naive = naive_forward(&plan, &x);
+    let mut exec = NetworkExecutor::new(Arc::clone(&plan));
+    let out = exec.forward_pool(x.data(), &Pool::new(2));
+
+    let scale = naive.data().iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+    let max_diff = out
+        .iter()
+        .zip(naive.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff < 1e-3 * scale,
+        "projection network diverged from naive chain: {max_diff} (scale {scale})"
     );
 }
 
