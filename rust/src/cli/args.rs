@@ -4,9 +4,12 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command-line arguments (everything after the subcommand).
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// bare tokens in order (bench targets, report kinds, ...)
     pub positionals: Vec<String>,
+    /// `--flag value` / `--flag=value` / `--switch` (stored as "true")
     pub flags: BTreeMap<String, String>,
 }
 
@@ -54,26 +57,32 @@ impl Args {
         out
     }
 
+    /// The flag's raw value, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
     }
 
+    /// The flag's raw value, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// The flag parsed as `usize` (`default` when absent or unparsable).
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// The flag parsed as `u64` (`default` when absent or unparsable).
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// The flag parsed as `f32` (`default` when absent or unparsable).
     pub fn get_f32(&self, key: &str, default: f32) -> f32 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// True when the flag or switch was passed at all.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }

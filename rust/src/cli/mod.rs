@@ -24,6 +24,7 @@ use crate::training::{save_checkpoint, Schedule, Trainer};
 
 use args::Args;
 
+/// Usage text printed by `plum help` (and on unknown commands).
 pub const HELP: &str = "\
 plum — PLUM repetition-sparsity co-design framework (paper reproduction)
 
@@ -36,11 +37,15 @@ COMMANDS:
          table1..table12 | tables | all  [pjrt]
          pareto | fig7 | fig9 | fig10 | energy | cse | scaling
          repetition [--out FILE]            scaling studies -> BENCH_current.json
-         network [--depth N] [--batch N] [--out FILE]
+         network [--depth N] [--batch N] [--tile N] [--out FILE]
                                             full-network forward scaling on the
-                                            repetition engine: CIFAR ResNet +
-                                            a 1x1 chain with patch reuse off/on
-                                            (network_forward_fused series)
+                                            repetition engine: CIFAR ResNet,
+                                            resnet18c and a 1x1 chain, each with
+                                            patch reuse off/on (the
+                                            network_forward_fused series);
+                                            --tile 0 (default) auto-tunes the
+                                            execution tile, skipping candidates
+                                            blocked I/O cannot carry
          compare --current FILE [--baseline FILE] [--tolerance F]
                                             fail on perf regression vs baseline
   serve [--backend engine|pjrt] --model NAME [--requests N] [--replicas R]
@@ -62,6 +67,9 @@ GLOBAL OPTIONS:
                 the scaling studies it also caps the thread ladder)
 ";
 
+/// Entry point of the `plum` binary: parse `argv` (everything after the
+/// program name), resolve the run configuration, pin the worker pool,
+/// and dispatch the subcommand.
 pub fn run(argv: Vec<String>) -> Result<()> {
     let mut it = argv.into_iter();
     let cmd = it.next().unwrap_or_else(|| "help".to_string());
@@ -182,7 +190,10 @@ fn bench_network(cfg: &RunConfig, args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 1);
     let subtile = args.get_usize("subtile", 0); // 0 = auto-tuned
     let threads = args.get_usize("threads", 0);
-    let (_, points) = figures::network_forward_study(cfg, depth, batch, subtile, threads)?;
+    // 0 = auto-tune the execution tile per workload; with patch fusion
+    // on, non-PIXEL_BLOCK-aligned candidates are skipped up front
+    let tile = args.get_usize("tile", 0);
+    let (_, points) = figures::network_forward_study(cfg, depth, batch, subtile, threads, tile)?;
     // like `bench repetition`, default away from the committed baseline
     // (BENCH_network.json) so re-baselining stays an explicit act
     let out = std::path::PathBuf::from(args.get_or("out", "BENCH_network_current.json"));

@@ -33,9 +33,11 @@ pub struct RunConfig {
     /// cores). Non-zero pins the process-wide pool before first use —
     /// the `--threads` CLI flag.
     pub threads: usize,
-    /// Serving: replicas / batching.
+    /// Serving: worker replicas.
     pub replicas: usize,
+    /// Serving: device batch size per replica.
     pub max_batch: usize,
+    /// Serving: batcher deadline in milliseconds.
     pub max_wait_ms: u64,
 }
 

@@ -17,10 +17,15 @@ use crate::util::Rng;
 /// A deterministic synthetic labelled-image dataset.
 #[derive(Debug, Clone)]
 pub struct SyntheticDataset {
+    /// number of classes
     pub classes: usize,
+    /// image channels (3 for the CIFAR-like families)
     pub channels: usize,
+    /// square image side in pixels
     pub image: usize,
+    /// kind-mixed seed every sample derives from
     pub seed: u64,
+    /// additive Gaussian pixel-noise std (difficulty knob)
     pub noise: f32,
     /// per-class sinusoid parameters: (fx, fy, phase, amp) per component
     protos: Vec<Vec<(f32, f32, f32, f32)>>,
@@ -28,6 +33,7 @@ pub struct SyntheticDataset {
     gains: Vec<Vec<f32>>,
 }
 
+/// Sinusoid components per class prototype.
 pub const COMPONENTS: usize = 6;
 
 impl SyntheticDataset {
@@ -57,6 +63,7 @@ impl SyntheticDataset {
         SyntheticDataset { classes, channels, image, seed: kind_seed, noise: 0.25, protos, gains }
     }
 
+    /// The default CIFAR-10-shaped dataset (10 classes, 3x32x32).
     pub fn cifar_like(seed: u64) -> Self {
         Self::new("cifar", 10, 3, 32, seed)
     }

@@ -28,14 +28,23 @@ fn latent_weights(geom: &Conv2dGeometry, rng: &mut Rng) -> Tensor {
 /// Per-layer row of the Figure 7 experiment.
 #[derive(Debug, Clone)]
 pub struct Fig7Row {
+    /// layer label, e.g. `conv03 k128c64@28`
     pub layer: String,
+    /// binary scheme, min layer time (ms)
     pub t_binary_ms: f64,
+    /// ternary without sparsity support, min layer time (ms)
     pub t_ternary_nosp_ms: f64,
+    /// ternary with sparsity support, min layer time (ms)
     pub t_ternary_sp_ms: f64,
+    /// signed-binary without sparsity support, min layer time (ms)
     pub t_sb_nosp_ms: f64,
+    /// signed-binary with sparsity support, min layer time (ms)
     pub t_sb_sp_ms: f64,
+    /// accounted engine ops per pass, binary
     pub ops_binary: u64,
+    /// accounted engine ops per pass, ternary w/ sparsity
     pub ops_ternary_sp: u64,
+    /// accounted engine ops per pass, signed-binary w/ sparsity
     pub ops_sb_sp: u64,
 }
 
@@ -387,7 +396,9 @@ pub struct ScalingPoint {
     pub op: String,
     /// workload geometry, e.g. "64x64x28x28 3x3"
     pub shape: String,
+    /// pool width the point was measured at
     pub threads: usize,
+    /// minimum wall time over the bench reps
     pub min_ns: u64,
     /// dense-equivalent GFLOP/s (2 * dense MACs / min time) — the same
     /// numerator for both ops, so the ratio is the honest speedup
@@ -640,10 +651,60 @@ pub fn plan_build_scaling(cfg: &RunConfig, threads: &[usize]) -> Result<Vec<Scal
     Ok(points)
 }
 
+/// Candidate execution tiles (output pixels per work item) searched by
+/// `plum bench network --tile 0`. Deliberately includes sizes that are
+/// NOT `PIXEL_BLOCK` multiples (20, 28): those are legal for unfused
+/// plans but undefined for blocked patch I/O, so the auto-tuner must
+/// skip them whenever cross-layer patch fusion is on — the documented
+/// tile-alignment constraint surfaced at tuning time rather than as an
+/// executor assert.
+pub const EXEC_TILE_CANDIDATES: &[usize] = &[16, 20, 24, 28, 32, 48, 64];
+
+/// Pick the fastest execution tile for one compiled network by timing a
+/// forward per candidate at the widest pool. Candidates that cannot
+/// carry blocked patch I/O are skipped (and reported) when the plan has
+/// patch-fused edges; the tile never changes bits, only time.
+fn pick_exec_tile(
+    plan: &std::sync::Arc<crate::network::NetworkPlan>,
+    input: &[f32],
+    pool: &Pool,
+    reps: usize,
+) -> Result<usize> {
+    use crate::network::NetworkExecutor;
+    use crate::repetition::tile_supports_blocked_io;
+    let fused = plan.patch_fused_edges() > 0;
+    let mut skipped = Vec::new();
+    let mut best: Option<(usize, u64)> = None;
+    for &t in EXEC_TILE_CANDIDATES {
+        if fused && !tile_supports_blocked_io(t) {
+            skipped.push(t);
+            continue;
+        }
+        let mut exec = NetworkExecutor::with_tile(std::sync::Arc::clone(plan), t)?;
+        let r = bench(&format!("tile {t}"), 1, reps.clamp(1, 3), || {
+            std::hint::black_box(exec.forward_pool(input, pool));
+        });
+        if best.map(|(_, ns)| r.min_ns < ns).unwrap_or(true) {
+            best = Some((t, r.min_ns));
+        }
+    }
+    let (tile, _) = best.expect("EXEC_TILE_CANDIDATES holds PIXEL_BLOCK multiples");
+    if !skipped.is_empty() {
+        println!(
+            "  tile auto-tune: picked {tile}; skipped non-PIXEL_BLOCK-aligned {skipped:?} \
+             (patch fusion is on)"
+        );
+    } else {
+        println!("  tile auto-tune: picked {tile}");
+    }
+    Ok(tile)
+}
+
 /// Time one compiled network's full forward at every pool width,
 /// asserting cross-width bit-equality (and, when `expect` is given,
 /// bit-equality against that baseline — the fused-vs-unfused check).
 /// Returns the measured points plus the first-width output.
+#[allow(clippy::too_many_arguments)]
 fn network_forward_ladder(
     plan: &std::sync::Arc<crate::network::NetworkPlan>,
     op: &str,
@@ -651,6 +712,7 @@ fn network_forward_ladder(
     threads: &[usize],
     input: &[f32],
     reps: usize,
+    tile: usize,
     expect: Option<&[f32]>,
 ) -> Result<(Vec<ScalingPoint>, Vec<f32>)> {
     use crate::network::NetworkExecutor;
@@ -662,7 +724,7 @@ fn network_forward_ladder(
     let mut base_ns = 0u64;
     for &t in threads {
         let pool = Pool::new(t);
-        let mut exec = NetworkExecutor::new(std::sync::Arc::clone(plan));
+        let mut exec = NetworkExecutor::with_tile(std::sync::Arc::clone(plan), tile)?;
         let r = bench(&format!("{op} t{t}"), 1, reps, || {
             std::hint::black_box(exec.forward_pool(input, &pool));
         });
@@ -702,105 +764,126 @@ fn network_forward_ladder(
 }
 
 /// `plum bench network`: full-network forward scaling through the
-/// network executor. Two workloads, compiled once each and timed
-/// end-to-end at each pool width:
+/// network executor. Three workloads, compiled once each and timed
+/// end-to-end at each pool width, each in two variants — cross-layer
+/// patch reuse **disabled** (`network_forward`) and **enabled**
+/// (`network_forward_fused`) — so the reuse win stays visible in
+/// `plum bench compare` on every topology, not just the 1x1 chain:
 ///
-/// * a whole CIFAR ResNet-`depth` (sb scheme, option-A shortcuts) —
-///   the `network_forward` series;
+/// * a whole CIFAR ResNet-`depth` (sb scheme, option-A shortcuts;
+///   block-internal 3x3 edges fuse via the blocked gather);
+/// * `resnet18c` (projection shortcuts; strided/3x3 fused edges);
 /// * the consecutive-1x1 `chain1x1` model (the exact shape serving
-///   uses: `models::{CHAIN1X1_DEPTH, CHAIN1X1_WIDTH}`), timed with
-///   cross-layer patch reuse **disabled** (`network_forward`) and
-///   **enabled** (`network_forward_fused`), so the reuse win stays
-///   visible in `plum bench compare`.
+///   uses: `models::{CHAIN1X1_DEPTH, CHAIN1X1_WIDTH}`).
 ///
-/// Every series is verified bit-identical across pool widths, and the
-/// fused chain is verified bit-identical to the unfused baseline.
-/// Records feed the perf-trajectory gate (committed baseline:
-/// BENCH_network.json).
+/// `tile` pins the execution tile; `0` auto-tunes it over
+/// [`EXEC_TILE_CANDIDATES`] per workload (skipping candidates that
+/// cannot carry blocked I/O whenever the plan has fused edges). Every
+/// series is verified bit-identical across pool widths, and every fused
+/// run is verified bit-identical to its unfused baseline. Records feed
+/// the perf-trajectory gate (committed baseline: BENCH_network.json).
 pub fn network_forward_study(
     cfg: &RunConfig,
     depth: usize,
     batch: usize,
     subtile: usize,
     thread_cap: usize,
+    tile: usize,
 ) -> Result<(Vec<usize>, Vec<ScalingPoint>)> {
     use crate::network::NetworkPlan;
     use std::sync::Arc;
 
     let batch = batch.max(1);
+    // every study workload carries patch-fused edges (ensured below), so
+    // an explicitly-pinned tile must be blocked-I/O-capable — reject it
+    // here, before any ladder has burned bench time
+    anyhow::ensure!(
+        tile == 0 || crate::repetition::tile_supports_blocked_io(tile),
+        "--tile {tile} cannot carry blocked patch I/O (not a PIXEL_BLOCK multiple) and every \
+         bench-network workload runs patch-fused — pass a multiple of 8, or 0 to auto-tune"
+    );
     let ecfg = EngineConfig { subtile, sparsity_support: true };
     let threads = default_thread_ladder(thread_cap);
     let reps = cfg.bench_reps;
     let mut rng = Rng::new(cfg.seed ^ 0x5eed);
     let mut points = Vec::new();
 
-    // ---- workload 1: CIFAR ResNet-{depth} (option-A shortcuts) --------
-    let layers = models::cifar_resnet_layers(depth, 1.0, 32, batch);
-    let t_compile = std::time::Instant::now();
-    let plan = Arc::new(NetworkPlan::compile_seeded(
-        &layers,
-        ecfg,
-        Scheme::sb_default(),
-        cfg.seed,
-    )?);
-    let compile_ms = t_compile.elapsed().as_secs_f64() * 1e3;
-    let ops = plan.op_counts().total();
-    let dense_ops = 2 * plan.dense_macs();
-    println!(
-        "resnet{depth} b{batch}: {} layers compiled in {compile_ms:.1} ms; {} engine ops/pass \
-         vs {} dense ops ({:.1}x arithmetic reduction); packed weights {} KiB",
-        plan.num_layers(),
-        ops,
-        dense_ops,
-        dense_ops as f64 / ops.max(1) as f64,
-        plan.weight_bits / 8 / 1024
-    );
-    let mut input = vec![0.0f32; plan.input_elems()];
-    rng.fill_normal(&mut input, 1.0);
-    let shape = format!("resnet{depth} b{batch} 32px");
-    let (pts, _) =
-        network_forward_ladder(&plan, "network_forward", &shape, &threads, &input, reps, None)?;
-    points.extend(pts);
+    let workloads: Vec<(String, Vec<models::ConvLayerDesc>)> = vec![
+        (
+            format!("resnet{depth} b{batch} 32px"),
+            models::cifar_resnet_layers(depth, 1.0, 32, batch),
+        ),
+        (
+            format!("resnet18c b{batch} 32px"),
+            models::cifar_resnet18_layers(1.0, 32, batch),
+        ),
+        (
+            format!("chain1x1 d{CHAIN1X1_DEPTH} w{CHAIN1X1_WIDTH} b{batch} 32px"),
+            models::conv1x1_chain_layers(CHAIN1X1_DEPTH, CHAIN1X1_WIDTH, 32, batch),
+        ),
+    ];
 
-    // ---- workload 2: consecutive-1x1 chain, patch reuse off vs on -----
-    let chain = models::conv1x1_chain_layers(CHAIN1X1_DEPTH, CHAIN1X1_WIDTH, 32, batch);
-    let fused = Arc::new(NetworkPlan::compile_seeded(
-        &chain,
-        ecfg,
-        Scheme::sb_default(),
-        cfg.seed,
-    )?);
-    let unfused = Arc::new(fused.without_patch_fusion());
-    println!(
-        "\nchain1x1 d{CHAIN1X1_DEPTH} w{CHAIN1X1_WIDTH} b{batch}: {} layers, {} patch-fused \
-         edge(s) (baseline runs the same plan with reuse disabled)",
-        fused.num_layers(),
-        fused.patch_fused_edges()
-    );
-    let mut cinput = vec![0.0f32; fused.input_elems()];
-    rng.fill_normal(&mut cinput, 1.0);
-    let cshape = format!("chain1x1 d{CHAIN1X1_DEPTH} w{CHAIN1X1_WIDTH} b{batch} 32px");
-    let (pts, base) = network_forward_ladder(
-        &unfused,
-        "network_forward",
-        &cshape,
-        &threads,
-        &cinput,
-        reps,
-        None,
-    )?;
-    points.extend(pts);
-    // patch reuse must change the time, never the bits
-    let (pts, _) = network_forward_ladder(
-        &fused,
-        "network_forward_fused",
-        &cshape,
-        &threads,
-        &cinput,
-        reps,
-        Some(&base),
-    )?;
-    points.extend(pts);
+    for (wi, (shape, layers)) in workloads.into_iter().enumerate() {
+        let t_compile = std::time::Instant::now();
+        let fused = Arc::new(NetworkPlan::compile_seeded(
+            &layers,
+            ecfg,
+            Scheme::sb_default(),
+            cfg.seed,
+        )?);
+        let compile_ms = t_compile.elapsed().as_secs_f64() * 1e3;
+        let unfused = Arc::new(fused.without_patch_fusion());
+        let ops = fused.op_counts().total();
+        let dense_ops = 2 * fused.dense_macs();
+        println!(
+            "{}{shape}: {} layers compiled in {compile_ms:.1} ms; {} engine ops/pass vs {} \
+             dense ops ({:.1}x arithmetic reduction); {} patch-fused edge(s); packed weights \
+             {} KiB",
+            if wi == 0 { "" } else { "\n" },
+            fused.num_layers(),
+            ops,
+            dense_ops,
+            dense_ops as f64 / ops.max(1) as f64,
+            fused.patch_fused_edges(),
+            fused.weight_bits / 8 / 1024
+        );
+        anyhow::ensure!(
+            fused.patch_fused_edges() > 0,
+            "{shape}: expected cross-layer patch reuse to engage"
+        );
+        let mut input = vec![0.0f32; fused.input_elems()];
+        rng.fill_normal(&mut input, 1.0);
+        let exec_tile = if tile == 0 {
+            // tune on the fused plan at the widest pool; the choice only
+            // moves time, never bits, so both variants share it
+            pick_exec_tile(&fused, &input, &Pool::new(*threads.last().unwrap()), reps)?
+        } else {
+            tile
+        };
+        let (pts, base) = network_forward_ladder(
+            &unfused,
+            "network_forward",
+            &shape,
+            &threads,
+            &input,
+            reps,
+            exec_tile,
+            None,
+        )?;
+        points.extend(pts);
+        // patch reuse must change the time, never the bits
+        let (pts, _) = network_forward_ladder(
+            &fused,
+            "network_forward_fused",
+            &shape,
+            &threads,
+            &input,
+            reps,
+            exec_tile,
+            Some(&base),
+        )?;
+        points.extend(pts);
+    }
 
     Ok((threads, points))
 }

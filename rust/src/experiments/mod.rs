@@ -27,19 +27,28 @@ use crate::util::json::{self, Json};
 /// Outcome of training + evaluating one artifact.
 #[derive(Debug, Clone)]
 pub struct TrainedRow {
+    /// artifact name
     pub name: String,
+    /// quantization scheme name
     pub scheme: String,
+    /// final eval accuracy
     pub eval_acc: f64,
+    /// final train loss
     pub final_loss: f64,
+    /// training steps run
     pub steps: u64,
     /// quantized-layer parameter counts measured on the *trained* weights
     pub quantized_total: usize,
+    /// effectual (non-zero) quantized parameters after training
     pub effectual: usize,
+    /// effectual / total ratio
     pub density: f64,
+    /// wall-clock seconds of the run
     pub wall_secs: f64,
 }
 
 impl TrainedRow {
+    /// The persisted `<name>.result.json` form.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("name", json::s(&self.name)),
@@ -54,6 +63,7 @@ impl TrainedRow {
         ])
     }
 
+    /// Parse a row back from its persisted JSON form.
     pub fn from_json(j: &Json) -> Result<TrainedRow> {
         Ok(TrainedRow {
             name: j.req_str("name")?.to_string(),

@@ -34,11 +34,17 @@ use crate::runtime::Manifest;
 /// Result of one load run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// requests submitted and answered
     pub requests: usize,
+    /// wall-clock seconds of the run
     pub wall_secs: f64,
+    /// requests per second
     pub throughput_rps: f64,
+    /// mean request latency (ms)
     pub mean_ms: f64,
+    /// 95th-percentile request latency (ms)
     pub p95_ms: f64,
+    /// worker replicas the run used
     pub replicas: usize,
 }
 

@@ -20,31 +20,20 @@
 // The public API carries docs; CI escalates this to an error (clippy
 // `-D warnings` and the `cargo doc` job's `RUSTDOCFLAGS="-D warnings"`),
 // so the gate lives in CI rather than failing local builds outright.
-// Modules still carrying `allow` predate the rustdoc sweep (ROADMAP).
 #![warn(missing_docs)]
 
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod cli;
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod config;
 pub mod coordinator;
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod data;
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod experiments;
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod metrics;
 pub mod models;
 pub mod network;
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod quant;
 pub mod repetition;
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod runtime;
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod simulator;
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod tensor;
-#[allow(missing_docs)] // rustdoc sweep pending (ROADMAP)
 pub mod training;
 pub mod util;

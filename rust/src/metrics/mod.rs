@@ -23,6 +23,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         LatencyHistogram {
             buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
@@ -32,6 +33,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Record one latency sample.
     pub fn record(&self, d: Duration) {
         let us = d.as_micros() as u64;
         let b = (64 - us.max(1).leading_zeros() as usize - 1).min(NUM_BUCKETS - 1);
@@ -41,10 +43,12 @@ impl LatencyHistogram {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Recorded sample count.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency in microseconds (0 when empty).
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -53,6 +57,7 @@ impl LatencyHistogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
     }
 
+    /// Largest recorded latency in microseconds.
     pub fn max_us(&self) -> u64 {
         self.max_us.load(Ordering::Relaxed)
     }
@@ -75,6 +80,7 @@ impl LatencyHistogram {
         self.max_us()
     }
 
+    /// One-line summary (count, mean, p50/p95/p99 bounds, max).
     pub fn report(&self, name: &str) -> String {
         format!(
             "{name}: n={} mean={:.1}us p50<={}us p95<={}us p99<={}us max={}us",
@@ -93,14 +99,17 @@ impl LatencyHistogram {
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Add one.
     pub fn inc(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Add `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }

@@ -100,14 +100,23 @@ pub fn cifar_resnet_layers(
             let stride = if si > 0 && bi == 0 { 2 } else { 1 };
             push(in_ch, h, w, wd, 3, stride, true, &mut idx);
             if stride == 2 {
-                h /= 2;
-                w /= 2;
+                // real conv output arithmetic, not h/2: identical for
+                // even sizes, correct for odd ones (7 -> 4, not 3)
+                h = strided_out(h);
+                w = strided_out(w);
             }
             push(wd, h, w, wd, 3, 1, true, &mut idx);
             in_ch = wd;
         }
     }
     layers
+}
+
+/// Output size of the zoo's stride-2 3x3 pad-1 convs: `(d - 1) / 2 + 1`
+/// — equals `d / 2` for even `d` and stays exact for odd `d` (7 -> 4),
+/// so descriptor lists chain correctly at any image size.
+fn strided_out(d: usize) -> usize {
+    (d + 2 - 3) / 2 + 1
 }
 
 /// ResNet-18-shaped CIFAR variant, **network-compile order**: each
@@ -140,8 +149,8 @@ pub fn cifar_resnet18_layers(width_mult: f64, image: usize, batch: usize) -> Vec
                 push(in_ch, h, w, wd, 1, stride, true, "proj", &mut idx);
             }
             if stride == 2 {
-                h /= 2;
-                w /= 2;
+                h = strided_out(h);
+                w = strided_out(w);
             }
             push(wd, h, w, wd, 3, 1, true, "conv", &mut idx);
             in_ch = wd;
@@ -219,7 +228,7 @@ pub fn resnet18_layers(width_mult: f64, image: usize, batch: usize) -> Vec<ConvL
         for bi in 0..2 {
             let stride = if si > 0 && bi == 0 { 2 } else { 1 };
             push(in_ch, h, w, wd, 3, stride, true, &mut idx);
-            let (h2, w2) = if stride == 2 { (h / 2, w / 2) } else { (h, w) };
+            let (h2, w2) = if stride == 2 { (strided_out(h), strided_out(w)) } else { (h, w) };
             push(wd, h2, w2, wd, 3, 1, true, &mut idx);
             if stride != 1 || in_ch != wd {
                 // projection shortcut 1x1 (quantized)
@@ -374,6 +383,29 @@ mod tests {
 
     fn k_next_elems(l: &ConvLayerDesc) -> usize {
         l.geom.k * l.geom.out_h() * l.geom.out_w()
+    }
+
+    #[test]
+    fn odd_image_sizes_chain_contiguously() {
+        // 7 -> 4 -> 2 under stride-2 3x3 pad-1 convs; the old h/2
+        // arithmetic produced 3 and broke the chain invariant
+        for image in [7, 9, 11] {
+            let layers = cifar_resnet_layers(8, 1.0, image, 1);
+            for i in 1..layers.len() {
+                let (k, oh, ow) = layers[i - 1].out_shape();
+                let g = layers[i].geom;
+                assert_eq!((g.c, g.h, g.w), (k, oh, ow), "image {image} layer {i}");
+            }
+            let layers = cifar_resnet18_layers(1.0, image, 1);
+            for i in 1..layers.len() {
+                let g = layers[i].geom;
+                if layers[i].name.ends_with(".proj") || layers[i - 1].name.ends_with(".proj") {
+                    continue; // projections branch; wiring covers them
+                }
+                let (k, oh, ow) = layers[i - 1].out_shape();
+                assert_eq!((g.c, g.h, g.w), (k, oh, ow), "r18c image {image} layer {i}");
+            }
+        }
     }
 
     #[test]

@@ -18,11 +18,16 @@
 //!   may read any earlier activation, so a residual edge can carry a
 //!   1x1 *projection* conv (option-B / resnet18-style shortcuts) next
 //!   to the option-A identity view. Compile also marks **fusable
-//!   edges** for cross-layer patch reuse: when every consumer of an
-//!   activation is a 1x1 / stride-1 / pad-0 engine layer, the producer
-//!   scatters straight into pixel-major patch blocks and the consumers
-//!   skip their im2col pass entirely (SparseDNN's lesson: fuse the
-//!   layout transform across layers instead of re-packing per layer).
+//!   edges** for cross-layer patch reuse: when an activation's producer
+//!   has an engine plan and every consumer is an engine layer, the
+//!   producer scatters straight into pixel-major patch blocks and the
+//!   consumers read them instead of NCHW — 1x1 / stride-1 / pad-0
+//!   consumers in place, 3x3 and strided consumers through a per-tile
+//!   blocked gather (SparseDNN's lesson: fuse the layout transform
+//!   across layers instead of re-packing per layer). Residual-source
+//!   activations and the network output stay NCHW — the fused
+//!   `Residual` epilogue indexes its source NCHW in the hot scatter
+//!   loop, and callers read logits NCHW.
 //! * [`NetworkExecutor`] runs a full forward pass through
 //!   `execute_conv2d_layout` using a preallocated **live-range-allocated
 //!   activation arena**: compile assigns every activation a buffer slot
@@ -74,8 +79,8 @@ use anyhow::{bail, ensure, Result};
 use crate::models::ConvLayerDesc;
 use crate::quant::{quantize, Scheme};
 use crate::repetition::{
-    execute_conv2d_layout, plan_layer_auto_pool, EngineConfig, LayerPlan, OpCounts, PostOp,
-    Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
+    execute_conv2d_layout, option_a_stride, plan_layer_auto_pool, tile_supports_blocked_io,
+    EngineConfig, LayerPlan, OpCounts, PostOp, Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
 };
 use crate::tensor::{im2col_rows_into, Conv2dGeometry, Tensor};
 use crate::util::{Pool, Rng, ScratchVec, UnsafeSlice};
@@ -284,9 +289,13 @@ impl NetworkPlan {
                 let (rc, rh, rw) = act_shape[ai];
                 let (oh, ow) = (g.out_h(), g.out_w());
                 ensure!(rh >= oh && rw >= ow, "layer {li} shortcut source smaller than output");
-                let st = (rh / oh).max(1);
+                // option-A soundness: one stride must map the source
+                // plane onto the output on both axes. The subsample
+                // covers the source rather than dividing it exactly, so
+                // odd sizes (7 -> 4 at stride 2) are legitimate.
+                let st = option_a_stride(rh, oh);
                 ensure!(
-                    rh == st * oh && rw == st * ow && rc <= g.k,
+                    (rh - 1) / st + 1 == oh && (rw - 1) / st + 1 == ow && rc <= g.k,
                     "layer {li} shortcut from activation {ai} ({rc}x{rh}x{rw}) is not an \
                      option-A view of its {}x{oh}x{ow} output",
                     g.k
@@ -353,12 +362,18 @@ impl NetworkPlan {
             .collect();
 
         // ---- cross-layer patch reuse: mark fusable edges ---------------
-        // Activation a (not the network output, not a residual source)
-        // can live as pixel-major patch blocks when its producer has an
-        // engine plan and every consumer is a 1x1 / stride-1 / pad-0
-        // engine layer — those blocks ARE each consumer's patch matrix,
-        // so the producer scatters them once and the consumers skip
-        // im2col entirely.
+        // Activation a can live as pixel-major patch blocks when its
+        // producer has an engine plan and every consumer is an engine
+        // layer: 1x1/stride-1/pad-0 consumers read the blocks in place
+        // (they ARE that patch matrix), every other geometry gathers its
+        // patch blocks out of the block layout per tile — either way the
+        // NCHW round-trip disappears. Exclusions, and why:
+        //   * the network output — callers read logits NCHW;
+        //   * residual sources — the fused `Residual` epilogue indexes
+        //     its source NCHW inside the per-element scatter; reading
+        //     block layout there would put a div/mod on the hottest
+        //     loop, so those activations deliberately stay NCHW;
+        //   * fp consumers (the dense stem kernel is row-major).
         for a in 1..n {
             if layers[a - 1].plan.is_none() {
                 continue;
@@ -367,15 +382,8 @@ impl NetworkPlan {
                 continue;
             }
             let consumers: Vec<usize> = (0..n).filter(|&j| wiring[j].input == a).collect();
-            let all_fusable = !consumers.is_empty()
-                && consumers.iter().all(|&j| {
-                    let g = descs[j].geom;
-                    layers[j].plan.is_some()
-                        && g.r == 1
-                        && g.s == 1
-                        && g.stride == 1
-                        && g.padding == 0
-                });
+            let all_fusable =
+                !consumers.is_empty() && consumers.iter().all(|&j| layers[j].plan.is_some());
             if all_fusable {
                 layers[a - 1].out_blocked = true;
                 for &j in &consumers {
@@ -781,6 +789,32 @@ impl NetworkExecutor {
         NetworkExecutor { plan, bufs, tile: DEFAULT_TILE }
     }
 
+    /// Like [`NetworkExecutor::new`] with a caller-chosen execution
+    /// tile (output pixels per work item; the default is
+    /// `repetition::DEFAULT_TILE`).
+    ///
+    /// Documented constraint, checked **up front**: when the plan
+    /// carries patch-fused edges, every tile must start on a
+    /// `PIXEL_BLOCK` boundary (blocked patch I/O is defined on whole
+    /// lane blocks), so `tile` must be a multiple of `PIXEL_BLOCK`.
+    /// Failing here beats the same condition asserting deep inside
+    /// `execute_conv2d_layout` mid-forward. Unfused plans accept any
+    /// positive tile.
+    pub fn with_tile(plan: Arc<NetworkPlan>, tile: usize) -> Result<NetworkExecutor> {
+        ensure!(tile > 0, "execution tile must be positive");
+        if plan.patch_fused_edges() > 0 && !tile_supports_blocked_io(tile) {
+            bail!(
+                "this plan has {} patch-fused edge(s): the execution tile must be a multiple \
+                 of PIXEL_BLOCK ({PIXEL_BLOCK}), got {tile} — pick an aligned tile or compile \
+                 with without_patch_fusion()",
+                plan.patch_fused_edges()
+            );
+        }
+        let mut exec = NetworkExecutor::new(plan);
+        exec.tile = tile;
+        Ok(exec)
+    }
+
     /// The compiled plan this executor runs.
     pub fn plan(&self) -> &NetworkPlan {
         &self.plan
@@ -806,7 +840,7 @@ impl NetworkExecutor {
             let (ov, xv, hv) = arena_views(&mut self.bufs, out_slot, in_slot, res_slot);
             let residual = layer.residual_from.map(|ai| {
                 let (sc, sh, sw) = plan.act_shape[ai];
-                let st = (sh / layer.geom.out_h()).max(1);
+                let st = option_a_stride(sh, layer.geom.out_h());
                 Residual {
                     src: &hv.expect("residual slot view")[..plan.act_elems[ai]],
                     c: sc,
@@ -875,7 +909,7 @@ mod tests {
         sh: usize,
         sw: usize,
     ) {
-        let st = (sh / oh).max(1);
+        let st = option_a_stride(sh, oh);
         for ni in 0..n {
             for ci in 0..sc.min(k) {
                 for oy in 0..oh {
@@ -903,9 +937,11 @@ mod tests {
         assert_eq!(plan.layers[4].residual_from, Some(3));
         assert_eq!(plan.layers[6].residual_from, Some(5));
         assert!(plan.layers.iter().all(|l| l.relu));
-        // residual topology -> three arena slots; all-3x3 -> no fusion
+        // residual topology -> three arena slots; every block-internal
+        // edge (conv1 -> conv2, 3 blocks) fuses via the blocked gather,
+        // while block inputs (residual sources) and the output stay NCHW
         assert_eq!(plan.num_arena_slots(), 3);
-        assert_eq!(plan.patch_fused_edges(), 0);
+        assert_eq!(plan.patch_fused_edges(), 3);
         // arena must fit the widest activation
         assert!(plan.max_act_elems() >= plan.input_elems());
         assert!(plan.op_counts().total() > 0);
@@ -941,8 +977,9 @@ mod tests {
         let plan = NetworkPlan::compile_with_weights(&descs, &latents, cfg, sb(), &pool).unwrap();
         let plan = Arc::new(plan);
         assert!(plan.layers.iter().all(|l| l.residual_from.is_none()));
-        // 3x3 consumers -> nothing fuses; plain chain -> two slots
-        assert_eq!(plan.patch_fused_edges(), 0);
+        // the inner 3x3 edge fuses (blocked gather); plain chain -> two
+        // slots either way
+        assert_eq!(plan.patch_fused_edges(), 1);
         assert_eq!(plan.num_arena_slots(), 2);
 
         let mut rng = Rng::new(41);
@@ -1055,9 +1092,9 @@ mod tests {
 
     #[test]
     fn patch_fusion_edge_decision() {
-        // 3x3 -> 1x1 -> 1x1 -> 3x3 chain: both edges into the 1x1s fuse,
-        // the edge into the final 3x3 does not, the network output never
-        // does
+        // 3x3 -> 1x1 -> 1x1 -> 3x3 chain: EVERY inter-layer edge fuses
+        // (the 1x1s read blocks in place, the final 3x3 gathers from
+        // them); only the network output stays NCHW
         let g0 = Conv2dGeometry { n: 1, c: 3, h: 8, w: 8, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
         let p1 = Conv2dGeometry { n: 1, c: 8, h: 8, w: 8, k: 8, r: 1, s: 1, stride: 1, padding: 0 };
         let g3 = Conv2dGeometry { n: 1, c: 8, h: 8, w: 8, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
@@ -1073,20 +1110,21 @@ mod tests {
         let plan = NetworkPlan::compile_with_weights(&descs, &latents, cfg, sb(), &pool).unwrap();
         assert!(plan.layers[0].out_blocked && !plan.layers[0].in_blocked);
         assert!(plan.layers[1].in_blocked && plan.layers[1].out_blocked);
-        assert!(plan.layers[2].in_blocked && !plan.layers[2].out_blocked);
-        assert!(!plan.layers[3].in_blocked && !plan.layers[3].out_blocked);
-        assert_eq!(plan.patch_fused_edges(), 2);
+        assert!(plan.layers[2].in_blocked && plan.layers[2].out_blocked);
+        assert!(plan.layers[3].in_blocked && !plan.layers[3].out_blocked);
+        assert_eq!(plan.patch_fused_edges(), 3);
 
-        // a 1x1 consumer whose input also feeds a residual edge must NOT
-        // fuse (the residual read needs NCHW)
+        // a consumer whose input also feeds a residual edge must NOT
+        // fuse (the fused Residual epilogue reads its source NCHW)
         let mut wiring = chain_wiring(4);
         wiring[2].residual_from = Some(1); // a[1] read as residual by layer 2
         let plan =
             NetworkPlan::compile_with_wiring(&descs, &latents, &wiring, cfg, sb(), &pool).unwrap();
         assert!(!plan.layers[0].out_blocked && !plan.layers[1].in_blocked);
-        // the 1x1 -> 1x1 edge still fuses
+        // the 1x1 -> 1x1 and 1x1 -> 3x3 edges still fuse
         assert!(plan.layers[1].out_blocked && plan.layers[2].in_blocked);
-        assert_eq!(plan.patch_fused_edges(), 1);
+        assert!(plan.layers[2].out_blocked && plan.layers[3].in_blocked);
+        assert_eq!(plan.patch_fused_edges(), 2);
 
         // an fp producer never fuses, even into a 1x1 consumer
         let descs_fp = vec![
@@ -1098,8 +1136,8 @@ mod tests {
             NetworkPlan::compile_with_weights(&descs_fp, &latents_fp, cfg, sb(), &pool).unwrap();
         assert_eq!(plan.patch_fused_edges(), 0);
 
-        // a strided 1x1 consumer must not fuse (its patch matrix is a
-        // subsample, not the producer's block layout)
+        // strided 1x1 and downstream 3x3 consumers fuse too now: the
+        // blocked gather subsamples / re-windows the producer's blocks
         let p2 = Conv2dGeometry { n: 1, c: 8, h: 8, w: 8, k: 8, r: 1, s: 1, stride: 2, padding: 0 };
         let g4 = Conv2dGeometry { n: 1, c: 8, h: 4, w: 4, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
         let descs_st = vec![
@@ -1110,7 +1148,9 @@ mod tests {
         let latents_st = seeded_latents(&descs_st, 19);
         let plan =
             NetworkPlan::compile_with_weights(&descs_st, &latents_st, cfg, sb(), &pool).unwrap();
-        assert_eq!(plan.patch_fused_edges(), 0);
+        assert!(plan.layers[1].in_blocked, "strided 1x1 consumers fuse via the gather");
+        assert!(plan.layers[2].in_blocked, "3x3 consumers fuse via the gather");
+        assert_eq!(plan.patch_fused_edges(), 2);
     }
 
     #[test]
@@ -1130,7 +1170,7 @@ mod tests {
         let fused = Arc::new(
             NetworkPlan::compile_with_weights(&descs, &latents, cfg, sb(), &pool1).unwrap(),
         );
-        assert_eq!(fused.patch_fused_edges(), 2);
+        assert_eq!(fused.patch_fused_edges(), 3);
         let unfused = Arc::new(fused.without_patch_fusion());
         assert_eq!(unfused.patch_fused_edges(), 0);
         assert!(unfused.layers.iter().all(|l| !l.in_blocked && !l.out_blocked));
@@ -1175,8 +1215,81 @@ mod tests {
         }
         // branching residual topology still fits three arena buffers
         assert_eq!(plan.num_arena_slots(), 3);
-        // strided projections are not patch-fusable
-        assert_eq!(plan.patch_fused_edges(), 0);
+        // generalized reuse: every block-internal conv1 -> conv2 edge (8
+        // blocks) fuses, and each projection block's input feeds only
+        // engine consumers (conv1 + proj) so it fuses too (3 stage
+        // boundaries); identity-block inputs are residual sources and
+        // the stem/output stay NCHW
+        assert_eq!(plan.patch_fused_edges(), 8 + 3);
+    }
+
+    /// resnet20 must report fused edges too (the acceptance gate for the
+    /// generalized predicate): every block-internal edge, one per block.
+    #[test]
+    fn resnet20_reports_fused_edges() {
+        let descs = models::cifar_resnet_layers(20, 1.0, 32, 1);
+        let plan = NetworkPlan::compile(&descs, EngineConfig::default(), sb()).unwrap();
+        assert_eq!(plan.patch_fused_edges(), 9);
+    }
+
+    /// Satellite regression: resnet-style models over ODD spatial sizes
+    /// (image 7 -> stride-2 stages produce 4 and 2) used to fail twice —
+    /// compile rejected the shortcut as "not an option-A view" and
+    /// `PostOp::validate` panicked on `res.h != oh * stride`. They must
+    /// compile through `compile_with_wiring` and run, fused and unfused,
+    /// bit-identically.
+    #[test]
+    fn odd_size_resnet_compiles_and_runs() {
+        let descs = models::cifar_resnet_layers(8, 1.0, 7, 2);
+        let latents = seeded_latents(&descs, 23);
+        let pool = Pool::new(2);
+        let cfg = EngineConfig::default();
+        let wiring = resnet_wiring(&descs);
+        assert!(
+            wiring.iter().any(|w| w.residual_from.is_some()),
+            "the odd-size model must still carry option-A shortcuts"
+        );
+        let plan = Arc::new(
+            NetworkPlan::compile_with_wiring(&descs, &latents, &wiring, cfg, sb(), &pool)
+                .unwrap(),
+        );
+        // stage 2 input is 7x7, its strided conv outputs 4x4: 4*2 != 7
+        assert!(plan.layers.iter().any(|l| l.geom.h == 7 && l.geom.stride == 2));
+        let mut rng = Rng::new(47);
+        let mut input = vec![0.0f32; plan.input_elems()];
+        rng.fill_normal(&mut input, 1.0);
+        let base = {
+            let unfused = Arc::new(plan.without_patch_fusion());
+            let mut exec = NetworkExecutor::new(unfused);
+            exec.forward_pool(&input, &pool).to_vec()
+        };
+        assert!(base.iter().all(|v| v.is_finite()));
+        for threads in [1, 2] {
+            let p = Pool::new(threads);
+            let mut exec = NetworkExecutor::new(Arc::clone(&plan));
+            let out = exec.forward_pool(&input, &p);
+            assert!(out == base, "{threads}-thread odd-size fused forward differs");
+        }
+    }
+
+    #[test]
+    fn with_tile_checks_blocked_alignment_up_front() {
+        let descs = models::conv1x1_chain_layers(4, 8, 8, 1);
+        let plan = Arc::new(NetworkPlan::compile(&descs, EngineConfig::default(), sb()).unwrap());
+        assert!(plan.patch_fused_edges() > 0);
+        // misaligned tile on a fused plan: early error, not a deep panic
+        let err = NetworkExecutor::with_tile(Arc::clone(&plan), 12);
+        assert!(err.is_err(), "misaligned tile must be rejected at construction");
+        assert!(NetworkExecutor::with_tile(Arc::clone(&plan), 16).is_ok());
+        assert!(NetworkExecutor::with_tile(Arc::clone(&plan), 0).is_err());
+        // the fusion-disabled twin accepts any positive tile
+        let unfused = Arc::new(plan.without_patch_fusion());
+        let mut a = NetworkExecutor::with_tile(Arc::clone(&unfused), 12).unwrap();
+        let mut b = NetworkExecutor::new(unfused);
+        let input = vec![0.25f32; plan.input_elems()];
+        let pool = Pool::new(1);
+        let oa = a.forward_pool(&input, &pool).to_vec();
+        assert!(oa == b.forward_pool(&input, &pool), "tile choice must not change bits");
     }
 
     #[test]

@@ -16,7 +16,9 @@ use crate::tensor::Tensor;
 /// Weight quantization scheme (paper Figure 3).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Scheme {
+    /// Full precision (no quantization; passes latents through).
     Fp,
+    /// Binary (BWN): `sign(w) * mean|w|` per filter.
     Binary,
     /// Ternary with Delta = delta_frac * max|W| per filter.
     Ternary { delta_frac: f32 },
@@ -25,14 +27,18 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// The paper's default signed-binary configuration (Delta = 0.05,
+    /// one region per filter).
     pub fn sb_default() -> Scheme {
         Scheme::SignedBinary { delta_frac: 0.05, regions_per_filter: 1 }
     }
 
+    /// The paper's default ternary configuration (Delta = 0.05).
     pub fn ternary_default() -> Scheme {
         Scheme::Ternary { delta_frac: 0.05 }
     }
 
+    /// Short scheme name for reports ("fp", "binary", ...).
     pub fn name(&self) -> &'static str {
         match self {
             Scheme::Fp => "fp",
@@ -63,18 +69,22 @@ pub struct QuantizedWeights {
     pub alpha: Vec<f32>,
     /// Per-region sign factor beta (+1/-1); all +1 for binary/ternary.
     pub beta: Vec<f32>,
+    /// The scheme that produced these values.
     pub scheme: Scheme,
 }
 
 impl QuantizedWeights {
+    /// Fraction of non-zero (effectual) weights.
     pub fn density(&self) -> f64 {
         self.values.count_nonzero() as f64 / self.values.len() as f64
     }
 
+    /// Fraction of zero (ineffectual) weights.
     pub fn sparsity(&self) -> f64 {
         1.0 - self.density()
     }
 
+    /// Count of non-zero weights.
     pub fn effectual(&self) -> usize {
         self.values.count_nonzero()
     }

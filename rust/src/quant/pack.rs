@@ -8,6 +8,7 @@
 
 use super::QuantizedWeights;
 
+/// Bitmap word width (u64).
 pub const BITS_PER_WORD: usize = 64;
 
 /// Bit-packed signed-binary weight tensor.
@@ -19,11 +20,14 @@ pub struct PackedSignedBinary {
     pub sign_pos: Vec<bool>,
     /// Per-region scale magnitude.
     pub alpha: Vec<f32>,
+    /// Number of regions (K * regions_per_filter).
     pub regions: usize,
+    /// Weight elements per region.
     pub elems_per_region: usize,
 }
 
 impl PackedSignedBinary {
+    /// Pack a signed-binary quantization into the bitmap form.
     pub fn pack(q: &QuantizedWeights) -> Self {
         let regions = q.beta.len();
         assert!(regions > 0, "pack() requires a signed-binary quantization");

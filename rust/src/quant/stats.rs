@@ -9,14 +9,18 @@
 use crate::tensor::Tensor;
 use std::collections::HashSet;
 
+/// Per-layer repetition/sparsity statistics (paper §2 / Figure 3).
 #[derive(Debug, Clone)]
 pub struct RepetitionStats {
+    /// Filters (K) in the layer.
     pub filters: usize,
+    /// Weight elements per filter (C*R*S / regions).
     pub elems_per_filter: usize,
     /// Mean count of distinct values within a filter.
     pub mean_unique_values: f64,
     /// Fraction of structurally distinct filters in the layer.
     pub unique_filter_fraction: f64,
+    /// Fraction of non-zero weights.
     pub density: f64,
 }
 
@@ -56,15 +60,24 @@ pub fn filter_repetition_stats(values: &Tensor, filters: usize) -> RepetitionSta
 /// Laplace distribution kurtosis ≈ 6, for a Gaussian ≈ 3.
 #[derive(Debug, Clone)]
 pub struct WeightHistogram {
+    /// Lower bound of the histogram range.
     pub lo: f32,
+    /// Upper bound of the histogram range.
     pub hi: f32,
+    /// Per-bucket sample counts (out-of-range values clamp to the ends).
     pub counts: Vec<u64>,
+    /// Sample mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Excess kurtosis (Laplace ~3, Gaussian ~0).
     pub excess_kurtosis: f64,
+    /// Total samples.
     pub total: usize,
 }
 
+/// Histogram `values` over `[lo, hi]` with `bins` buckets and compute
+/// the moment summary ([`WeightHistogram`]).
 pub fn weight_histogram(values: &[f32], lo: f32, hi: f32, bins: usize) -> WeightHistogram {
     assert!(bins > 0 && hi > lo);
     let mut counts = vec![0u64; bins];

@@ -38,22 +38,27 @@
 //! steady-state serving loop performs no per-layer heap allocation.
 //!
 //! **Cross-layer patch reuse** ([`TileIo`], [`execute_conv2d_layout`]):
-//! step 1's patch blocks for a 1x1 / stride-1 / pad-0 layer are exactly
-//! its input activation re-laid pixel-major — so when the network plan
-//! marks an edge as fusable, the *producer* scatters its fused PostOp
-//! output straight into `[ceil(pixels/PB)][K][PB]` block layout
-//! (`output_blocked`) and the *consumer* skips `im2col_rows_transposed`
-//! entirely, reading those blocks as its patch matrix
-//! (`input_blocked`). The values and their accumulation order are
-//! unchanged — only the transform pass disappears — so fused output
-//! stays bit-identical to the unfused path.
+//! when the network plan marks an edge as fusable, the *producer*
+//! scatters its fused PostOp output straight into
+//! `[ceil(pixels/PB)][K][PB]` block layout (`output_blocked`) and the
+//! *consumer* reads those blocks instead of NCHW (`input_blocked`). A
+//! 1x1 / stride-1 / pad-0 consumer's patch matrix IS that layout, so it
+//! skips the transform entirely and reads blocks in place; a 3x3 or
+//! strided consumer gathers its patch blocks directly out of the
+//! producer's block layout (`im2col_rows_transposed_from_blocked_into`
+//! — neighborhoods, subsampling, zero-padded borders), so the NCHW
+//! round-trip disappears for every engine-to-engine edge. The values
+//! and their accumulation order are unchanged, so fused output stays
+//! bit-identical to the unfused path.
 //!
 //! With sparsity support ON, zero entries never enter a sum and all-zero
 //! patterns are skipped. OFF, the zero group is summed and multiplied by
 //! zero — faithfully modelling a repetition-only system (paper §5.1
 //! config 1).
 
-use crate::tensor::{im2col_rows_transposed_into, Tensor};
+use crate::tensor::{
+    im2col_rows_transposed_from_blocked_into, im2col_rows_transposed_into, Tensor,
+};
 use crate::util::{Pool, ScratchVec, UnsafeSlice};
 
 pub use crate::tensor::PIXEL_BLOCK;
@@ -65,6 +70,18 @@ use super::plan::LayerPlan;
 /// pre-tiling executor; small enough that a tile's patch scratch
 /// (`tile * C*R*S` floats) stays cache-resident.
 pub const DEFAULT_TILE: usize = 32;
+
+/// The option-A subsampling stride that maps a source plane of `src`
+/// rows onto `out` output rows: the smallest `st` with
+/// `(src - 1) / st + 1 == out`, i.e. the stride of the conv whose
+/// output the shortcut accompanies. Unlike a plain `src / out` ratio
+/// this is exact on **odd** sizes too (`src = 7, out = 4 -> 2`: the
+/// subsample reads rows 0/2/4/6 and row 7 simply does not exist).
+/// Callers must still verify the formula holds for their shapes —
+/// `PostOp::validate` and the network compiler's wiring checks do.
+pub fn option_a_stride(src: usize, out: usize) -> usize {
+    src.saturating_sub(1) / out.max(1) + 1
+}
 
 /// An option-A residual shortcut fused into the output scatter: before
 /// the epilogue's ReLU, channel `fi < c` of each output pixel gains the
@@ -80,7 +97,10 @@ pub struct Residual<'a> {
     pub h: usize,
     /// source width
     pub w: usize,
-    /// spatial subsampling factor (`h / out_h`, 1 for identity)
+    /// spatial subsampling factor (1 for identity): the consumer reads
+    /// source row `oy * stride`, so `out_h == (h - 1) / stride + 1`
+    /// must hold — see [`option_a_stride`]. On odd sizes the source is
+    /// *covered*, not exactly divided (h = 7, stride = 2 -> out_h = 4).
     pub stride: usize,
 }
 
@@ -100,9 +120,15 @@ impl PostOp<'_> {
     /// output — shared by every kernel that fuses this epilogue.
     pub(crate) fn validate(&self, n: usize, k: usize, oh: usize, ow: usize) {
         if let Some(res) = &self.residual {
+            assert!(res.stride >= 1, "residual stride must be positive");
             assert_eq!(res.src.len(), n * res.c * res.h * res.w, "residual buffer mismatch");
-            assert_eq!(res.h, oh * res.stride, "residual height / stride mismatch");
-            assert_eq!(res.w, ow * res.stride, "residual width / stride mismatch");
+            // `apply` reads source row `oy * stride` for `oy < oh`, so
+            // the source must cover exactly that index range: `oh ==
+            // (h - 1) / stride + 1`. Requiring `h == oh * stride`
+            // instead would reject legitimate odd-size shortcuts
+            // (h = 7, stride = 2 -> oh = 4 reads at most row 6).
+            assert_eq!(oh, (res.h - 1) / res.stride + 1, "residual height / stride mismatch");
+            assert_eq!(ow, (res.w - 1) / res.stride + 1, "residual width / stride mismatch");
             assert!(res.c <= k, "residual has more channels than the output");
         }
     }
@@ -143,22 +169,46 @@ struct Scratch {
 /// The pixel-major block layout is the one `im2col_rows_transposed`
 /// produces over the *whole* pixel range starting at pixel 0:
 /// `buf[(px / PB) * C * PB + c * PB + px % PB]`, with lanes past the
-/// final pixel zero-filled. For a 1x1 / stride-1 / pad-0 layer that is
-/// exactly its patch matrix, so a producer writing it hands the next
-/// layer its patches for free. Both directions require the tile size to
-/// be a multiple of [`PIXEL_BLOCK`] so every tile starts on a block
-/// boundary ([`DEFAULT_TILE`] is).
+/// final pixel zero-filled. Any engine layer can consume it: a 1x1 /
+/// stride-1 / pad-0 layer reads the blocks **in place** (they *are* its
+/// patch matrix), every other geometry gathers its patch blocks out of
+/// them per tile (`im2col_rows_transposed_from_blocked_into` — r/s > 1
+/// neighborhoods, strided subsampling and zero-padded borders), still
+/// skipping the NCHW round-trip. Both directions require the tile size
+/// to be a multiple of [`PIXEL_BLOCK`] so every tile starts on a block
+/// boundary ([`DEFAULT_TILE`] is; see [`validate_blocked_tile`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TileIo {
     /// the input buffer already holds `[ceil(pixels/PB)][C][PB]`
-    /// pixel-major blocks (a fused producer wrote them); only valid for
-    /// 1x1 / stride-1 / pad-0 layers, whose patch matrix this is
+    /// pixel-major blocks over the layer's *input* pixels (a fused
+    /// producer wrote them) instead of NCHW
     pub input_blocked: bool,
     /// scatter the output as `[ceil(pixels/PB)][K][PB]` pixel-major
-    /// blocks — the next layer's patch matrix — instead of NCHW; lanes
+    /// blocks — the next layer's patch source — instead of NCHW; lanes
     /// past the final pixel are written as zero, mirroring im2col's
     /// ragged-block padding
     pub output_blocked: bool,
+}
+
+/// True when `tile` can carry blocked patch I/O: positive and
+/// [`PIXEL_BLOCK`]-aligned, so every tile starts on a block boundary.
+pub fn tile_supports_blocked_io(tile: usize) -> bool {
+    tile > 0 && tile % PIXEL_BLOCK == 0
+}
+
+/// The documented early check for custom execution tiles: blocked patch
+/// I/O ([`TileIo`]) requires every tile to start on a [`PIXEL_BLOCK`]
+/// boundary. Callers that pick their own tile (auto-tuners,
+/// `NetworkExecutor::with_tile`) should check
+/// [`tile_supports_blocked_io`] — or call this — *before* dispatching
+/// work, rather than hitting the same assert mid-execution.
+pub fn validate_blocked_tile(tile: usize, direction: &str) {
+    assert!(
+        tile_supports_blocked_io(tile),
+        "blocked {direction} requires a PIXEL_BLOCK-aligned tile: {tile} is not a multiple of \
+         {PIXEL_BLOCK} — pick a multiple (e.g. DEFAULT_TILE = {DEFAULT_TILE}) or run with \
+         patch fusion disabled"
+    );
 }
 
 /// Execute one conv layer through the repetition engine on the
@@ -200,10 +250,12 @@ pub fn execute_conv2d_into(
 
 /// [`execute_conv2d_into`] with explicit I/O layouts ([`TileIo`]) — the
 /// cross-layer patch-reuse entry point. With `io.input_blocked` the
-/// per-tile `im2col_rows_transposed` pass (step 0) is skipped and the
-/// tile's patch blocks are read straight out of `x`; with
-/// `io.output_blocked` step 3 scatters pixel-major blocks (the next
-/// layer's patch matrix) instead of NCHW. Either direction changes
+/// NCHW `im2col_rows_transposed` pass (step 0) is replaced: a 1x1 /
+/// stride-1 / pad-0 layer reads the producer's blocks **in place**
+/// (zero transform work), any other geometry gathers its patch blocks
+/// straight out of the blocked input per tile (no NCHW round-trip).
+/// With `io.output_blocked` step 3 scatters pixel-major blocks (the
+/// next layer's patch source) instead of NCHW. Either direction changes
 /// neither the values nor their accumulation order, so the output is
 /// bit-identical to the unfused layout at every pool width.
 pub fn execute_conv2d_layout(
@@ -223,18 +275,24 @@ pub fn execute_conv2d_layout(
     let plane = oh * ow;
     const PB: usize = PIXEL_BLOCK;
     let total_blocks = pixels.div_ceil(PB);
+    // a 1x1/s1/p0 consumer's patch matrix IS the blocked input (same
+    // pixels, e == c), so its tiles read the producer's blocks in place;
+    // every other geometry gathers per tile from the blocked layout
+    let direct_input =
+        io.input_blocked && g.r == 1 && g.s == 1 && g.stride == 1 && g.padding == 0;
     if io.input_blocked {
-        assert!(
-            g.r == 1 && g.s == 1 && g.stride == 1 && g.padding == 0,
-            "blocked input requires a 1x1 / stride-1 / pad-0 layer"
+        validate_blocked_tile(tile, "input");
+        let in_pixels = g.n * g.h * g.w;
+        assert_eq!(
+            x.len(),
+            in_pixels.div_ceil(PB) * g.c * PB,
+            "blocked input does not match plan geometry"
         );
-        assert_eq!(tile % PB, 0, "blocked input requires a PIXEL_BLOCK-aligned tile");
-        assert_eq!(x.len(), total_blocks * e * PB, "blocked input does not match plan geometry");
     } else {
         assert_eq!(x.len(), g.n * g.c * g.h * g.w, "input does not match plan geometry");
     }
     if io.output_blocked {
-        assert_eq!(tile % PB, 0, "blocked output requires a PIXEL_BLOCK-aligned tile");
+        validate_blocked_tile(tile, "output");
         assert_eq!(
             out.len(),
             total_blocks * g.k * PB,
@@ -261,9 +319,9 @@ pub fn execute_conv2d_layout(
     pool.run_with(
         jobs,
         || Scratch {
-            // blocked input: the patch matrix already exists in `x`, no
-            // per-tile transform scratch is needed
-            patch: ScratchVec::take(if io.input_blocked { 0 } else { blocks_per_tile * e * PB }),
+            // direct blocked input: the patch matrix already exists in
+            // `x`, no per-tile transform scratch is needed
+            patch: ScratchVec::take(if direct_input { 0 } else { blocks_per_tile * e * PB }),
             psums: ScratchVec::take(np * PB),
             usums: ScratchVec::take(nu * PB),
         },
@@ -271,16 +329,21 @@ pub fn execute_conv2d_layout(
             let px0 = job * tile;
             let tp = tile.min(pixels - px0);
             // 0. fused transposed im2col: only this tile's patch rows,
-            // pixel-major ([e][PB] blocks, ragged lanes zeroed) — skipped
-            // entirely when the producer already scattered blocks
+            // pixel-major ([e][PB] blocks, ragged lanes zeroed). NCHW
+            // input transforms as before; blocked input either skips
+            // this entirely (1x1/s1/p0: the blocks ARE the patches) or
+            // gathers the patch blocks straight out of the producer's
+            // block layout — same values, same accumulation order.
             if !io.input_blocked {
                 im2col_rows_transposed_into(x, &g, px0, tp, &mut scr.patch);
+            } else if !direct_input {
+                im2col_rows_transposed_from_blocked_into(x, &g, px0, tp, &mut scr.patch);
             }
 
             for blk in 0..tp.div_ceil(PB) {
                 let b0 = blk * PB;
                 let pb = PB.min(tp - b0);
-                let bpatch: &[f32] = if io.input_blocked {
+                let bpatch: &[f32] = if direct_input {
                     // tiles are PB-aligned, so this tile's blocks sit at
                     // global block indices px0/PB + blk
                     let gb = px0 / PB + blk;
@@ -652,5 +715,134 @@ mod tests {
             in_io,
         );
         assert!(got == want, "fused patch handoff differs from NCHW handoff");
+    }
+
+    /// The generalized reuse path: 3x3 and strided consumers read a
+    /// producer's blocked activation through the per-tile gather and
+    /// must match their NCHW-input execution bit for bit at every pool
+    /// width.
+    #[test]
+    fn blocked_input_gather_matches_nchw_for_3x3_and_strided_consumers() {
+        const PB: usize = PIXEL_BLOCK;
+        let mut rng = Rng::new(40);
+        // 7x7 -> 49 input pixels: ragged final input block
+        let geoms = [
+            Conv2dGeometry { n: 1, c: 6, h: 7, w: 7, k: 8, r: 3, s: 3, stride: 1, padding: 1 },
+            Conv2dGeometry { n: 2, c: 4, h: 7, w: 7, k: 6, r: 3, s: 3, stride: 2, padding: 1 },
+            Conv2dGeometry { n: 1, c: 5, h: 8, w: 8, k: 7, r: 1, s: 1, stride: 2, padding: 0 },
+            Conv2dGeometry { n: 1, c: 3, h: 6, w: 6, k: 4, r: 3, s: 3, stride: 1, padding: 0 },
+        ];
+        for g in geoms {
+            let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+            let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+            let q = quantize(&w, Scheme::sb_default(), None);
+            let plan = plan_layer(&q, g, EngineConfig::default());
+            let in_pixels = g.n * g.h * g.w;
+            let unit = Conv2dGeometry { k: 0, r: 1, s: 1, stride: 1, padding: 0, ..g };
+            let mut blocked = vec![f32::NAN; in_pixels.div_ceil(PB) * g.c * PB];
+            im2col_rows_transposed_into(x.data(), &unit, 0, in_pixels, &mut blocked);
+            let want = execute_conv2d_pool(&plan, &x, &Pool::new(1));
+            for threads in [1, 2, 3] {
+                let pool = Pool::new(threads);
+                let mut out = vec![f32::NAN; g.n * g.k * g.out_h() * g.out_w()];
+                let io = TileIo { input_blocked: true, output_blocked: false };
+                execute_conv2d_layout(
+                    &plan,
+                    &blocked,
+                    &mut out,
+                    &pool,
+                    DEFAULT_TILE,
+                    PostOp::default(),
+                    io,
+                );
+                assert!(
+                    out == want.data(),
+                    "{threads}-thread blocked-gather input differs for {g:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn option_a_stride_covers_even_and_odd_sizes() {
+        assert_eq!(option_a_stride(8, 8), 1);
+        assert_eq!(option_a_stride(8, 4), 2);
+        assert_eq!(option_a_stride(7, 4), 2); // odd source, stride-2 conv
+        assert_eq!(option_a_stride(9, 3), 3);
+        assert_eq!(option_a_stride(1, 1), 1);
+        assert_eq!(option_a_stride(5, 1), 5);
+        // every returned stride satisfies the subsample equation
+        for (src, out) in [(8, 4), (7, 4), (9, 5), (9, 3), (32, 16), (5, 3)] {
+            let st = option_a_stride(src, out);
+            assert_eq!((src - 1) / st + 1, out, "src {src} out {out} st {st}");
+        }
+    }
+
+    /// Regression: an option-A shortcut over an odd spatial size used to
+    /// panic in `PostOp::validate` (`res.h == oh * stride` with h = 7,
+    /// stride = 2, oh = 4) even though `apply` reads at most row
+    /// `(oh-1)*stride = 6`. The fused epilogue must accept it and match
+    /// separate passes exactly.
+    #[test]
+    fn odd_size_strided_residual_is_accepted_and_correct() {
+        let mut rng = Rng::new(46);
+        // stride-2 conv on a 7x7 input: oh = (7+2-3)/2+1 = 4, 4*2 != 7
+        let g = Conv2dGeometry { n: 2, c: 4, h: 7, w: 7, k: 8, r: 3, s: 3, stride: 2, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let pool = Pool::new(2);
+        let (oh, ow) = (g.out_h(), g.out_w());
+        assert_eq!(oh, 4);
+
+        let mut reference = execute_conv2d_pool(&plan, &x, &pool);
+        for ni in 0..g.n {
+            for fi in 0..g.c.min(g.k) {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let v = reference.at4(ni, fi, oy, ox) + x.at4(ni, fi, 2 * oy, 2 * ox);
+                        reference.set4(ni, fi, oy, ox, v);
+                    }
+                }
+            }
+        }
+        for v in reference.data_mut() {
+            *v = v.max(0.0);
+        }
+
+        let st = option_a_stride(g.h, oh);
+        assert_eq!(st, 2);
+        let post = PostOp {
+            relu: true,
+            residual: Some(Residual { src: x.data(), c: g.c, h: g.h, w: g.w, stride: st }),
+        };
+        let mut out = vec![f32::NAN; g.n * g.k * oh * ow];
+        execute_conv2d_into(&plan, x.data(), &mut out, &pool, DEFAULT_TILE, post);
+        assert!(out == reference.data(), "odd-size strided residual differs");
+    }
+
+    #[test]
+    #[should_panic(expected = "PIXEL_BLOCK-aligned tile")]
+    fn misaligned_tile_with_blocked_io_fails_the_early_check() {
+        let mut rng = Rng::new(47);
+        let g = Conv2dGeometry { n: 1, c: 4, h: 6, w: 6, k: 4, r: 3, s: 3, stride: 1, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let pixels = g.n * g.out_h() * g.out_w();
+        let mut out = vec![f32::NAN; pixels.div_ceil(PIXEL_BLOCK) * g.k * PIXEL_BLOCK];
+        let io = TileIo { input_blocked: false, output_blocked: true };
+        // tile 12 is not a PIXEL_BLOCK multiple: must fail up front
+        execute_conv2d_layout(&plan, x.data(), &mut out, &Pool::new(1), 12, PostOp::default(), io);
+    }
+
+    #[test]
+    fn tile_support_predicate() {
+        assert!(tile_supports_blocked_io(DEFAULT_TILE));
+        assert!(tile_supports_blocked_io(PIXEL_BLOCK));
+        assert!(!tile_supports_blocked_io(0));
+        assert!(!tile_supports_blocked_io(12));
     }
 }

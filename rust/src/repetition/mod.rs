@@ -31,10 +31,11 @@
 //! im2col fused per output-pixel tile in the pixel-major (transposed)
 //! layout so pattern gathers are contiguous SIMD-width loads, tiles
 //! spread over the persistent `util::pool` workers, bit-identical for
-//! every thread count. Consecutive layers can skip the patch transform
+//! every thread count. Consecutive layers skip the NCHW round-trip
 //! entirely: [`execute_conv2d_layout`] scatters a producer's output
-//! straight into the next (1x1 / stride-1) layer's pixel-major patch
-//! blocks and reads such blocks back as input ([`TileIo`]) — the
+//! straight into pixel-major patch blocks and reads such blocks back as
+//! input ([`TileIo`]) — in place for 1x1 / stride-1 / pad-0 consumers,
+//! through a per-tile blocked gather for 3x3 and strided ones — the
 //! network executor's cross-layer patch reuse.
 //!
 //! # Plan and execute one layer
@@ -64,7 +65,8 @@ mod plan;
 pub use cse::{build_cse, CseDag};
 pub use exec::{
     execute_conv2d, execute_conv2d_into, execute_conv2d_layout, execute_conv2d_pool,
-    execute_conv2d_tiled, PostOp, Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
+    execute_conv2d_tiled, option_a_stride, tile_supports_blocked_io, validate_blocked_tile,
+    PostOp, Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
 };
 pub use plan::{LayerPlan, OpCounts, PatternArena, PatternSpan};
 

@@ -11,20 +11,27 @@ use crate::util::Json;
 /// Element type of a marshalled tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float
     F32,
+    /// 32-bit signed integer (labels)
     I32,
 }
 
 /// One positional tensor in an artifact signature.
 #[derive(Debug, Clone)]
 pub struct TensorSpec {
+    /// signature group ("params", "bn", "consts", "x", "y", ...)
     pub group: String,
+    /// tensor name, e.g. `003.conv.w`
     pub name: String,
+    /// tensor shape
     pub shape: Vec<usize>,
+    /// element type
     pub dtype: Dtype,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -51,18 +58,31 @@ impl TensorSpec {
 /// Echo of the python ModelConfig that produced the artifact.
 #[derive(Debug, Clone)]
 pub struct ConfigEcho {
+    /// architecture family ("cifar_resnet", "resnet18", ...)
     pub arch: String,
+    /// network depth
     pub depth: usize,
+    /// channel width multiplier
     pub width_mult: f64,
+    /// classifier classes
     pub num_classes: usize,
+    /// square input image side
     pub image_size: usize,
+    /// input channels
     pub in_channels: usize,
+    /// training/inference batch size the artifact was lowered at
     pub batch_size: usize,
+    /// quantization scheme name ("fp", "binary", "ternary", "sb")
     pub scheme: String,
+    /// Delta threshold fraction
     pub delta_frac: f64,
+    /// fraction of {0,+a} regions
     pub p_pos: f64,
+    /// signed-binary regions per filter
     pub regions_per_filter: usize,
+    /// adapted EDE gradient estimator enabled
     pub use_ede: bool,
+    /// non-linearity name ("relu", "prelu", ...)
     pub act: String,
 }
 
@@ -93,30 +113,47 @@ impl ConfigEcho {
 /// scale `n` as needed for workloads).
 #[derive(Debug, Clone)]
 pub struct ConvLayerInfo {
+    /// layer name, e.g. `003.conv`
     pub name: String,
+    /// conv geometry (batch = 1 in the log)
     pub geom: Conv2dGeometry,
+    /// false for full-precision layers (the stem)
     pub quantized: bool,
 }
 
 /// Parsed `<name>.manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// artifact name
     pub name: String,
+    /// artifact directory the manifest was loaded from
     pub dir: PathBuf,
+    /// ModelConfig echo
     pub config: ConfigEcho,
+    /// train-step HLO path (absent for infer-only artifacts)
     pub train_hlo: Option<PathBuf>,
+    /// infer HLO path
     pub infer_hlo: PathBuf,
+    /// initial-state binary path
     pub params_bin: PathBuf,
+    /// positional train-step input specs
     pub train_inputs: Vec<TensorSpec>,
+    /// positional train-step output specs
     pub train_outputs: Vec<TensorSpec>,
+    /// positional infer input specs
     pub infer_inputs: Vec<TensorSpec>,
+    /// names of the quantized weight tensors
     pub quantized_weights: Vec<String>,
+    /// conv layer geometry recorded at trace time
     pub conv_layers: Vec<ConvLayerInfo>,
+    /// total trainable parameters
     pub param_count: usize,
+    /// effectual parameters at initialization
     pub effectual_params_init: usize,
 }
 
 impl Manifest {
+    /// Load and validate `<dir>/<name>.manifest.json`.
     pub fn load(dir: &Path, name: &str) -> Result<Manifest> {
         let path = dir.join(format!("{name}.manifest.json"));
         let text = std::fs::read_to_string(&path)

@@ -20,11 +20,13 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Construct the process-wide PJRT CPU client.
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         Ok(Runtime { client })
     }
 
+    /// Backing platform name (diagnostics).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -80,8 +82,11 @@ pub fn literal_for_spec(spec: &TensorSpec, data: &[f32]) -> Result<xla::Literal>
 
 /// A compiled model: manifest + executables.
 pub struct ModelHandle {
+    /// the artifact manifest the executables were compiled from
     pub manifest: Manifest,
+    /// compiled train-step executable (absent for serve-only loads)
     pub train_exe: Option<xla::PjRtLoadedExecutable>,
+    /// compiled infer executable
     pub infer_exe: xla::PjRtLoadedExecutable,
 }
 

@@ -25,8 +25,11 @@ use crate::tensor::Conv2dGeometry;
 /// Hardware configuration (defaults = the paper's SIGMA setup).
 #[derive(Debug, Clone, Copy)]
 pub struct AcceleratorConfig {
+    /// multiplier switches in the compute grid (SIGMA default 256)
     pub mult_switches: usize,
+    /// SDMemory read ports
     pub rd_ports: usize,
+    /// SDMemory write ports
     pub wr_ports: usize,
     /// elements per port per cycle
     pub port_width: usize,
@@ -37,11 +40,17 @@ pub struct AcceleratorConfig {
     pub multicast: usize,
     // energy per event, arbitrary units (relative costs follow
     // Horowitz-style tallies used by STONNE's energy tables)
+    /// energy per effectual MAC
     pub e_mac: f64,
+    /// energy per reduction-network hop
     pub e_reduce_hop: f64,
+    /// energy per distribution-network hop
     pub e_dist_hop: f64,
+    /// energy per SRAM element read
     pub e_sram_read: f64,
+    /// energy per SRAM element write
     pub e_sram_write: f64,
+    /// control/clocking energy per cycle
     pub e_ctrl_per_cycle: f64,
 }
 
@@ -66,17 +75,26 @@ impl Default for AcceleratorConfig {
 /// One simulated GEMM / conv run.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// modelled run length in cycles
     pub cycles: u64,
+    /// MACs actually executed (non-zero weights)
     pub effectual_macs: u64,
+    /// dense MAC count of the GEMM
     pub total_macs: u64,
+    /// total energy (arbitrary units)
     pub energy: f64,
+    /// compute (MAC) energy component
     pub energy_compute: f64,
+    /// distribution + reduction network energy component
     pub energy_network: f64,
+    /// SRAM read/write energy component
     pub energy_sram: f64,
+    /// control/clocking energy component
     pub energy_ctrl: f64,
 }
 
 impl SimReport {
+    /// Effectual / total MAC ratio of the simulated run.
     pub fn density(&self) -> f64 {
         self.effectual_macs as f64 / self.total_macs.max(1) as f64
     }

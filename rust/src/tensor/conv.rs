@@ -12,22 +12,33 @@ use super::{gemm_into_pool, Tensor};
 /// simulator and the model descriptors.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Conv2dGeometry {
+    /// batch size
     pub n: usize,
+    /// input channels
     pub c: usize,
+    /// input height
     pub h: usize,
+    /// input width
     pub w: usize,
+    /// output channels (filters)
     pub k: usize,
+    /// kernel height
     pub r: usize,
+    /// kernel width
     pub s: usize,
+    /// spatial stride (both axes)
     pub stride: usize,
+    /// zero padding (both axes)
     pub padding: usize,
 }
 
 impl Conv2dGeometry {
+    /// Output height `(h + 2*padding - r) / stride + 1`.
     pub fn out_h(&self) -> usize {
         (self.h + 2 * self.padding - self.r) / self.stride + 1
     }
 
+    /// Output width `(w + 2*padding - s) / stride + 1`.
     pub fn out_w(&self) -> usize {
         (self.w + 2 * self.padding - self.s) / self.stride + 1
     }
@@ -39,6 +50,7 @@ impl Conv2dGeometry {
             * (self.c * self.r * self.s) as u64
     }
 
+    /// Weight elements of this layer (`k * c * r * s`).
     pub fn weight_count(&self) -> usize {
         self.k * self.c * self.r * self.s
     }
@@ -221,10 +233,65 @@ pub fn im2col_rows_transposed_into(
     rows: usize,
     dst: &mut [f32],
 ) {
+    let (n, c, h, w) = (g.n, g.c, g.h, g.w);
+    assert_eq!(x.len(), n * c * h * w, "activation buffer does not match dims");
+    transposed_patch_blocks(g, px0, rows, dst, |ni, ci, iy, ix| {
+        x[((ni * c + ci) * h + iy) * w + ix]
+    });
+}
+
+/// Like [`im2col_rows_transposed_into`], but the source activation is
+/// itself stored in the **pixel-major blocked layout** a fused producer
+/// scatters (`src[(ipx / PB) * C * PB + ci * PB + ipx % PB]`, where
+/// `ipx = (ni * H + iy) * W + ix` indexes input pixels, lanes past the
+/// final pixel zero-filled) instead of NCHW.
+///
+/// This is the cross-layer patch-reuse gather for consumers whose patch
+/// matrix is **not** a plain re-layout of their input — `r`/`s` > 1
+/// neighborhoods, `stride` > 1 subsampling and zero-padded borders are
+/// all handled — so a 3x3 or strided conv can read a fused producer's
+/// blocks without the activation ever being re-materialized as NCHW.
+/// Every gathered value is the same f32 the NCHW path would load (the
+/// producer stores identical bits in either layout), so downstream
+/// accumulation is bit-identical to the unfused path.
+pub fn im2col_rows_transposed_from_blocked_into(
+    src: &[f32],
+    g: &Conv2dGeometry,
+    px0: usize,
+    rows: usize,
+    dst: &mut [f32],
+) {
+    const PB: usize = PIXEL_BLOCK;
+    let (n, c, h, w) = (g.n, g.c, g.h, g.w);
+    let in_pixels = n * h * w;
+    assert_eq!(
+        src.len(),
+        in_pixels.div_ceil(PB) * c * PB,
+        "blocked activation buffer does not match dims"
+    );
+    transposed_patch_blocks(g, px0, rows, dst, |ni, ci, iy, ix| {
+        let ipx = (ni * h + iy) * w + ix;
+        src[(ipx / PB) * c * PB + ci * PB + ipx % PB]
+    });
+}
+
+/// Shared core of the two transposed patch extractors: walks output
+/// pixels `[px0, px0 + rows)` and writes `[C*R*S, PIXEL_BLOCK]` blocks
+/// into `dst`, loading in-bounds input elements through `load(ni, ci,
+/// iy, ix)` (padding-adjusted coordinates) and zero-filling padded
+/// positions and ragged lanes. Both callers therefore share one
+/// definition of the block layout and its zero conventions.
+#[inline]
+fn transposed_patch_blocks(
+    g: &Conv2dGeometry,
+    px0: usize,
+    rows: usize,
+    dst: &mut [f32],
+    load: impl Fn(usize, usize, usize, usize) -> f32,
+) {
     const PB: usize = PIXEL_BLOCK;
     let (n, c, h, w) = (g.n, g.c, g.h, g.w);
     let (r, s, stride, padding) = (g.r, g.s, g.stride, g.padding);
-    assert_eq!(x.len(), n * c * h * w, "activation buffer does not match dims");
     let oh = (h + 2 * padding - r) / stride + 1;
     let ow = (w + 2 * padding - s) / stride + 1;
     let plane = oh * ow;
@@ -256,7 +323,7 @@ pub fn im2col_rows_transposed_into(
                     for sx in 0..s {
                         let ix = ox * stride + sx;
                         let v = if in_y && ix >= padding && ix - padding < w {
-                            x[((ni * c + ci) * h + (iy - padding)) * w + (ix - padding)]
+                            load(ni, ci, iy - padding, ix - padding)
                         } else {
                             0.0
                         };
@@ -428,6 +495,44 @@ mod tests {
                             }
                         }
                     }
+                    px0 += rows;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_gather_matches_nchw_transposed_extraction() {
+        // re-lay x pixel-major (the fused producer's layout), then check
+        // the blocked gather reproduces the NCHW transposed im2col for
+        // every supported consumer geometry, including ragged tiles
+        const PB: usize = PIXEL_BLOCK;
+        let mut rng = Rng::new(10);
+        let x = Tensor::rand_normal(&[2, 3, 7, 5], 1.0, &mut rng);
+        let (n, c, h, w) = (2, 3, 7, 5);
+        let pixels = n * h * w;
+        let unit = Conv2dGeometry { n, c, h, w, k: 0, r: 1, s: 1, stride: 1, padding: 0 };
+        let mut blocked = vec![f32::NAN; pixels.div_ceil(PB) * c * PB];
+        im2col_rows_transposed_into(x.data(), &unit, 0, pixels, &mut blocked);
+        for (r, s, stride, padding) in [(3, 3, 1, 1), (3, 3, 2, 1), (1, 1, 2, 0), (3, 3, 1, 0)] {
+            let g = Conv2dGeometry { n, c, h, w, k: 0, r, s, stride, padding };
+            let cols = c * r * s;
+            let out_pixels = n * g.out_h() * g.out_w();
+            for tile in [5, PB, 2 * PB + 3] {
+                let blocks = tile.div_ceil(PB);
+                let mut want = vec![f32::NAN; blocks * cols * PB];
+                let mut got = vec![f32::NAN; blocks * cols * PB];
+                let mut px0 = 0;
+                while px0 < out_pixels {
+                    let rows = tile.min(out_pixels - px0);
+                    im2col_rows_transposed_into(x.data(), &g, px0, rows, &mut want);
+                    im2col_rows_transposed_from_blocked_into(&blocked, &g, px0, rows, &mut got);
+                    let n_blk = rows.div_ceil(PB) * cols * PB;
+                    assert_eq!(
+                        &got[..n_blk],
+                        &want[..n_blk],
+                        "px0 {px0} r{r} s{s} stride{stride} pad{padding} tile{tile}"
+                    );
                     px0 += rows;
                 }
             }

@@ -23,7 +23,8 @@ mod ops;
 
 pub use conv::{
     conv2d_gemm, conv2d_gemm_pool, conv2d_naive, im2col, im2col_rows, im2col_rows_into,
-    im2col_rows_transposed, im2col_rows_transposed_into, Conv2dGeometry, PIXEL_BLOCK,
+    im2col_rows_transposed, im2col_rows_transposed_from_blocked_into, im2col_rows_transposed_into,
+    Conv2dGeometry, PIXEL_BLOCK,
 };
 pub use ops::{gemm, gemm_into, gemm_into_pool};
 
@@ -35,6 +36,7 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// Wrap `data` with an explicit shape (element counts must match).
     pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -46,45 +48,55 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// Tensor of the given shape with every element set to `v`.
     pub fn filled(shape: &[usize], v: f32) -> Self {
         Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
     }
 
+    /// Build from a function of the flat (row-major) element index.
     pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
         let n = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: (0..n).map(|i| f(i)).collect() }
     }
 
+    /// Gaussian-initialized tensor (mean 0, the given std).
     pub fn rand_normal(shape: &[usize], std: f32, rng: &mut crate::util::Rng) -> Self {
         let mut t = Tensor::zeros(shape);
         rng.fill_normal(&mut t.data, std);
         t
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Row-major element slice.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element slice.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its element buffer.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
@@ -96,6 +108,7 @@ impl Tensor {
         self
     }
 
+    /// Size of dimension `i`.
     pub fn dim(&self, i: usize) -> usize {
         self.shape[i]
     }
@@ -108,6 +121,7 @@ impl Tensor {
         self.data[((a * s1 + b) * s2 + c) * s3 + d]
     }
 
+    /// Write one element of a rank-4 tensor (NCHW / OIHW).
     #[inline]
     pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
         debug_assert_eq!(self.shape.len(), 4);
@@ -125,6 +139,7 @@ impl Tensor {
             .fold(0.0, f32::max)
     }
 
+    /// Number of non-zero elements (effectual weights).
     pub fn count_nonzero(&self) -> usize {
         self.data.iter().filter(|v| **v != 0.0).count()
     }

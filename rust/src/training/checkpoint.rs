@@ -11,6 +11,7 @@ use crate::util::json::{self, Json};
 
 const MAGIC: &str = "plum-ckpt-v1";
 
+/// Write `state` (specs + f32 data) and the step counter to `path`.
 pub fn save_checkpoint(
     path: &Path,
     step: u64,
@@ -50,6 +51,8 @@ pub fn save_checkpoint(
     Ok(())
 }
 
+/// Read a checkpoint written by [`save_checkpoint`]: returns the step
+/// counter and the state tensors in header order.
 pub fn load_checkpoint(path: &Path) -> Result<(u64, Vec<(TensorSpec, Vec<f32>)>)> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;

@@ -36,17 +36,25 @@ pub fn scheme_from_config(scheme: &str, delta_frac: f64, regions: usize) -> Sche
 /// One (step, loss, acc) sample of the training curve.
 #[derive(Debug, Clone, Copy)]
 pub struct CurvePoint {
+    /// training step the sample was taken at
     pub step: u64,
+    /// train loss at the step
     pub loss: f32,
+    /// eval accuracy at the step
     pub acc: f32,
 }
 
 /// Result of a training run.
 #[derive(Debug, Clone)]
 pub struct TrainLog {
+    /// sampled training curve
     pub curve: Vec<CurvePoint>,
+    /// loss at the final step
     pub final_train_loss: f32,
+    /// final eval accuracy
     pub eval_acc: f32,
+    /// steps run
     pub steps: u64,
+    /// wall-clock seconds of the run
     pub wall_secs: f64,
 }

@@ -9,18 +9,22 @@ pub enum Schedule {
     /// ImageNet recipe: first-order polynomial (linear) anneal from
     /// `init` to `end`.
     Poly { init: f32, end: f32 },
+    /// Fixed learning rate.
     Constant { lr: f32 },
 }
 
 impl Schedule {
+    /// The CIFAR recipe (step drops at the paper's milestones).
     pub fn cifar_default() -> Schedule {
         Schedule::Step { init: 1e-2, milestones: vec![0.43, 0.57, 0.91] }
     }
 
+    /// The ImageNet recipe (linear anneal).
     pub fn imagenet_default() -> Schedule {
         Schedule::Poly { init: 2e-4, end: 2e-8 }
     }
 
+    /// Learning rate at training progress `[0, 1]` (clamped).
     pub fn lr(&self, progress: f32) -> f32 {
         let p = progress.clamp(0.0, 1.0);
         match self {

@@ -16,6 +16,7 @@ use super::{scheme_from_config, CurvePoint, Schedule, TrainLog};
 
 /// Driver owning a compiled model + resident state.
 pub struct Trainer {
+    /// the compiled model (manifest + executables)
     pub model: ModelHandle,
     params: Vec<xla::Literal>,
     bn: Vec<xla::Literal>,
@@ -25,10 +26,13 @@ pub struct Trainer {
     param_specs: Vec<TensorSpec>,
     bn_specs: Vec<TensorSpec>,
     const_specs: Vec<TensorSpec>,
+    /// optimizer steps taken so far
     pub step: u64,
 }
 
 impl Trainer {
+    /// Load + compile `name` from `dir` and stage its initial state as
+    /// device literals.
     pub fn new(rt: &Runtime, dir: &Path, name: &str) -> Result<Trainer> {
         let model = ModelHandle::load(rt, dir, name, true)?;
         let init = model.manifest.load_initial_state()?;
@@ -78,14 +82,17 @@ impl Trainer {
         })
     }
 
+    /// Batch size the artifact was lowered at.
     pub fn batch_size(&self) -> usize {
         self.model.manifest.config.batch_size
     }
 
+    /// Square input image side.
     pub fn image_size(&self) -> usize {
         self.model.manifest.config.image_size
     }
 
+    /// Classifier classes.
     pub fn num_classes(&self) -> usize {
         self.model.manifest.config.num_classes
     }

@@ -3,7 +3,9 @@
 //! serde is not available in the offline vendor set, and the artifact
 //! manifests are plain JSON, so the repo carries its own small, strict
 //! RFC 8259 subset implementation: objects, arrays, strings (with the
-//! standard escapes incl. \uXXXX for the BMP), f64 numbers, bool, null.
+//! standard escapes incl. \uXXXX — surrogate pairs decode to their
+//! astral code point, lone surrogates are rejected), f64 numbers, bool,
+//! null.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -312,15 +314,12 @@ impl<'a> Parser<'a> {
                         Some(b'r') => out.push('\r'),
                         Some(b't') => out.push('\t'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("short \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
+                            self.i += 1; // past 'u'; hex4 consumes the digits
+                            let cp = self.unicode_escape()?;
+                            out.push(cp);
+                            // unicode_escape leaves `i` past its last hex
+                            // digit; skip the shared `+ 1` below
+                            continue;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -336,6 +335,51 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits at the cursor (`u32::from_str_radix` alone would
+    /// also admit signs like `+1f0`); advances past them.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.i + 4 > self.b.len() {
+            return Err(self.err("short \\u escape"));
+        }
+        let raw = &self.b[self.i..self.i + 4];
+        if !raw.iter().all(u8::is_ascii_hexdigit) {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(raw).map_err(|_| self.err("bad \\u escape"))?;
+        let v = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    /// Decode the code point of a `\uXXXX` escape whose `\u` has been
+    /// consumed. BMP scalars decode directly; a high surrogate must be
+    /// followed by `\uDC00..=\uDFFF` and the pair combines into the
+    /// astral scalar (RFC 8259 §7 — strings may carry any code point via
+    /// UTF-16 escapes, and bench/manifest JSON can name models with
+    /// emoji). Lone surrogates in either order are rejected instead of
+    /// being silently replaced.
+    fn unicode_escape(&mut self) -> Result<char, JsonError> {
+        let hi = self.hex4()?;
+        let cp = match hi {
+            0xD800..=0xDBFF => {
+                // high surrogate: a \uXXXX low surrogate must follow
+                if self.b.get(self.i) != Some(&b'\\') || self.b.get(self.i + 1) != Some(&b'u') {
+                    return Err(self.err("unpaired high surrogate"));
+                }
+                self.i += 2;
+                let lo = self.hex4()?;
+                if !(0xDC00..=0xDFFF).contains(&lo) {
+                    return Err(self.err("unpaired high surrogate"));
+                }
+                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+            }
+            0xDC00..=0xDFFF => return Err(self.err("unpaired low surrogate")),
+            cp => cp,
+        };
+        // surrogate ranges handled above, so this cannot fail
+        char::from_u32(cp).ok_or_else(|| self.err("bad \\u escape"))
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
@@ -426,6 +470,41 @@ mod tests {
             Json::parse("\"\\u0041\\u00e9\"").unwrap(),
             Json::Str("Aé".into())
         );
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_astral_code_points() {
+        // U+1F600 GRINNING FACE as a UTF-16 escape pair
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("😀".into())
+        );
+        // pair embedded between other content
+        assert_eq!(
+            Json::parse("\"a\\ud83d\\ude00b\"").unwrap(),
+            Json::Str("a😀b".into())
+        );
+        // raw (unescaped) astral scalars round-trip through the writer
+        let v = Json::Str("model-😀-v2".into());
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        // and an escaped pair survives a full parse -> write -> parse trip
+        let w = Json::parse("{\"name\":\"\\ud83d\\ude00\"}").unwrap();
+        assert_eq!(Json::parse(&w.to_string()).unwrap(), w);
+        assert_eq!(w.req_str("name").unwrap(), "😀");
+    }
+
+    #[test]
+    fn lone_surrogates_are_rejected() {
+        // high surrogate at end of string
+        assert!(Json::parse("\"\\ud83d\"").is_err());
+        // high surrogate followed by a non-escape
+        assert!(Json::parse("\"\\ud83dx\"").is_err());
+        // high surrogate followed by a non-surrogate escape
+        assert!(Json::parse("\"\\ud83d\\u0041\"").is_err());
+        // low surrogate first
+        assert!(Json::parse("\"\\ude00\"").is_err());
+        // signs are not hex digits (from_str_radix alone accepts "+...")
+        assert!(Json::parse("\"\\u+041\"").is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use plum::models::{self, ConvLayerDesc};
 use plum::network::{seeded_latents, NetworkExecutor, NetworkPlan};
-use plum::repetition::{execute_conv2d_pool, EngineConfig};
+use plum::repetition::{execute_conv2d_pool, option_a_stride, EngineConfig};
 use plum::tensor::{conv2d_naive, Tensor};
 use plum::util::{Pool, Rng};
 
@@ -28,12 +28,14 @@ fn relu(t: &mut Tensor) {
 
 /// Residual shortcut add: identity when shapes match exactly, otherwise
 /// the option-A view (spatial subsample by the stride ratio, zero-pad
-/// extra channels) — applied before the block's final ReLU.
+/// extra channels) — applied before the block's final ReLU. The stride
+/// *covers* the source rather than dividing it exactly, so odd sizes
+/// (7 -> 4 at stride 2) work like the executor's fused epilogue.
 fn add_shortcut(out: &mut Tensor, src: &Tensor) {
     let (n, k, oh, ow) = (out.dim(0), out.dim(1), out.dim(2), out.dim(3));
     let (_, c, h, _) = (src.dim(0), src.dim(1), src.dim(2), src.dim(3));
-    let st = h / oh;
-    assert_eq!(h, oh * st, "shortcut stride must divide evenly");
+    let st = option_a_stride(h, oh);
+    assert_eq!(oh, (h - 1) / st + 1, "shortcut stride must cover the source");
     for ni in 0..n {
         for ci in 0..c.min(k) {
             for oy in 0..oh {
@@ -161,6 +163,34 @@ fn patch_reuse_chain_bit_matches_reference_at_every_width() {
     let unfused = Arc::new(plan.without_patch_fusion());
     assert_eq!(unfused.patch_fused_edges(), 0);
     assert_bit_matches_reference(&unfused, &x, "chain1x1 unfused");
+}
+
+#[test]
+fn generalized_patch_reuse_bit_matches_reference_on_resnets() {
+    // with the generalized blocked gather, resnet block-internal 3x3
+    // edges fuse; fused and fusion-disabled plans must both bit-match
+    // the layer-by-layer NCHW reference
+    let (plan, _) = compile_resnet8(2, 16);
+    assert!(plan.patch_fused_edges() > 0, "resnet8 must fuse its block-internal edges");
+    let mut rng = Rng::new(105);
+    let x = Tensor::rand_normal(&[2, 3, 16, 16], 1.0, &mut rng);
+    assert_bit_matches_reference(&plan, &x, "resnet8 fused");
+    let unfused = Arc::new(plan.without_patch_fusion());
+    assert_eq!(unfused.patch_fused_edges(), 0);
+    assert_bit_matches_reference(&unfused, &x, "resnet8 unfused");
+}
+
+#[test]
+fn odd_size_resnet_bit_matches_reference() {
+    // image 7: stride-2 stages output 4 then 2 (no exact division
+    // anywhere) — compile, run fused, and bit-match the reference;
+    // this used to panic in PostOp::validate / fail wiring validation
+    let descs = models::cifar_resnet_layers(8, 1.0, 7, 2);
+    let plan = compile_descs(&descs, 0x0DD);
+    assert!(plan.layers.iter().any(|l| l.residual_from.is_some()));
+    let mut rng = Rng::new(106);
+    let x = Tensor::rand_normal(&[2, 3, 7, 7], 1.0, &mut rng);
+    assert_bit_matches_reference(&plan, &x, "resnet8@7px");
 }
 
 #[test]

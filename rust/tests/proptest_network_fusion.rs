@@ -1,0 +1,97 @@
+//! Randomized-geometry property tests for generalized cross-layer patch
+//! reuse: for arbitrary consumer geometries (r, s ∈ {1, 3}, stride ∈
+//! {1, 2}, padding ∈ {0, 1}) over ragged pixel counts, a fused network
+//! forward (producer scatters pixel-major patch blocks; consumers read
+//! them in place or through the blocked gather) must be **bitwise
+//! identical** to the fusion-disabled twin at pool widths {1, 2, ncpu}.
+
+use std::sync::Arc;
+
+use plum::models::ConvLayerDesc;
+use plum::network::{chain_wiring, seeded_latents, NetworkExecutor, NetworkPlan};
+use plum::quant::Scheme;
+use plum::repetition::EngineConfig;
+use plum::tensor::Conv2dGeometry;
+use plum::util::{Pool, Rng};
+
+fn desc(name: &str, g: Conv2dGeometry) -> ConvLayerDesc {
+    ConvLayerDesc { name: name.into(), geom: g, quantized: true }
+}
+
+#[test]
+fn random_fused_chains_bit_match_unfused_at_every_width() {
+    let mut rng = Rng::new(0xF0_5E);
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for case in 0..16 {
+        // producer: 3x3 / stride-1 / pad-1 (keeps the spatial size), so
+        // its output feeds an arbitrary consumer geometry below
+        let n = 1 + rng.below(2);
+        let c0 = 1 + rng.below(4);
+        let k0 = 1 + rng.below(6);
+        // 4..=9 px: odd sizes force ragged PIXEL_BLOCK tails everywhere
+        let h = 4 + rng.below(6);
+        let w = 4 + rng.below(6);
+        let g0 = Conv2dGeometry { n, c: c0, h, w, k: k0, r: 3, s: 3, stride: 1, padding: 1 };
+
+        // consumer: the satellite's grid — r/s ∈ {1,3}, stride ∈ {1,2},
+        // padding ∈ {0,1} — reading the producer's blocked activation
+        let r = [1, 3][rng.below(2)];
+        let s = [1, 3][rng.below(2)];
+        let stride = 1 + rng.below(2);
+        let padding = rng.below(2);
+        let k1 = 1 + rng.below(6);
+        let g1 = Conv2dGeometry { n, c: k0, h, w, k: k1, r, s, stride, padding };
+
+        // tail consumer: 1x1/s1/p0 over the (possibly subsampled) plane,
+        // so the middle activation exercises blocked output AND input
+        let g2 = Conv2dGeometry {
+            n,
+            c: k1,
+            h: g1.out_h(),
+            w: g1.out_w(),
+            k: 1 + rng.below(4),
+            r: 1,
+            s: 1,
+            stride: 1,
+            padding: 0,
+        };
+        let descs = vec![desc("p", g0), desc("m", g1), desc("t", g2)];
+        let latents = seeded_latents(&descs, 0x1000 + case as u64);
+        let wiring = chain_wiring(3);
+        let cfg = EngineConfig { subtile: [5, 8, 16][rng.below(3)], sparsity_support: true };
+        let pool1 = Pool::new(1);
+        let ctx = format!("case {case}: g0 {g0:?} g1 {g1:?} g2 {g2:?} subtile {}", cfg.subtile);
+
+        let fused = Arc::new(
+            NetworkPlan::compile_with_wiring(
+                &descs,
+                &latents,
+                &wiring,
+                cfg,
+                Scheme::sb_default(),
+                &pool1,
+            )
+            .unwrap_or_else(|e| panic!("compile failed ({ctx}): {e}")),
+        );
+        // every quantized chain fuses all intermediate edges
+        assert_eq!(fused.patch_fused_edges(), 2, "{ctx}");
+        let unfused = Arc::new(fused.without_patch_fusion());
+        assert_eq!(unfused.patch_fused_edges(), 0);
+
+        let mut input = vec![0.0f32; fused.input_elems()];
+        rng.fill_normal(&mut input, 1.0);
+        let base = {
+            let mut exec = NetworkExecutor::new(Arc::clone(&unfused));
+            exec.forward_pool(&input, &pool1).to_vec()
+        };
+        for threads in [1, 2, ncpu] {
+            let pool = Pool::new(threads);
+            let mut exec = NetworkExecutor::new(Arc::clone(&fused));
+            let out = exec.forward_pool(&input, &pool);
+            assert!(out == base, "fused != unfused at {threads} threads ({ctx})");
+            let mut uexec = NetworkExecutor::new(Arc::clone(&unfused));
+            let uout = uexec.forward_pool(&input, &pool);
+            assert!(uout == base, "unfused differs across widths at {threads} threads ({ctx})");
+        }
+    }
+}
