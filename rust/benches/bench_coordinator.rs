@@ -1,11 +1,23 @@
 //! `cargo bench` target: serving coordinator overhead and batching
 //! behaviour with a mock backend (no PJRT) — isolates router/batcher
-//! costs from model compute — plus an optional end-to-end PJRT serve if
-//! artifacts exist (kept tiny so `cargo bench` stays fast).
+//! costs from model compute — plus a chaos smoke (supervised respawn
+//! under injected faults), the open-loop load harness on the repetition
+//! engine, and an optional end-to-end PJRT serve if artifacts exist
+//! (kept tiny so `cargo bench` stays fast).
 
 use std::time::{Duration, Instant};
 
-use plum::coordinator::{spawn_worker, BatchPolicy, MockBackend, Router};
+use plum::coordinator::{
+    flaky_factory, spawn_worker, BatchPolicy, MockBackend, Router, ServeError, ServePolicy,
+};
+
+fn bench_policy(max_batch: usize) -> ServePolicy {
+    ServePolicy {
+        batch: BatchPolicy { max_batch, max_wait: Duration::from_micros(500) },
+        default_deadline: Duration::from_secs(60),
+        ..ServePolicy::default()
+    }
+}
 
 fn mock_roundtrip(replicas: usize, n_req: usize, max_batch: usize) -> (f64, f64) {
     let workers = (0..replicas)
@@ -19,7 +31,7 @@ fn mock_roundtrip(replicas: usize, n_req: usize, max_batch: usize) -> (f64, f64)
                         delay: Duration::from_micros(200), // pretend-model
                     })
                 },
-                BatchPolicy { max_batch, max_wait: Duration::from_micros(500) },
+                bench_policy(max_batch),
             )
             .unwrap()
         })
@@ -28,16 +40,79 @@ fn mock_roundtrip(replicas: usize, n_req: usize, max_batch: usize) -> (f64, f64)
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(n_req);
     for i in 0..n_req {
-        let x = vec![i as f32; 64];
-        rxs.push(router.submit(x).unwrap().0);
+        // closed-loop with backpressure: admission is bounded now, so a
+        // full fleet is waited out instead of panicking the bench
+        let mut x = vec![i as f32; 64];
+        let rx = loop {
+            match router.submit(x) {
+                Ok((rx, _)) => break rx,
+                Err(ServeError::Overloaded { .. }) => {
+                    std::thread::sleep(Duration::from_micros(50));
+                    x = vec![i as f32; 64];
+                }
+                Err(e) => panic!("untyped admission failure: {e}"),
+            }
+        };
+        rxs.push(rx);
     }
     for rx in rxs {
         rx.recv().unwrap().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
-    let mean_us = router.worker(0).latency.mean_us();
+    let mean_us = router.stats(0).latency.mean_us();
     router.shutdown().unwrap();
     (n_req as f64 / wall, mean_us)
+}
+
+/// Chaos smoke: supervised replicas under an injected fault schedule —
+/// reports goodput and how many generations the supervisor replaced.
+fn chaos_roundtrip(replicas: usize, n_req: usize) -> (f64, u64, usize) {
+    let policy = ServePolicy {
+        queue_depth: 32,
+        breaker_threshold: 1000,
+        backoff_base: Duration::from_micros(500),
+        backoff_cap: Duration::from_millis(2),
+        ..bench_policy(8)
+    };
+    let router = Router::spawn(
+        replicas,
+        flaky_factory(
+            move || {
+                Ok(MockBackend {
+                    bs: 8,
+                    sample: 64,
+                    classes: 10,
+                    delay: Duration::from_micros(200),
+                })
+            },
+            9, // panic every 9th batch of each generation
+            0,
+            Duration::ZERO,
+            11,
+        ),
+        policy,
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n_req);
+    let mut shed = 0usize;
+    for i in 0..n_req {
+        match router.submit(vec![i as f32; 64]) {
+            Ok((rx, _)) => rxs.push(rx),
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("untyped admission failure: {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().expect("typed reply required").is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let crashes: u64 = (0..replicas).map(|i| router.stats(i).crashes.get()).sum();
+    router.shutdown().unwrap();
+    (ok as f64 / wall, crashes, shed)
 }
 
 fn main() {
@@ -46,6 +121,14 @@ fn main() {
         let (rps, mean_us) = mock_roundtrip(replicas, 2000, max_batch);
         println!(
             "mock replicas={replicas} max_batch={max_batch}: {rps:>10.0} req/s  worker-mean {mean_us:.0} us"
+        );
+    }
+
+    // chaos: same mock, panics injected — goodput with supervision on
+    {
+        let (rps, crashes, shed) = chaos_roundtrip(2, 2000);
+        println!(
+            "RESULT bench_coordinator chaos_rps={rps:.0} crashes={crashes} shed={shed}"
         );
     }
 
@@ -63,6 +146,24 @@ fn main() {
                 r.throughput_rps, r.mean_ms, r.p95_ms
             ),
             Err(e) => println!("engine serve failed: {e:#}"),
+        }
+    }
+
+    // the open-loop load harness (the `plum bench serve` path)
+    {
+        let cfg = plum::config::RunConfig {
+            replicas: 2,
+            max_batch: 4,
+            max_wait_ms: 1,
+            ..plum::config::RunConfig::default()
+        };
+        match plum::experiments::serving::bench_serve_engine(&cfg, "resnet8", 8, 200.0, 0.5) {
+            Ok(r) => println!(
+                "RESULT bench_coordinator serve_rps={:.1} p50_us={} p95_us={} p99_us={} \
+                 shed_ppm={}",
+                r.achieved_rps, r.p50_us, r.p95_us, r.p99_us, r.shed_ppm
+            ),
+            Err(e) => println!("open-loop serve failed: {e:#}"),
         }
     }
 

@@ -46,6 +46,11 @@ COMMANDS:
                                             --tile 0 (default) auto-tunes the
                                             execution tile, skipping candidates
                                             blocked I/O cannot carry
+         serve [--model NAME] [--image N] [--rps F] [--duration S] [--out FILE]
+                                            open-loop serving load harness on the
+                                            engine backend: p50/p95/p99, goodput
+                                            and shed rate ->
+                                            BENCH_serving_current.json
          compare --current FILE [--baseline FILE] [--tolerance F]
                                             fail on perf regression vs baseline
   serve [--backend engine|pjrt] --model NAME [--requests N] [--replicas R]
@@ -65,6 +70,17 @@ GLOBAL OPTIONS:
   --threads N   pin the worker-pool width for this run (engine, GEMM and
                 plan build; equivalent to the PLUM_THREADS env var; for
                 the scaling studies it also caps the thread ladder)
+
+SERVING OPTIONS (serve, bench serve):
+  --replicas R          worker replicas behind the router (default 1)
+  --max-batch N         device batch per replica (default 8)
+  --max-wait-ms MS      batcher fill deadline (default 2)
+  --queue-depth N       bounded admission queue per replica; beyond it
+                        requests shed with a typed Overloaded (default 256)
+  --deadline-ms MS      default request deadline; expired requests answer
+                        DeadlineExceeded without costing a batch (default 1000)
+  --breaker-threshold N consecutive replica failures that trip the circuit
+                        breaker (until then the supervisor respawns; default 3)
 ";
 
 /// Entry point of the `plum` binary: parse `argv` (everything after the
@@ -169,6 +185,8 @@ fn cmd_bench(cfg: &RunConfig, args: &Args) -> Result<()> {
         // whole-network forward through the network executor — the
         // `network_forward` series, gated like the repetition series
         "network" => bench_network(cfg, args),
+        // open-loop serving load harness — the `BENCH_serving` series
+        "serve" => bench_serve(cfg, args),
         "compare" => bench_compare(args),
         other => bench_trained(cfg, args, other, subtile),
     }
@@ -197,6 +215,39 @@ fn bench_network(cfg: &RunConfig, args: &Args) -> Result<()> {
     // like `bench repetition`, default away from the committed baseline
     // (BENCH_network.json) so re-baselining stays an explicit act
     let out = std::path::PathBuf::from(args.get_or("out", "BENCH_network_current.json"));
+    let n = figures::write_scaling_records(&points, &out)?;
+    println!("wrote {n} records to {}", out.display());
+    Ok(())
+}
+
+/// `plum bench serve`: one open-loop load run against supervised engine
+/// replicas, persisted as the `BENCH_serving` series (p50/p95/p99,
+/// goodput, shed rate) for the CI compare gate.
+fn bench_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let model = args.get_or("model", "resnet8");
+    let image = args.get_usize("image", 16);
+    let rps = args.get_f32("rps", 40.0) as f64;
+    let duration = args.get_f32("duration", 2.0) as f64;
+    let (report, points) = figures::serving_study(cfg, model, image, rps, duration)?;
+    println!(
+        "\noffered {} req @ {:.0} rps over {:.2}s: {} ok, {} shed, {} expired, {} failed, \
+         {} crash(es)",
+        report.offered,
+        report.target_rps,
+        report.wall_secs,
+        report.completed,
+        report.shed,
+        report.expired,
+        report.failed,
+        report.crashes
+    );
+    println!(
+        "goodput {:.1} req/s, e2e p50<={}us p95<={}us p99<={}us, shed {} ppm",
+        report.achieved_rps, report.p50_us, report.p95_us, report.p99_us, report.shed_ppm
+    );
+    // like the other bench targets, default away from the committed
+    // baseline (BENCH_serving.json) so re-baselining stays explicit
+    let out = std::path::PathBuf::from(args.get_or("out", "BENCH_serving_current.json"));
     let n = figures::write_scaling_records(&points, &out)?;
     println!("wrote {n} records to {}", out.display());
     Ok(())
@@ -318,8 +369,17 @@ fn cmd_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown serve backend '{other}' — engine | pjrt")),
     };
     println!(
-        "\nserved {} requests on {} replica(s): {:.1} req/s, mean {:.1} ms, p95 {:.1} ms",
-        report.requests, report.replicas, report.throughput_rps, report.mean_ms, report.p95_ms
+        "\nserved {}/{} requests on {} replica(s): {:.1} req/s, mean {:.1} ms, p95 {:.1} ms \
+         ({} shed, {} expired, {} failed)",
+        report.completed,
+        report.requests,
+        report.replicas,
+        report.throughput_rps,
+        report.mean_ms,
+        report.p95_ms,
+        report.shed,
+        report.expired,
+        report.failed
     );
     Ok(())
 }

@@ -39,6 +39,14 @@ pub struct RunConfig {
     pub max_batch: usize,
     /// Serving: batcher deadline in milliseconds.
     pub max_wait_ms: u64,
+    /// Serving: bounded per-replica admission queue depth (requests
+    /// beyond it are shed with `ServeError::Overloaded`).
+    pub queue_depth: usize,
+    /// Serving: default request deadline in milliseconds.
+    pub deadline_ms: u64,
+    /// Serving: consecutive replica failures that trip the circuit
+    /// breaker (until then the supervisor respawns the replica).
+    pub breaker_threshold: usize,
 }
 
 impl Default for RunConfig {
@@ -55,6 +63,9 @@ impl Default for RunConfig {
             replicas: 1,
             max_batch: 8,
             max_wait_ms: 2,
+            queue_depth: 256,
+            deadline_ms: 1000,
+            breaker_threshold: 3,
         }
     }
 }
@@ -103,6 +114,15 @@ impl RunConfig {
         if let Some(v) = j.get("max_wait_ms").and_then(Json::as_usize) {
             self.max_wait_ms = v as u64;
         }
+        if let Some(v) = j.get("queue_depth").and_then(Json::as_usize) {
+            self.queue_depth = v;
+        }
+        if let Some(v) = j.get("deadline_ms").and_then(Json::as_usize) {
+            self.deadline_ms = v as u64;
+        }
+        if let Some(v) = j.get("breaker_threshold").and_then(Json::as_usize) {
+            self.breaker_threshold = v;
+        }
     }
 
     /// Resolve: defaults -> optional `--config file` -> CLI flags.
@@ -126,7 +146,26 @@ impl RunConfig {
         cfg.replicas = args.get_usize("replicas", cfg.replicas);
         cfg.max_batch = args.get_usize("max-batch", cfg.max_batch);
         cfg.max_wait_ms = args.get_u64("max-wait-ms", cfg.max_wait_ms);
+        cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth);
+        cfg.deadline_ms = args.get_u64("deadline-ms", cfg.deadline_ms);
+        cfg.breaker_threshold = args.get_usize("breaker-threshold", cfg.breaker_threshold);
         Ok(cfg)
+    }
+
+    /// The serving policy these knobs describe (backoff timing is fixed;
+    /// everything else is file/flag-tunable).
+    pub fn serve_policy(&self) -> crate::coordinator::ServePolicy {
+        crate::coordinator::ServePolicy {
+            batch: crate::coordinator::BatchPolicy {
+                max_batch: self.max_batch.max(1),
+                max_wait: std::time::Duration::from_millis(self.max_wait_ms),
+            },
+            queue_depth: self.queue_depth.max(1),
+            default_deadline: std::time::Duration::from_millis(self.deadline_ms.max(1)),
+            breaker_threshold: self.breaker_threshold.max(1),
+            backoff_base: std::time::Duration::from_millis(10),
+            backoff_cap: std::time::Duration::from_millis(500),
+        }
     }
 }
 
@@ -156,5 +195,23 @@ mod tests {
     fn defaults_without_anything() {
         let cfg = RunConfig::resolve(&Args::default()).unwrap();
         assert_eq!(cfg.steps, 200);
+        assert_eq!(cfg.queue_depth, 256);
+        assert_eq!(cfg.deadline_ms, 1000);
+        assert_eq!(cfg.breaker_threshold, 3);
+    }
+
+    #[test]
+    fn serving_knobs_resolve_into_a_policy() {
+        let args = Args::parse(
+            ["--queue-depth", "32", "--deadline-ms", "250", "--breaker-threshold", "5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = RunConfig::resolve(&args).unwrap();
+        let p = cfg.serve_policy();
+        assert_eq!(p.queue_depth, 32);
+        assert_eq!(p.default_deadline, std::time::Duration::from_millis(250));
+        assert_eq!(p.breaker_threshold, 5);
+        assert_eq!(p.batch.max_batch, cfg.max_batch);
     }
 }

@@ -37,25 +37,56 @@ impl<T> Batcher<T> {
     /// Block for the next batch. Returns None when all senders dropped
     /// and the queue is drained.
     pub fn next_batch(&self) -> Option<Vec<T>> {
+        self.next_batch_partitioned(|_| false).map(|(live, _)| live)
+    }
+
+    /// Block for the next batch, splitting off requests for which
+    /// `expired` holds (e.g. past their deadline) so the caller can
+    /// answer them without spending device time. Only *live* requests
+    /// count toward `max_batch`; the returned live set may be empty when
+    /// everything pulled this round had already expired. Returns None
+    /// when all senders dropped and the queue is drained.
+    pub fn next_batch_partitioned<F>(&self, expired: F) -> Option<(Vec<T>, Vec<T>)>
+    where
+        F: Fn(&T) -> bool,
+    {
         // block for the first element
         let first = match self.rx.recv() {
             Ok(v) => v,
             Err(_) => return None,
         };
-        let mut batch = vec![first];
+        let mut live = Vec::new();
+        let mut dead = Vec::new();
+        if expired(&first) {
+            dead.push(first);
+        } else {
+            live.push(first);
+        }
         let deadline = Instant::now() + self.policy.max_wait;
-        while batch.len() < self.policy.max_batch {
+        while live.len() < self.policy.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match self.rx.recv_timeout(deadline - now) {
-                Ok(v) => batch.push(v),
+                Ok(v) => {
+                    if expired(&v) {
+                        dead.push(v);
+                    } else {
+                        live.push(v);
+                    }
+                }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        Some(batch)
+        Some((live, dead))
+    }
+
+    /// Give the receiver back (used when a crashed worker generation
+    /// hands its queue to the supervisor for respawn-in-place).
+    pub fn into_inner(self) -> Receiver<T> {
+        self.rx
     }
 }
 
@@ -94,6 +125,40 @@ mod tests {
         drop(tx);
         let b = Batcher::new(rx, BatchPolicy::default());
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn partitioned_splits_expired_without_counting_them() {
+        let (tx, rx) = channel();
+        for i in 0..8 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        // odd values "expired": they must not occupy live batch slots
+        let (live, dead) = b.next_batch_partitioned(|v| v % 2 == 1).unwrap();
+        assert_eq!(live, vec![0, 2, 4, 6]);
+        assert_eq!(dead, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn partitioned_returns_even_when_all_expired() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let (live, dead) = b.next_batch_partitioned(|_| true).unwrap();
+        assert!(live.is_empty());
+        assert_eq!(dead, vec![1]);
+        assert!(b.next_batch_partitioned(|_| true).is_none());
+    }
+
+    #[test]
+    fn into_inner_returns_the_queue() {
+        let (tx, rx) = channel();
+        tx.send(5).unwrap();
+        let b = Batcher::new(rx, BatchPolicy::default());
+        let rx = b.into_inner();
+        assert_eq!(rx.recv().unwrap(), 5);
     }
 
     #[test]

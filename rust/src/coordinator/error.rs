@@ -1,0 +1,125 @@
+//! Typed serving errors and the serving-hardening policy knobs.
+//!
+//! Every request admitted into the coordinator terminates in exactly one
+//! typed outcome: `Ok(logits)` or one of the [`ServeError`] variants.
+//! Requests rejected *at admission* (bounded queue full, no replica can
+//! meet the deadline, every circuit open) get the same typed errors
+//! synchronously from `submit`, so load-shedding is never silent.
+
+use std::time::Duration;
+
+use super::batcher::BatchPolicy;
+
+/// The reply type every serving client receives: logits or a typed
+/// serving error. Delivered over the per-request reply channel.
+pub type ServeResult = Result<Vec<f32>, ServeError>;
+
+/// Typed serving failure. `Display` is human-readable; match on the
+/// variant for programmatic handling.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Shed at admission: every candidate replica's bounded queue was
+    /// full, or no replica's queue-age signal allowed the deadline.
+    Overloaded {
+        /// replicas behind the router when the request was shed
+        replicas: usize,
+    },
+    /// The request's absolute deadline passed before a device batch
+    /// would have run it (dropped by the batcher, or already expired at
+    /// submit time).
+    DeadlineExceeded {
+        /// how long the request had waited when it was dropped
+        waited: Duration,
+    },
+    /// The replica serving (or queueing) this request failed: the
+    /// backend panicked or errored on its batch, or the replica's
+    /// circuit breaker is open after repeated failures.
+    ReplicaFailed {
+        /// what brought the replica down
+        reason: String,
+    },
+    /// The request itself was malformed (wrong sample size).
+    BadRequest {
+        /// what was wrong with it
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { replicas } => {
+                write!(f, "overloaded: all {replicas} replica queue(s) saturated")
+            }
+            ServeError::DeadlineExceeded { waited } => {
+                write!(f, "deadline exceeded after {:.1} ms", waited.as_secs_f64() * 1e3)
+            }
+            ServeError::ReplicaFailed { reason } => write!(f, "replica failed: {reason}"),
+            ServeError::BadRequest { reason } => write!(f, "bad request: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Serving-hardening knobs: batching, bounded admission, deadlines,
+/// supervision. One policy is shared by every replica behind a router.
+#[derive(Debug, Clone, Copy)]
+pub struct ServePolicy {
+    /// size-or-deadline device batching (see [`BatchPolicy`])
+    pub batch: BatchPolicy,
+    /// bounded per-replica request queue: admission `try_send`s and
+    /// sheds with [`ServeError::Overloaded`] when full (never queues to
+    /// unbounded depth)
+    pub queue_depth: usize,
+    /// absolute deadline assigned to requests submitted without one
+    /// (`deadline = now + default_deadline`)
+    pub default_deadline: Duration,
+    /// consecutive failures (panics or backend errors) that trip a
+    /// replica's circuit breaker open; until then the supervisor
+    /// respawns crashed replicas
+    pub breaker_threshold: usize,
+    /// supervisor backoff before the first respawn; doubles per
+    /// consecutive failure
+    pub backoff_base: Duration,
+    /// cap on the exponential respawn backoff
+    pub backoff_cap: Duration,
+}
+
+impl Default for ServePolicy {
+    fn default() -> Self {
+        ServePolicy {
+            batch: BatchPolicy::default(),
+            queue_depth: 256,
+            default_deadline: Duration::from_secs(1),
+            breaker_threshold: 3,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = ServeError::Overloaded { replicas: 3 };
+        assert!(e.to_string().contains("3 replica"));
+        let e = ServeError::DeadlineExceeded { waited: Duration::from_millis(5) };
+        assert!(e.to_string().contains("deadline"));
+        let e = ServeError::ReplicaFailed { reason: "boom".into() };
+        assert!(e.to_string().contains("boom"));
+        let e = ServeError::BadRequest { reason: "size".into() };
+        assert!(e.to_string().contains("size"));
+    }
+
+    #[test]
+    fn default_policy_is_bounded() {
+        let p = ServePolicy::default();
+        assert!(p.queue_depth > 0);
+        assert!(p.breaker_threshold > 0);
+        assert!(p.backoff_base <= p.backoff_cap);
+    }
+}

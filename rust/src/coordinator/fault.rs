@@ -1,0 +1,148 @@
+//! Deterministic fault injection for chaos-testing the serving layer.
+//!
+//! [`FlakyBackend`] wraps any [`InferBackend`] and injects failures on a
+//! fixed schedule — panic every Nth batch, soft error every Mth, plus
+//! seeded latency jitter — so the supervisor / circuit-breaker /
+//! conservation invariants can be tested reproducibly (same seed, same
+//! fault sequence). The batch counter lives in the backend instance, so
+//! a respawned generation (fresh backend from the factory) restarts its
+//! fault schedule — each generation fails at the same point, which is
+//! exactly what makes chaos tests deterministic.
+
+use std::cell::{Cell, RefCell};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::Rng;
+
+use super::server::InferBackend;
+
+/// An [`InferBackend`] wrapper that fails on a deterministic schedule:
+/// counting batches from 1, it panics when `batches % panic_every == 0`
+/// and returns an error when `batches % error_every == 0` (0 disables
+/// either), after sleeping a seeded jitter in `[0, jitter)`.
+pub struct FlakyBackend<B: InferBackend> {
+    inner: B,
+    panic_every: usize,
+    error_every: usize,
+    jitter: Duration,
+    batches: Cell<usize>,
+    rng: RefCell<Rng>,
+}
+
+impl<B: InferBackend> FlakyBackend<B> {
+    /// Wrap `inner` with the given fault schedule. `panic_every` /
+    /// `error_every` of 0 disable that fault; `jitter` of zero disables
+    /// the latency noise.
+    pub fn new(
+        inner: B,
+        panic_every: usize,
+        error_every: usize,
+        jitter: Duration,
+        seed: u64,
+    ) -> Self {
+        FlakyBackend {
+            inner,
+            panic_every,
+            error_every,
+            jitter,
+            batches: Cell::new(0),
+            rng: RefCell::new(Rng::new(seed)),
+        }
+    }
+
+    /// Batches this instance has been asked to run (including the ones
+    /// it failed).
+    pub fn batches(&self) -> usize {
+        self.batches.get()
+    }
+}
+
+impl<B: InferBackend> InferBackend for FlakyBackend<B> {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn sample_elems(&self) -> usize {
+        self.inner.sample_elems()
+    }
+
+    fn out_elems(&self) -> usize {
+        self.inner.out_elems()
+    }
+
+    fn infer_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let n = self.batches.get() + 1;
+        self.batches.set(n);
+        if !self.jitter.is_zero() {
+            let us = self.jitter.as_micros() as usize;
+            let extra = self.rng.borrow_mut().below(us.max(1));
+            std::thread::sleep(Duration::from_micros(extra as u64));
+        }
+        if self.panic_every > 0 && n % self.panic_every == 0 {
+            panic!("injected fault: panic at batch {n}");
+        }
+        if self.error_every > 0 && n % self.error_every == 0 {
+            bail!("injected fault: error at batch {n}");
+        }
+        self.inner.infer_batch(x)
+    }
+}
+
+/// Wrap a backend factory with a fault schedule: every generation built
+/// by the returned factory gets a fresh [`FlakyBackend`] (fault counter
+/// restarted), which keeps crash points deterministic across respawns.
+pub fn flaky_factory<B, F>(
+    inner: F,
+    panic_every: usize,
+    error_every: usize,
+    jitter: Duration,
+    seed: u64,
+) -> impl Fn() -> Result<FlakyBackend<B>> + Send + Sync + 'static
+where
+    B: InferBackend,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
+{
+    move || Ok(FlakyBackend::new(inner()?, panic_every, error_every, jitter, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::server::MockBackend;
+    use super::*;
+
+    fn mock() -> MockBackend {
+        MockBackend { bs: 2, sample: 1, classes: 1, delay: Duration::ZERO }
+    }
+
+    #[test]
+    fn faults_follow_the_schedule() {
+        let f = FlakyBackend::new(mock(), 0, 3, Duration::ZERO, 1);
+        let x = vec![0.0; 2];
+        assert!(f.infer_batch(&x).is_ok()); // 1
+        assert!(f.infer_batch(&x).is_ok()); // 2
+        assert!(f.infer_batch(&x).is_err()); // 3: injected error
+        assert!(f.infer_batch(&x).is_ok()); // 4
+        assert_eq!(f.batches(), 4);
+    }
+
+    #[test]
+    fn panic_schedule_panics() {
+        let f = FlakyBackend::new(mock(), 2, 0, Duration::ZERO, 1);
+        let x = vec![0.0; 2];
+        assert!(f.infer_batch(&x).is_ok()); // 1
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.infer_batch(&x)));
+        assert!(r.is_err(), "batch 2 should panic");
+    }
+
+    #[test]
+    fn shapes_delegate_to_inner() {
+        let f = FlakyBackend::new(mock(), 0, 0, Duration::ZERO, 1);
+        assert_eq!(f.batch_size(), 2);
+        assert_eq!(f.sample_elems(), 1);
+        assert_eq!(f.out_elems(), 1);
+        // no faults configured: plain delegation
+        assert_eq!(f.infer_batch(&[3.0, 4.0]).unwrap(), vec![3.0, 4.0]);
+    }
+}

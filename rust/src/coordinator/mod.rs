@@ -16,17 +16,37 @@
 //! registry reports the packed one-bit footprint (S2's
 //! `PackedSignedBinary`) so deployment density matches the paper's
 //! bit-accounting.
+//!
+//! Serving hardening (see ARCHITECTURE.md "Serving robustness"):
+//! admission is *bounded* (per-replica queues of
+//! [`ServePolicy::queue_depth`]; saturation sheds typed
+//! [`ServeError::Overloaded`]), every request carries an absolute
+//! *deadline* (expired requests are answered
+//! [`ServeError::DeadlineExceeded`] before costing a device batch), and
+//! `Router::spawn` runs replicas under a *supervisor* that respawns
+//! crashed generations on the same queue with capped exponential
+//! backoff, tripping a per-replica circuit breaker after repeated
+//! failures. [`FlakyBackend`] injects deterministic faults to chaos-test
+//! the whole stack (rust/tests/chaos_serving.rs).
 
 mod batcher;
+mod error;
+mod fault;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 mod registry;
 mod router;
 mod server;
+mod supervisor;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use error::{ServeError, ServePolicy, ServeResult};
+pub use fault::{flaky_factory, FlakyBackend};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use registry::{ModelEntry, ModelRegistry};
 pub use router::Router;
-pub use server::{spawn_worker, InferBackend, InferRequest, MockBackend, WorkerHandle};
+pub use server::{
+    spawn_worker, CircuitState, InferBackend, InferRequest, MockBackend, ReplicaStats,
+    WorkerExit, WorkerHandle,
+};

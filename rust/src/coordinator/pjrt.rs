@@ -15,13 +15,15 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
-    /// A `Send` factory for `spawn_worker`: creates the PJRT client and
-    /// compiles the artifact inside the worker thread.
+    /// A `Send` factory for `spawn_worker` / `Router::spawn`: creates
+    /// the PJRT client and compiles the artifact inside the worker
+    /// thread. Re-callable (`Fn`) so the supervisor can rebuild a
+    /// crashed replica from the same artifacts.
     pub fn factory(
         dir: std::path::PathBuf,
         name: String,
         checkpoint: Option<std::path::PathBuf>,
-    ) -> impl FnOnce() -> Result<PjrtBackend> + Send + 'static {
+    ) -> impl Fn() -> Result<PjrtBackend> + Send + Sync + 'static {
         move || {
             let rt = Runtime::cpu()?;
             PjrtBackend::load(&rt, &dir, &name, checkpoint.as_deref())

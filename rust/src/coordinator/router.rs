@@ -1,71 +1,240 @@
-//! Least-outstanding-requests router over model replicas.
+//! Least-outstanding-requests router over model replicas, with bounded
+//! admission, deadline-feasibility routing, and circuit awareness.
+//!
+//! Admission contract: `submit` never blocks and never queues beyond
+//! each replica's bounded depth. It walks the non-open replicas from
+//! least to most loaded and `try_send`s; if every candidate is full the
+//! request is shed with a typed [`ServeError::Overloaded`]. A replica
+//! whose queue-age signal (outstanding x mean batch time) says the
+//! deadline cannot be met is skipped *before* its queue is touched, so
+//! doomed requests are shed at admission instead of expiring inside a
+//! worker.
+//!
+//! Two backings: [`Router::spawn`] runs replicas under the supervisor
+//! (crash respawn + breakers — the production path), while
+//! [`Router::new`] wraps caller-spawned [`WorkerHandle`]s (no respawn;
+//! crashes surface as an aggregate error from `shutdown`).
 
 use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::server::WorkerHandle;
+use super::error::{ServeError, ServePolicy, ServeResult};
+use super::server::{
+    drain_unserved, CircuitState, InferBackend, InferRequest, ReplicaHandle, ReplicaStats,
+    WorkerExit, WorkerHandle,
+};
+use super::supervisor::spawn_supervised;
+
+/// What stands behind the router's replica slots.
+enum Backing {
+    /// caller-spawned workers; shutdown joins each generation directly
+    Unsupervised(Vec<JoinHandle<WorkerExit>>),
+    /// supervisor thread owns the generations; shutdown joins it and
+    /// returns its crash log
+    Supervised(JoinHandle<Vec<String>>),
+}
 
 /// Routes single-sample requests to the replica with the fewest
 /// outstanding requests (ties -> lowest index, which keeps routing
-/// deterministic for tests).
+/// deterministic for tests), skipping replicas whose circuit breaker is
+/// open or whose backlog makes the request's deadline infeasible.
 pub struct Router {
-    workers: Vec<WorkerHandle>,
+    replicas: Vec<ReplicaHandle>,
+    policy: ServePolicy,
+    backing: Backing,
 }
 
 impl Router {
-    /// Router over a non-empty replica set.
+    /// Router over caller-spawned workers (non-empty). All workers are
+    /// assumed to share one [`ServePolicy`] (the first one's is used for
+    /// default deadlines and feasibility math).
     pub fn new(workers: Vec<WorkerHandle>) -> Self {
         assert!(!workers.is_empty());
-        Router { workers }
+        let policy = workers[0].policy;
+        let mut replicas = Vec::with_capacity(workers.len());
+        let mut joins = Vec::with_capacity(workers.len());
+        for w in workers {
+            replicas.push(ReplicaHandle { tx: w.tx, stats: w.stats });
+            joins.push(w.join);
+        }
+        Router { replicas, policy, backing: Backing::Unsupervised(joins) }
+    }
+
+    /// Spawn `replicas` *supervised* replica slots sharing one backend
+    /// factory: crashed replicas are respawned on the same queue with
+    /// capped exponential backoff, and repeated failures trip a
+    /// per-replica circuit breaker the router routes around.
+    pub fn spawn<B, F>(replicas: usize, factory: F, policy: ServePolicy) -> Result<Self>
+    where
+        B: InferBackend,
+        F: Fn() -> Result<B> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(replicas > 0, "router needs at least one replica");
+        let (handles, sup) = spawn_supervised(replicas, factory, policy)?;
+        Ok(Router { replicas: handles, policy, backing: Backing::Supervised(sup) })
     }
 
     /// Number of replicas behind this router.
     pub fn replicas(&self) -> usize {
-        self.workers.len()
+        self.replicas.len()
     }
 
-    /// Pick the least-loaded replica index.
-    pub fn pick(&self) -> usize {
-        self.workers
+    /// Stats of replica `i` (load / shed / latency / circuit).
+    pub fn stats(&self, i: usize) -> &ReplicaStats {
+        &self.replicas[i].stats
+    }
+
+    /// The policy admission and batching run under.
+    pub fn policy(&self) -> ServePolicy {
+        self.policy
+    }
+
+    /// Least-loaded replica whose circuit is not open; None when every
+    /// breaker has tripped.
+    pub fn pick(&self) -> Option<usize> {
+        self.replicas
             .iter()
             .enumerate()
-            .min_by_key(|(_, w)| w.outstanding.load(Ordering::SeqCst))
+            .filter(|(_, r)| r.stats.circuit() != CircuitState::Open)
+            .min_by_key(|(_, r)| r.stats.outstanding.load(Ordering::SeqCst))
             .map(|(i, _)| i)
-            .unwrap()
     }
 
-    /// Submit a request; returns the reply receiver and the replica used.
-    pub fn submit(
+    /// Queue-age feasibility: with `outstanding` requests ahead and the
+    /// replica's observed mean batch time, can this deadline still be
+    /// met? Replicas with no latency signal yet are assumed feasible.
+    fn can_meet(&self, r: &ReplicaHandle, deadline: Instant, now: Instant) -> bool {
+        let mean_us = r.stats.latency.mean_us();
+        if mean_us <= 0.0 {
+            return true;
+        }
+        let queued = r.stats.outstanding.load(Ordering::SeqCst);
+        let batches = queued.div_ceil(self.policy.batch.max_batch.max(1)) + 1;
+        let est = Duration::from_secs_f64(mean_us * 1e-6 * batches as f64)
+            + self.policy.batch.max_wait;
+        now + est <= deadline
+    }
+
+    /// Submit a request under the policy's default deadline; returns the
+    /// reply receiver and the replica used.
+    pub fn submit(&self, x: Vec<f32>) -> Result<(Receiver<ServeResult>, usize), ServeError> {
+        self.submit_with_deadline(x, Instant::now() + self.policy.default_deadline)
+    }
+
+    /// Submit a request with an explicit absolute deadline. Sheds typed
+    /// and synchronously when the request cannot be admitted: every
+    /// circuit open -> `ReplicaFailed`; deadline already passed ->
+    /// `DeadlineExceeded`; no replica can meet the deadline or every
+    /// candidate queue is full -> `Overloaded` (counted per replica in
+    /// [`ReplicaStats::shed`]).
+    pub fn submit_with_deadline(
         &self,
-        x: Vec<f32>,
-    ) -> Result<(std::sync::mpsc::Receiver<Result<Vec<f32>>>, usize)> {
-        let idx = self.pick();
-        let rx = self.workers[idx].submit(x)?;
-        Ok((rx, idx))
+        mut x: Vec<f32>,
+        deadline: Instant,
+    ) -> Result<(Receiver<ServeResult>, usize), ServeError> {
+        let now = Instant::now();
+        if deadline <= now {
+            return Err(ServeError::DeadlineExceeded { waited: Duration::ZERO });
+        }
+        let mut order: Vec<usize> = (0..self.replicas.len())
+            .filter(|&i| self.replicas[i].stats.circuit() != CircuitState::Open)
+            .collect();
+        if order.is_empty() {
+            return Err(ServeError::ReplicaFailed {
+                reason: "every replica circuit is open".into(),
+            });
+        }
+        order.sort_by_key(|&i| self.replicas[i].stats.outstanding.load(Ordering::SeqCst));
+        let feasible: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| self.can_meet(&self.replicas[i], deadline, now))
+            .collect();
+        if feasible.is_empty() {
+            // no backlog can meet this deadline: shed at the replica
+            // that would otherwise have been picked, so the shed count
+            // lands somewhere observable
+            self.replicas[order[0]].stats.shed.inc();
+            return Err(ServeError::Overloaded { replicas: self.replicas.len() });
+        }
+        for &i in &feasible {
+            let r = &self.replicas[i];
+            let (rtx, rrx) = sync_channel(1);
+            r.stats.outstanding.fetch_add(1, Ordering::SeqCst);
+            match r.tx.try_send(InferRequest { x, deadline, submitted: now, resp: rtx }) {
+                Ok(()) => return Ok((rrx, i)),
+                Err(TrySendError::Full(req)) => {
+                    r.stats.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    r.stats.shed.inc();
+                    x = req.x;
+                }
+                Err(TrySendError::Disconnected(req)) => {
+                    // never counted as load (the satellite-fixed leak)
+                    r.stats.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    x = req.x;
+                }
+            }
+        }
+        Err(ServeError::Overloaded { replicas: self.replicas.len() })
     }
 
-    /// Handle of replica `i` (load/latency introspection).
-    pub fn worker(&self, i: usize) -> &WorkerHandle {
-        &self.workers[i]
-    }
-
-    /// Total requests completed across replicas (from latency counters).
+    /// Total requests answered `Ok` across replicas.
     pub fn completed(&self) -> u64 {
-        self.workers.iter().map(|w| w.latency.count()).sum()
+        self.replicas.iter().map(|r| r.stats.served.get()).sum()
     }
 
-    /// Shut down: drop senders and join all workers.
-    pub fn shutdown(self) -> Result<()> {
-        let mut joins = Vec::new();
-        for w in self.workers {
-            drop(w.tx);
-            joins.push(w.join);
+    /// Total requests shed at admission across replicas.
+    pub fn shed(&self) -> u64 {
+        self.replicas.iter().map(|r| r.stats.shed.get()).sum()
+    }
+
+    /// Shut down: drop all senders, join everything, and return the
+    /// crash log (supervised) or an aggregate error naming *every*
+    /// crashed worker (unsupervised — all workers are joined before the
+    /// error is built, so no thread leaks behind an early return).
+    pub fn shutdown(self) -> Result<Vec<String>> {
+        let Router { replicas, backing, .. } = self;
+        let stats: Vec<Arc<ReplicaStats>> =
+            replicas.iter().map(|r| Arc::clone(&r.stats)).collect();
+        drop(replicas); // drops every sender: workers drain and exit
+        match backing {
+            Backing::Supervised(sup) => {
+                sup.join().map_err(|_| anyhow!("supervisor thread panicked"))
+            }
+            Backing::Unsupervised(joins) => {
+                let total = joins.len();
+                let mut crashes = Vec::new();
+                for (i, j) in joins.into_iter().enumerate() {
+                    match j.join() {
+                        Ok(exit) => {
+                            if let Some(rx) = exit.rx {
+                                let reason =
+                                    exit.crash.clone().unwrap_or_else(|| "replica crashed".into());
+                                drain_unserved(rx, &stats[i], &reason);
+                            }
+                            if let Some(c) = exit.crash {
+                                crashes.push(format!("replica {i}: {c}"));
+                            }
+                        }
+                        Err(_) => crashes.push(format!("replica {i}: thread panicked")),
+                    }
+                }
+                if crashes.is_empty() {
+                    Ok(Vec::new())
+                } else {
+                    Err(anyhow!(
+                        "{} of {total} replica(s) failed: {}",
+                        crashes.len(),
+                        crashes.join("; ")
+                    ))
+                }
+            }
         }
-        for j in joins {
-            j.join().map_err(|_| anyhow!("worker panicked"))?;
-        }
-        Ok(())
     }
 }
 
@@ -73,18 +242,19 @@ impl Router {
 mod tests {
     use super::*;
     use crate::coordinator::{spawn_worker, BatchPolicy, MockBackend};
-    use std::time::Duration;
 
     fn slow_mock() -> MockBackend {
         MockBackend { bs: 2, sample: 1, classes: 1, delay: Duration::from_millis(5) }
     }
 
+    fn policy(max_batch: usize, max_wait: Duration) -> ServePolicy {
+        ServePolicy { batch: BatchPolicy { max_batch, max_wait }, ..ServePolicy::default() }
+    }
+
     #[test]
     fn router_spreads_load() {
-        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
-        let workers = (0..3)
-            .map(|_| spawn_worker(move || Ok(slow_mock()), policy).unwrap())
-            .collect();
+        let p = policy(2, Duration::from_millis(1));
+        let workers = (0..3).map(|_| spawn_worker(move || Ok(slow_mock()), p).unwrap()).collect();
         let router = Router::new(workers);
         let mut rxs = Vec::new();
         let mut used = [0usize; 3];
@@ -104,15 +274,103 @@ mod tests {
     }
 
     #[test]
-    fn pick_prefers_idle_worker() {
-        let w0 = spawn_worker(move || Ok(slow_mock()), BatchPolicy::default()).unwrap();
-        let w1 = spawn_worker(move || Ok(slow_mock()), BatchPolicy::default()).unwrap();
+    fn pick_prefers_idle_worker_and_skips_open_circuits() {
+        let w0 = spawn_worker(move || Ok(slow_mock()), ServePolicy::default()).unwrap();
+        let w1 = spawn_worker(move || Ok(slow_mock()), ServePolicy::default()).unwrap();
         // preload w0
-        w0.outstanding.store(5, Ordering::SeqCst);
+        w0.stats.outstanding.store(5, Ordering::SeqCst);
         let router = Router::new(vec![w0, w1]);
-        assert_eq!(router.pick(), 1);
+        assert_eq!(router.pick(), Some(1));
+        // an open circuit removes a replica from consideration entirely
+        router.stats(1).set_circuit(CircuitState::Open);
+        assert_eq!(router.pick(), Some(0));
+        router.stats(0).set_circuit(CircuitState::Open);
+        assert_eq!(router.pick(), None);
+        assert!(matches!(
+            router.submit(vec![0.0]),
+            Err(ServeError::ReplicaFailed { .. })
+        ));
         // restore so shutdown joins cleanly
-        router.worker(0).outstanding.store(0, Ordering::SeqCst);
+        router.stats(0).outstanding.store(0, Ordering::SeqCst);
         router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn router_sheds_requests_whose_deadline_no_backlog_can_meet() {
+        // one slow single-slot replica: after a warm-up batch teaches
+        // the router ~20ms service time, a 5ms-deadline request against
+        // a 3-deep backlog must shed at admission, not expire in queue
+        let p = ServePolicy {
+            batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(100) },
+            ..ServePolicy::default()
+        };
+        let w = spawn_worker(
+            move || {
+                Ok(MockBackend { bs: 1, sample: 1, classes: 1, delay: Duration::from_millis(20) })
+            },
+            p,
+        )
+        .unwrap();
+        let router = Router::new(vec![w]);
+        let (rx, _) = router.submit(vec![1.0]).unwrap();
+        rx.recv().unwrap().unwrap(); // warm-up: latency signal now known
+        let backlog: Vec<_> = (0..3).map(|_| router.submit(vec![2.0]).unwrap().0).collect();
+        let shed_before = router.shed();
+        let tight = Instant::now() + Duration::from_millis(5);
+        match router.submit_with_deadline(vec![3.0], tight) {
+            Err(ServeError::Overloaded { .. }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(router.shed(), shed_before + 1);
+        // a generous deadline is still admitted
+        let far = Instant::now() + Duration::from_secs(30);
+        let (rx, _) = router.submit_with_deadline(vec![4.0], far).unwrap();
+        for b in backlog {
+            b.recv().unwrap().unwrap();
+        }
+        rx.recv().unwrap().unwrap();
+        router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn unsupervised_shutdown_joins_all_workers_and_aggregates_crashes() {
+        // regression: shutdown used to early-return on the first crashed
+        // worker, leaking the remaining threads un-joined
+        struct SlowPanicBackend;
+        impl crate::coordinator::InferBackend for SlowPanicBackend {
+            fn batch_size(&self) -> usize {
+                2
+            }
+            fn sample_elems(&self) -> usize {
+                1
+            }
+            fn out_elems(&self) -> usize {
+                1
+            }
+            fn infer_batch(&self, _x: &[f32]) -> anyhow::Result<Vec<f32>> {
+                // slow enough that both submits land before either
+                // reply decrements the load signal (keeps routing to
+                // distinct replicas deterministic)
+                std::thread::sleep(Duration::from_millis(200));
+                panic!("injected fault: slow panic");
+            }
+        }
+        let p = ServePolicy {
+            batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            ..ServePolicy::default()
+        };
+        let workers =
+            (0..2).map(|_| spawn_worker(move || Ok(SlowPanicBackend), p).unwrap()).collect();
+        let router = Router::new(workers);
+        // one crash on each replica (least-loaded routing alternates
+        // while both requests are outstanding)
+        let (a, ia) = router.submit(vec![1.0]).unwrap();
+        let (b, ib) = router.submit(vec![2.0]).unwrap();
+        assert_ne!(ia, ib);
+        assert!(matches!(a.recv().unwrap(), Err(ServeError::ReplicaFailed { .. })));
+        assert!(matches!(b.recv().unwrap(), Err(ServeError::ReplicaFailed { .. })));
+        let err = router.shutdown().unwrap_err().to_string();
+        assert!(err.contains("replica 0"), "{err}");
+        assert!(err.contains("replica 1"), "{err}");
     }
 }

@@ -1,25 +1,66 @@
 //! Model worker: a thread that owns an inference backend and serves
-//! batched requests from a channel.
+//! batched requests from a *bounded* channel, under the hardened serving
+//! contract:
+//!
+//! * **bounded admission** — `submit` never blocks and never queues to
+//!   unbounded depth; a full queue sheds with [`ServeError::Overloaded`];
+//! * **deadlines** — every request carries an absolute deadline and the
+//!   worker drops expired requests *before* spending a device batch on
+//!   them ([`ServeError::DeadlineExceeded`]);
+//! * **typed failure** — a backend panic or repeated backend errors end
+//!   the worker *generation*: every in-flight request is answered
+//!   [`ServeError::ReplicaFailed`] and the queue's receiver is returned
+//!   through the thread's [`WorkerExit`] so a supervisor can respawn a
+//!   new generation on the *same* channel — requests queued across the
+//!   crash gap survive and are served by the successor.
+//!
+//! Conservation invariant (chaos-tested in rust/tests/chaos_serving.rs):
+//! every admitted request receives exactly one typed reply, across
+//! injected panics, backend errors, expiry, and shutdown.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender, SyncSender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{Counter, LatencyHistogram};
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::error::{ServeError, ServePolicy, ServeResult};
 
-/// One inference request: a single sample (flattened CHW) and a reply
-/// channel for its logits.
+/// One inference request: a single sample (flattened CHW), its absolute
+/// deadline, and a reply channel for its logits.
 pub struct InferRequest {
     /// the sample, flattened CHW
     pub x: Vec<f32>,
-    /// where this request's logits (or error) are delivered
-    pub resp: SyncSender<Result<Vec<f32>>>,
+    /// absolute deadline; the batcher answers `DeadlineExceeded` instead
+    /// of spending device time once this passes
+    pub deadline: Instant,
+    /// when the request was admitted (end-to-end latency anchor)
+    pub submitted: Instant,
+    /// where this request's logits (or typed error) are delivered
+    pub resp: SyncSender<ServeResult>,
+}
+
+impl InferRequest {
+    /// Deliver the one and only reply for this request: tallies the
+    /// outcome, records end-to-end latency, releases the load signal
+    /// *before* sending (so `outstanding` never over-reads), and ignores
+    /// a receiver that was dropped by an abandoning client.
+    pub(crate) fn finish(self, stats: &ReplicaStats, result: ServeResult) {
+        match &result {
+            Ok(_) => stats.served.inc(),
+            Err(ServeError::DeadlineExceeded { .. }) => stats.expired.inc(),
+            Err(_) => stats.failed.inc(),
+        }
+        stats.e2e.record(self.submitted.elapsed());
+        stats.outstanding.fetch_sub(1, Ordering::SeqCst);
+        let _ = self.resp.send(result);
+    }
 }
 
 /// Anything the worker can run a padded batch through. Abstracted so the
@@ -30,7 +71,8 @@ pub struct InferRequest {
 /// state, so each worker constructs its own backend inside its thread
 /// via the factory passed to `spawn_worker` (one PJRT client + compiled
 /// executable per replica, exactly like a one-process-per-replica
-/// deployment).
+/// deployment). The factory itself is `Fn` (re-callable) so a supervisor
+/// can rebuild a crashed replica's backend.
 pub trait InferBackend: 'static {
     /// Fixed device batch size (artifact-baked).
     fn batch_size(&self) -> usize;
@@ -52,7 +94,7 @@ pub struct MockBackend {
     /// logits per sample
     pub classes: usize,
     /// optional artificial latency per batch
-    pub delay: std::time::Duration,
+    pub delay: Duration,
 }
 
 impl InferBackend for MockBackend {
@@ -83,113 +125,367 @@ impl InferBackend for MockBackend {
     }
 }
 
-/// Handle to a spawned worker: submit requests, inspect load, join.
-pub struct WorkerHandle {
-    /// request channel into the worker's batcher
-    pub tx: Sender<InferRequest>,
-    /// requests submitted but not yet replied to (router load signal)
-    pub outstanding: Arc<AtomicUsize>,
-    /// per-batch service-time histogram
-    pub latency: Arc<LatencyHistogram>,
-    /// worker thread handle (joins after `tx` is dropped)
-    pub join: JoinHandle<()>,
+/// Circuit-breaker state of one replica (stored in [`ReplicaStats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CircuitState {
+    /// healthy: the router considers this replica normally
+    Closed,
+    /// freshly respawned after a crash; closes again on the first
+    /// successful batch
+    HalfOpen,
+    /// tripped after `breaker_threshold` consecutive failures: the
+    /// router routes around it and queued requests are drained into
+    /// typed `ReplicaFailed` replies
+    Open,
 }
 
-impl WorkerHandle {
-    /// Submit one sample and get a receiver for the reply.
-    pub fn submit(&self, x: Vec<f32>) -> Result<std::sync::mpsc::Receiver<Result<Vec<f32>>>> {
-        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
-        self.outstanding.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .send(InferRequest { x, resp: rtx })
-            .map_err(|_| anyhow!("worker channel closed"))?;
-        Ok(rrx)
+/// Per-replica serving counters and signals, shared (`Arc`) between the
+/// admission side (router / handle), the worker generations, and the
+/// supervisor. Survives respawns — one `ReplicaStats` per replica slot,
+/// not per generation.
+#[derive(Debug, Default)]
+pub struct ReplicaStats {
+    /// requests admitted but not yet replied to (router load signal)
+    pub outstanding: AtomicUsize,
+    /// requests shed at admission (queue full or deadline infeasible)
+    pub shed: Counter,
+    /// requests answered `DeadlineExceeded`
+    pub expired: Counter,
+    /// requests answered `Ok`
+    pub served: Counter,
+    /// requests answered `ReplicaFailed` / `BadRequest`
+    pub failed: Counter,
+    /// worker generations lost to panics or repeated backend errors
+    pub crashes: Counter,
+    /// consecutive failed batches; reset on success, trips the breaker
+    /// at `ServePolicy::breaker_threshold`
+    pub consecutive_failures: AtomicUsize,
+    /// device-batch service time (one sample per batch) — also the
+    /// router's queue-age signal for deadline feasibility
+    pub latency: LatencyHistogram,
+    /// end-to-end request latency, submit to reply (one sample per reply)
+    pub e2e: LatencyHistogram,
+    circuit: AtomicU8,
+}
+
+impl ReplicaStats {
+    /// Fresh stats for one replica slot (circuit closed).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current circuit-breaker state.
+    pub fn circuit(&self) -> CircuitState {
+        match self.circuit.load(Ordering::SeqCst) {
+            0 => CircuitState::Closed,
+            1 => CircuitState::HalfOpen,
+            _ => CircuitState::Open,
+        }
+    }
+
+    pub(crate) fn set_circuit(&self, s: CircuitState) {
+        let v = match s {
+            CircuitState::Closed => 0,
+            CircuitState::HalfOpen => 1,
+            CircuitState::Open => 2,
+        };
+        self.circuit.store(v, Ordering::SeqCst);
     }
 }
 
-/// Spawn a worker thread serving a backend built by `factory` (inside
-/// the thread — PJRT handles are not `Send`) under `policy`.
-///
-/// Invariants (property-tested in rust/tests/proptest_coordinator.rs):
-/// * every submitted request receives exactly one reply;
-/// * device batches never exceed the backend batch size; short batches
-///   are zero-padded and the padding's outputs are discarded;
-/// * replies carry the logits of their own request (no cross-wiring).
-pub fn spawn_worker<B, F>(factory: F, policy: BatchPolicy) -> Result<WorkerHandle>
-where
-    B: InferBackend,
-    F: FnOnce() -> Result<B> + Send + 'static,
-{
-    let (tx, rx) = channel::<InferRequest>();
-    let outstanding = Arc::new(AtomicUsize::new(0));
-    let latency = Arc::new(LatencyHistogram::new());
-    let out_clone = outstanding.clone();
-    let lat_clone = latency.clone();
-    let (ready_tx, ready_rx) = std::sync::mpsc::sync_channel::<Result<()>>(1);
-    let join = std::thread::spawn(move || {
-        let backend = match factory() {
-            Ok(b) => {
-                let _ = ready_tx.send(Ok(()));
-                b
+/// What a worker generation leaves behind when its thread returns.
+pub struct WorkerExit {
+    /// the request receiver, returned on crash so a supervisor can
+    /// respawn the next generation on the same channel (None on clean
+    /// shutdown — the queue was already drained)
+    pub rx: Option<Receiver<InferRequest>>,
+    /// why the generation died (None = clean shutdown)
+    pub crash: Option<String>,
+}
+
+/// Exit notification a generation (or drainer) sends its supervisor.
+pub(crate) struct ReplicaExited {
+    /// replica slot index
+    pub idx: usize,
+}
+
+/// Admission-side handle to one replica slot: the bounded request
+/// channel plus the slot's stats. The serving thread behind it may be
+/// respawned across generations; the channel stays fixed.
+pub(crate) struct ReplicaHandle {
+    /// bounded request channel into the slot's batcher
+    pub tx: SyncSender<InferRequest>,
+    /// the slot's counters / circuit / latency signals
+    pub stats: Arc<ReplicaStats>,
+}
+
+/// Render a panic payload (as recovered by `catch_unwind`) for humans.
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Answer every request still in `rx` with a typed `ReplicaFailed`.
+/// Callers must guarantee the senders are (about to be) dropped — this
+/// blocks until the channel disconnects.
+pub(crate) fn drain_unserved(rx: Receiver<InferRequest>, stats: &ReplicaStats, reason: &str) {
+    for req in rx {
+        req.finish(stats, Err(ServeError::ReplicaFailed { reason: reason.to_string() }));
+    }
+}
+
+/// Handle to a single unsupervised worker (one replica, no respawn).
+/// Production serving goes through `Router::spawn`, which supervises;
+/// this handle is the embeddable / testable building block.
+pub struct WorkerHandle {
+    /// bounded request channel into the worker's batcher
+    pub tx: SyncSender<InferRequest>,
+    /// load / outcome / latency signals for this replica
+    pub stats: Arc<ReplicaStats>,
+    /// the policy the worker batches and sheds under
+    pub policy: ServePolicy,
+    /// worker thread handle (returns after `tx` is dropped or a crash)
+    pub join: JoinHandle<WorkerExit>,
+}
+
+impl WorkerHandle {
+    /// Submit one sample with the policy's default deadline.
+    pub fn submit(&self, x: Vec<f32>) -> Result<Receiver<ServeResult>, ServeError> {
+        self.submit_with_deadline(x, Instant::now() + self.policy.default_deadline)
+    }
+
+    /// Submit one sample with an explicit absolute deadline. Never
+    /// blocks: a full queue sheds `Overloaded`, a dead worker returns
+    /// `ReplicaFailed` — and in both cases the load signal is released
+    /// (the pre-increment is rolled back, so a dead or saturated replica
+    /// can't inflate `outstanding` forever).
+    pub fn submit_with_deadline(
+        &self,
+        x: Vec<f32>,
+        deadline: Instant,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        let now = Instant::now();
+        if deadline <= now {
+            self.stats.expired.inc();
+            return Err(ServeError::DeadlineExceeded { waited: Duration::ZERO });
+        }
+        let (rtx, rrx) = sync_channel(1);
+        self.stats.outstanding.fetch_add(1, Ordering::SeqCst);
+        match self.tx.try_send(InferRequest { x, deadline, submitted: now, resp: rtx }) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => {
+                self.stats.outstanding.fetch_sub(1, Ordering::SeqCst);
+                self.stats.shed.inc();
+                Err(ServeError::Overloaded { replicas: 1 })
             }
-            Err(e) => {
-                let _ = ready_tx.send(Err(e));
-                return;
-            }
-        };
-        let device_bs = backend.batch_size();
-        let policy = BatchPolicy { max_batch: policy.max_batch.min(device_bs), ..policy };
-        let batcher = Batcher::new(rx, policy);
-        let sample = backend.sample_elems();
-        let classes = backend.out_elems();
-        while let Some(batch) = batcher.next_batch() {
-            let t0 = Instant::now();
-            // zero-pad to the artifact's fixed batch size
-            let mut xs = vec![0.0f32; device_bs * sample];
-            for (i, req) in batch.iter().enumerate() {
-                if req.x.len() == sample {
-                    xs[i * sample..(i + 1) * sample].copy_from_slice(&req.x);
-                }
-            }
-            let result = backend.infer_batch(&xs);
-            match result {
-                Ok(logits) => {
-                    for (i, req) in batch.into_iter().enumerate() {
-                        let reply = if req.x.len() != sample {
-                            Err(anyhow!(
-                                "bad request size {} != {sample}",
-                                req.x.len()
-                            ))
-                        } else {
-                            Ok(logits[i * classes..(i + 1) * classes].to_vec())
-                        };
-                        // record before replying so observers that join on
-                        // the reply see a consistent count
-                        lat_clone.record(t0.elapsed());
-                        out_clone.fetch_sub(1, Ordering::SeqCst);
-                        let _ = req.resp.send(reply);
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for req in batch {
-                        out_clone.fetch_sub(1, Ordering::SeqCst);
-                        let _ = req.resp.send(Err(anyhow!("{msg}")));
-                    }
-                }
+            Err(TrySendError::Disconnected(_)) => {
+                self.stats.outstanding.fetch_sub(1, Ordering::SeqCst);
+                Err(ServeError::ReplicaFailed { reason: "worker channel closed".into() })
             }
         }
-    });
-    ready_rx
-        .recv()
-        .map_err(|_| anyhow!("worker died before ready"))??;
-    Ok(WorkerHandle { tx, outstanding, latency, join })
+    }
+
+    /// Drop the sender, join the worker, and drain any requests stranded
+    /// by a crash into typed replies. Returns the crash reason if the
+    /// generation died instead of exiting cleanly.
+    pub fn shutdown(self) -> Result<(), String> {
+        let WorkerHandle { tx, stats, join, .. } = self;
+        drop(tx);
+        match join.join() {
+            Ok(exit) => {
+                if let Some(rx) = exit.rx {
+                    let reason = exit.crash.clone().unwrap_or_else(|| "replica crashed".into());
+                    drain_unserved(rx, &stats, &reason);
+                }
+                match exit.crash {
+                    Some(c) => Err(c),
+                    None => Ok(()),
+                }
+            }
+            Err(p) => Err(format!("worker thread panicked: {}", panic_message(p))),
+        }
+    }
+}
+
+/// Spawn one worker generation: a thread that builds the backend via
+/// `factory` and serves `rx` until disconnect or crash, then notifies
+/// `events`. `ready` (first generation only) reports whether the backend
+/// came up. Used by `spawn_worker` and by the supervisor's respawns.
+pub(crate) fn spawn_generation<B, F>(
+    factory: Arc<F>,
+    rx: Receiver<InferRequest>,
+    stats: Arc<ReplicaStats>,
+    policy: ServePolicy,
+    idx: usize,
+    events: Sender<ReplicaExited>,
+    ready: Option<SyncSender<Result<()>>>,
+) -> JoinHandle<WorkerExit>
+where
+    B: InferBackend,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
+{
+    std::thread::spawn(move || {
+        let exit = generation_body(&*factory, rx, &stats, &policy, ready);
+        let _ = events.send(ReplicaExited { idx });
+        exit
+    })
+}
+
+/// One generation's life: construct the backend, serve batches, exit.
+fn generation_body<B: InferBackend>(
+    factory: &(dyn Fn() -> Result<B>),
+    rx: Receiver<InferRequest>,
+    stats: &ReplicaStats,
+    policy: &ServePolicy,
+    ready: Option<SyncSender<Result<()>>>,
+) -> WorkerExit {
+    let backend = match catch_unwind(AssertUnwindSafe(factory)) {
+        Ok(Ok(b)) => {
+            if let Some(t) = ready {
+                let _ = t.send(Ok(()));
+            }
+            b
+        }
+        Ok(Err(e)) => {
+            let msg = format!("backend construction failed: {e:#}");
+            stats.consecutive_failures.fetch_add(1, Ordering::SeqCst);
+            stats.crashes.inc();
+            if let Some(t) = ready {
+                let _ = t.send(Err(e));
+            }
+            return WorkerExit { rx: Some(rx), crash: Some(msg) };
+        }
+        Err(p) => {
+            let msg = format!("backend construction panicked: {}", panic_message(p));
+            stats.consecutive_failures.fetch_add(1, Ordering::SeqCst);
+            stats.crashes.inc();
+            if let Some(t) = ready {
+                let _ = t.send(Err(anyhow!("{msg}")));
+            }
+            return WorkerExit { rx: Some(rx), crash: Some(msg) };
+        }
+    };
+
+    let device_bs = backend.batch_size();
+    let batch_policy =
+        BatchPolicy { max_batch: policy.batch.max_batch.min(device_bs), ..policy.batch };
+    let batcher = Batcher::new(rx, batch_policy);
+    let sample = backend.sample_elems();
+    let classes = backend.out_elems();
+    loop {
+        // expired requests are answered without touching the device
+        let Some((live, dead)) = batcher.next_batch_partitioned(|r| r.deadline <= Instant::now())
+        else {
+            return WorkerExit { rx: None, crash: None };
+        };
+        for req in dead {
+            let waited = req.submitted.elapsed();
+            req.finish(stats, Err(ServeError::DeadlineExceeded { waited }));
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        // zero-pad to the artifact's fixed batch size
+        let mut xs = vec![0.0f32; device_bs * sample];
+        for (i, req) in live.iter().enumerate() {
+            if req.x.len() == sample {
+                xs[i * sample..(i + 1) * sample].copy_from_slice(&req.x);
+            }
+        }
+        match catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&xs))) {
+            Ok(Ok(logits)) => {
+                stats.latency.record(t0.elapsed());
+                stats.consecutive_failures.store(0, Ordering::SeqCst);
+                stats.set_circuit(CircuitState::Closed);
+                for (i, req) in live.into_iter().enumerate() {
+                    let reply = if req.x.len() != sample {
+                        Err(ServeError::BadRequest {
+                            reason: format!("sample size {} != {sample}", req.x.len()),
+                        })
+                    } else {
+                        Ok(logits[i * classes..(i + 1) * classes].to_vec())
+                    };
+                    req.finish(stats, reply);
+                }
+            }
+            Ok(Err(e)) => {
+                let msg = format!("backend error: {e:#}");
+                let failures = stats.consecutive_failures.fetch_add(1, Ordering::SeqCst) + 1;
+                for req in live {
+                    req.finish(stats, Err(ServeError::ReplicaFailed { reason: msg.clone() }));
+                }
+                // soft errors only end the generation once they repeat
+                // to the breaker threshold; a panic ends it immediately
+                if failures >= policy.breaker_threshold {
+                    stats.crashes.inc();
+                    return WorkerExit { rx: Some(batcher.into_inner()), crash: Some(msg) };
+                }
+            }
+            Err(p) => {
+                let msg = format!("backend panicked: {}", panic_message(p));
+                stats.consecutive_failures.fetch_add(1, Ordering::SeqCst);
+                stats.crashes.inc();
+                for req in live {
+                    req.finish(stats, Err(ServeError::ReplicaFailed { reason: msg.clone() }));
+                }
+                return WorkerExit { rx: Some(batcher.into_inner()), crash: Some(msg) };
+            }
+        }
+    }
+}
+
+/// Spawn a single unsupervised worker serving a backend built by
+/// `factory` (inside the thread — PJRT handles are not `Send`) under
+/// `policy`.
+///
+/// Invariants (property-tested in rust/tests/proptest_coordinator.rs and
+/// chaos-tested in rust/tests/chaos_serving.rs):
+/// * every admitted request receives exactly one typed reply;
+/// * device batches never exceed the backend batch size; short batches
+///   are zero-padded and the padding's outputs are discarded;
+/// * replies carry the logits of their own request (no cross-wiring);
+/// * admission is bounded: at most `policy.queue_depth` requests queue.
+pub fn spawn_worker<B, F>(factory: F, policy: ServePolicy) -> Result<WorkerHandle>
+where
+    B: InferBackend,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
+{
+    let (tx, rx) = sync_channel(policy.queue_depth.max(1));
+    let stats = Arc::new(ReplicaStats::new());
+    let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+    // unsupervised: exit events have no listener
+    let (events_tx, _events_rx) = channel();
+    let join = spawn_generation(
+        Arc::new(factory),
+        rx,
+        Arc::clone(&stats),
+        policy,
+        0,
+        events_tx,
+        Some(ready_tx),
+    );
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok(WorkerHandle { tx, stats, policy, join }),
+        Ok(Err(e)) => {
+            let _ = join.join();
+            Err(e)
+        }
+        Err(_) => {
+            let _ = join.join();
+            Err(anyhow!("worker died before ready"))
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
     fn mock() -> MockBackend {
         MockBackend { bs: 4, sample: 3, classes: 2, delay: Duration::ZERO }
@@ -197,17 +493,19 @@ mod tests {
 
     #[test]
     fn single_request_roundtrip() {
-        let w = spawn_worker(move || Ok(mock()), BatchPolicy::default()).unwrap();
+        let w = spawn_worker(move || Ok(mock()), ServePolicy::default()).unwrap();
         let rx = w.submit(vec![1.0, 2.0, 3.0]).unwrap();
         let logits = rx.recv().unwrap().unwrap();
         assert_eq!(logits, vec![6.0, 7.0]);
-        drop(w.tx);
-        w.join.join().unwrap();
+        w.shutdown().unwrap();
     }
 
     #[test]
     fn many_requests_all_answered_correctly() {
-        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        let policy = ServePolicy {
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            ..ServePolicy::default()
+        };
         let w = spawn_worker(move || Ok(mock()), policy).unwrap();
         let mut rxs = Vec::new();
         for i in 0..37 {
@@ -218,31 +516,152 @@ mod tests {
             assert_eq!(logits[0], i as f32);
             assert_eq!(logits[1], i as f32 + 1.0);
         }
-        assert_eq!(w.outstanding.load(Ordering::SeqCst), 0);
-        drop(w.tx);
-        w.join.join().unwrap();
+        assert_eq!(w.stats.outstanding.load(Ordering::SeqCst), 0);
+        assert_eq!(w.stats.served.get(), 37);
+        w.shutdown().unwrap();
     }
 
     #[test]
-    fn wrong_size_request_gets_error_not_hang() {
-        let w = spawn_worker(move || Ok(mock()), BatchPolicy::default()).unwrap();
+    fn wrong_size_request_gets_typed_error_not_hang() {
+        let w = spawn_worker(move || Ok(mock()), ServePolicy::default()).unwrap();
         let rx = w.submit(vec![1.0]).unwrap(); // wrong size
-        assert!(rx.recv().unwrap().is_err());
-        drop(w.tx);
-        w.join.join().unwrap();
+        match rx.recv().unwrap() {
+            Err(ServeError::BadRequest { .. }) => {}
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        assert_eq!(w.stats.failed.get(), 1);
+        w.shutdown().unwrap();
     }
 
     #[test]
-    fn latency_recorded() {
+    fn latency_recorded_per_batch_and_per_request() {
         let w = spawn_worker(
             move || Ok(MockBackend { delay: Duration::from_micros(100), ..mock() }),
-            BatchPolicy::default(),
+            ServePolicy::default(),
         )
         .unwrap();
         let rx = w.submit(vec![0.0; 3]).unwrap();
         rx.recv().unwrap().unwrap();
-        assert_eq!(w.latency.count(), 1);
-        drop(w.tx);
-        w.join.join().unwrap();
+        assert_eq!(w.stats.latency.count(), 1); // one device batch
+        assert_eq!(w.stats.e2e.count(), 1); // one reply
+        w.shutdown().unwrap();
+    }
+
+    #[test]
+    fn saturated_queue_sheds_with_typed_overloaded() {
+        // one-slot batches behind a slow backend + a 2-deep queue: a
+        // burst must shed, typed, and release the load signal
+        let policy = ServePolicy {
+            batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(100) },
+            queue_depth: 2,
+            default_deadline: Duration::from_secs(10),
+            ..ServePolicy::default()
+        };
+        let w = spawn_worker(
+            move || {
+                Ok(MockBackend { bs: 1, sample: 1, classes: 1, delay: Duration::from_millis(40) })
+            },
+            policy,
+        )
+        .unwrap();
+        let mut admitted = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..10 {
+            match w.submit(vec![i as f32]) {
+                Ok(rx) => admitted.push(rx),
+                Err(ServeError::Overloaded { .. }) => shed += 1,
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(shed >= 6, "queue_depth 2 admitted too much: shed {shed}");
+        assert_eq!(w.stats.shed.get(), shed as u64);
+        for rx in admitted {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(w.stats.outstanding.load(Ordering::SeqCst), 0);
+        w.shutdown().unwrap();
+    }
+
+    #[test]
+    fn expired_requests_get_deadline_exceeded_without_a_device_batch() {
+        let policy = ServePolicy {
+            batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(50) },
+            queue_depth: 32,
+            ..ServePolicy::default()
+        };
+        let w = spawn_worker(
+            move || {
+                Ok(MockBackend { bs: 1, sample: 1, classes: 1, delay: Duration::from_millis(50) })
+            },
+            policy,
+        )
+        .unwrap();
+        // request 0 (generous deadline) occupies the device for 50ms;
+        // requests 1..=5 expire in the queue long before their turn
+        let far = Instant::now() + Duration::from_secs(30);
+        let first = w.submit_with_deadline(vec![7.0], far).unwrap();
+        let tight = Instant::now() + Duration::from_millis(20);
+        let rxs: Vec<_> =
+            (0..5).map(|i| w.submit_with_deadline(vec![i as f32], tight).unwrap()).collect();
+        assert_eq!(first.recv().unwrap().unwrap(), vec![7.0]);
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Err(ServeError::DeadlineExceeded { .. }) => {}
+                other => panic!("expected DeadlineExceeded, got {other:?}"),
+            }
+        }
+        assert_eq!(w.stats.expired.get(), 5);
+        // the expired five never consumed a device batch
+        assert_eq!(w.stats.latency.count(), 1);
+        w.shutdown().unwrap();
+    }
+
+    #[test]
+    fn submit_to_dead_replica_is_typed_and_does_not_leak_outstanding() {
+        // regression: the old code incremented `outstanding` before a
+        // send that could fail, permanently skewing pick() toward a dead
+        // replica's peers
+        let (tx, rx) = sync_channel(4);
+        drop(rx);
+        let stats = Arc::new(ReplicaStats::new());
+        let join = std::thread::spawn(|| WorkerExit { rx: None, crash: None });
+        let policy = ServePolicy::default();
+        let w = WorkerHandle { tx, stats: Arc::clone(&stats), policy, join };
+        match w.submit(vec![1.0]) {
+            Err(ServeError::ReplicaFailed { .. }) => {}
+            other => panic!("expected ReplicaFailed, got {other:?}"),
+        }
+        assert_eq!(stats.outstanding.load(Ordering::SeqCst), 0, "load signal leaked");
+        w.shutdown().unwrap();
+    }
+
+    #[test]
+    fn backend_panic_yields_typed_replica_failed_and_crash_exit() {
+        struct PanicBackend;
+        impl InferBackend for PanicBackend {
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn sample_elems(&self) -> usize {
+                1
+            }
+            fn out_elems(&self) -> usize {
+                1
+            }
+            fn infer_batch(&self, _x: &[f32]) -> Result<Vec<f32>> {
+                panic!("injected fault: kaboom");
+            }
+        }
+        let w = spawn_worker(move || Ok(PanicBackend), ServePolicy::default()).unwrap();
+        let rx = w.submit(vec![1.0]).unwrap();
+        match rx.recv().unwrap() {
+            Err(ServeError::ReplicaFailed { reason }) => {
+                assert!(reason.contains("kaboom"), "{reason}");
+            }
+            other => panic!("expected ReplicaFailed, got {other:?}"),
+        }
+        assert_eq!(w.stats.crashes.get(), 1);
+        let err = w.shutdown().unwrap_err();
+        assert!(err.contains("kaboom"), "{err}");
     }
 }

@@ -1,0 +1,203 @@
+//! Replica supervision: respawn crashed worker generations on the same
+//! request channel, with capped exponential backoff and a per-replica
+//! circuit breaker.
+//!
+//! The design rests on one property of the worker (`server.rs`): a
+//! crashing generation *returns its queue receiver* through its thread's
+//! [`WorkerExit`] value instead of dropping it. The supervisor joins the
+//! dead thread, recovers the receiver, and spawns the next generation on
+//! the very same channel — so the admission side (router / clients)
+//! keeps a single fixed `SyncSender` per replica slot, and requests
+//! queued across the crash gap are served by the successor rather than
+//! surfacing as bare `RecvError`s.
+//!
+//! When a slot accumulates `ServePolicy::breaker_threshold` consecutive
+//! failures, its circuit trips [`CircuitState::Open`]: the router routes
+//! around it and a cheap drainer thread answers queued (and any late)
+//! requests with typed `ReplicaFailed` until shutdown disconnects the
+//! channel. The supervisor thread itself ends once every slot has exited
+//! cleanly, returning the crash log.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::error::ServePolicy;
+use super::server::{
+    drain_unserved, spawn_generation, CircuitState, InferBackend, InferRequest, ReplicaExited,
+    ReplicaHandle, ReplicaStats, WorkerExit,
+};
+
+/// Type-erased respawner: rebuilds one slot's generation on a recovered
+/// queue receiver (captures the backend factory, stats, and event path).
+type Respawn = Box<dyn Fn(Receiver<InferRequest>) -> JoinHandle<WorkerExit> + Send>;
+
+/// Supervisor-side state of one replica slot.
+struct Slot {
+    join: Option<JoinHandle<WorkerExit>>,
+    stats: Arc<ReplicaStats>,
+    respawn: Respawn,
+}
+
+/// Spawn `replicas` supervised worker slots sharing one backend
+/// `factory`, plus the supervisor thread that respawns them. Returns
+/// the admission handles and the supervisor's join handle (which yields
+/// the crash log after shutdown). Fails fast — tearing down any
+/// already-started slots — if a first-generation backend fails to build.
+pub(crate) fn spawn_supervised<B, F>(
+    replicas: usize,
+    factory: F,
+    policy: ServePolicy,
+) -> Result<(Vec<ReplicaHandle>, JoinHandle<Vec<String>>)>
+where
+    B: InferBackend,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
+{
+    assert!(replicas > 0, "supervisor needs at least one replica slot");
+    let factory = Arc::new(factory);
+    let (events_tx, events_rx) = channel::<ReplicaExited>();
+    let mut handles = Vec::with_capacity(replicas);
+    let mut slots = Vec::with_capacity(replicas);
+    for idx in 0..replicas {
+        let (tx, rx) = sync_channel::<InferRequest>(policy.queue_depth.max(1));
+        let stats = Arc::new(ReplicaStats::new());
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let join = spawn_generation(
+            Arc::clone(&factory),
+            rx,
+            Arc::clone(&stats),
+            policy,
+            idx,
+            events_tx.clone(),
+            Some(ready_tx),
+        );
+        let ready = match ready_rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("replica {idx} died before ready")),
+        };
+        if let Err(e) = ready {
+            let _ = join.join();
+            drop(handles); // drops earlier slots' senders -> clean exits
+            for s in slots {
+                let Slot { join, .. } = s;
+                if let Some(j) = join {
+                    let _ = j.join();
+                }
+            }
+            return Err(e);
+        }
+        let respawn: Respawn = {
+            let factory = Arc::clone(&factory);
+            let stats = Arc::clone(&stats);
+            let events = events_tx.clone();
+            Box::new(move |rx| {
+                spawn_generation(
+                    Arc::clone(&factory),
+                    rx,
+                    Arc::clone(&stats),
+                    policy,
+                    idx,
+                    events.clone(),
+                    None,
+                )
+            })
+        };
+        handles.push(ReplicaHandle { tx, stats: Arc::clone(&stats) });
+        slots.push(Slot { join: Some(join), stats, respawn });
+    }
+    let sup = std::thread::spawn(move || supervise(slots, events_rx, events_tx, policy));
+    Ok((handles, sup))
+}
+
+/// The supervisor loop: join exited generations, respawn crashed ones
+/// with capped exponential backoff, trip breakers, and return the crash
+/// log once every slot has exited cleanly.
+fn supervise(
+    mut slots: Vec<Slot>,
+    events_rx: Receiver<ReplicaExited>,
+    events_tx: Sender<ReplicaExited>,
+    policy: ServePolicy,
+) -> Vec<String> {
+    use std::sync::atomic::Ordering;
+
+    let mut crash_log = Vec::new();
+    let mut live = slots.len();
+    while live > 0 {
+        // the supervisor holds an events_tx clone, so recv can only fail
+        // if something catastrophic dropped it — bail rather than spin
+        let Ok(ReplicaExited { idx }) = events_rx.recv() else { break };
+        let slot = &mut slots[idx];
+        let exit = match slot.join.take() {
+            Some(h) => match h.join() {
+                Ok(exit) => exit,
+                Err(p) => WorkerExit {
+                    rx: None,
+                    crash: Some(format!(
+                        "worker thread panicked outside the batch guard: {}",
+                        super::server::panic_message(p)
+                    )),
+                },
+            },
+            None => {
+                live -= 1;
+                continue;
+            }
+        };
+        let Some(reason) = exit.crash else {
+            // clean exit: shutdown drained this slot
+            live -= 1;
+            continue;
+        };
+        crash_log.push(format!("replica {idx}: {reason}"));
+        let failures = slot.stats.consecutive_failures.load(Ordering::SeqCst);
+        match exit.rx {
+            Some(rx) if failures < policy.breaker_threshold => {
+                // respawn on the same channel after backing off
+                slot.stats.set_circuit(CircuitState::HalfOpen);
+                let exp = failures.saturating_sub(1).min(16) as u32;
+                let delay = policy.backoff_base.saturating_mul(1u32 << exp).min(policy.backoff_cap);
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                slot.join = Some((slot.respawn)(rx));
+            }
+            Some(rx) => {
+                // breaker trips: answer queued + late requests, typed,
+                // until shutdown disconnects the channel
+                slot.stats.set_circuit(CircuitState::Open);
+                slot.join = Some(spawn_drainer(
+                    rx,
+                    Arc::clone(&slot.stats),
+                    idx,
+                    events_tx.clone(),
+                    reason,
+                ));
+            }
+            None => {
+                // queue lost with the thread; nothing left to serve
+                slot.stats.set_circuit(CircuitState::Open);
+                live -= 1;
+            }
+        }
+    }
+    crash_log
+}
+
+/// Stand-in generation for a tripped slot: answers every request on the
+/// recovered queue with a typed `ReplicaFailed` until the channel
+/// disconnects at shutdown.
+fn spawn_drainer(
+    rx: Receiver<InferRequest>,
+    stats: Arc<ReplicaStats>,
+    idx: usize,
+    events: Sender<ReplicaExited>,
+    reason: String,
+) -> JoinHandle<WorkerExit> {
+    std::thread::spawn(move || {
+        drain_unserved(rx, &stats, &format!("circuit open: {reason}"));
+        let _ = events.send(ReplicaExited { idx });
+        WorkerExit { rx: None, crash: None }
+    })
+}

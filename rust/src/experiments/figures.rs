@@ -437,6 +437,56 @@ pub fn repetition_study(
     Ok((threads, points))
 }
 
+/// The serving-robustness study behind `BENCH_serving.json`: one
+/// open-loop load run ([`bench_serve_engine`]) rendered as a bench
+/// series so the CI compare gate can watch serving latency quantiles,
+/// goodput and shed rate the same way it watches kernel perf. Shared by
+/// `plum bench serve` and CI. Latency points carry `gflops = 0` (lower
+/// `min_ns` is better); the throughput point carries goodput as its
+/// "gflops" (higher is better) with `min_ns = 0` sentinel.
+pub fn serving_study(
+    cfg: &RunConfig,
+    model: &str,
+    image: usize,
+    rps: f64,
+    duration_s: f64,
+) -> Result<(crate::experiments::serving::ServeBenchReport, Vec<ScalingPoint>)> {
+    let report =
+        crate::experiments::serving::bench_serve_engine(cfg, model, image, rps, duration_s)?;
+    let shape = format!(
+        "{} {}px r{} rps{}",
+        report.model, image, report.replicas, report.target_rps
+    );
+    let threads = Pool::global().threads();
+    let lat = |op: &str, us: u64| ScalingPoint {
+        op: op.to_string(),
+        shape: shape.clone(),
+        threads,
+        min_ns: us.saturating_mul(1000),
+        gflops: 0.0,
+    };
+    let points = vec![
+        lat("serve_p50", report.p50_us),
+        lat("serve_p95", report.p95_us),
+        lat("serve_p99", report.p99_us),
+        ScalingPoint {
+            op: "serve_throughput".to_string(),
+            shape: shape.clone(),
+            threads,
+            min_ns: 0,
+            gflops: report.achieved_rps,
+        },
+        ScalingPoint {
+            op: "serve_shed_ppm".to_string(),
+            shape,
+            threads,
+            min_ns: report.shed_ppm,
+            gflops: 0.0,
+        },
+    ];
+    Ok((report, points))
+}
+
 /// Persist a scaling series in the `BENCH_*.json` record format;
 /// returns the record count.
 pub fn write_scaling_records(

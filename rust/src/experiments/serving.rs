@@ -1,29 +1,39 @@
 //! Serving load drivers: drive the coordinator (router + batcher +
-//! workers) with an open-loop synthetic request stream and report
-//! latency/throughput — the end-to-end serving validation.
+//! supervised workers) with synthetic request streams and report typed
+//! outcomes, latency, and throughput — the end-to-end serving
+//! validation.
 //!
-//! Two backends share one driver:
+//! Two driver shapes:
 //!
-//! * [`drive_engine`] — the repetition engine ([`EngineBackend`]):
-//!   compiles an engine-zoo model (CIFAR `resnetN`, projection-shortcut
-//!   `resnet18c`, or the patch-reuse `chain1x1`) onto the engine
-//!   **once**, shares the plan across all replicas, and serves on plain
-//!   CPU with no features and no artifacts (`plum serve --backend
-//!   engine`).
-//! * [`drive`] — the PJRT runtime (`--features pjrt`): each worker
-//!   compiles the AOT infer executable from the artifact directory
-//!   (`plum serve --backend pjrt`).
+//! * **closed burst** ([`drive_engine`], [`drive`]) — submit `requests`
+//!   samples, then collect every reply; measures drain throughput for
+//!   `plum serve`. Deadlines are relaxed here (a burst is not an arrival
+//!   process), so legacy behavior — every request answered — holds.
+//! * **open loop** ([`bench_serve_engine`]) — submit on a fixed-rate
+//!   clock for a wall-clock duration regardless of completions (the
+//!   load-harness methodology SparseDNN uses): under saturation the
+//!   bounded queues shed and deadlines expire, and the report carries
+//!   p50/p95/p99, shed rate, and goodput. `plum bench serve` persists it
+//!   as the `BENCH_serving` series.
+//!
+//! Backends: [`drive_engine`]/[`bench_serve_engine`] compile an
+//! engine-zoo model (CIFAR `resnetN`, projection-shortcut `resnet18c`,
+//! or the patch-reuse `chain1x1`) onto the repetition engine **once**,
+//! share the plan across replicas, and serve on plain CPU with no
+//! features and no artifacts. [`drive`] (`--features pjrt`) compiles the
+//! AOT infer executable in each worker.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::RunConfig;
 #[cfg(feature = "pjrt")]
 use crate::coordinator::PjrtBackend;
-use crate::coordinator::{spawn_worker, BatchPolicy, Router};
+use crate::coordinator::{Router, ServeError, ServePolicy};
 use crate::data::SyntheticDataset;
+use crate::metrics::LatencyHistogram;
 use crate::models;
 use crate::network::{EngineBackend, NetworkPlan};
 use crate::quant::Scheme;
@@ -31,26 +41,35 @@ use crate::repetition::EngineConfig;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Manifest;
 
-/// Result of one load run.
+/// Result of one closed-burst load run, by typed outcome.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
-    /// requests submitted and answered
+    /// requests the driver attempted to submit
     pub requests: usize,
+    /// requests answered `Ok(logits)`
+    pub completed: usize,
+    /// requests shed at admission (`Overloaded`)
+    pub shed: usize,
+    /// requests answered `DeadlineExceeded`
+    pub expired: usize,
+    /// requests answered `ReplicaFailed` / `BadRequest`
+    pub failed: usize,
     /// wall-clock seconds of the run
     pub wall_secs: f64,
-    /// requests per second
+    /// completed requests per second (goodput)
     pub throughput_rps: f64,
-    /// mean request latency (ms)
+    /// mean completed-request latency (ms)
     pub mean_ms: f64,
-    /// 95th-percentile request latency (ms)
+    /// 95th-percentile completed-request latency (ms)
     pub p95_ms: f64,
     /// worker replicas the run used
     pub replicas: usize,
 }
 
-/// Open-loop driver shared by every backend: submit `requests` synthetic
-/// samples through the router, collect all replies, report latency and
-/// throughput, then shut the replicas down.
+/// Closed-burst driver shared by every backend: submit `requests`
+/// synthetic samples through the router, collect all replies (typed),
+/// report latency and throughput, then shut the replicas down. A
+/// dropped reply channel is a conservation bug and fails the run.
 fn drive_router(
     router: Router,
     ds: &SyntheticDataset,
@@ -60,16 +79,28 @@ fn drive_router(
     let replicas = router.replicas();
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(requests);
+    let mut shed = 0usize;
     let mut buf = vec![0.0f32; sample];
     for i in 0..requests {
         ds.render(i, &mut buf);
-        let (rx, _) = router.submit(buf.clone())?;
-        pending.push((Instant::now(), rx));
+        match router.submit(buf.clone()) {
+            Ok((rx, _)) => pending.push((Instant::now(), rx)),
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => bail!("burst submit failed: {e}"),
+        }
     }
-    let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
+    let (mut completed, mut expired, mut failed) = (0usize, 0usize, 0usize);
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(pending.len());
     for (t_submit, rx) in pending {
-        rx.recv()??;
-        lat_ms.push(t_submit.elapsed().as_secs_f64() * 1e3);
+        match rx.recv() {
+            Ok(Ok(_)) => {
+                completed += 1;
+                lat_ms.push(t_submit.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(Err(ServeError::DeadlineExceeded { .. })) => expired += 1,
+            Ok(Err(_)) => failed += 1,
+            Err(_) => bail!("reply channel dropped — request conservation violated"),
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -80,25 +111,45 @@ fn drive_router(
     };
     let report = ServeReport {
         requests,
+        completed,
+        shed,
+        expired,
+        failed,
         wall_secs: wall,
-        throughput_rps: requests as f64 / wall,
+        throughput_rps: completed as f64 / wall,
         mean_ms: lat_ms.iter().sum::<f64>() / lat_ms.len().max(1) as f64,
         p95_ms,
         replicas,
     };
     for i in 0..router.replicas() {
-        println!("  {}", router.worker(i).latency.report(&format!("replica{i}")));
+        let s = router.stats(i);
+        println!(
+            "  {} shed={} expired={} crashes={}",
+            s.latency.report(&format!("replica{i}")),
+            s.shed.get(),
+            s.expired.get(),
+            s.crashes.get()
+        );
     }
     router.shutdown()?;
     Ok(report)
 }
 
-/// Serve `requests` synthetic samples through `cfg.replicas` repetition-
-/// engine workers — no `pjrt` feature, no artifacts. The device batch is
-/// `cfg.max_batch`; one [`NetworkPlan`] is compiled up front and shared.
-/// Models come from the engine zoo (`models::engine_model_layers`):
-/// CIFAR `resnetN` (option-A), `resnet18c` (projection shortcuts) and
-/// `chain1x1` (the patch-reuse workload).
+/// A burst of `requests` is not a paced arrival process, so the closed
+/// drivers relax the deadline (still bounded) — deadline behavior under
+/// load is the open-loop harness's job.
+fn burst_policy(cfg: &RunConfig) -> ServePolicy {
+    let p = cfg.serve_policy();
+    ServePolicy { default_deadline: p.default_deadline.max(Duration::from_secs(60)), ..p }
+}
+
+/// Serve `requests` synthetic samples through `cfg.replicas` supervised
+/// repetition-engine workers — no `pjrt` feature, no artifacts. The
+/// device batch is `cfg.max_batch`; one [`NetworkPlan`] is compiled up
+/// front and shared. Models come from the engine zoo
+/// (`models::engine_model_layers`): CIFAR `resnetN` (option-A),
+/// `resnet18c` (projection shortcuts) and `chain1x1` (the patch-reuse
+/// workload).
 pub fn drive_engine(cfg: &RunConfig, model: &str, requests: usize) -> Result<ServeReport> {
     let batch = cfg.max_batch.max(1);
     let layers = models::engine_model_layers(model, 32, batch).ok_or_else(|| {
@@ -132,14 +183,16 @@ pub fn drive_engine(cfg: &RunConfig, model: &str, requests: usize) -> Result<Ser
     );
     let sample = plan.sample_elems();
     let ds = SyntheticDataset::new("serve", 10, 3, 32, cfg.seed);
-    let policy = BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(cfg.max_wait_ms) };
-    let workers = (0..cfg.replicas.max(1))
-        .map(|_| spawn_worker(EngineBackend::factory(Arc::clone(&plan)), policy))
-        .collect::<Result<Vec<_>>>()?;
-    drive_router(Router::new(workers), &ds, sample, requests)
+    let router = Router::spawn(
+        cfg.replicas.max(1),
+        EngineBackend::factory(Arc::clone(&plan)),
+        burst_policy(cfg),
+    )?;
+    drive_router(router, &ds, sample, requests)
 }
 
-/// Serve `requests` synthetic samples through `cfg.replicas` PJRT workers.
+/// Serve `requests` synthetic samples through `cfg.replicas` supervised
+/// PJRT workers.
 #[cfg(feature = "pjrt")]
 pub fn drive(
     cfg: &RunConfig,
@@ -156,40 +209,179 @@ pub fn drive(
         cfg.seed,
     );
     let sample = man.config.in_channels * man.config.image_size * man.config.image_size;
-
-    let policy = BatchPolicy {
-        max_batch: cfg.max_batch,
-        max_wait: Duration::from_millis(cfg.max_wait_ms),
-    };
     eprintln!(
         "spawning {} replica(s) of {model} (compiling artifacts in each worker)...",
         cfg.replicas
     );
-    let workers = (0..cfg.replicas)
-        .map(|_| {
-            spawn_worker(
-                PjrtBackend::factory(cfg.artifacts.clone(), model.to_string(), checkpoint.clone()),
-                policy,
-            )
+    let router = Router::spawn(
+        cfg.replicas.max(1),
+        PjrtBackend::factory(cfg.artifacts.clone(), model.to_string(), checkpoint),
+        burst_policy(cfg),
+    )?;
+    drive_router(router, &ds, sample, requests)
+}
+
+/// Result of one open-loop load run (`plum bench serve`).
+#[derive(Debug, Clone)]
+pub struct ServeBenchReport {
+    /// model the run served
+    pub model: String,
+    /// replica count behind the router
+    pub replicas: usize,
+    /// target offered load (requests per second)
+    pub target_rps: f64,
+    /// requests the load loop offered
+    pub offered: usize,
+    /// requests answered `Ok(logits)`
+    pub completed: usize,
+    /// requests shed at admission
+    pub shed: usize,
+    /// requests answered `DeadlineExceeded`
+    pub expired: usize,
+    /// requests answered `ReplicaFailed` / `BadRequest`
+    pub failed: usize,
+    /// worker generations lost across the run (0 without fault injection)
+    pub crashes: u64,
+    /// wall-clock seconds (load window + drain)
+    pub wall_secs: f64,
+    /// completed requests per second (goodput, saturation throughput)
+    pub achieved_rps: f64,
+    /// end-to-end p50 bound (us) over every typed reply
+    pub p50_us: u64,
+    /// end-to-end p95 bound (us)
+    pub p95_us: u64,
+    /// end-to-end p99 bound (us)
+    pub p99_us: u64,
+    /// shed requests per million offered
+    pub shed_ppm: u64,
+}
+
+/// Open-loop load harness: offer `rps` requests/second against a
+/// supervised engine-backend fleet for `duration_s` seconds of wall
+/// clock — submissions follow the clock, not the completions — then
+/// drain and report typed outcomes, end-to-end latency quantiles
+/// (p50/p95/p99 bucket bounds over all replies), shed rate, and
+/// goodput. `image` shrinks the input (CIFAR geometry is 32) so CI can
+/// run a short, cheap window.
+pub fn bench_serve_engine(
+    cfg: &RunConfig,
+    model: &str,
+    image: usize,
+    rps: f64,
+    duration_s: f64,
+) -> Result<ServeBenchReport> {
+    anyhow::ensure!(rps > 0.0, "--rps must be positive");
+    anyhow::ensure!(duration_s > 0.0, "--duration must be positive");
+    let batch = cfg.max_batch.max(1);
+    let layers = models::engine_model_layers(model, image, batch)
+        .ok_or_else(|| anyhow!("unknown engine model '{model}'"))?;
+    let ecfg = EngineConfig { subtile: 0, sparsity_support: true };
+    let plan = Arc::new(NetworkPlan::compile_seeded(
+        &layers,
+        ecfg,
+        Scheme::sb_default(),
+        cfg.seed,
+    )?);
+    let sample = plan.sample_elems();
+    let ds = SyntheticDataset::new("serve", 10, 3, image, cfg.seed);
+    let replicas = cfg.replicas.max(1);
+    let router = Router::spawn(
+        replicas,
+        EngineBackend::factory(Arc::clone(&plan)),
+        cfg.serve_policy(),
+    )?;
+    // pre-render a sample ring so rendering stays off the submit path
+    let ring: Vec<Vec<f32>> = (0..16)
+        .map(|i| {
+            let mut b = vec![0.0f32; sample];
+            ds.render(i, &mut b);
+            b
         })
-        .collect::<Result<Vec<_>>>()?;
-    drive_router(Router::new(workers), &ds, sample, requests)
+        .collect();
+    let interval = Duration::from_secs_f64(1.0 / rps);
+    let t0 = Instant::now();
+    let end = t0 + Duration::from_secs_f64(duration_s);
+    let mut next = t0;
+    let mut offered = 0usize;
+    let mut shed = 0usize;
+    let mut pending = Vec::new();
+    loop {
+        let now = Instant::now();
+        if now >= end {
+            break;
+        }
+        if now < next {
+            std::thread::sleep(next - now);
+        }
+        // open loop: if we fell behind the clock we submit immediately
+        // and catch up instead of thinning the offered load
+        match router.submit(ring[offered % ring.len()].clone()) {
+            Ok((rx, _)) => pending.push(rx),
+            Err(ServeError::Overloaded { .. } | ServeError::ReplicaFailed { .. }) => shed += 1,
+            Err(e) => bail!("unexpected admission error: {e}"),
+        }
+        offered += 1;
+        next += interval;
+    }
+    let (mut completed, mut expired, mut failed) = (0usize, 0usize, 0usize);
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => completed += 1,
+            Ok(Err(ServeError::DeadlineExceeded { .. })) => expired += 1,
+            Ok(Err(_)) => failed += 1,
+            Err(_) => bail!("reply channel dropped — request conservation violated"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let e2e = LatencyHistogram::new();
+    let mut crashes = 0u64;
+    for i in 0..replicas {
+        let s = router.stats(i);
+        e2e.absorb(&s.e2e);
+        crashes += s.crashes.get();
+        println!(
+            "  {} shed={} crashes={}",
+            s.e2e.report(&format!("replica{i} e2e")),
+            s.shed.get(),
+            s.crashes.get()
+        );
+    }
+    router.shutdown()?;
+    Ok(ServeBenchReport {
+        model: model.to_string(),
+        replicas,
+        target_rps: rps,
+        offered,
+        completed,
+        shed,
+        expired,
+        failed,
+        crashes,
+        wall_secs: wall,
+        achieved_rps: completed as f64 / wall,
+        p50_us: e2e.quantile_us(0.5),
+        p95_us: e2e.quantile_us(0.95),
+        p99_us: e2e.quantile_us(0.99),
+        shed_ppm: (shed as u64).saturating_mul(1_000_000) / (offered.max(1) as u64),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::BatchPolicy;
 
     #[test]
     fn unknown_engine_models_error() {
         let cfg = RunConfig::default();
         assert!(drive_engine(&cfg, "resnet21", 1).is_err()); // not 6n+2
         assert!(drive_engine(&cfg, "vgg_small", 1).is_err());
+        assert!(bench_serve_engine(&cfg, "vgg_small", 8, 10.0, 0.1).is_err());
     }
 
     #[test]
     fn engine_serving_end_to_end_smoke() {
-        // tiny load run: 2 replicas of a resnet8 on 8px images
+        // tiny load run: 2 supervised replicas of a resnet8 on 8px images
         let cfg = RunConfig { replicas: 2, max_batch: 2, max_wait_ms: 1, ..RunConfig::default() };
         // compile a small plan directly (drive_engine pins 32px CIFAR
         // geometry; the smoke test shrinks the image for speed)
@@ -197,18 +389,46 @@ mod tests {
         let plan = Arc::new(
             NetworkPlan::compile(&layers, EngineConfig::default(), Scheme::sb_default()).unwrap(),
         );
-        let policy = BatchPolicy {
-            max_batch: cfg.max_batch,
-            max_wait: Duration::from_millis(cfg.max_wait_ms),
+        let policy = ServePolicy {
+            batch: BatchPolicy {
+                max_batch: cfg.max_batch,
+                max_wait: Duration::from_millis(cfg.max_wait_ms),
+            },
+            default_deadline: Duration::from_secs(60),
+            ..ServePolicy::default()
         };
-        let workers = (0..cfg.replicas)
-            .map(|_| spawn_worker(EngineBackend::factory(Arc::clone(&plan)), policy).unwrap())
-            .collect();
+        let router = Router::spawn(
+            cfg.replicas,
+            EngineBackend::factory(Arc::clone(&plan)),
+            policy,
+        )
+        .unwrap();
         let ds = SyntheticDataset::new("serve", 10, 3, 8, cfg.seed);
-        let report = drive_router(Router::new(workers), &ds, plan.sample_elems(), 17).unwrap();
+        let report = drive_router(router, &ds, plan.sample_elems(), 17).unwrap();
         assert_eq!(report.requests, 17);
+        assert_eq!(report.completed, 17);
+        assert_eq!(report.shed + report.expired + report.failed, 0);
         assert_eq!(report.replicas, 2);
         assert!(report.throughput_rps > 0.0);
         assert!(report.p95_ms >= 0.0 && report.mean_ms >= 0.0);
+    }
+
+    #[test]
+    fn open_loop_bench_conserves_every_offered_request() {
+        let cfg = RunConfig { replicas: 1, max_batch: 2, max_wait_ms: 1, ..RunConfig::default() };
+        let report = bench_serve_engine(&cfg, "resnet8", 8, 300.0, 0.25).unwrap();
+        assert!(report.offered > 0);
+        assert_eq!(
+            report.completed + report.shed + report.expired + report.failed,
+            report.offered,
+            "typed outcomes must partition the offered load"
+        );
+        assert!(report.wall_secs > 0.0);
+        if report.completed > 0 {
+            assert!(report.p50_us > 0);
+            assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
+            assert!(report.achieved_rps > 0.0);
+        }
+        assert_eq!(report.crashes, 0, "no fault injection here");
     }
 }

@@ -80,6 +80,18 @@ impl LatencyHistogram {
         self.max_us()
     }
 
+    /// Fold another histogram's samples into this one (bucket-wise add;
+    /// max takes the larger). Used to aggregate per-replica histograms
+    /// into a fleet-level distribution for the serving bench report.
+    pub fn absorb(&self, other: &LatencyHistogram) {
+        for (b, o) in self.buckets.iter().zip(other.buckets.iter()) {
+            b.fetch_add(o.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// One-line summary (count, mean, p50/p95/p99 bounds, max).
     pub fn report(&self, name: &str) -> String {
         format!(
@@ -136,6 +148,22 @@ mod tests {
         let h = LatencyHistogram::new();
         h.record(Duration::from_micros(0));
         assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn absorb_merges_distributions() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        a.record(Duration::from_micros(10));
+        a.record(Duration::from_micros(100));
+        b.record(Duration::from_micros(1000));
+        b.record(Duration::from_micros(50_000));
+        a.absorb(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.max_us(), 50_000);
+        assert!(a.quantile_us(0.99) >= 50_000);
+        // b is untouched
+        assert_eq!(b.count(), 2);
     }
 
     #[test]

@@ -46,12 +46,14 @@ impl EngineBackend {
         }
     }
 
-    /// Worker factory for `spawn_worker`: every replica shares the
-    /// compiled plan and owns a private activation arena.
+    /// Worker factory for `spawn_worker` / `Router::spawn`: every
+    /// replica shares the compiled plan and owns a private activation
+    /// arena. Re-callable (`Fn`) so the supervisor can rebuild a crashed
+    /// replica's backend from the same plan.
     pub fn factory(
         plan: Arc<NetworkPlan>,
-    ) -> impl FnOnce() -> Result<EngineBackend> + Send + 'static {
-        move || Ok(EngineBackend::new(plan))
+    ) -> impl Fn() -> Result<EngineBackend> + Send + Sync + 'static {
+        move || Ok(EngineBackend::new(Arc::clone(&plan)))
     }
 }
 

@@ -1,0 +1,164 @@
+//! Chaos tests for the hardened serving stack: deterministic fault
+//! injection ([`FlakyBackend`] schedules) against supervised replicas,
+//! checking the conservation contract end to end —
+//!
+//! * every *admitted* request receives exactly one **typed** reply
+//!   (`Ok` / `Overloaded` at admission / `DeadlineExceeded` /
+//!   `ReplicaFailed`), never a bare dropped channel;
+//! * shedding is never silent (per-replica counters see it);
+//! * the supervisor respawns crashed generations (service revives);
+//! * repeated crashes trip the per-replica circuit breaker, after which
+//!   replies stay typed and the router routes around the slot.
+
+use std::time::Duration;
+
+use plum::coordinator::{
+    flaky_factory, BatchPolicy, CircuitState, MockBackend, Router, ServeError, ServePolicy,
+};
+
+/// Batching + robustness knobs shared by the chaos runs: small bounded
+/// queues (shedding reachable), real deadlines, fast supervisor backoff,
+/// and a breaker threshold high enough that the conservation run probes
+/// pure respawn behavior.
+fn chaos_policy() -> ServePolicy {
+    ServePolicy {
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(500) },
+        queue_depth: 16,
+        default_deadline: Duration::from_secs(2),
+        breaker_threshold: 50,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+    }
+}
+
+/// The acceptance invariant, at three pool widths: with panics every 4th
+/// batch and soft errors every 3rd, every admitted request still gets
+/// exactly one typed reply and the fleet keeps serving.
+#[test]
+fn chaos_every_admitted_request_gets_exactly_one_typed_reply() {
+    for replicas in [1usize, 2, 4] {
+        let router = Router::spawn(
+            replicas,
+            flaky_factory(
+                move || {
+                    Ok(MockBackend {
+                        bs: 4,
+                        sample: 2,
+                        classes: 1,
+                        delay: Duration::from_micros(150),
+                    })
+                },
+                4, // panic every 4th batch of each generation
+                3, // soft error every 3rd
+                Duration::from_micros(200),
+                42,
+            ),
+            chaos_policy(),
+        )
+        .unwrap();
+        let n = 160usize;
+        let mut admitted = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..n {
+            match router.submit(vec![i as f32, 0.5]) {
+                Ok((rx, _)) => admitted.push((i, rx)),
+                Err(ServeError::Overloaded { .. }) => shed += 1,
+                Err(e) => panic!("[{replicas} wide] untyped admission failure: {e}"),
+            }
+            std::thread::sleep(Duration::from_micros(250));
+        }
+        let n_adm = admitted.len();
+        let (mut ok, mut failed, mut expired) = (0usize, 0usize, 0usize);
+        for (i, rx) in admitted {
+            match rx.recv().unwrap_or_else(|_| {
+                panic!("[{replicas} wide] request {i}: reply channel dropped")
+            }) {
+                Ok(v) => {
+                    assert_eq!(v[0], i as f32 + 0.5, "[{replicas} wide] cross-wired reply");
+                    ok += 1;
+                }
+                Err(ServeError::ReplicaFailed { .. }) => failed += 1,
+                Err(ServeError::DeadlineExceeded { .. }) => expired += 1,
+                Err(e) => panic!("[{replicas} wide] unexpected typed reply: {e}"),
+            }
+        }
+        // conservation: typed outcomes partition the offered load
+        assert_eq!(ok + failed + expired, n_adm, "[{replicas} wide]");
+        assert_eq!(n_adm + shed, n, "[{replicas} wide]");
+        assert!(ok > 0, "[{replicas} wide] nothing ever served under chaos");
+        // the fault schedule really fired
+        let crashes: u64 = (0..replicas).map(|i| router.stats(i).crashes.get()).sum();
+        assert!(crashes > 0, "[{replicas} wide] no generation ever crashed");
+        // shedding is never silent: the counters see every shed request
+        // (a submit may probe several full queues, hence >=)
+        let counted: u64 = (0..replicas).map(|i| router.stats(i).shed.get()).sum();
+        assert!(counted >= shed as u64, "[{replicas} wide] silent shed");
+        // the supervisor keeps reviving: a fresh request must succeed
+        let mut revived = false;
+        for _ in 0..500 {
+            if let Ok((rx, _)) = router.submit(vec![1.0, 1.0]) {
+                if let Ok(Ok(_)) = rx.recv() {
+                    revived = true;
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(revived, "[{replicas} wide] supervisor failed to revive the fleet");
+        let log = router.shutdown().unwrap();
+        assert!(!log.is_empty(), "[{replicas} wide] crashes occurred but the log is empty");
+    }
+}
+
+/// An always-panicking replica must trip its breaker after
+/// `breaker_threshold` consecutive crash generations; from then on
+/// admission fails typed (`ReplicaFailed`: every circuit open) and no
+/// reply channel is ever just dropped.
+#[test]
+fn breaker_trips_after_repeated_crashes_and_replies_stay_typed() {
+    let policy = ServePolicy {
+        batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(100) },
+        queue_depth: 4,
+        default_deadline: Duration::from_secs(5),
+        breaker_threshold: 2,
+        backoff_base: Duration::from_micros(500),
+        backoff_cap: Duration::from_millis(2),
+    };
+    let router = Router::spawn(
+        1,
+        flaky_factory(
+            move || Ok(MockBackend { bs: 1, sample: 1, classes: 1, delay: Duration::ZERO }),
+            1, // every batch of every generation panics
+            0,
+            Duration::ZERO,
+            7,
+        ),
+        policy,
+    )
+    .unwrap();
+    let mut opened = false;
+    for _ in 0..200 {
+        match router.submit(vec![1.0]) {
+            Ok((rx, _)) => match rx.recv().expect("typed reply required, channel dropped") {
+                Ok(v) => panic!("an always-panicking backend served {v:?}"),
+                Err(ServeError::ReplicaFailed { .. } | ServeError::DeadlineExceeded { .. }) => {}
+                Err(e) => panic!("unexpected typed reply: {e}"),
+            },
+            Err(ServeError::ReplicaFailed { .. }) => {
+                // every circuit open: the breaker tripped
+                opened = true;
+                break;
+            }
+            Err(ServeError::Overloaded { .. }) => {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    assert!(opened, "circuit breaker never tripped");
+    assert_eq!(router.stats(0).circuit(), CircuitState::Open);
+    assert!(router.stats(0).crashes.get() >= 2);
+    let log = router.shutdown().unwrap();
+    assert!(!log.is_empty());
+}

@@ -1,5 +1,6 @@
 //! Property-style tests on coordinator invariants (routing, batching,
-//! response integrity) and on quantizer/engine invariants.
+//! response integrity, conservation under injected faults) and on
+//! quantizer/engine invariants.
 //!
 //! proptest is not in the offline vendor set, so this uses the same
 //! technique with the repo's deterministic RNG: many seeded random
@@ -8,7 +9,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use plum::coordinator::{spawn_worker, BatchPolicy, InferBackend, MockBackend, Router};
+use plum::coordinator::{
+    flaky_factory, spawn_worker, BatchPolicy, InferBackend, MockBackend, Router, ServeError,
+    ServePolicy,
+};
 use plum::models;
 use plum::network::{EngineBackend, NetworkPlan};
 use plum::quant::{self, default_beta, Scheme};
@@ -17,6 +21,19 @@ use plum::tensor::{conv2d_gemm, Conv2dGeometry, Tensor};
 use plum::util::Rng;
 
 const CASES: usize = 25;
+
+/// Test policy: the given batching knobs plus generous deadlines (these
+/// properties probe conservation and wiring, not expiry) and fast
+/// supervisor backoff so chaos cases converge quickly.
+fn test_policy(max_batch: usize, max_wait: Duration) -> ServePolicy {
+    ServePolicy {
+        batch: BatchPolicy { max_batch, max_wait },
+        default_deadline: Duration::from_secs(60),
+        backoff_base: Duration::from_micros(500),
+        backoff_cap: Duration::from_millis(2),
+        ..ServePolicy::default()
+    }
+}
 
 /// Property: for any (bs, #requests, batching policy), every request is
 /// answered exactly once with its own payload's logits.
@@ -33,7 +50,7 @@ fn prop_every_request_answered_with_own_result() {
         let delay = Duration::from_micros(rng.below(300) as u64);
         let w = spawn_worker(
             move || Ok(MockBackend { bs, sample, classes, delay }),
-            BatchPolicy { max_batch, max_wait },
+            test_policy(max_batch, max_wait),
         )
         .unwrap();
         let mut rxs = Vec::new();
@@ -50,8 +67,7 @@ fn prop_every_request_answered_with_own_result() {
             assert_eq!(logits.len(), classes, "case {case}");
             assert_eq!(logits[0], expect, "case {case}: cross-wired response");
         }
-        drop(w.tx);
-        w.join.join().unwrap();
+        w.shutdown().unwrap();
     }
 }
 
@@ -74,7 +90,7 @@ fn prop_router_conserves_requests() {
                             delay: Duration::from_micros(200),
                         })
                     },
-                    BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                    test_policy(4, Duration::from_millis(1)),
                 )
                 .unwrap()
             })
@@ -90,6 +106,78 @@ fn prop_router_conserves_requests() {
             assert_eq!(v[0], i as f32 + 1.0, "case {case}");
         }
         assert_eq!(router.completed(), n_req as u64, "case {case}");
+        router.shutdown().unwrap();
+    }
+}
+
+/// Property: conservation holds under *injected faults*. Supervised
+/// replicas panic and error on a deterministic schedule; still, every
+/// admitted request gets exactly one typed reply (Ok / ReplicaFailed /
+/// DeadlineExceeded), nothing hangs, and shedding is never silent (the
+/// per-replica counters account for every shed).
+#[test]
+fn prop_chaos_conservation_under_injected_faults() {
+    for case in 0..5u64 {
+        let mut rng = Rng::new(7000 + case);
+        let replicas = 1 + rng.below(3);
+        let n_req = 30 + rng.below(40);
+        let policy = ServePolicy {
+            queue_depth: 16,
+            breaker_threshold: 1000, // never trip: probe pure respawn
+            ..test_policy(4, Duration::from_micros(500))
+        };
+        let router = Router::spawn(
+            replicas,
+            flaky_factory(
+                move || {
+                    Ok(MockBackend {
+                        bs: 4,
+                        sample: 2,
+                        classes: 1,
+                        delay: Duration::from_micros(100),
+                    })
+                },
+                4, // panic every 4th batch of each generation
+                3, // soft error every 3rd
+                Duration::from_micros(200),
+                900 + case,
+            ),
+            policy,
+        )
+        .unwrap();
+        let mut admitted = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..n_req {
+            match router.submit(vec![i as f32, 1.0]) {
+                Ok((rx, _)) => admitted.push((i, rx)),
+                Err(ServeError::Overloaded { .. }) => shed += 1,
+                Err(e) => panic!("case {case}: untyped admission failure: {e}"),
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let n_adm = admitted.len();
+        let (mut ok, mut failed) = (0usize, 0usize);
+        for (i, rx) in admitted {
+            match rx
+                .recv()
+                .unwrap_or_else(|_| panic!("case {case}: request {i} reply dropped"))
+            {
+                Ok(v) => {
+                    assert_eq!(v[0], i as f32 + 1.0, "case {case}: cross-wired reply");
+                    ok += 1;
+                }
+                Err(ServeError::ReplicaFailed { .. } | ServeError::DeadlineExceeded { .. }) => {
+                    failed += 1;
+                }
+                Err(e) => panic!("case {case}: unexpected typed reply: {e}"),
+            }
+        }
+        assert_eq!(ok + failed, n_adm, "case {case}");
+        assert_eq!(n_adm + shed, n_req, "case {case}");
+        // shed is never silent: a submit may probe several full queues,
+        // so the counters see at least one increment per shed request
+        let counted: u64 = (0..replicas).map(|i| router.stats(i).shed.get()).sum();
+        assert!(counted >= shed as u64, "case {case}: silent shed ({counted} < {shed})");
         router.shutdown().unwrap();
     }
 }
@@ -115,7 +203,8 @@ fn expected_logits(plan: &Arc<NetworkPlan>, sample: &[f32]) -> Vec<f32> {
 /// Property: the server/batcher invariants hold against the *real*
 /// repetition-engine backend — every request answered exactly once with
 /// its own logits (bit-exact vs a direct executor run), wrong-size
-/// requests error instead of hanging, all without the `pjrt` feature.
+/// requests get a typed `BadRequest` instead of hanging, all without the
+/// `pjrt` feature.
 #[test]
 fn prop_engine_backend_every_request_answered_with_own_result() {
     for case in 0..4 {
@@ -135,7 +224,7 @@ fn prop_engine_backend_every_request_answered_with_own_result() {
 
         let w = spawn_worker(
             EngineBackend::factory(Arc::clone(&plan)),
-            BatchPolicy { max_batch: batch, max_wait },
+            test_policy(batch, max_wait),
         )
         .unwrap();
         let mut rxs = Vec::new();
@@ -152,11 +241,13 @@ fn prop_engine_backend_every_request_answered_with_own_result() {
                 "case {case}: request {i} got another sample's logits"
             );
         }
-        // wrong-size request errors, never hangs
+        // wrong-size request gets a typed error, never hangs
         let bad = w.submit(vec![0.0; sample + 1]).unwrap();
-        assert!(bad.recv().unwrap().is_err(), "case {case}");
-        drop(w.tx);
-        w.join.join().unwrap();
+        assert!(
+            matches!(bad.recv().unwrap(), Err(ServeError::BadRequest { .. })),
+            "case {case}"
+        );
+        w.shutdown().unwrap();
     }
 }
 
@@ -173,7 +264,7 @@ fn prop_router_with_engine_backend_conserves_requests() {
         .map(|_| {
             spawn_worker(
                 EngineBackend::factory(Arc::clone(&plan)),
-                BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(1) },
+                test_policy(batch, Duration::from_millis(1)),
             )
             .unwrap()
         })
@@ -192,6 +283,58 @@ fn prop_router_with_engine_backend_conserves_requests() {
         assert!(logits == expect, "request {i} cross-wired or non-deterministic");
     }
     assert_eq!(router.completed(), n_req as u64);
+    router.shutdown().unwrap();
+}
+
+/// Property: a *respawned* engine replica serves bit-identical logits.
+/// Every generation's 2nd batch panics, so the supervisor rebuilds the
+/// backend over and over; each successor must produce exactly the same
+/// bits for the same sample (the plan is shared, the arena is rebuilt).
+#[test]
+fn prop_respawned_engine_replicas_serve_bit_identical_logits() {
+    let plan = tiny_engine_plan(1);
+    let sample = plan.sample_elems();
+    let mut rng = Rng::new(6200);
+    let mut x = vec![0.0f32; sample];
+    rng.fill_normal(&mut x, 1.0);
+    let expect = expected_logits(&plan, &x);
+    let policy = ServePolicy {
+        queue_depth: 8,
+        breaker_threshold: 1000, // never trip: probe pure respawn
+        ..test_policy(1, Duration::from_micros(200))
+    };
+    let router = Router::spawn(
+        1,
+        flaky_factory(EngineBackend::factory(Arc::clone(&plan)), 2, 0, Duration::ZERO, 1),
+        policy,
+    )
+    .unwrap();
+    let (mut ok, mut crashed) = (0usize, 0usize);
+    for round in 0..12 {
+        // retry admission across respawn gaps (the queue stays bounded)
+        let rx = loop {
+            match router.submit(x.clone()) {
+                Ok((rx, _)) => break rx,
+                Err(ServeError::Overloaded { .. }) => {
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                Err(e) => panic!("round {round}: {e}"),
+            }
+        };
+        match rx.recv().expect("typed reply required") {
+            Ok(logits) => {
+                assert!(logits == expect, "round {round}: respawned replica diverged");
+                ok += 1;
+            }
+            Err(ServeError::ReplicaFailed { .. }) => crashed += 1,
+            Err(e) => panic!("round {round}: unexpected reply {e}"),
+        }
+    }
+    // the alternating schedule (ok, panic, ok, panic, ...) must have
+    // produced both successes and typed crash replies across respawns
+    assert!(ok >= 3, "too few successes across respawns: {ok}");
+    assert!(crashed >= 3, "fault schedule never fired: {crashed}");
+    assert!(router.stats(0).crashes.get() >= 3);
     router.shutdown().unwrap();
 }
 
