@@ -47,16 +47,24 @@ COMMANDS:
                                             execution tile, skipping candidates
                                             blocked I/O cannot carry
          serve [--model NAME] [--image N] [--rps F] [--duration S] [--out FILE]
-                                            open-loop serving load harness on the
+               [--swap-at S]                open-loop serving load harness on the
                                             engine backend: p50/p95/p99, goodput
                                             and shed rate ->
-                                            BENCH_serving_current.json
+                                            BENCH_serving_current.json;
+                                            --swap-at S hot-swaps a fresh model
+                                            version S seconds into the window
+                                            (the zero-downtime swap drill:
+                                            swap_drain_ms / swap_p99 /
+                                            swap_dropped records)
          compare --current FILE [--baseline FILE] [--tolerance F]
                                             fail on perf regression vs baseline
   serve [--backend engine|pjrt] --model NAME [--requests N] [--replicas R]
         [--ckpt PATH]                       engine (default, plain CPU): resnetN,
                                             resnet18c (projection shortcuts) or
                                             chain1x1; pjrt needs the feature
+        [--models a,b]                      engine only: deploy each named model
+                                            into its own catalog slot (warmed)
+                                            and round-robin the burst by name
   report weights --model NAME               figure 6/11 distributions
   quantize --model NAME                     density/repetition/bit report [pjrt]
   registry                                  list artifacts + footprints
@@ -81,6 +89,10 @@ SERVING OPTIONS (serve, bench serve):
                         DeadlineExceeded without costing a batch (default 1000)
   --breaker-threshold N consecutive replica failures that trip the circuit
                         breaker (until then the supervisor respawns; default 3)
+  --drain-timeout-ms MS graceful-drain budget at a hot swap / retirement /
+                        shutdown: the old generation gets this long to finish
+                        queued work, then stragglers are answered typed
+                        (default 5000)
 ";
 
 /// Entry point of the `plum` binary: parse `argv` (everything after the
@@ -222,16 +234,24 @@ fn bench_network(cfg: &RunConfig, args: &Args) -> Result<()> {
 
 /// `plum bench serve`: one open-loop load run against supervised engine
 /// replicas, persisted as the `BENCH_serving` series (p50/p95/p99,
-/// goodput, shed rate) for the CI compare gate.
+/// goodput, shed rate) for the CI compare gate. `--swap-at S` turns the
+/// run into the hot-swap drill: a fresh model version is deployed `S`
+/// seconds into the window under load and the series gains
+/// swap_drain_ms / swap_p99 / swap_dropped records.
 fn bench_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
     let model = args.get_or("model", "resnet8");
     let image = args.get_usize("image", 16);
     let rps = args.get_f32("rps", 40.0) as f64;
     let duration = args.get_f32("duration", 2.0) as f64;
-    let (report, points) = figures::serving_study(cfg, model, image, rps, duration)?;
+    let swap_at = args.get("swap-at").map(|v| {
+        v.parse::<f64>()
+            .map_err(|_| anyhow!("--swap-at wants seconds into the window, got '{v}'"))
+    });
+    let swap_at = swap_at.transpose()?;
+    let (report, points) = figures::serving_study(cfg, model, image, rps, duration, swap_at)?;
     println!(
         "\noffered {} req @ {:.0} rps over {:.2}s: {} ok, {} shed, {} expired, {} failed, \
-         {} crash(es)",
+         {} crash(es), {} dropped",
         report.offered,
         report.target_rps,
         report.wall_secs,
@@ -239,12 +259,26 @@ fn bench_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
         report.shed,
         report.expired,
         report.failed,
-        report.crashes
+        report.crashes,
+        report.dropped
     );
     println!(
         "goodput {:.1} req/s, e2e p50<={}us p95<={}us p99<={}us, shed {} ppm",
         report.achieved_rps, report.p50_us, report.p95_us, report.p99_us, report.shed_ppm
     );
+    if let Some(swap) = &report.swap {
+        println!(
+            "hot swap at {:.2}s -> v{}: warmup {:.1} ms, drain {:.1} ms ({}, {} straggler(s)); \
+             p99 across the swap {}us",
+            swap.at_s,
+            swap.version,
+            swap.warmup_ms,
+            swap.drain_ms,
+            if swap.drained_clean { "clean" } else { "forced" },
+            swap.stragglers,
+            report.p99_us
+        );
+    }
     // like the other bench targets, default away from the committed
     // baseline (BENCH_serving.json) so re-baselining stays explicit
     let out = std::path::PathBuf::from(args.get_or("out", "BENCH_serving_current.json"));
@@ -359,8 +393,20 @@ fn cmd_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 256);
     let report = match args.get_or("backend", "engine") {
         "engine" => {
-            let model = args.get_or("model", "resnet20");
-            serving::drive_engine(cfg, model, requests)?
+            if let Some(csv) = args.get("models") {
+                // multi-model: each name gets its own warmed catalog
+                // slot; the burst round-robins across them by name
+                let names: Vec<String> = csv
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect();
+                serving::drive_engine_multi(cfg, &names, 32, requests)?
+            } else {
+                let model = args.get_or("model", "resnet20");
+                serving::drive_engine(cfg, model, requests)?
+            }
         }
         "pjrt" => {
             let model = args.get_or("model", "resnet20_sb").to_string();
@@ -483,5 +529,8 @@ fn cmd_registry(cfg: &RunConfig) -> Result<()> {
         &["Name", "Arch", "Scheme", "BS", "Params", "Eff(init)", "Weight bits"],
         &rows,
     );
+    for (name, err) in &reg.errors {
+        eprintln!("warning: manifest '{name}' failed to load: {err}");
+    }
     Ok(())
 }

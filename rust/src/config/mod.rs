@@ -47,6 +47,9 @@ pub struct RunConfig {
     /// Serving: consecutive replica failures that trip the circuit
     /// breaker (until then the supervisor respawns the replica).
     pub breaker_threshold: usize,
+    /// Serving: graceful-drain budget in milliseconds at a hot swap /
+    /// retirement / shutdown (stragglers past it are answered typed).
+    pub drain_timeout_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -66,6 +69,7 @@ impl Default for RunConfig {
             queue_depth: 256,
             deadline_ms: 1000,
             breaker_threshold: 3,
+            drain_timeout_ms: 5000,
         }
     }
 }
@@ -123,6 +127,9 @@ impl RunConfig {
         if let Some(v) = j.get("breaker_threshold").and_then(Json::as_usize) {
             self.breaker_threshold = v;
         }
+        if let Some(v) = j.get("drain_timeout_ms").and_then(Json::as_usize) {
+            self.drain_timeout_ms = v as u64;
+        }
     }
 
     /// Resolve: defaults -> optional `--config file` -> CLI flags.
@@ -149,6 +156,7 @@ impl RunConfig {
         cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth);
         cfg.deadline_ms = args.get_u64("deadline-ms", cfg.deadline_ms);
         cfg.breaker_threshold = args.get_usize("breaker-threshold", cfg.breaker_threshold);
+        cfg.drain_timeout_ms = args.get_u64("drain-timeout-ms", cfg.drain_timeout_ms);
         Ok(cfg)
     }
 
@@ -165,6 +173,7 @@ impl RunConfig {
             breaker_threshold: self.breaker_threshold.max(1),
             backoff_base: std::time::Duration::from_millis(10),
             backoff_cap: std::time::Duration::from_millis(500),
+            drain_timeout: std::time::Duration::from_millis(self.drain_timeout_ms.max(1)),
         }
     }
 }
@@ -203,9 +212,18 @@ mod tests {
     #[test]
     fn serving_knobs_resolve_into_a_policy() {
         let args = Args::parse(
-            ["--queue-depth", "32", "--deadline-ms", "250", "--breaker-threshold", "5"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "--queue-depth",
+                "32",
+                "--deadline-ms",
+                "250",
+                "--breaker-threshold",
+                "5",
+                "--drain-timeout-ms",
+                "750",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         );
         let cfg = RunConfig::resolve(&args).unwrap();
         let p = cfg.serve_policy();
@@ -213,5 +231,6 @@ mod tests {
         assert_eq!(p.default_deadline, std::time::Duration::from_millis(250));
         assert_eq!(p.breaker_threshold, 5);
         assert_eq!(p.batch.max_batch, cfg.max_batch);
+        assert_eq!(p.drain_timeout, std::time::Duration::from_millis(750));
     }
 }

@@ -1,8 +1,11 @@
 //! Dynamic batching: collect requests up to `max_batch` or until
-//! `max_wait` has elapsed since the first queued request — the standard
-//! size-or-deadline policy (vLLM/Triton style).
+//! `max_wait` has elapsed since the oldest live request was *enqueued* —
+//! the standard size-or-deadline policy (vLLM/Triton style), made
+//! deadline-aware: the live batch is ordered earliest-deadline-first and
+//! expiry is re-checked at flush time, so a request that aged out inside
+//! the fill window never reaches the device.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
@@ -20,6 +23,16 @@ impl Default for BatchPolicy {
     }
 }
 
+/// What the deadline-aware batcher needs to know about a request:
+/// when it must be answered by and when it entered the queue.
+pub trait Urgent {
+    /// Absolute deadline; at or past it the request is expired.
+    fn deadline(&self) -> Instant;
+    /// When the request was enqueued. The flush timer is anchored here,
+    /// not at pull time, so queue time counts against `max_wait`.
+    fn enqueued(&self) -> Instant;
+}
+
 /// Pulls batches off an mpsc receiver under the policy.
 pub struct Batcher<T> {
     rx: Receiver<T>,
@@ -34,53 +47,25 @@ impl<T> Batcher<T> {
         Batcher { rx, policy }
     }
 
-    /// Block for the next batch. Returns None when all senders dropped
-    /// and the queue is drained.
+    /// Block for the next batch with plain FIFO size-or-wait semantics
+    /// (no deadlines; the flush timer starts at pull). Returns None when
+    /// all senders dropped and the queue is drained. Production serving
+    /// uses [`Batcher::next_batch_partitioned`], which is deadline-aware.
     pub fn next_batch(&self) -> Option<Vec<T>> {
-        self.next_batch_partitioned(|_| false).map(|(live, _)| live)
-    }
-
-    /// Block for the next batch, splitting off requests for which
-    /// `expired` holds (e.g. past their deadline) so the caller can
-    /// answer them without spending device time. Only *live* requests
-    /// count toward `max_batch`; the returned live set may be empty when
-    /// everything pulled this round had already expired. Returns None
-    /// when all senders dropped and the queue is drained.
-    pub fn next_batch_partitioned<F>(&self, expired: F) -> Option<(Vec<T>, Vec<T>)>
-    where
-        F: Fn(&T) -> bool,
-    {
-        // block for the first element
-        let first = match self.rx.recv() {
-            Ok(v) => v,
-            Err(_) => return None,
-        };
-        let mut live = Vec::new();
-        let mut dead = Vec::new();
-        if expired(&first) {
-            dead.push(first);
-        } else {
-            live.push(first);
-        }
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
         let deadline = Instant::now() + self.policy.max_wait;
-        while live.len() < self.policy.max_batch {
+        while batch.len() < self.policy.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match self.rx.recv_timeout(deadline - now) {
-                Ok(v) => {
-                    if expired(&v) {
-                        dead.push(v);
-                    } else {
-                        live.push(v);
-                    }
-                }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                Ok(v) => batch.push(v),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        Some((live, dead))
+        Some(batch)
     }
 
     /// Give the receiver back (used when a crashed worker generation
@@ -90,10 +75,129 @@ impl<T> Batcher<T> {
     }
 }
 
+impl<T: Urgent> Batcher<T> {
+    /// Block for the next batch, splitting expired requests (deadline at
+    /// or past now) off so the caller can answer them without spending
+    /// device time. Only *live* requests count toward `max_batch`; the
+    /// returned live set may be empty when everything pulled this round
+    /// had already expired. Returns None when all senders dropped and
+    /// the queue is drained.
+    ///
+    /// Deadline-aware semantics:
+    /// * the flush timer is anchored at the oldest live request's
+    ///   *enqueue* instant (`enqueued() + max_wait`), so a request never
+    ///   waits queue-time *plus* `max_wait` — once its window has passed,
+    ///   whatever is instantly available is swept and flushed;
+    /// * expiry is re-checked at flush time: a request that aged out
+    ///   while the batch was filling moves to the dead set;
+    /// * the live batch is ordered earliest-deadline-first (stable, so
+    ///   equal deadlines keep arrival order).
+    pub fn next_batch_partitioned(&self) -> Option<(Vec<T>, Vec<T>)> {
+        let first = match self.rx.recv() {
+            Ok(v) => v,
+            Err(_) => return None,
+        };
+        let mut live: Vec<T> = Vec::new();
+        let mut dead: Vec<T> = Vec::new();
+        // provisional anchor: the first pulled request is the oldest in
+        // the FIFO channel; re-anchored to the first *live* request when
+        // one appears (enqueue times are non-decreasing, so that only
+        // extends the window)
+        let mut flush = first.enqueued() + self.policy.max_wait;
+        let mut have_live = false;
+        fn classify<T: Urgent>(v: T, live: &mut Vec<T>, dead: &mut Vec<T>) -> bool {
+            if v.deadline() <= Instant::now() {
+                dead.push(v);
+                false
+            } else {
+                live.push(v);
+                true
+            }
+        }
+        if classify(first, &mut live, &mut dead) {
+            have_live = true;
+        }
+        while live.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= flush {
+                // window over: sweep whatever is instantly available
+                // (fills the batch when the queue aged past max_wait
+                // before we ever pulled), then flush without waiting
+                while live.len() < self.policy.max_batch {
+                    match self.rx.try_recv() {
+                        Ok(v) => {
+                            classify(v, &mut live, &mut dead);
+                        }
+                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+                break;
+            }
+            match self.rx.recv_timeout(flush - now) {
+                Ok(v) => {
+                    if classify(v, &mut live, &mut dead) && !have_live {
+                        have_live = true;
+                        flush = live[0].enqueued() + self.policy.max_wait;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // flush-time re-check: requests that aged out while the batch
+        // filled must not reach the device
+        let now = Instant::now();
+        let mut i = 0;
+        while i < live.len() {
+            if live[i].deadline() <= now {
+                dead.push(live.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        // earliest deadline first into the device batch (stable: equal
+        // deadlines keep arrival order)
+        live.sort_by_key(Urgent::deadline);
+        Some((live, dead))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
+
+    /// Minimal deadline-carrying request for batcher tests.
+    #[derive(Debug, PartialEq)]
+    struct Req {
+        id: u32,
+        enqueued: Instant,
+        deadline: Instant,
+    }
+
+    impl Req {
+        fn live(id: u32) -> Req {
+            let now = Instant::now();
+            Req { id, enqueued: now, deadline: now + Duration::from_secs(60) }
+        }
+
+        fn expired(id: u32) -> Req {
+            let now = Instant::now();
+            Req { id, enqueued: now, deadline: now - Duration::from_millis(1) }
+        }
+    }
+
+    impl Urgent for Req {
+        fn deadline(&self) -> Instant {
+            self.deadline
+        }
+        fn enqueued(&self) -> Instant {
+            self.enqueued
+        }
+    }
+
+    fn ids(v: &[Req]) -> Vec<u32> {
+        v.iter().map(|r| r.id).collect()
+    }
 
     #[test]
     fn batches_respect_max_batch() {
@@ -125,31 +229,35 @@ mod tests {
         drop(tx);
         let b = Batcher::new(rx, BatchPolicy::default());
         assert!(b.next_batch().is_none());
+        let (tx, rx) = channel::<Req>();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch_partitioned().is_none());
     }
 
     #[test]
     fn partitioned_splits_expired_without_counting_them() {
         let (tx, rx) = channel();
         for i in 0..8 {
-            tx.send(i).unwrap();
+            // odd ids expired: they must not occupy live batch slots
+            tx.send(if i % 2 == 1 { Req::expired(i) } else { Req::live(i) }).unwrap();
         }
         let b = Batcher::new(rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
-        // odd values "expired": they must not occupy live batch slots
-        let (live, dead) = b.next_batch_partitioned(|v| v % 2 == 1).unwrap();
-        assert_eq!(live, vec![0, 2, 4, 6]);
-        assert_eq!(dead, vec![1, 3, 5]);
+        let (live, dead) = b.next_batch_partitioned().unwrap();
+        assert_eq!(ids(&live), vec![0, 2, 4, 6]);
+        assert_eq!(ids(&dead), vec![1, 3, 5]);
     }
 
     #[test]
     fn partitioned_returns_even_when_all_expired() {
         let (tx, rx) = channel();
-        tx.send(1).unwrap();
+        tx.send(Req::expired(1)).unwrap();
         drop(tx);
         let b = Batcher::new(rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) });
-        let (live, dead) = b.next_batch_partitioned(|_| true).unwrap();
+        let (live, dead) = b.next_batch_partitioned().unwrap();
         assert!(live.is_empty());
-        assert_eq!(dead, vec![1]);
-        assert!(b.next_batch_partitioned(|_| true).is_none());
+        assert_eq!(ids(&dead), vec![1]);
+        assert!(b.next_batch_partitioned().is_none());
     }
 
     #[test]
@@ -165,15 +273,72 @@ mod tests {
     fn drains_everything() {
         let (tx, rx) = channel();
         for i in 0..23 {
-            tx.send(i).unwrap();
+            tx.send(Req::live(i)).unwrap();
         }
         drop(tx);
         let b = Batcher::new(rx, BatchPolicy { max_batch: 5, max_wait: Duration::from_millis(1) });
         let mut seen = 0;
-        while let Some(batch) = b.next_batch() {
-            assert!(batch.len() <= 5);
-            seen += batch.len();
+        while let Some((live, dead)) = b.next_batch_partitioned() {
+            assert!(live.len() <= 5);
+            assert!(dead.is_empty());
+            seen += live.len();
         }
         assert_eq!(seen, 23);
+    }
+
+    #[test]
+    fn flush_anchored_to_enqueue_not_pull() {
+        // regression: the flush timer used to start when the batcher
+        // *pulled* the first element, so a pre-filled queue waited
+        // queue-time + max_wait. With the anchor at enqueue, requests
+        // whose window already passed flush immediately — and the sweep
+        // still collects everything instantly available into one batch.
+        let wait = Duration::from_millis(200);
+        let (tx, rx) = channel();
+        let old = Instant::now() - 10 * wait; // enqueued long ago
+        for i in 0..5 {
+            tx.send(Req { id: i, enqueued: old, deadline: old + Duration::from_secs(60) })
+                .unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 64, max_wait: wait });
+        let t0 = Instant::now();
+        let (live, dead) = b.next_batch_partitioned().unwrap();
+        assert_eq!(ids(&live), vec![0, 1, 2, 3, 4]);
+        assert!(dead.is_empty());
+        assert!(
+            t0.elapsed() < wait,
+            "aged queue must flush immediately, waited {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn live_batch_is_earliest_deadline_first() {
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        for (id, ms) in [(0u32, 300u64), (1, 100), (2, 200)] {
+            tx.send(Req { id, enqueued: now, deadline: now + Duration::from_millis(ms) })
+                .unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(5) });
+        let (live, dead) = b.next_batch_partitioned().unwrap();
+        assert!(dead.is_empty());
+        assert_eq!(ids(&live), vec![1, 2, 0], "live batch must be EDF-ordered");
+    }
+
+    #[test]
+    fn expiry_rechecked_at_flush_time() {
+        // one request whose deadline falls inside the fill window: by
+        // the time the batch flushes (nothing else arrives) it has
+        // expired and must move to the dead set, not reach the device
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        tx.send(Req { id: 9, enqueued: now, deadline: now + Duration::from_millis(5) })
+            .unwrap();
+        let b =
+            Batcher::new(rx, BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(40) });
+        let (live, dead) = b.next_batch_partitioned().unwrap();
+        assert!(live.is_empty(), "request expired mid-window must not stay live");
+        assert_eq!(ids(&dead), vec![9]);
     }
 }

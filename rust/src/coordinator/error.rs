@@ -43,6 +43,20 @@ pub enum ServeError {
         /// what was wrong with it
         reason: String,
     },
+    /// `Router::deploy` aborted: the new version's replicas failed to
+    /// construct their backend or to complete one warmup forward. The
+    /// previous version (if any) was never unhooked and keeps serving.
+    WarmupFailed {
+        /// model slot the deploy targeted
+        model: String,
+        /// why the new version never became ready
+        reason: String,
+    },
+    /// The request named a model slot the catalog has never deployed.
+    UnknownModel {
+        /// the name that failed to resolve
+        model: String,
+    },
 }
 
 impl std::fmt::Display for ServeError {
@@ -56,6 +70,12 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::ReplicaFailed { reason } => write!(f, "replica failed: {reason}"),
             ServeError::BadRequest { reason } => write!(f, "bad request: {reason}"),
+            ServeError::WarmupFailed { model, reason } => {
+                write!(f, "warmup of model '{model}' failed (old version keeps serving): {reason}")
+            }
+            ServeError::UnknownModel { model } => {
+                write!(f, "unknown model '{model}': not in the catalog")
+            }
         }
     }
 }
@@ -84,6 +104,11 @@ pub struct ServePolicy {
     pub backoff_base: Duration,
     /// cap on the exponential respawn backoff
     pub backoff_cap: Duration,
+    /// graceful-drain budget for a version swap / retirement /
+    /// shutdown: the old generation gets this long to finish its queued
+    /// requests on the old plan, after which stragglers are answered
+    /// with typed `ReplicaFailed` (never silently dropped)
+    pub drain_timeout: Duration,
 }
 
 impl Default for ServePolicy {
@@ -95,6 +120,7 @@ impl Default for ServePolicy {
             breaker_threshold: 3,
             backoff_base: Duration::from_millis(10),
             backoff_cap: Duration::from_millis(500),
+            drain_timeout: Duration::from_secs(5),
         }
     }
 }
@@ -113,6 +139,11 @@ mod tests {
         assert!(e.to_string().contains("boom"));
         let e = ServeError::BadRequest { reason: "size".into() };
         assert!(e.to_string().contains("size"));
+        let e = ServeError::WarmupFailed { model: "resnet20".into(), reason: "no plan".into() };
+        assert!(e.to_string().contains("resnet20"));
+        assert!(e.to_string().contains("no plan"));
+        let e = ServeError::UnknownModel { model: "mystery".into() };
+        assert!(e.to_string().contains("mystery"));
     }
 
     #[test]
@@ -121,5 +152,6 @@ mod tests {
         assert!(p.queue_depth > 0);
         assert!(p.breaker_threshold > 0);
         assert!(p.backoff_base <= p.backoff_cap);
+        assert!(p.drain_timeout > Duration::ZERO);
     }
 }

@@ -1,0 +1,571 @@
+//! Zero-downtime model lifecycle: the versioned model catalog behind
+//! the router, and the warmup → flip → drain machinery of a hot swap.
+//!
+//! The catalog maps model *names* to slots; each slot holds at most one
+//! live [`Deployment`] — a versioned replica fleet (handles + stats +
+//! backing threads). A deploy builds and *warms* the next version off to
+//! the side (one real forward must succeed per replica; any failure
+//! aborts the swap with a typed [`ServeError::WarmupFailed`] and the old
+//! version keeps serving), atomically flips the slot's admission pointer
+//! to the new fleet, then gracefully drains the old one:
+//!
+//! * requests already queued on the old version finish on the old plan
+//!   (its supervisor keeps respawning crashes mid-drain, so the PR 6
+//!   conservation invariant holds *across* the swap);
+//! * the drain is bounded by [`ServePolicy::drain_timeout`]; when the
+//!   budget is exceeded the fleet's shared drain flag trips, workers
+//!   answer every remaining request with typed `ReplicaFailed`, and the
+//!   supervisor stops respawning in favor of channel drainers;
+//! * nothing is ever silently dropped — every admitted request still
+//!   receives exactly one typed reply.
+//!
+//! `retire` reuses the same drain path without a replacement, and
+//! router shutdown is a drain of every slot.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::error::{ServeError, ServePolicy, ServeResult};
+use super::server::{
+    drain_unserved, CircuitState, InferBackend, InferRequest, ReplicaHandle, ReplicaStats,
+    WorkerExit,
+};
+use super::supervisor::spawn_supervised;
+
+/// The model slot every single-model constructor (`Router::new`,
+/// `Router::spawn`) deploys into, and the slot `Router::submit` routes
+/// to when no model name is given.
+pub const DEFAULT_MODEL: &str = "default";
+
+/// What stands behind one deployment's replica slots.
+pub(crate) enum Backing {
+    /// caller-spawned workers; drain joins each generation directly
+    Unsupervised(Vec<JoinHandle<WorkerExit>>),
+    /// supervisor thread owns the generations; drain joins it and
+    /// recovers its crash log
+    Supervised(JoinHandle<Vec<String>>),
+}
+
+/// Result of draining one deployment (swap, retire, or shutdown).
+#[derive(Debug, Clone)]
+pub struct DrainReport {
+    /// the version that was drained
+    pub version: u64,
+    /// wall-clock milliseconds from unhooking admission to the backing
+    /// being joined (or to giving up, when `clean` is false)
+    pub drain_ms: f64,
+    /// true when every queued request was answered and the backing
+    /// joined within the drain budget without tripping the fail-fast
+    /// flag; false when stragglers had to be failed typed (or, in the
+    /// worst case, a hung backend batch outlived even the grace window)
+    pub clean: bool,
+    /// requests answered with a typed failure while the drain ran
+    /// (stragglers past the budget, plus any crash-path failures)
+    pub stragglers: u64,
+    /// crash log recovered from the backing (empty on a quiet drain)
+    pub crashes: Vec<String>,
+}
+
+/// Result of one `Router::deploy`: the new version that went live, how
+/// long warmup took, and — when a previous version existed — how its
+/// drain went.
+#[derive(Debug, Clone)]
+pub struct SwapReport {
+    /// model slot that was deployed into
+    pub model: String,
+    /// version number of the now-live deployment
+    pub version: u64,
+    /// replica count of the new fleet
+    pub replicas: usize,
+    /// wall-clock milliseconds to spawn + warm the new fleet (every
+    /// replica completed one real forward before admission flipped)
+    pub warmup_ms: f64,
+    /// drain outcome of the replaced version (None on first deploy)
+    pub drained: Option<DrainReport>,
+}
+
+/// One versioned replica fleet: the unit a hot swap replaces. Admission
+/// goes through `handles` (emptied when the deployment is unhooked —
+/// dropping the senders is what lets the workers drain and exit); the
+/// per-slot stats outlive the drain so accounting spans the swap.
+pub(crate) struct Deployment {
+    version: u64,
+    /// admission handles; a drain write-locks and clears this, which
+    /// both stops new submits and drops the queue senders
+    handles: RwLock<Vec<ReplicaHandle>>,
+    /// per-slot stats, cloned out of the handles so they stay readable
+    /// after the drain empties `handles`
+    stats: Vec<Arc<ReplicaStats>>,
+    /// shared fail-fast flag: tripped when a bounded drain exceeds its
+    /// budget; workers and the supervisor then answer queued requests
+    /// with typed `ReplicaFailed` instead of device work
+    drain_now: Arc<AtomicBool>,
+    /// joinable backing threads, taken exactly once by the drain
+    backing: Mutex<Option<Backing>>,
+    policy: ServePolicy,
+}
+
+impl Deployment {
+    pub(crate) fn new(
+        version: u64,
+        handles: Vec<ReplicaHandle>,
+        backing: Backing,
+        drain_now: Arc<AtomicBool>,
+        policy: ServePolicy,
+    ) -> Self {
+        let stats = handles.iter().map(|h| Arc::clone(&h.stats)).collect();
+        Deployment {
+            version,
+            handles: RwLock::new(handles),
+            stats,
+            drain_now,
+            backing: Mutex::new(Some(backing)),
+            policy,
+        }
+    }
+
+    pub(crate) fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub(crate) fn replicas(&self) -> usize {
+        self.stats.len()
+    }
+
+    pub(crate) fn stats(&self, i: usize) -> Arc<ReplicaStats> {
+        Arc::clone(&self.stats[i])
+    }
+
+    pub(crate) fn all_stats(&self) -> Vec<Arc<ReplicaStats>> {
+        self.stats.iter().map(Arc::clone).collect()
+    }
+
+    /// Least-loaded replica whose circuit is not open; None when every
+    /// breaker has tripped (or the deployment is already drained).
+    pub(crate) fn pick(&self) -> Option<usize> {
+        let handles = self.handles.read().expect("deployment handles lock poisoned");
+        handles
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.stats.circuit() != CircuitState::Open)
+            .min_by_key(|(_, r)| r.stats.outstanding.load(Ordering::SeqCst))
+            .map(|(i, _)| i)
+    }
+
+    /// Queue-age feasibility: with `outstanding` requests ahead and the
+    /// replica's observed mean batch time, can this deadline still be
+    /// met? Replicas with no latency signal yet are assumed feasible.
+    fn can_meet(&self, r: &ReplicaHandle, deadline: Instant, now: Instant) -> bool {
+        let mean_us = r.stats.latency.mean_us();
+        if mean_us <= 0.0 {
+            return true;
+        }
+        let queued = r.stats.outstanding.load(Ordering::SeqCst);
+        let batches = queued.div_ceil(self.policy.batch.max_batch.max(1)) + 1;
+        let est = Duration::from_secs_f64(mean_us * 1e-6 * batches as f64)
+            + self.policy.batch.max_wait;
+        now + est <= deadline
+    }
+
+    /// Least-outstanding admission walk over this deployment's replicas
+    /// (circuit filter → load sort → deadline feasibility → bounded
+    /// `try_send`). Typed shed errors exactly as the router documents.
+    pub(crate) fn submit_with_deadline(
+        &self,
+        mut x: Vec<f32>,
+        deadline: Instant,
+    ) -> Result<(Receiver<ServeResult>, usize), ServeError> {
+        let now = Instant::now();
+        if deadline <= now {
+            return Err(ServeError::DeadlineExceeded { waited: Duration::ZERO });
+        }
+        let handles = self.handles.read().expect("deployment handles lock poisoned");
+        if handles.is_empty() {
+            return Err(ServeError::ReplicaFailed {
+                reason: format!("model version v{} was drained", self.version),
+            });
+        }
+        let mut order: Vec<usize> = (0..handles.len())
+            .filter(|&i| handles[i].stats.circuit() != CircuitState::Open)
+            .collect();
+        if order.is_empty() {
+            return Err(ServeError::ReplicaFailed {
+                reason: "every replica circuit is open".into(),
+            });
+        }
+        order.sort_by_key(|&i| handles[i].stats.outstanding.load(Ordering::SeqCst));
+        let feasible: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| self.can_meet(&handles[i], deadline, now))
+            .collect();
+        if feasible.is_empty() {
+            // no backlog can meet this deadline: shed at the replica
+            // that would otherwise have been picked, so the shed count
+            // lands somewhere observable
+            handles[order[0]].stats.shed.inc();
+            return Err(ServeError::Overloaded { replicas: handles.len() });
+        }
+        for &i in &feasible {
+            let r = &handles[i];
+            let (rtx, rrx) = sync_channel(1);
+            r.stats.outstanding.fetch_add(1, Ordering::SeqCst);
+            match r.tx.try_send(InferRequest { x, deadline, submitted: now, resp: rtx }) {
+                Ok(()) => return Ok((rrx, i)),
+                Err(TrySendError::Full(req)) => {
+                    r.stats.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    r.stats.shed.inc();
+                    x = req.x;
+                }
+                Err(TrySendError::Disconnected(req)) => {
+                    // never counted as load (the PR 6 leak fix)
+                    r.stats.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    x = req.x;
+                }
+            }
+        }
+        Err(ServeError::Overloaded { replicas: handles.len() })
+    }
+
+    /// Gracefully drain this deployment, bounded by `timeout`:
+    /// 1. unhook admission and drop the queue senders (in-flight submits
+    ///    finish first — the write lock waits for them);
+    /// 2. join the backing on a helper thread; queued requests finish on
+    ///    the old plan, crashes still respawn;
+    /// 3. past the budget, trip the fail-fast flag so workers and the
+    ///    supervisor answer stragglers with typed `ReplicaFailed`, and
+    ///    wait one more grace window;
+    /// 4. if even that passes (a backend batch is hung), detach the
+    ///    joiner — stragglers are still answered typed whenever the hung
+    ///    batch returns, but the drain reports `clean: false`.
+    ///
+    /// Returns the report plus the count of *hard* failures (crashed
+    /// unsupervised workers / a panicked supervisor) that legacy
+    /// `shutdown` must surface as an error.
+    pub(crate) fn drain(&self, timeout: Duration) -> (DrainReport, usize) {
+        let t0 = Instant::now();
+        let failed_before: u64 = self.stats.iter().map(|s| s.failed.get()).sum();
+        self.handles.write().expect("deployment handles lock poisoned").clear();
+        let backing = self.backing.lock().expect("deployment backing lock poisoned").take();
+        let stragglers = |before: u64| -> u64 {
+            let after: u64 = self.stats.iter().map(|s| s.failed.get()).sum();
+            after.saturating_sub(before)
+        };
+        let Some(backing) = backing else {
+            // already drained (e.g. retire after retire)
+            let report = DrainReport {
+                version: self.version,
+                drain_ms: t0.elapsed().as_secs_f64() * 1e3,
+                clean: true,
+                stragglers: 0,
+                crashes: Vec::new(),
+            };
+            return (report, 0);
+        };
+        let stats = self.all_stats();
+        let (done_tx, done_rx) = channel();
+        let joiner = std::thread::spawn(move || {
+            let out = join_backing(backing, &stats);
+            let _ = done_tx.send(out);
+        });
+        let grace = timeout.max(Duration::from_millis(50));
+        let (outcome, clean) = match done_rx.recv_timeout(timeout) {
+            Ok(out) => {
+                let _ = joiner.join();
+                (Some(out), true)
+            }
+            Err(_) => {
+                // budget exceeded: fail-fast the rest, typed
+                self.drain_now.store(true, Ordering::SeqCst);
+                match done_rx.recv_timeout(grace) {
+                    Ok(out) => {
+                        let _ = joiner.join();
+                        (Some(out), false)
+                    }
+                    Err(_) => (None, false), // detached: joiner keeps running
+                }
+            }
+        };
+        let (crashes, hard) = match outcome {
+            Some((log, hard)) => (log, hard),
+            None => (
+                vec![format!(
+                    "v{}: drain detached after {:?} + {:?} grace (hung backend batch?)",
+                    self.version, timeout, grace
+                )],
+                0,
+            ),
+        };
+        let report = DrainReport {
+            version: self.version,
+            drain_ms: t0.elapsed().as_secs_f64() * 1e3,
+            clean,
+            stragglers: stragglers(failed_before),
+            crashes,
+        };
+        (report, hard)
+    }
+}
+
+/// Join a deployment's backing threads. Returns the crash log and the
+/// number of *hard* failures: unsupervised worker crashes (legacy
+/// `Router::new` contract surfaces these as an error from `shutdown`)
+/// or a panicked supervisor. Supervised crash-log entries are soft —
+/// the supervisor already handled them.
+fn join_backing(backing: Backing, stats: &[Arc<ReplicaStats>]) -> (Vec<String>, usize) {
+    match backing {
+        Backing::Supervised(sup) => match sup.join() {
+            Ok(log) => (log, 0),
+            Err(_) => (vec!["supervisor thread panicked".to_string()], 1),
+        },
+        Backing::Unsupervised(joins) => {
+            let mut log = Vec::new();
+            let mut hard = 0usize;
+            for (i, j) in joins.into_iter().enumerate() {
+                match j.join() {
+                    Ok(exit) => {
+                        if let Some(rx) = exit.rx {
+                            let reason =
+                                exit.crash.clone().unwrap_or_else(|| "replica crashed".into());
+                            drain_unserved(rx, &stats[i], &reason);
+                        }
+                        if let Some(c) = exit.crash {
+                            log.push(format!("replica {i}: {c}"));
+                            hard += 1;
+                        }
+                    }
+                    Err(_) => {
+                        log.push(format!("replica {i}: thread panicked"));
+                        hard += 1;
+                    }
+                }
+            }
+            (log, hard)
+        }
+    }
+}
+
+/// One named slot of the catalog: at most one live deployment plus the
+/// slot's monotone version counter.
+struct ModelSlot {
+    current: RwLock<Option<Arc<Deployment>>>,
+    next_version: AtomicU64,
+    /// serializes deploys/retires on this slot (spawn+warm+flip+drain
+    /// is not atomic; two racing deploys would drain each other)
+    swap_lock: Mutex<()>,
+}
+
+impl ModelSlot {
+    fn new() -> Self {
+        ModelSlot {
+            current: RwLock::new(None),
+            next_version: AtomicU64::new(1),
+            swap_lock: Mutex::new(()),
+        }
+    }
+
+    fn current(&self) -> Option<Arc<Deployment>> {
+        self.current.read().expect("slot lock poisoned").clone()
+    }
+}
+
+/// Everything drained out of the catalog so far: stats stay absorbable
+/// (bench aggregation, conservation accounting across swaps) and hard
+/// failures stay reportable at shutdown.
+#[derive(Default)]
+struct RetiredLedger {
+    stats: Vec<Arc<ReplicaStats>>,
+    log: Vec<String>,
+    hard_failures: usize,
+}
+
+/// Named model slots, each holding an `Arc`'d versioned deployment.
+/// The router owns one catalog; every admission path resolves through
+/// it, so flipping a slot's pointer atomically moves admission to the
+/// new version.
+pub(crate) struct ModelCatalog {
+    slots: RwLock<BTreeMap<String, Arc<ModelSlot>>>,
+    /// first model ever deployed — the target of unnamed `submit`s
+    default_model: Mutex<Option<String>>,
+    retired: Mutex<RetiredLedger>,
+}
+
+impl ModelCatalog {
+    pub(crate) fn new() -> Self {
+        ModelCatalog {
+            slots: RwLock::new(BTreeMap::new()),
+            default_model: Mutex::new(None),
+            retired: Mutex::new(RetiredLedger::default()),
+        }
+    }
+
+    fn slot_or_create(&self, name: &str) -> Arc<ModelSlot> {
+        if let Some(s) = self.slots.read().expect("catalog lock poisoned").get(name) {
+            return Arc::clone(s);
+        }
+        let mut slots = self.slots.write().expect("catalog lock poisoned");
+        let slot = slots.entry(name.to_string()).or_insert_with(|| Arc::new(ModelSlot::new()));
+        let mut def = self.default_model.lock().expect("default lock poisoned");
+        if def.is_none() {
+            *def = Some(name.to_string());
+        }
+        Arc::clone(slot)
+    }
+
+    fn slot(&self, name: &str) -> Option<Arc<ModelSlot>> {
+        self.slots.read().expect("catalog lock poisoned").get(name).cloned()
+    }
+
+    /// The deployment `submit_to(name)` admits into right now.
+    pub(crate) fn deployment(&self, name: &str) -> Result<Arc<Deployment>, ServeError> {
+        let slot = self
+            .slot(name)
+            .ok_or_else(|| ServeError::UnknownModel { model: name.to_string() })?;
+        slot.current().ok_or_else(|| ServeError::ReplicaFailed {
+            reason: format!("model '{name}' is retired"),
+        })
+    }
+
+    /// The default slot's deployment (legacy single-model API).
+    pub(crate) fn default_deployment(&self) -> Result<Arc<Deployment>, ServeError> {
+        let name = self
+            .default_model
+            .lock()
+            .expect("default lock poisoned")
+            .clone()
+            .ok_or_else(|| ServeError::UnknownModel { model: "<none deployed>".to_string() })?;
+        self.deployment(&name)
+    }
+
+    /// Install a pre-built deployment (the legacy constructors' path:
+    /// no warmup, no old version to drain).
+    pub(crate) fn install(&self, name: &str, dep: Deployment) {
+        let slot = self.slot_or_create(name);
+        slot.next_version.fetch_max(dep.version + 1, Ordering::SeqCst);
+        *slot.current.write().expect("slot lock poisoned") = Some(Arc::new(dep));
+    }
+
+    /// Deploy a new version into `name`: spawn + warm the fleet off to
+    /// the side, flip admission, drain the old version (bounded). The
+    /// typed error contract: any construction/warmup failure aborts
+    /// *before* the flip, so the old version never stops serving.
+    pub(crate) fn deploy<B, F>(
+        &self,
+        name: &str,
+        replicas: usize,
+        factory: F,
+        policy: ServePolicy,
+    ) -> Result<SwapReport, ServeError>
+    where
+        B: InferBackend,
+        F: Fn() -> Result<B> + Send + Sync + 'static,
+    {
+        if replicas == 0 {
+            return Err(ServeError::WarmupFailed {
+                model: name.to_string(),
+                reason: "deploy needs at least one replica".into(),
+            });
+        }
+        let slot = self.slot_or_create(name);
+        let _swap = slot.swap_lock.lock().expect("swap lock poisoned");
+        let version = slot.next_version.fetch_add(1, Ordering::SeqCst);
+        let t0 = Instant::now();
+        let drain_flag = Arc::new(AtomicBool::new(false));
+        let (handles, sup) =
+            spawn_supervised(replicas, factory, policy, true, Arc::clone(&drain_flag)).map_err(
+                |e| ServeError::WarmupFailed { model: name.to_string(), reason: format!("{e:#}") },
+            )?;
+        let warmup_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let dep = Arc::new(Deployment::new(
+            version,
+            handles,
+            Backing::Supervised(sup),
+            drain_flag,
+            policy,
+        ));
+        // the flip: admission atomically moves to the new version
+        let old = slot.current.write().expect("slot lock poisoned").replace(dep);
+        let drained = old.map(|old| self.drain_and_retire(&old, policy.drain_timeout));
+        Ok(SwapReport { model: name.to_string(), version, replicas, warmup_ms, drained })
+    }
+
+    /// Drain `name`'s live deployment without a replacement. Subsequent
+    /// submits to the slot answer typed `ReplicaFailed` ("retired").
+    pub(crate) fn retire(
+        &self,
+        name: &str,
+        timeout: Duration,
+    ) -> Result<DrainReport, ServeError> {
+        let slot = self
+            .slot(name)
+            .ok_or_else(|| ServeError::UnknownModel { model: name.to_string() })?;
+        let _swap = slot.swap_lock.lock().expect("swap lock poisoned");
+        let old = slot.current.write().expect("slot lock poisoned").take();
+        let old = old.ok_or_else(|| ServeError::ReplicaFailed {
+            reason: format!("model '{name}' is already retired"),
+        })?;
+        Ok(self.drain_and_retire(&old, timeout))
+    }
+
+    fn drain_and_retire(&self, old: &Arc<Deployment>, timeout: Duration) -> DrainReport {
+        let (report, hard) = old.drain(timeout);
+        let mut ledger = self.retired.lock().expect("ledger lock poisoned");
+        ledger.stats.extend(old.all_stats());
+        ledger.log.extend(report.crashes.iter().cloned());
+        ledger.hard_failures += hard;
+        report
+    }
+
+    /// Every deployed model name with its live version (None = retired).
+    pub(crate) fn models(&self) -> Vec<(String, Option<u64>)> {
+        self.slots
+            .read()
+            .expect("catalog lock poisoned")
+            .iter()
+            .map(|(name, slot)| (name.clone(), slot.current().map(|d| d.version())))
+            .collect()
+    }
+
+    /// Stats of every live replica plus everything already retired —
+    /// the set bench aggregation absorbs so accounting spans swaps.
+    pub(crate) fn all_stats(&self) -> Vec<Arc<ReplicaStats>> {
+        let mut out: Vec<Arc<ReplicaStats>> = Vec::new();
+        for slot in self.slots.read().expect("catalog lock poisoned").values() {
+            if let Some(dep) = slot.current() {
+                out.extend(dep.all_stats());
+            }
+        }
+        out.extend(
+            self.retired.lock().expect("ledger lock poisoned").stats.iter().map(Arc::clone),
+        );
+        out
+    }
+
+    /// Drain every live deployment and fold in the retired ledger.
+    /// Returns the full crash log and the hard-failure count the router
+    /// turns into `shutdown`'s error contract.
+    pub(crate) fn shutdown(self, timeout: Duration) -> (Vec<String>, usize) {
+        let slots = std::mem::take(&mut *self.slots.write().expect("catalog lock poisoned"));
+        let mut log = Vec::new();
+        let mut hard = 0usize;
+        for slot in slots.into_values() {
+            let old = slot.current.write().expect("slot lock poisoned").take();
+            if let Some(dep) = old {
+                let (report, h) = dep.drain(timeout);
+                log.extend(report.crashes);
+                hard += h;
+            }
+        }
+        let ledger = std::mem::take(&mut *self.retired.lock().expect("ledger lock poisoned"));
+        // retired-ledger entries precede this shutdown chronologically
+        let mut full = ledger.log;
+        full.extend(log);
+        (full, hard + ledger.hard_failures)
+    }
+}

@@ -28,10 +28,25 @@
 //! backoff, tripping a per-replica circuit breaker after repeated
 //! failures. [`FlakyBackend`] injects deterministic faults to chaos-test
 //! the whole stack (rust/tests/chaos_serving.rs).
+//!
+//! Model lifecycle (see ARCHITECTURE.md "Model lifecycle"): the router
+//! fronts a versioned model catalog — named slots, each holding an
+//! `Arc`'d deployment. [`Router::deploy`] hot-swaps a slot with zero
+//! downtime: the next version is spawned and *warmed* off to the side
+//! (a failed warmup aborts with [`ServeError::WarmupFailed`] and the
+//! old version keeps serving), admission flips atomically, and the old
+//! generation drains gracefully bounded by
+//! [`ServePolicy::drain_timeout`] — stragglers are answered typed,
+//! never silently dropped, so the conservation invariant holds *across*
+//! a swap. The deadline-aware [`Batcher`] orders each device batch
+//! earliest-deadline-first and re-checks expiry at flush time, so a
+//! retiring or busy replica never spends device time on a request that
+//! is already past its deadline.
 
 mod batcher;
 mod error;
 mod fault;
+mod lifecycle;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 mod registry;
@@ -39,9 +54,10 @@ mod router;
 mod server;
 mod supervisor;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{BatchPolicy, Batcher, Urgent};
 pub use error::{ServeError, ServePolicy, ServeResult};
 pub use fault::{flaky_factory, FlakyBackend};
+pub use lifecycle::{DrainReport, SwapReport, DEFAULT_MODEL};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use registry::{ModelEntry, ModelRegistry};

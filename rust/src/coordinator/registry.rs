@@ -35,12 +35,19 @@ pub struct ModelRegistry {
     pub dir: PathBuf,
     /// discovered artifacts, name-sorted
     pub entries: Vec<ModelEntry>,
+    /// manifests that matched the glob but failed to load, as
+    /// `(name, error)` — a truncated or corrupt manifest must surface
+    /// as a diagnostic, not silently shrink the catalog
+    pub errors: Vec<(String, String)>,
 }
 
 impl ModelRegistry {
-    /// Scan `dir` for `*.manifest.json` and build entries.
+    /// Scan `dir` for `*.manifest.json` and build entries. Manifests
+    /// that fail to parse are reported in [`ModelRegistry::errors`]
+    /// (and logged to stderr) instead of being silently skipped.
     pub fn scan(dir: &Path) -> Result<ModelRegistry> {
         let mut entries = Vec::new();
+        let mut errors = Vec::new();
         if dir.exists() {
             let mut names: Vec<String> = std::fs::read_dir(dir)?
                 .filter_map(|e| e.ok())
@@ -51,11 +58,20 @@ impl ModelRegistry {
                 .collect();
             names.sort();
             for name in names {
-                let Ok(man) = Manifest::load(dir, &name) else { continue };
-                entries.push(Self::entry_from_manifest(&man));
+                match Manifest::load(dir, &name) {
+                    Ok(man) => entries.push(Self::entry_from_manifest(&man)),
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        eprintln!(
+                            "registry: skipping unloadable manifest '{name}' in {}: {msg}",
+                            dir.display()
+                        );
+                        errors.push((name, msg));
+                    }
+                }
             }
         }
-        Ok(ModelRegistry { dir: dir.to_path_buf(), entries })
+        Ok(ModelRegistry { dir: dir.to_path_buf(), entries, errors })
     }
 
     fn entry_from_manifest(man: &Manifest) -> ModelEntry {
@@ -113,7 +129,15 @@ mod tests {
     #[test]
     fn scan_artifacts_if_present() {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("index.json").exists() {
+        // gate on what scan actually globs (*.manifest.json), not on a
+        // legacy index.json that no artifact writer produces
+        let has_manifest = std::fs::read_dir(&dir)
+            .map(|d| {
+                d.filter_map(|e| e.ok())
+                    .any(|e| e.file_name().to_string_lossy().ends_with(".manifest.json"))
+            })
+            .unwrap_or(false);
+        if !has_manifest {
             return;
         }
         let r = ModelRegistry::scan(&dir).unwrap();
@@ -124,5 +148,19 @@ mod tests {
         if let (Some(s), Some(t)) = (r.by_name("resnet20_sb"), r.by_name("resnet20_ternary")) {
             assert!(s.weight_bits < t.weight_bits);
         }
+    }
+
+    #[test]
+    fn scan_reports_unloadable_manifest_instead_of_swallowing_it() {
+        let dir = std::env::temp_dir().join(format!("plum_registry_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // a truncated manifest: matches the glob, fails to parse
+        std::fs::write(dir.join("broken.manifest.json"), "{\"name\": \"broken\", \"co").unwrap();
+        let r = ModelRegistry::scan(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert!(r.entries.is_empty());
+        assert_eq!(r.errors.len(), 1, "errors: {:?}", r.errors);
+        assert_eq!(r.errors[0].0, "broken");
+        assert!(!r.errors[0].1.is_empty());
     }
 }

@@ -1,92 +1,177 @@
-//! Least-outstanding-requests router over model replicas, with bounded
-//! admission, deadline-feasibility routing, and circuit awareness.
+//! Least-outstanding-requests router over a versioned model catalog,
+//! with bounded admission, deadline-feasibility routing, circuit
+//! awareness, and zero-downtime hot swap.
 //!
 //! Admission contract: `submit` never blocks and never queues beyond
-//! each replica's bounded depth. It walks the non-open replicas from
-//! least to most loaded and `try_send`s; if every candidate is full the
-//! request is shed with a typed [`ServeError::Overloaded`]. A replica
-//! whose queue-age signal (outstanding x mean batch time) says the
-//! deadline cannot be met is skipped *before* its queue is touched, so
-//! doomed requests are shed at admission instead of expiring inside a
-//! worker.
+//! each replica's bounded depth. It walks the non-open replicas of the
+//! target model's *live deployment* from least to most loaded and
+//! `try_send`s; if every candidate is full the request is shed with a
+//! typed [`ServeError::Overloaded`]. A replica whose queue-age signal
+//! (outstanding x mean batch time) says the deadline cannot be met is
+//! skipped *before* its queue is touched, so doomed requests are shed at
+//! admission instead of expiring inside a worker.
+//!
+//! Lifecycle contract (`lifecycle.rs`): the router holds a
+//! `ModelCatalog` of named slots, each with at most one live versioned
+//! deployment. [`Router::deploy`] spawns and *warms* the next version
+//! off to the side (failed warmup aborts with
+//! [`ServeError::WarmupFailed`] and the old version keeps serving),
+//! atomically flips admission, then gracefully drains the old
+//! generation bounded by [`ServePolicy::drain_timeout`] — stragglers
+//! are answered typed, never dropped. [`Router::retire`] drains a slot
+//! without a replacement, and [`Router::shutdown`] is a drain of every
+//! slot.
 //!
 //! Two backings: [`Router::spawn`] runs replicas under the supervisor
 //! (crash respawn + breakers — the production path), while
 //! [`Router::new`] wraps caller-spawned [`WorkerHandle`]s (no respawn;
 //! crashes surface as an aggregate error from `shutdown`).
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::error::{ServeError, ServePolicy, ServeResult};
-use super::server::{
-    drain_unserved, CircuitState, InferBackend, InferRequest, ReplicaHandle, ReplicaStats,
-    WorkerExit, WorkerHandle,
-};
+use super::lifecycle::{Backing, Deployment, DrainReport, ModelCatalog, SwapReport, DEFAULT_MODEL};
+use super::server::{InferBackend, ReplicaHandle, ReplicaStats, WorkerHandle};
 use super::supervisor::spawn_supervised;
-
-/// What stands behind the router's replica slots.
-enum Backing {
-    /// caller-spawned workers; shutdown joins each generation directly
-    Unsupervised(Vec<JoinHandle<WorkerExit>>),
-    /// supervisor thread owns the generations; shutdown joins it and
-    /// returns its crash log
-    Supervised(JoinHandle<Vec<String>>),
-}
 
 /// Routes single-sample requests to the replica with the fewest
 /// outstanding requests (ties -> lowest index, which keeps routing
 /// deterministic for tests), skipping replicas whose circuit breaker is
 /// open or whose backlog makes the request's deadline infeasible.
+/// Multi-model: requests can name a catalog slot (`submit_to`); the
+/// unnamed `submit` path routes to the default slot.
 pub struct Router {
-    replicas: Vec<ReplicaHandle>,
+    catalog: ModelCatalog,
     policy: ServePolicy,
-    backing: Backing,
 }
 
 impl Router {
-    /// Router over caller-spawned workers (non-empty). All workers are
-    /// assumed to share one [`ServePolicy`] (the first one's is used for
-    /// default deadlines and feasibility math).
+    /// Router over caller-spawned workers (non-empty), installed as v1
+    /// of the default model slot. All workers are assumed to share one
+    /// [`ServePolicy`] (the first one's is used for default deadlines
+    /// and feasibility math).
     pub fn new(workers: Vec<WorkerHandle>) -> Self {
         assert!(!workers.is_empty());
         let policy = workers[0].policy;
-        let mut replicas = Vec::with_capacity(workers.len());
+        let mut handles = Vec::with_capacity(workers.len());
         let mut joins = Vec::with_capacity(workers.len());
         for w in workers {
-            replicas.push(ReplicaHandle { tx: w.tx, stats: w.stats });
+            handles.push(ReplicaHandle { tx: w.tx, stats: w.stats });
             joins.push(w.join);
         }
-        Router { replicas, policy, backing: Backing::Unsupervised(joins) }
+        let catalog = ModelCatalog::new();
+        // unsupervised workers hold their own (inert) drain flags, so a
+        // bounded drain cannot fail-fast them; test-only backing, and
+        // idle workers exit as soon as their senders drop
+        catalog.install(
+            DEFAULT_MODEL,
+            Deployment::new(
+                1,
+                handles,
+                Backing::Unsupervised(joins),
+                Arc::new(AtomicBool::new(false)),
+                policy,
+            ),
+        );
+        Router { catalog, policy }
     }
 
     /// Spawn `replicas` *supervised* replica slots sharing one backend
-    /// factory: crashed replicas are respawned on the same queue with
-    /// capped exponential backoff, and repeated failures trip a
-    /// per-replica circuit breaker the router routes around.
+    /// factory, installed as v1 of the default model slot: crashed
+    /// replicas are respawned on the same queue with capped exponential
+    /// backoff, and repeated failures trip a per-replica circuit breaker
+    /// the router routes around. (No warmup — use [`Router::deploy`] for
+    /// the warmed hot-swap path.)
     pub fn spawn<B, F>(replicas: usize, factory: F, policy: ServePolicy) -> Result<Self>
     where
         B: InferBackend,
         F: Fn() -> Result<B> + Send + Sync + 'static,
     {
         anyhow::ensure!(replicas > 0, "router needs at least one replica");
-        let (handles, sup) = spawn_supervised(replicas, factory, policy)?;
-        Ok(Router { replicas: handles, policy, backing: Backing::Supervised(sup) })
+        let drain = Arc::new(AtomicBool::new(false));
+        let (handles, sup) =
+            spawn_supervised(replicas, factory, policy, false, Arc::clone(&drain))?;
+        let catalog = ModelCatalog::new();
+        catalog.install(
+            DEFAULT_MODEL,
+            Deployment::new(1, handles, Backing::Supervised(sup), drain, policy),
+        );
+        Ok(Router { catalog, policy })
     }
 
-    /// Number of replicas behind this router.
+    /// Router with an empty catalog: every model arrives via
+    /// [`Router::deploy`]. The multi-model serving entry point.
+    pub fn empty(policy: ServePolicy) -> Self {
+        Router { catalog: ModelCatalog::new(), policy }
+    }
+
+    /// Deploy a new version of `model`: spawn `replicas` supervised
+    /// slots, *warm* each one (a real forward must succeed before it
+    /// counts), atomically flip the slot's admission to the new fleet,
+    /// then gracefully drain the previous version bounded by
+    /// [`ServePolicy::drain_timeout`]. Queued requests finish on the old
+    /// plan; stragglers past the budget are answered typed
+    /// `ReplicaFailed`. Any construction/warmup failure aborts *before*
+    /// the flip with [`ServeError::WarmupFailed`] — the old version
+    /// never stops serving.
+    pub fn deploy<B, F>(
+        &self,
+        model: &str,
+        replicas: usize,
+        factory: F,
+    ) -> Result<SwapReport, ServeError>
+    where
+        B: InferBackend,
+        F: Fn() -> Result<B> + Send + Sync + 'static,
+    {
+        self.catalog.deploy(model, replicas, factory, self.policy)
+    }
+
+    /// Drain `model`'s live deployment without a replacement (bounded by
+    /// the policy drain budget). Subsequent submits to the slot get a
+    /// typed `ReplicaFailed` until a new version is deployed.
+    pub fn retire(&self, model: &str) -> Result<DrainReport, ServeError> {
+        self.catalog.retire(model, self.policy.drain_timeout)
+    }
+
+    /// Every model name the catalog has seen, with its live version
+    /// (None = retired, awaiting a redeploy).
+    pub fn models(&self) -> Vec<(String, Option<u64>)> {
+        self.catalog.models()
+    }
+
+    /// Live version of `model` (None when unknown or retired).
+    pub fn version(&self, model: &str) -> Option<u64> {
+        self.catalog.deployment(model).ok().map(|d| d.version())
+    }
+
+    fn default_deployment(&self) -> Result<Arc<Deployment>, ServeError> {
+        self.catalog.default_deployment()
+    }
+
+    /// Number of replicas behind the default model's live deployment
+    /// (0 when nothing is deployed).
     pub fn replicas(&self) -> usize {
-        self.replicas.len()
+        self.default_deployment().map(|d| d.replicas()).unwrap_or(0)
     }
 
-    /// Stats of replica `i` (load / shed / latency / circuit).
-    pub fn stats(&self, i: usize) -> &ReplicaStats {
-        &self.replicas[i].stats
+    /// Stats of the default deployment's replica `i` (load / shed /
+    /// latency / circuit). The `Arc` stays valid across a hot swap —
+    /// it keeps reporting on the generation it was taken from.
+    pub fn stats(&self, i: usize) -> Arc<ReplicaStats> {
+        self.default_deployment().expect("no model deployed").stats(i)
+    }
+
+    /// Stats of every replica the router has ever run: live deployments
+    /// of every model plus retired generations. The set bench
+    /// aggregation absorbs so conservation accounting spans hot swaps.
+    pub fn all_stats(&self) -> Vec<Arc<ReplicaStats>> {
+        self.catalog.all_stats()
     }
 
     /// The policy admission and batching run under.
@@ -94,146 +179,80 @@ impl Router {
         self.policy
     }
 
-    /// Least-loaded replica whose circuit is not open; None when every
-    /// breaker has tripped.
+    /// Least-loaded replica of the default deployment whose circuit is
+    /// not open; None when every breaker has tripped (or nothing is
+    /// deployed).
     pub fn pick(&self) -> Option<usize> {
-        self.replicas
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| r.stats.circuit() != CircuitState::Open)
-            .min_by_key(|(_, r)| r.stats.outstanding.load(Ordering::SeqCst))
-            .map(|(i, _)| i)
+        self.default_deployment().ok().and_then(|d| d.pick())
     }
 
-    /// Queue-age feasibility: with `outstanding` requests ahead and the
-    /// replica's observed mean batch time, can this deadline still be
-    /// met? Replicas with no latency signal yet are assumed feasible.
-    fn can_meet(&self, r: &ReplicaHandle, deadline: Instant, now: Instant) -> bool {
-        let mean_us = r.stats.latency.mean_us();
-        if mean_us <= 0.0 {
-            return true;
-        }
-        let queued = r.stats.outstanding.load(Ordering::SeqCst);
-        let batches = queued.div_ceil(self.policy.batch.max_batch.max(1)) + 1;
-        let est = Duration::from_secs_f64(mean_us * 1e-6 * batches as f64)
-            + self.policy.batch.max_wait;
-        now + est <= deadline
-    }
-
-    /// Submit a request under the policy's default deadline; returns the
-    /// reply receiver and the replica used.
+    /// Submit a request to the default model under the policy's default
+    /// deadline; returns the reply receiver and the replica used.
     pub fn submit(&self, x: Vec<f32>) -> Result<(Receiver<ServeResult>, usize), ServeError> {
         self.submit_with_deadline(x, Instant::now() + self.policy.default_deadline)
     }
 
-    /// Submit a request with an explicit absolute deadline. Sheds typed
-    /// and synchronously when the request cannot be admitted: every
-    /// circuit open -> `ReplicaFailed`; deadline already passed ->
-    /// `DeadlineExceeded`; no replica can meet the deadline or every
-    /// candidate queue is full -> `Overloaded` (counted per replica in
+    /// Submit a request to the default model with an explicit absolute
+    /// deadline. Sheds typed and synchronously when the request cannot
+    /// be admitted: every circuit open or slot retired ->
+    /// `ReplicaFailed`; deadline already passed -> `DeadlineExceeded`;
+    /// no replica can meet the deadline or every candidate queue is
+    /// full -> `Overloaded` (counted per replica in
     /// [`ReplicaStats::shed`]).
     pub fn submit_with_deadline(
         &self,
-        mut x: Vec<f32>,
+        x: Vec<f32>,
         deadline: Instant,
     ) -> Result<(Receiver<ServeResult>, usize), ServeError> {
-        let now = Instant::now();
-        if deadline <= now {
-            return Err(ServeError::DeadlineExceeded { waited: Duration::ZERO });
-        }
-        let mut order: Vec<usize> = (0..self.replicas.len())
-            .filter(|&i| self.replicas[i].stats.circuit() != CircuitState::Open)
-            .collect();
-        if order.is_empty() {
-            return Err(ServeError::ReplicaFailed {
-                reason: "every replica circuit is open".into(),
-            });
-        }
-        order.sort_by_key(|&i| self.replicas[i].stats.outstanding.load(Ordering::SeqCst));
-        let feasible: Vec<usize> = order
-            .iter()
-            .copied()
-            .filter(|&i| self.can_meet(&self.replicas[i], deadline, now))
-            .collect();
-        if feasible.is_empty() {
-            // no backlog can meet this deadline: shed at the replica
-            // that would otherwise have been picked, so the shed count
-            // lands somewhere observable
-            self.replicas[order[0]].stats.shed.inc();
-            return Err(ServeError::Overloaded { replicas: self.replicas.len() });
-        }
-        for &i in &feasible {
-            let r = &self.replicas[i];
-            let (rtx, rrx) = sync_channel(1);
-            r.stats.outstanding.fetch_add(1, Ordering::SeqCst);
-            match r.tx.try_send(InferRequest { x, deadline, submitted: now, resp: rtx }) {
-                Ok(()) => return Ok((rrx, i)),
-                Err(TrySendError::Full(req)) => {
-                    r.stats.outstanding.fetch_sub(1, Ordering::SeqCst);
-                    r.stats.shed.inc();
-                    x = req.x;
-                }
-                Err(TrySendError::Disconnected(req)) => {
-                    // never counted as load (the satellite-fixed leak)
-                    r.stats.outstanding.fetch_sub(1, Ordering::SeqCst);
-                    x = req.x;
-                }
-            }
-        }
-        Err(ServeError::Overloaded { replicas: self.replicas.len() })
+        self.default_deployment()?.submit_with_deadline(x, deadline)
     }
 
-    /// Total requests answered `Ok` across replicas.
+    /// Submit a request to a *named* model under the policy's default
+    /// deadline. Unknown names get a typed [`ServeError::UnknownModel`].
+    pub fn submit_to(
+        &self,
+        model: &str,
+        x: Vec<f32>,
+    ) -> Result<(Receiver<ServeResult>, usize), ServeError> {
+        self.submit_to_with_deadline(model, x, Instant::now() + self.policy.default_deadline)
+    }
+
+    /// Submit a request to a *named* model with an explicit absolute
+    /// deadline (same typed shed contract as `submit_with_deadline`).
+    pub fn submit_to_with_deadline(
+        &self,
+        model: &str,
+        x: Vec<f32>,
+        deadline: Instant,
+    ) -> Result<(Receiver<ServeResult>, usize), ServeError> {
+        self.catalog.deployment(model)?.submit_with_deadline(x, deadline)
+    }
+
+    /// Total requests answered `Ok` across every replica ever run
+    /// (live and retired generations).
     pub fn completed(&self) -> u64 {
-        self.replicas.iter().map(|r| r.stats.served.get()).sum()
+        self.all_stats().iter().map(|s| s.served.get()).sum()
     }
 
-    /// Total requests shed at admission across replicas.
+    /// Total requests shed at admission across every replica ever run.
     pub fn shed(&self) -> u64 {
-        self.replicas.iter().map(|r| r.stats.shed.get()).sum()
+        self.all_stats().iter().map(|s| s.shed.get()).sum()
     }
 
-    /// Shut down: drop all senders, join everything, and return the
-    /// crash log (supervised) or an aggregate error naming *every*
-    /// crashed worker (unsupervised — all workers are joined before the
-    /// error is built, so no thread leaks behind an early return).
+    /// Shut down: gracefully drain every slot's live deployment
+    /// (bounded by the policy drain budget), join everything, and
+    /// return the crash log. Supervised crashes were already handled
+    /// (respawn / breaker) and only *report* here; unsupervised worker
+    /// crashes surface as an aggregate error naming every crashed
+    /// worker — all workers are joined before the error is built, so no
+    /// thread leaks behind an early return.
     pub fn shutdown(self) -> Result<Vec<String>> {
-        let Router { replicas, backing, .. } = self;
-        let stats: Vec<Arc<ReplicaStats>> =
-            replicas.iter().map(|r| Arc::clone(&r.stats)).collect();
-        drop(replicas); // drops every sender: workers drain and exit
-        match backing {
-            Backing::Supervised(sup) => {
-                sup.join().map_err(|_| anyhow!("supervisor thread panicked"))
-            }
-            Backing::Unsupervised(joins) => {
-                let total = joins.len();
-                let mut crashes = Vec::new();
-                for (i, j) in joins.into_iter().enumerate() {
-                    match j.join() {
-                        Ok(exit) => {
-                            if let Some(rx) = exit.rx {
-                                let reason =
-                                    exit.crash.clone().unwrap_or_else(|| "replica crashed".into());
-                                drain_unserved(rx, &stats[i], &reason);
-                            }
-                            if let Some(c) = exit.crash {
-                                crashes.push(format!("replica {i}: {c}"));
-                            }
-                        }
-                        Err(_) => crashes.push(format!("replica {i}: thread panicked")),
-                    }
-                }
-                if crashes.is_empty() {
-                    Ok(Vec::new())
-                } else {
-                    Err(anyhow!(
-                        "{} of {total} replica(s) failed: {}",
-                        crashes.len(),
-                        crashes.join("; ")
-                    ))
-                }
-            }
+        let Router { catalog, policy } = self;
+        let (log, hard) = catalog.shutdown(policy.drain_timeout);
+        if hard == 0 {
+            Ok(log)
+        } else {
+            Err(anyhow!("{hard} replica(s) failed: {}", log.join("; ")))
         }
     }
 }
@@ -241,7 +260,9 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{spawn_worker, BatchPolicy, MockBackend};
+    use crate::coordinator::{spawn_worker, BatchPolicy, CircuitState, MockBackend};
+    use std::sync::atomic::Ordering;
+    use std::time::Duration;
 
     fn slow_mock() -> MockBackend {
         MockBackend { bs: 2, sample: 1, classes: 1, delay: Duration::from_millis(5) }
@@ -372,5 +393,94 @@ mod tests {
         let err = router.shutdown().unwrap_err().to_string();
         assert!(err.contains("replica 0"), "{err}");
         assert!(err.contains("replica 1"), "{err}");
+    }
+
+    #[test]
+    fn deploy_flips_version_and_drains_old_generation() {
+        let p = policy(2, Duration::from_millis(1));
+        let router = Router::empty(p);
+        assert_eq!(router.replicas(), 0);
+        let r1 = router.deploy("m", 2, move || Ok(slow_mock())).unwrap();
+        assert_eq!((r1.version, r1.replicas), (1, 2));
+        assert!(r1.drained.is_none());
+        let (rx, _) = router.submit_to("m", vec![3.0]).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![3.0]);
+        // v2: a fresh fleet (delay-free; the chaos suite covers
+        // bit-distinguishing the two plans)
+        let r2 = router
+            .deploy("m", 2, move || {
+                Ok(MockBackend { bs: 2, sample: 1, classes: 1, delay: Duration::ZERO })
+            })
+            .unwrap();
+        assert_eq!(r2.version, 2);
+        let d = r2.drained.expect("v1 must have been drained");
+        assert_eq!(d.version, 1);
+        assert!(d.clean, "idle v1 should drain cleanly: {d:?}");
+        assert_eq!(router.version("m"), Some(2));
+        // post-swap traffic lands on v2
+        let (rx, _) = router.submit_to("m", vec![5.0]).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![5.0]);
+        // old generation's serve count is still visible in the aggregate
+        assert_eq!(router.completed(), 2);
+        router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn unknown_model_and_retired_model_are_typed() {
+        let p = policy(2, Duration::from_millis(1));
+        let router = Router::empty(p);
+        assert!(matches!(
+            router.submit_to("ghost", vec![1.0]),
+            Err(ServeError::UnknownModel { .. })
+        ));
+        router.deploy("m", 1, move || Ok(slow_mock())).unwrap();
+        let report = router.retire("m").unwrap();
+        assert!(report.clean);
+        assert!(matches!(
+            router.submit_to("m", vec![1.0]),
+            Err(ServeError::ReplicaFailed { .. })
+        ));
+        assert_eq!(router.version("m"), None);
+        assert!(matches!(router.retire("m"), Err(ServeError::ReplicaFailed { .. })));
+        // a redeploy revives the slot at the next version
+        let r = router.deploy("m", 1, move || Ok(slow_mock())).unwrap();
+        assert_eq!(r.version, 2);
+        let (rx, _) = router.submit_to("m", vec![9.0]).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![9.0]);
+        router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn failed_warmup_aborts_swap_and_old_version_keeps_serving() {
+        struct WarmupBomb;
+        impl InferBackend for WarmupBomb {
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn sample_elems(&self) -> usize {
+                1
+            }
+            fn out_elems(&self) -> usize {
+                1
+            }
+            fn infer_batch(&self, _x: &[f32]) -> anyhow::Result<Vec<f32>> {
+                anyhow::bail!("device rejected the plan");
+            }
+        }
+        let p = policy(2, Duration::from_millis(1));
+        let router = Router::empty(p);
+        router.deploy("m", 1, move || Ok(slow_mock())).unwrap();
+        match router.deploy("m", 1, move || Ok(WarmupBomb)) {
+            Err(ServeError::WarmupFailed { model, reason }) => {
+                assert_eq!(model, "m");
+                assert!(reason.contains("warmup"), "{reason}");
+            }
+            other => panic!("expected WarmupFailed, got {other:?}"),
+        }
+        // the old version never stopped serving
+        assert_eq!(router.version("m"), Some(1));
+        let (rx, _) = router.submit_to("m", vec![4.0]).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![4.0]);
+        router.shutdown().unwrap();
     }
 }

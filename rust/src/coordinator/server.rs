@@ -19,7 +19,7 @@
 //! injected panics, backend errors, expiry, and shutdown.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -29,7 +29,7 @@ use anyhow::{anyhow, Result};
 
 use crate::metrics::{Counter, LatencyHistogram};
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher, Urgent};
 use super::error::{ServeError, ServePolicy, ServeResult};
 
 /// One inference request: a single sample (flattened CHW), its absolute
@@ -44,6 +44,19 @@ pub struct InferRequest {
     pub submitted: Instant,
     /// where this request's logits (or typed error) are delivered
     pub resp: SyncSender<ServeResult>,
+}
+
+impl Urgent for InferRequest {
+    fn deadline(&self) -> Instant {
+        self.deadline
+    }
+
+    // `submitted` doubles as the enqueue stamp: admission stamps it in
+    // the instant before `try_send`, so the batcher's flush window is
+    // anchored to when the request entered the queue.
+    fn enqueued(&self) -> Instant {
+        self.submitted
+    }
 }
 
 impl InferRequest {
@@ -315,7 +328,13 @@ impl WorkerHandle {
 /// Spawn one worker generation: a thread that builds the backend via
 /// `factory` and serves `rx` until disconnect or crash, then notifies
 /// `events`. `ready` (first generation only) reports whether the backend
-/// came up. Used by `spawn_worker` and by the supervisor's respawns.
+/// came up. With `warm` set, one real zero-batch forward must succeed
+/// before the generation signals ready or takes traffic (the hot-swap
+/// warmup contract). `drain` is the generation's fail-fast flag: once a
+/// bounded drain trips it, queued requests are answered with typed
+/// `ReplicaFailed` instead of device work. Used by `spawn_worker` and by
+/// the supervisor's respawns.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn spawn_generation<B, F>(
     factory: Arc<F>,
     rx: Receiver<InferRequest>,
@@ -324,52 +343,73 @@ pub(crate) fn spawn_generation<B, F>(
     idx: usize,
     events: Sender<ReplicaExited>,
     ready: Option<SyncSender<Result<()>>>,
+    warm: bool,
+    drain: Arc<AtomicBool>,
 ) -> JoinHandle<WorkerExit>
 where
     B: InferBackend,
     F: Fn() -> Result<B> + Send + Sync + 'static,
 {
     std::thread::spawn(move || {
-        let exit = generation_body(&*factory, rx, &stats, &policy, ready);
+        let exit = generation_body(&*factory, rx, &stats, &policy, ready, warm, &drain);
         let _ = events.send(ReplicaExited { idx });
         exit
     })
 }
 
-/// One generation's life: construct the backend, serve batches, exit.
+/// One generation's life: construct the backend (and, under `warm`, run
+/// one real forward before signaling ready), serve batches, exit.
 fn generation_body<B: InferBackend>(
     factory: &(dyn Fn() -> Result<B>),
     rx: Receiver<InferRequest>,
     stats: &ReplicaStats,
     policy: &ServePolicy,
     ready: Option<SyncSender<Result<()>>>,
+    warm: bool,
+    drain: &AtomicBool,
 ) -> WorkerExit {
-    let backend = match catch_unwind(AssertUnwindSafe(factory)) {
-        Ok(Ok(b)) => {
-            if let Some(t) = ready {
-                let _ = t.send(Ok(()));
-            }
-            b
+    let fail_ready = |ready: Option<SyncSender<Result<()>>>, msg: &str| {
+        stats.consecutive_failures.fetch_add(1, Ordering::SeqCst);
+        stats.crashes.inc();
+        if let Some(t) = ready {
+            let _ = t.send(Err(anyhow!("{msg}")));
         }
+    };
+    let backend = match catch_unwind(AssertUnwindSafe(factory)) {
+        Ok(Ok(b)) => b,
         Ok(Err(e)) => {
             let msg = format!("backend construction failed: {e:#}");
-            stats.consecutive_failures.fetch_add(1, Ordering::SeqCst);
-            stats.crashes.inc();
-            if let Some(t) = ready {
-                let _ = t.send(Err(e));
-            }
+            fail_ready(ready, &msg);
             return WorkerExit { rx: Some(rx), crash: Some(msg) };
         }
         Err(p) => {
             let msg = format!("backend construction panicked: {}", panic_message(p));
-            stats.consecutive_failures.fetch_add(1, Ordering::SeqCst);
-            stats.crashes.inc();
-            if let Some(t) = ready {
-                let _ = t.send(Err(anyhow!("{msg}")));
-            }
+            fail_ready(ready, &msg);
             return WorkerExit { rx: Some(rx), crash: Some(msg) };
         }
     };
+    if warm {
+        // one real forward must succeed before this generation admits
+        // traffic; its timing also seeds the routing latency signal
+        let zeros = vec![0.0f32; backend.batch_size() * backend.sample_elems()];
+        let t0 = Instant::now();
+        match catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&zeros))) {
+            Ok(Ok(_)) => stats.latency.record(t0.elapsed()),
+            Ok(Err(e)) => {
+                let msg = format!("warmup forward failed: {e:#}");
+                fail_ready(ready, &msg);
+                return WorkerExit { rx: Some(rx), crash: Some(msg) };
+            }
+            Err(p) => {
+                let msg = format!("warmup forward panicked: {}", panic_message(p));
+                fail_ready(ready, &msg);
+                return WorkerExit { rx: Some(rx), crash: Some(msg) };
+            }
+        }
+    }
+    if let Some(t) = ready {
+        let _ = t.send(Ok(()));
+    }
 
     let device_bs = backend.batch_size();
     let batch_policy =
@@ -379,13 +419,26 @@ fn generation_body<B: InferBackend>(
     let classes = backend.out_elems();
     loop {
         // expired requests are answered without touching the device
-        let Some((live, dead)) = batcher.next_batch_partitioned(|r| r.deadline <= Instant::now())
-        else {
+        // (the batcher re-checks expiry at flush and orders live EDF)
+        let Some((live, dead)) = batcher.next_batch_partitioned() else {
             return WorkerExit { rx: None, crash: None };
         };
         for req in dead {
             let waited = req.submitted.elapsed();
             req.finish(stats, Err(ServeError::DeadlineExceeded { waited }));
+        }
+        if drain.load(Ordering::SeqCst) {
+            // bounded drain exceeded its budget: answer stragglers
+            // typed instead of spending device time on a retired version
+            for req in live {
+                req.finish(
+                    stats,
+                    Err(ServeError::ReplicaFailed {
+                        reason: "drained at model version swap/retirement".into(),
+                    }),
+                );
+            }
+            continue;
         }
         if live.is_empty() {
             continue;
@@ -459,7 +512,8 @@ where
     let (tx, rx) = sync_channel(policy.queue_depth.max(1));
     let stats = Arc::new(ReplicaStats::new());
     let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
-    // unsupervised: exit events have no listener
+    // unsupervised: exit events have no listener, no warmup, and no
+    // lifecycle drain flag (shutdown joins the worker directly)
     let (events_tx, _events_rx) = channel();
     let join = spawn_generation(
         Arc::new(factory),
@@ -469,6 +523,8 @@ where
         0,
         events_tx,
         Some(ready_tx),
+        false,
+        Arc::new(AtomicBool::new(false)),
     );
     match ready_rx.recv() {
         Ok(Ok(())) => Ok(WorkerHandle { tx, stats, policy, join }),

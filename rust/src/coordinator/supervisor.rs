@@ -17,7 +17,14 @@
 //! requests with typed `ReplicaFailed` until shutdown disconnects the
 //! channel. The supervisor thread itself ends once every slot has exited
 //! cleanly, returning the crash log.
+//!
+//! Lifecycle integration (`lifecycle.rs`): the fleet shares a `drain`
+//! flag. While it is clear, a crash during a graceful drain is respawned
+//! like any other — queued requests still finish on the old plan. Once a
+//! bounded drain trips the flag, crashed slots are not respawned;
+//! their queues are drained into typed replies instead.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -44,12 +51,18 @@ struct Slot {
 /// Spawn `replicas` supervised worker slots sharing one backend
 /// `factory`, plus the supervisor thread that respawns them. Returns
 /// the admission handles and the supervisor's join handle (which yields
-/// the crash log after shutdown). Fails fast — tearing down any
-/// already-started slots — if a first-generation backend fails to build.
+/// the crash log after shutdown). With `warm` set, every first
+/// generation must complete one real forward before it counts as ready
+/// (respawned generations warm too, so a replica never takes traffic
+/// before proving it can serve). `drain` is the fleet's shared fail-fast
+/// flag (see module docs). Fails fast — tearing down any already-started
+/// slots — if a first-generation backend fails to build or warm.
 pub(crate) fn spawn_supervised<B, F>(
     replicas: usize,
     factory: F,
     policy: ServePolicy,
+    warm: bool,
+    drain: Arc<AtomicBool>,
 ) -> Result<(Vec<ReplicaHandle>, JoinHandle<Vec<String>>)>
 where
     B: InferBackend,
@@ -72,6 +85,8 @@ where
             idx,
             events_tx.clone(),
             Some(ready_tx),
+            warm,
+            Arc::clone(&drain),
         );
         let ready = match ready_rx.recv() {
             Ok(r) => r,
@@ -92,6 +107,7 @@ where
             let factory = Arc::clone(&factory);
             let stats = Arc::clone(&stats);
             let events = events_tx.clone();
+            let drain = Arc::clone(&drain);
             Box::new(move |rx| {
                 spawn_generation(
                     Arc::clone(&factory),
@@ -101,27 +117,30 @@ where
                     idx,
                     events.clone(),
                     None,
+                    warm,
+                    Arc::clone(&drain),
                 )
             })
         };
         handles.push(ReplicaHandle { tx, stats: Arc::clone(&stats) });
         slots.push(Slot { join: Some(join), stats, respawn });
     }
-    let sup = std::thread::spawn(move || supervise(slots, events_rx, events_tx, policy));
+    let sup = std::thread::spawn(move || supervise(slots, events_rx, events_tx, policy, drain));
     Ok((handles, sup))
 }
 
 /// The supervisor loop: join exited generations, respawn crashed ones
 /// with capped exponential backoff, trip breakers, and return the crash
-/// log once every slot has exited cleanly.
+/// log once every slot has exited cleanly. A slot that crashes after the
+/// fleet's `drain` flag tripped is not respawned — its queue is drained
+/// into typed replies, because the version it serves is being retired.
 fn supervise(
     mut slots: Vec<Slot>,
     events_rx: Receiver<ReplicaExited>,
     events_tx: Sender<ReplicaExited>,
     policy: ServePolicy,
+    drain: Arc<AtomicBool>,
 ) -> Vec<String> {
-    use std::sync::atomic::Ordering;
-
     let mut crash_log = Vec::new();
     let mut live = slots.len();
     while live > 0 {
@@ -152,8 +171,9 @@ fn supervise(
         };
         crash_log.push(format!("replica {idx}: {reason}"));
         let failures = slot.stats.consecutive_failures.load(Ordering::SeqCst);
+        let draining = drain.load(Ordering::SeqCst);
         match exit.rx {
-            Some(rx) if failures < policy.breaker_threshold => {
+            Some(rx) if failures < policy.breaker_threshold && !draining => {
                 // respawn on the same channel after backing off
                 slot.stats.set_circuit(CircuitState::HalfOpen);
                 let exp = failures.saturating_sub(1).min(16) as u32;
@@ -164,9 +184,15 @@ fn supervise(
                 slot.join = Some((slot.respawn)(rx));
             }
             Some(rx) => {
-                // breaker trips: answer queued + late requests, typed,
-                // until shutdown disconnects the channel
+                // breaker tripped (or the version is being drained):
+                // answer queued + late requests, typed, until shutdown
+                // disconnects the channel
                 slot.stats.set_circuit(CircuitState::Open);
+                let reason = if draining {
+                    "drained at model version swap/retirement".to_string()
+                } else {
+                    format!("circuit open: {reason}")
+                };
                 slot.join = Some(spawn_drainer(
                     rx,
                     Arc::clone(&slot.stats),
@@ -185,9 +211,9 @@ fn supervise(
     crash_log
 }
 
-/// Stand-in generation for a tripped slot: answers every request on the
-/// recovered queue with a typed `ReplicaFailed` until the channel
-/// disconnects at shutdown.
+/// Stand-in generation for a tripped (or draining) slot: answers every
+/// request on the recovered queue with a typed `ReplicaFailed` until the
+/// channel disconnects at shutdown.
 fn spawn_drainer(
     rx: Receiver<InferRequest>,
     stats: Arc<ReplicaStats>,
@@ -196,7 +222,7 @@ fn spawn_drainer(
     reason: String,
 ) -> JoinHandle<WorkerExit> {
     std::thread::spawn(move || {
-        drain_unserved(rx, &stats, &format!("circuit open: {reason}"));
+        drain_unserved(rx, &stats, &reason);
         let _ = events.send(ReplicaExited { idx });
         WorkerExit { rx: None, crash: None }
     })

@@ -444,15 +444,24 @@ pub fn repetition_study(
 /// `plum bench serve` and CI. Latency points carry `gflops = 0` (lower
 /// `min_ns` is better); the throughput point carries goodput as its
 /// "gflops" (higher is better) with `min_ns = 0` sentinel.
+///
+/// With `swap_at = Some(s)` the run doubles as the hot-swap drill
+/// (`plum bench serve --swap-at S`): a fresh model version is deployed
+/// `s` seconds into the window under load, and the series additionally
+/// carries `swap_drain_ms` (old-generation drain time, ns), `swap_p99`
+/// (end-to-end p99 measured *across* the swap) and `swap_dropped`
+/// (replies lost without a typed error — gated to zero).
 pub fn serving_study(
     cfg: &RunConfig,
     model: &str,
     image: usize,
     rps: f64,
     duration_s: f64,
+    swap_at: Option<f64>,
 ) -> Result<(crate::experiments::serving::ServeBenchReport, Vec<ScalingPoint>)> {
-    let report =
-        crate::experiments::serving::bench_serve_engine(cfg, model, image, rps, duration_s)?;
+    let report = crate::experiments::serving::bench_serve_engine_opts(
+        cfg, model, image, rps, duration_s, swap_at,
+    )?;
     let shape = format!(
         "{} {}px r{} rps{}",
         report.model, image, report.replicas, report.target_rps
@@ -465,7 +474,7 @@ pub fn serving_study(
         min_ns: us.saturating_mul(1000),
         gflops: 0.0,
     };
-    let points = vec![
+    let mut points = vec![
         lat("serve_p50", report.p50_us),
         lat("serve_p95", report.p95_us),
         lat("serve_p99", report.p99_us),
@@ -478,12 +487,29 @@ pub fn serving_study(
         },
         ScalingPoint {
             op: "serve_shed_ppm".to_string(),
-            shape,
+            shape: shape.clone(),
             threads,
             min_ns: report.shed_ppm,
             gflops: 0.0,
         },
     ];
+    if let Some(swap) = &report.swap {
+        points.push(ScalingPoint {
+            op: "swap_drain_ms".to_string(),
+            shape: shape.clone(),
+            threads,
+            min_ns: (swap.drain_ms.max(0.0) * 1e6) as u64,
+            gflops: 0.0,
+        });
+        points.push(lat("swap_p99", report.p99_us));
+        points.push(ScalingPoint {
+            op: "swap_dropped".to_string(),
+            shape,
+            threads,
+            min_ns: report.dropped as u64,
+            gflops: 0.0,
+        });
+    }
     Ok((report, points))
 }
 

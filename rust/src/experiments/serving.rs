@@ -31,7 +31,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::RunConfig;
 #[cfg(feature = "pjrt")]
 use crate::coordinator::PjrtBackend;
-use crate::coordinator::{Router, ServeError, ServePolicy};
+use crate::coordinator::{Router, ServeError, ServePolicy, SwapReport};
 use crate::data::SyntheticDataset;
 use crate::metrics::LatencyHistogram;
 use crate::models;
@@ -221,6 +221,26 @@ pub fn drive(
     drive_router(router, &ds, sample, requests)
 }
 
+/// Outcome of the hot-swap drill inside an open-loop run
+/// (`plum bench serve --swap-at S`): the new version deployed while the
+/// load loop kept offering, and the old generation's drain result.
+#[derive(Debug, Clone)]
+pub struct SwapDrill {
+    /// seconds into the load window the swap was fired
+    pub at_s: f64,
+    /// version the swap deployed (the drill starts at v1, so this is 2)
+    pub version: u64,
+    /// wall-clock ms to spawn + warm the new fleet before the flip
+    pub warmup_ms: f64,
+    /// wall-clock ms the old generation took to drain after the flip
+    pub drain_ms: f64,
+    /// true when the old generation drained inside the policy budget
+    /// without fail-fasting stragglers
+    pub drained_clean: bool,
+    /// requests answered with a typed failure while the drain ran
+    pub stragglers: u64,
+}
+
 /// Result of one open-loop load run (`plum bench serve`).
 #[derive(Debug, Clone)]
 pub struct ServeBenchReport {
@@ -254,6 +274,12 @@ pub struct ServeBenchReport {
     pub p99_us: u64,
     /// shed requests per million offered
     pub shed_ppm: u64,
+    /// admitted requests whose reply channel was dropped without a
+    /// typed reply — a conservation violation; must be 0 (gated in CI
+    /// across the hot-swap drill)
+    pub dropped: usize,
+    /// hot-swap drill outcome (None for a plain run)
+    pub swap: Option<SwapDrill>,
 }
 
 /// Open-loop load harness: offer `rps` requests/second against a
@@ -270,8 +296,29 @@ pub fn bench_serve_engine(
     rps: f64,
     duration_s: f64,
 ) -> Result<ServeBenchReport> {
+    bench_serve_engine_opts(cfg, model, image, rps, duration_s, None)
+}
+
+/// [`bench_serve_engine`] plus the hot-swap drill: with
+/// `swap_at = Some(s)`, a side thread fires `Router::deploy` of a fresh
+/// model version `s` seconds into the load window *while the open loop
+/// keeps offering*. The report then carries the drain outcome and the
+/// end-to-end quantiles measured across the swap (absorbed over both
+/// generations), and `dropped` counts any reply channel that closed
+/// without a typed reply — the zero-drop acceptance gate.
+pub fn bench_serve_engine_opts(
+    cfg: &RunConfig,
+    model: &str,
+    image: usize,
+    rps: f64,
+    duration_s: f64,
+    swap_at: Option<f64>,
+) -> Result<ServeBenchReport> {
     anyhow::ensure!(rps > 0.0, "--rps must be positive");
     anyhow::ensure!(duration_s > 0.0, "--duration must be positive");
+    if let Some(at) = swap_at {
+        anyhow::ensure!(at >= 0.0, "--swap-at must be non-negative");
+    }
     let batch = cfg.max_batch.max(1);
     let layers = models::engine_model_layers(model, image, batch)
         .ok_or_else(|| anyhow!("unknown engine model '{model}'"))?;
@@ -285,11 +332,12 @@ pub fn bench_serve_engine(
     let sample = plan.sample_elems();
     let ds = SyntheticDataset::new("serve", 10, 3, image, cfg.seed);
     let replicas = cfg.replicas.max(1);
-    let router = Router::spawn(
-        replicas,
-        EngineBackend::factory(Arc::clone(&plan)),
-        cfg.serve_policy(),
-    )?;
+    // deploy v1 through the catalog (warmed) so the drill's swap is a
+    // plain versioned redeploy of the same slot
+    let router = Router::empty(cfg.serve_policy());
+    router
+        .deploy(model, replicas, EngineBackend::factory(Arc::clone(&plan)))
+        .map_err(|e| anyhow!("initial deploy failed: {e}"))?;
     // pre-render a sample ring so rendering stays off the submit path
     let ring: Vec<Vec<f32>> = (0..16)
         .map(|i| {
@@ -301,42 +349,84 @@ pub fn bench_serve_engine(
     let interval = Duration::from_secs_f64(1.0 / rps);
     let t0 = Instant::now();
     let end = t0 + Duration::from_secs_f64(duration_s);
-    let mut next = t0;
     let mut offered = 0usize;
     let mut shed = 0usize;
-    let mut pending = Vec::new();
-    loop {
-        let now = Instant::now();
-        if now >= end {
-            break;
-        }
-        if now < next {
-            std::thread::sleep(next - now);
-        }
-        // open loop: if we fell behind the clock we submit immediately
-        // and catch up instead of thinning the offered load
-        match router.submit(ring[offered % ring.len()].clone()) {
-            Ok((rx, _)) => pending.push(rx),
-            Err(ServeError::Overloaded { .. } | ServeError::ReplicaFailed { .. }) => shed += 1,
-            Err(e) => bail!("unexpected admission error: {e}"),
-        }
-        offered += 1;
-        next += interval;
-    }
+    let mut dropped = 0usize;
     let (mut completed, mut expired, mut failed) = (0usize, 0usize, 0usize);
-    for rx in pending {
-        match rx.recv() {
-            Ok(Ok(_)) => completed += 1,
-            Ok(Err(ServeError::DeadlineExceeded { .. })) => expired += 1,
-            Ok(Err(_)) => failed += 1,
-            Err(_) => bail!("reply channel dropped — request conservation violated"),
+    let swap_result: Option<Result<SwapReport, ServeError>> = std::thread::scope(|scope| {
+        let swapper = swap_at.map(|at| {
+            let router = &router;
+            let plan = Arc::clone(&plan);
+            scope.spawn(move || {
+                let fire = t0 + Duration::from_secs_f64(at);
+                let now = Instant::now();
+                if fire > now {
+                    std::thread::sleep(fire - now);
+                }
+                router.deploy(model, replicas, EngineBackend::factory(plan))
+            })
+        });
+        let mut next = t0;
+        let mut pending = Vec::new();
+        loop {
+            let now = Instant::now();
+            if now >= end {
+                break;
+            }
+            if now < next {
+                std::thread::sleep(next - now);
+            }
+            // open loop: if we fell behind the clock we submit
+            // immediately and catch up instead of thinning the offered
+            // load
+            match router.submit(ring[offered % ring.len()].clone()) {
+                Ok((rx, _)) => pending.push(rx),
+                Err(ServeError::Overloaded { .. } | ServeError::ReplicaFailed { .. }) => {
+                    shed += 1
+                }
+                Err(e) => {
+                    // deadline-at-admission etc. would be a driver bug;
+                    // count it as shed rather than losing the request
+                    eprintln!("unexpected admission error (counted as shed): {e}");
+                    shed += 1;
+                }
+            }
+            offered += 1;
+            next += interval;
         }
-    }
+        for rx in pending {
+            match rx.recv() {
+                Ok(Ok(_)) => completed += 1,
+                Ok(Err(ServeError::DeadlineExceeded { .. })) => expired += 1,
+                Ok(Err(_)) => failed += 1,
+                // a closed reply channel without a typed reply violates
+                // conservation; counted (and gated to zero in CI)
+                Err(_) => dropped += 1,
+            }
+        }
+        swapper.map(|h| h.join().expect("swap thread panicked"))
+    });
+    let swap = match swap_result {
+        None => None,
+        Some(Ok(report)) => {
+            let d = report.drained.as_ref();
+            Some(SwapDrill {
+                at_s: swap_at.unwrap_or(0.0),
+                version: report.version,
+                warmup_ms: report.warmup_ms,
+                drain_ms: d.map(|d| d.drain_ms).unwrap_or(0.0),
+                drained_clean: d.map(|d| d.clean).unwrap_or(true),
+                stragglers: d.map(|d| d.stragglers).unwrap_or(0),
+            })
+        }
+        Some(Err(e)) => bail!("hot swap failed mid-drill: {e}"),
+    };
     let wall = t0.elapsed().as_secs_f64();
     let e2e = LatencyHistogram::new();
     let mut crashes = 0u64;
-    for i in 0..replicas {
-        let s = router.stats(i);
+    // absorb over *every* generation (live + retired) so the quantiles
+    // span the swap
+    for (i, s) in router.all_stats().iter().enumerate() {
         e2e.absorb(&s.e2e);
         crashes += s.crashes.get();
         println!(
@@ -363,6 +453,104 @@ pub fn bench_serve_engine(
         p95_us: e2e.quantile_us(0.95),
         p99_us: e2e.quantile_us(0.99),
         shed_ppm: (shed as u64).saturating_mul(1_000_000) / (offered.max(1) as u64),
+        dropped,
+        swap,
+    })
+}
+
+/// Closed-burst driver over a *multi-model* router (`plum serve
+/// --models a,b`): compile each named engine model once at `image`
+/// pixels (the CLI pins 32, CIFAR geometry), deploy it (warmed) into
+/// its own catalog slot, then round-robin the burst across the models
+/// by name through `submit_to`.
+pub fn drive_engine_multi(
+    cfg: &RunConfig,
+    model_names: &[String],
+    image: usize,
+    requests: usize,
+) -> Result<ServeReport> {
+    anyhow::ensure!(!model_names.is_empty(), "--models needs at least one name");
+    let batch = cfg.max_batch.max(1);
+    let replicas = cfg.replicas.max(1);
+    let router = Router::empty(burst_policy(cfg));
+    let mut samples = Vec::with_capacity(model_names.len());
+    for name in model_names {
+        let layers = models::engine_model_layers(name, image, batch)
+            .ok_or_else(|| anyhow!("unknown engine model '{name}'"))?;
+        let ecfg = EngineConfig { subtile: 0, sparsity_support: true };
+        let plan = Arc::new(NetworkPlan::compile_seeded(
+            &layers,
+            ecfg,
+            Scheme::sb_default(),
+            cfg.seed,
+        )?);
+        eprintln!(
+            "deploying {name} (batch {batch}, {} conv layers, {} replicas)...",
+            plan.num_layers(),
+            replicas
+        );
+        samples.push(plan.sample_elems());
+        let swap = router
+            .deploy(name, replicas, EngineBackend::factory(plan))
+            .map_err(|e| anyhow!("deploy of '{name}' failed: {e}"))?;
+        println!("  {name}: v{} live ({:.1} ms warmup)", swap.version, swap.warmup_ms);
+    }
+    let ds = SyntheticDataset::new("serve", 10, 3, image, cfg.seed);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    let mut shed = 0usize;
+    for i in 0..requests {
+        let m = i % model_names.len();
+        let mut buf = vec![0.0f32; samples[m]];
+        ds.render(i, &mut buf);
+        match router.submit_to(&model_names[m], buf) {
+            Ok((rx, _)) => pending.push((Instant::now(), rx)),
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => bail!("burst submit to '{}' failed: {e}", model_names[m]),
+        }
+    }
+    let (mut completed, mut expired, mut failed) = (0usize, 0usize, 0usize);
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(pending.len());
+    for (t_submit, rx) in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => {
+                completed += 1;
+                lat_ms.push(t_submit.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(Err(ServeError::DeadlineExceeded { .. })) => expired += 1,
+            Ok(Err(_)) => failed += 1,
+            Err(_) => bail!("reply channel dropped — request conservation violated"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p95_ms = if lat_ms.is_empty() {
+        0.0
+    } else {
+        lat_ms[((lat_ms.len() as f64 * 0.95) as usize).min(lat_ms.len() - 1)]
+    };
+    for (i, s) in router.all_stats().iter().enumerate() {
+        println!(
+            "  {} shed={} expired={} crashes={}",
+            s.latency.report(&format!("replica{i}")),
+            s.shed.get(),
+            s.expired.get(),
+            s.crashes.get()
+        );
+    }
+    let total_replicas = replicas * model_names.len();
+    router.shutdown()?;
+    Ok(ServeReport {
+        requests,
+        completed,
+        shed,
+        expired,
+        failed,
+        wall_secs: wall,
+        throughput_rps: completed as f64 / wall,
+        mean_ms: lat_ms.iter().sum::<f64>() / lat_ms.len().max(1) as f64,
+        p95_ms,
+        replicas: total_replicas,
     })
 }
 
@@ -430,5 +618,37 @@ mod tests {
             assert!(report.achieved_rps > 0.0);
         }
         assert_eq!(report.crashes, 0, "no fault injection here");
+        assert_eq!(report.dropped, 0, "reply channels must never drop");
+        assert!(report.swap.is_none(), "no swap drill requested");
+    }
+
+    #[test]
+    fn swap_drill_completes_with_zero_drops() {
+        // hot-swap at the midpoint of a short open-loop window: the
+        // drill must complete, conserve every offered request, and drop
+        // nothing across the swap
+        let cfg = RunConfig { replicas: 1, max_batch: 2, max_wait_ms: 1, ..RunConfig::default() };
+        let report = bench_serve_engine_opts(&cfg, "resnet8", 8, 200.0, 0.4, Some(0.2)).unwrap();
+        assert!(report.offered > 0);
+        assert_eq!(
+            report.completed + report.shed + report.expired + report.failed,
+            report.offered,
+            "typed outcomes must partition the offered load across the swap"
+        );
+        assert_eq!(report.dropped, 0, "hot swap dropped replies");
+        let swap = report.swap.expect("drill must report the swap");
+        assert_eq!(swap.version, 2);
+        assert!(swap.warmup_ms >= 0.0);
+        assert!(swap.drain_ms >= 0.0);
+    }
+
+    #[test]
+    fn multi_model_burst_round_robins_by_name() {
+        let cfg = RunConfig { replicas: 1, max_batch: 2, max_wait_ms: 1, ..RunConfig::default() };
+        let names = vec!["resnet8".to_string(), "chain1x1".to_string()];
+        let report = drive_engine_multi(&cfg, &names, 8, 10).unwrap();
+        assert_eq!(report.requests, 10);
+        assert_eq!(report.completed, 10);
+        assert_eq!(report.replicas, 2); // one replica per model slot
     }
 }

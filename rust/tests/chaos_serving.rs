@@ -8,12 +8,17 @@
 //! * shedding is never silent (per-replica counters see it);
 //! * the supervisor respawns crashed generations (service revives);
 //! * repeated crashes trip the per-replica circuit breaker, after which
-//!   replies stay typed and the router routes around the slot.
+//!   replies stay typed and the router routes around the slot;
+//! * the conservation invariant holds *across a hot swap*: a versioned
+//!   redeploy under chaos drains the old generation gracefully, a
+//!   failed warmup aborts the swap with the old version still serving,
+//!   and a bounded drain fails stragglers typed — never silently.
 
 use std::time::Duration;
 
 use plum::coordinator::{
-    flaky_factory, BatchPolicy, CircuitState, MockBackend, Router, ServeError, ServePolicy,
+    flaky_factory, BatchPolicy, CircuitState, InferBackend, MockBackend, Router, ServeError,
+    ServePolicy,
 };
 
 /// Batching + robustness knobs shared by the chaos runs: small bounded
@@ -28,6 +33,7 @@ fn chaos_policy() -> ServePolicy {
         breaker_threshold: 50,
         backoff_base: Duration::from_millis(1),
         backoff_cap: Duration::from_millis(5),
+        drain_timeout: Duration::from_secs(5),
     }
 }
 
@@ -123,6 +129,7 @@ fn breaker_trips_after_repeated_crashes_and_replies_stay_typed() {
         breaker_threshold: 2,
         backoff_base: Duration::from_micros(500),
         backoff_cap: Duration::from_millis(2),
+        drain_timeout: Duration::from_secs(2),
     };
     let router = Router::spawn(
         1,
@@ -161,4 +168,241 @@ fn breaker_trips_after_repeated_crashes_and_replies_stay_typed() {
     assert!(router.stats(0).crashes.get() >= 2);
     let log = router.shutdown().unwrap();
     assert!(!log.is_empty());
+}
+
+/// Deterministic backend whose logit is shifted by a constant, so a
+/// reply's *plan of origin* is readable off the bits: an old generation
+/// built on [`MockBackend`] serves `sum(x)`, while a swapped-in
+/// `OffsetBackend` with `offset: 1000.0` serves `sum(x) + 1000`.
+struct OffsetBackend {
+    bs: usize,
+    sample: usize,
+    offset: f32,
+    delay: Duration,
+}
+
+impl InferBackend for OffsetBackend {
+    fn batch_size(&self) -> usize {
+        self.bs
+    }
+    fn sample_elems(&self) -> usize {
+        self.sample
+    }
+    fn out_elems(&self) -> usize {
+        1
+    }
+    fn infer_batch(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(x.chunks(self.sample).map(|s| s.iter().sum::<f32>() + self.offset).collect())
+    }
+}
+
+/// Tentpole acceptance: hot-swap while the old generation is mid-crash,
+/// at three pool widths. Build a backlog on a crashing v1, deploy a v2
+/// whose logits are bit-distinguishable, and check that (a) conservation
+/// holds *across* the swap — every admitted request gets exactly one
+/// typed reply; (b) every backlog reply that succeeded was served by the
+/// old plan; (c) every post-swap reply bit-matches the new plan, i.e.
+/// the retired version never answers after the flip.
+#[test]
+fn hot_swap_under_chaos_conserves_and_routes_to_the_new_plan() {
+    for replicas in [1usize, 2, 4] {
+        let router = Router::empty(chaos_policy());
+        router
+            .deploy(
+                "m",
+                replicas,
+                flaky_factory(
+                    move || {
+                        Ok(MockBackend {
+                            bs: 4,
+                            sample: 2,
+                            classes: 1,
+                            delay: Duration::from_micros(200),
+                        })
+                    },
+                    3, // panic every 3rd batch: v1 is crashing while it drains
+                    0,
+                    Duration::from_micros(200),
+                    42,
+                ),
+            )
+            .unwrap();
+        // backlog on the crashing v1
+        let mut admitted = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..64 {
+            match router.submit_to("m", vec![i as f32, 0.25]) {
+                Ok((rx, _)) => admitted.push((i, rx)),
+                Err(ServeError::Overloaded { .. }) => shed += 1,
+                Err(e) => panic!("[{replicas} wide] untyped admission failure: {e}"),
+            }
+        }
+        // swap to the offset plan; deploy returns only after v1 drained
+        let swap = router
+            .deploy("m", replicas, move || {
+                Ok(OffsetBackend { bs: 4, sample: 2, offset: 1000.0, delay: Duration::ZERO })
+            })
+            .unwrap();
+        assert_eq!(swap.version, 2, "[{replicas} wide]");
+        let drained = swap.drained.expect("v1 existed, so the swap must report its drain");
+        assert_eq!(drained.version, 1, "[{replicas} wide]");
+        assert!(drained.clean, "[{replicas} wide] a 5s budget must cover this backlog");
+        assert!(
+            !drained.crashes.is_empty(),
+            "[{replicas} wide] the fault schedule never fired: swap was not mid-crash"
+        );
+        // conservation across the swap
+        let n_adm = admitted.len();
+        let (mut ok, mut failed, mut expired) = (0usize, 0usize, 0usize);
+        for (i, rx) in admitted {
+            match rx.recv().unwrap_or_else(|_| {
+                panic!("[{replicas} wide] request {i}: reply dropped across the swap")
+            }) {
+                Ok(v) => {
+                    // the backlog lives on v1's queues: only the old
+                    // plan may ever serve it
+                    assert_eq!(
+                        v[0],
+                        i as f32 + 0.25,
+                        "[{replicas} wide] backlog reply not from the old plan"
+                    );
+                    ok += 1;
+                }
+                Err(ServeError::ReplicaFailed { .. }) => failed += 1,
+                Err(ServeError::DeadlineExceeded { .. }) => expired += 1,
+                Err(e) => panic!("[{replicas} wide] unexpected typed reply: {e}"),
+            }
+        }
+        assert_eq!(ok + failed + expired, n_adm, "[{replicas} wide] swap lost replies");
+        assert_eq!(n_adm + shed, 64, "[{replicas} wide]");
+        assert!(ok > 0, "[{replicas} wide] v1 never served anything");
+        // post-swap traffic must bit-match the new plan, every time
+        for i in 0..12 {
+            let (rx, _) = router.submit_to("m", vec![i as f32, 0.25]).unwrap();
+            match rx.recv().expect("post-swap reply dropped") {
+                Ok(v) => assert_eq!(
+                    v[0],
+                    i as f32 + 0.25 + 1000.0,
+                    "[{replicas} wide] post-swap reply not from v2"
+                ),
+                Err(e) => panic!("[{replicas} wide] fault-free v2 replied {e}"),
+            }
+        }
+        router.shutdown().unwrap();
+    }
+}
+
+/// A v2 whose warmup forward fails must abort the swap: the deploy
+/// returns typed `WarmupFailed`, the served version stays v1, and the
+/// (chaotic) old fleet keeps serving as if nothing happened.
+#[test]
+fn failed_warmup_aborts_swap_and_chaotic_old_version_keeps_serving() {
+    struct WarmupBomb;
+    impl InferBackend for WarmupBomb {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn sample_elems(&self) -> usize {
+            2
+        }
+        fn out_elems(&self) -> usize {
+            1
+        }
+        fn infer_batch(&self, _x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            anyhow::bail!("device rejected the plan")
+        }
+    }
+    let router = Router::empty(chaos_policy());
+    router
+        .deploy(
+            "m",
+            2,
+            flaky_factory(
+                move || {
+                    Ok(MockBackend {
+                        bs: 4,
+                        sample: 2,
+                        classes: 1,
+                        delay: Duration::from_micros(150),
+                    })
+                },
+                4,
+                3,
+                Duration::from_micros(150),
+                11,
+            ),
+        )
+        .unwrap();
+    match router.deploy("m", 2, || Ok(WarmupBomb)) {
+        Err(ServeError::WarmupFailed { model, reason }) => {
+            assert_eq!(model, "m");
+            assert!(reason.contains("device rejected the plan"), "{reason}");
+        }
+        Ok(r) => panic!("swap succeeded with a warmup bomb: {r:?}"),
+        Err(e) => panic!("wrong error type for a failed warmup: {e}"),
+    }
+    assert_eq!(router.version("m"), Some(1), "failed swap must not bump the served version");
+    let mut served = false;
+    for _ in 0..500 {
+        if let Ok((rx, _)) = router.submit_to("m", vec![2.0, 0.5]) {
+            if let Ok(Ok(v)) = rx.recv() {
+                assert_eq!(v[0], 2.5, "old plan answered with wrong logits");
+                served = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(served, "old version stopped serving after an aborted swap");
+    router.shutdown().unwrap();
+}
+
+/// A drain that cannot finish inside its budget must still answer every
+/// queued request typed: stragglers come back `ReplicaFailed` with a
+/// drain reason, the report says the drain was forced, and nothing is
+/// silently dropped.
+#[test]
+fn bounded_drain_answers_stragglers_typed_never_silently() {
+    let policy = ServePolicy {
+        batch: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(100) },
+        queue_depth: 32,
+        default_deadline: Duration::from_secs(30),
+        breaker_threshold: 50,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+        drain_timeout: Duration::from_millis(30),
+    };
+    let router = Router::empty(policy);
+    router
+        .deploy("m", 1, || {
+            Ok(OffsetBackend { bs: 1, sample: 1, offset: 0.0, delay: Duration::from_millis(50) })
+        })
+        .unwrap();
+    let admitted: Vec<_> =
+        (0..8).map(|i| router.submit_to("m", vec![i as f32]).unwrap().0).collect();
+    let swap = router
+        .deploy("m", 1, || {
+            Ok(OffsetBackend { bs: 1, sample: 1, offset: 0.0, delay: Duration::ZERO })
+        })
+        .unwrap();
+    let drained = swap.drained.expect("v1 existed, so the swap must report its drain");
+    assert!(!drained.clean, "a 30ms budget cannot cover a ~400ms backlog");
+    assert!(drained.stragglers >= 1, "the forced drain saw no stragglers");
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for rx in admitted {
+        match rx.recv().expect("straggler reply silently dropped") {
+            Ok(_) => ok += 1,
+            Err(ServeError::ReplicaFailed { reason }) => {
+                assert!(reason.contains("drain"), "untyped straggler reason: {reason}");
+                failed += 1;
+            }
+            Err(e) => panic!("unexpected typed reply during a forced drain: {e}"),
+        }
+    }
+    assert_eq!(ok + failed, 8, "conservation across a forced drain");
+    assert!(failed >= 1);
+    router.shutdown().unwrap();
 }
