@@ -46,6 +46,17 @@ COMMANDS:
                                             --tile 0 (default) auto-tunes the
                                             execution tile, skipping candidates
                                             blocked I/O cannot carry
+         density [--batch N] [--subtile N] [--tile N] [--out FILE]
+                                            repetition-sparsity trade-off curve:
+                                            resnet20 + resnet18c across the
+                                            density ladder (binary, ternary, sb,
+                                            sb-nm2:4, sb-nm1:4), sparsity
+                                            support on vs off, forward time +
+                                            effectual density ->
+                                            BENCH_density_current.json; every
+                                            sparsity-on forward is gated
+                                            bit-identical to the unelided
+                                            reference plan
          serve [--model NAME] [--image N] [--rps F] [--duration S] [--out FILE]
                [--swap-at S]                open-loop serving load harness on the
                                             engine backend: p50/p95/p99, goodput
@@ -197,6 +208,9 @@ fn cmd_bench(cfg: &RunConfig, args: &Args) -> Result<()> {
         // whole-network forward through the network executor — the
         // `network_forward` series, gated like the repetition series
         "network" => bench_network(cfg, args),
+        // the repetition-sparsity trade-off curve — the `BENCH_density`
+        // series (paper Fig. 10 measured on the real engine)
+        "density" => bench_density(cfg, args),
         // open-loop serving load harness — the `BENCH_serving` series
         "serve" => bench_serve(cfg, args),
         "compare" => bench_compare(args),
@@ -227,6 +241,25 @@ fn bench_network(cfg: &RunConfig, args: &Args) -> Result<()> {
     // like `bench repetition`, default away from the committed baseline
     // (BENCH_network.json) so re-baselining stays an explicit act
     let out = std::path::PathBuf::from(args.get_or("out", "BENCH_network_current.json"));
+    let n = figures::write_scaling_records(&points, &out)?;
+    println!("wrote {n} records to {}", out.display());
+    Ok(())
+}
+
+/// `plum bench density`: the repetition-sparsity trade-off curve
+/// (resnet20 + resnet18c across the density ladder, sparsity support
+/// on vs off), persisted as the `BENCH_density` series for the CI
+/// compare gate. `--threads` pins the pool width (CI pins 2 so the
+/// committed baseline's record keys stay stable).
+fn bench_density(cfg: &RunConfig, args: &Args) -> Result<()> {
+    let batch = args.get_usize("batch", 1);
+    let subtile = args.get_usize("subtile", 0); // 0 = auto-tuned
+    let threads = args.get_usize("threads", 0);
+    let tile = args.get_usize("tile", 0); // 0 = DEFAULT_TILE
+    let points = figures::density_study(cfg, batch, subtile, threads, tile)?;
+    // like the other bench targets, default away from the committed
+    // baseline (BENCH_density.json) so re-baselining stays explicit
+    let out = std::path::PathBuf::from(args.get_or("out", "BENCH_density_current.json"));
     let n = figures::write_scaling_records(&points, &out)?;
     println!("wrote {n} records to {}", out.display());
     Ok(())

@@ -8,6 +8,7 @@ use crate::models::{self, CHAIN1X1_DEPTH, CHAIN1X1_WIDTH};
 use crate::quant::stats::render_histogram;
 use crate::quant::{
     self, default_beta, filter_repetition_stats, weight_histogram, QuantizedWeights, Scheme,
+    SparsityPattern,
 };
 use crate::repetition::{
     arithmetic_reduction, execute_conv2d, execute_conv2d_pool, plan_layer, plan_layer_auto,
@@ -914,14 +915,15 @@ pub fn network_forward_study(
         println!(
             "{}{shape}: {} layers compiled in {compile_ms:.1} ms; {} engine ops/pass vs {} \
              dense ops ({:.1}x arithmetic reduction); {} patch-fused edge(s); packed weights \
-             {} KiB",
+             {} KiB; effectual density {:.1}%",
             if wi == 0 { "" } else { "\n" },
             fused.num_layers(),
             ops,
             dense_ops,
             dense_ops as f64 / ops.max(1) as f64,
             fused.patch_fused_edges(),
-            fused.weight_bits / 8 / 1024
+            fused.weight_bits / 8 / 1024,
+            100.0 * fused.effectual_density()
         );
         anyhow::ensure!(
             fused.patch_fused_edges() > 0,
@@ -962,6 +964,201 @@ pub fn network_forward_study(
     }
 
     Ok((threads, points))
+}
+
+/// One rung of the repetition-sparsity density ladder: a quantization
+/// scheme plus the structured-sparsity pattern pruned into the latents
+/// before the scale fit.
+struct DensityRung {
+    label: &'static str,
+    scheme: Scheme,
+    pattern: SparsityPattern,
+}
+
+/// The density ladder `plum bench density` sweeps, densest first:
+/// binary (dense ±1), ternary (natural zeros), signed-binary
+/// (unstructured nesting sparsity), then signed-binary with 2:4 and
+/// 1:4 N:M pruning.
+fn density_ladder() -> Vec<DensityRung> {
+    vec![
+        DensityRung {
+            label: "binary",
+            scheme: Scheme::Binary,
+            pattern: SparsityPattern::Unstructured,
+        },
+        DensityRung {
+            label: "ternary",
+            scheme: Scheme::ternary_default(),
+            pattern: SparsityPattern::Unstructured,
+        },
+        DensityRung {
+            label: "sb",
+            scheme: Scheme::sb_default(),
+            pattern: SparsityPattern::Unstructured,
+        },
+        DensityRung {
+            label: "sb-nm2:4",
+            scheme: Scheme::sb_default(),
+            pattern: SparsityPattern::NM { n: 2, m: 4 },
+        },
+        DensityRung {
+            label: "sb-nm1:4",
+            scheme: Scheme::sb_default(),
+            pattern: SparsityPattern::NM { n: 1, m: 4 },
+        },
+    ]
+}
+
+/// `plum bench density`: the repetition-sparsity trade-off curve
+/// (paper Fig. 10 / §5), measured on the real engine instead of the
+/// op-count model. For resnet20 and resnet18c, every rung of the
+/// density ladder is compiled twice — sparsity support **on**
+/// (zero columns elided from the arena at plan time) and **off**
+/// (repetition-only baseline: zeros planned and summed like any other
+/// group) — and the full-network forward is timed at one pool width.
+///
+/// Every sparsity-on forward is verified bit-identical to the
+/// unelided reference twin ([`NetworkPlan::without_elision`]) before
+/// its time is recorded. Emitted records, per (model, rung):
+///
+/// * `density_forward` at `... sp-on` / `... sp-off` — min forward
+///   time + dense-equivalent GFLOP/s (higher is better; the FLOP
+///   numerator is the *dense* MAC count at every rung, so GFLOP/s are
+///   comparable across the ladder);
+/// * `density_effectual_ppm` — whole-network effectual density in
+///   parts-per-million (lower is better; deterministic from the
+///   seed). The paper's headline is the gap between the `sb` rung and
+///   `binary` here: ~2.8x density reduction at matched accuracy.
+///
+/// `tile` pins the execution tile (0 = [`DEFAULT_TILE`]); `threads`
+/// pins the pool width (0 = available parallelism). Records feed the
+/// perf-trajectory gate (committed baseline: BENCH_density.json).
+///
+/// [`NetworkPlan::without_elision`]: crate::network::NetworkPlan::without_elision
+/// [`DEFAULT_TILE`]: crate::repetition::DEFAULT_TILE
+pub fn density_study(
+    cfg: &RunConfig,
+    batch: usize,
+    subtile: usize,
+    threads: usize,
+    tile: usize,
+) -> Result<Vec<ScalingPoint>> {
+    use crate::network::{NetworkExecutor, NetworkPlan};
+    use std::sync::Arc;
+
+    let batch = batch.max(1);
+    let threads = if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    let tile = if tile == 0 { crate::repetition::DEFAULT_TILE } else { tile };
+    anyhow::ensure!(
+        crate::repetition::tile_supports_blocked_io(tile),
+        "--tile {tile} cannot carry blocked patch I/O (not a PIXEL_BLOCK multiple) — pass a \
+         multiple of 8, or 0 for the default"
+    );
+    let reps = cfg.bench_reps;
+    let mut rng = Rng::new(cfg.seed ^ 0xd155);
+    let pool = Pool::new(threads);
+    let workloads: Vec<(&str, Vec<models::ConvLayerDesc>)> = vec![
+        ("resnet20", models::cifar_resnet_layers(20, 1.0, 32, batch)),
+        ("resnet18c", models::cifar_resnet18_layers(1.0, 32, batch)),
+    ];
+    let mut points = Vec::new();
+    for (mname, layers) in &workloads {
+        let mut printed = Vec::new();
+        let mut input: Vec<f32> = Vec::new();
+        let mut binary_on_ns = 0u64;
+        for rung in density_ladder() {
+            let mk = |sp: bool| -> Result<Arc<NetworkPlan>> {
+                let ecfg = EngineConfig { subtile, sparsity_support: sp };
+                Ok(Arc::new(NetworkPlan::compile_seeded_pruned(
+                    layers,
+                    ecfg,
+                    rung.scheme,
+                    rung.pattern,
+                    cfg.seed,
+                )?))
+            };
+            let on = mk(true)?;
+            let off = mk(false)?;
+            println!("\n{mname} {}: {}", rung.label, on.density_report());
+            if input.is_empty() {
+                input = vec![0.0f32; on.input_elems()];
+                rng.fill_normal(&mut input, 1.0);
+            }
+            // gate before timing: the elided plan's forward must
+            // bit-match the unelided reference twin
+            let reference = Arc::new(on.without_elision(&pool));
+            let mut ref_exec = NetworkExecutor::with_tile(Arc::clone(&reference), tile)?;
+            let want = ref_exec.forward_pool(&input, &pool).to_vec();
+            let base = format!("{mname} b{batch} 32px {}", rung.label);
+            let (on_pts, _) = network_forward_ladder(
+                &on,
+                "density_forward",
+                &format!("{base} sp-on"),
+                &[threads],
+                &input,
+                reps,
+                tile,
+                Some(&want),
+            )?;
+            let (off_pts, _) = network_forward_ladder(
+                &off,
+                "density_forward",
+                &format!("{base} sp-off"),
+                &[threads],
+                &input,
+                reps,
+                tile,
+                None,
+            )?;
+            let (on_ns, on_gf) = (on_pts[0].min_ns, on_pts[0].gflops);
+            let off_ns = off_pts[0].min_ns;
+            points.extend(on_pts);
+            points.extend(off_pts);
+            points.push(ScalingPoint {
+                op: "density_effectual_ppm".into(),
+                shape: base,
+                threads,
+                min_ns: (on.effectual_density() * 1e6).round() as u64,
+                gflops: 0.0,
+            });
+            if rung.label == "binary" {
+                binary_on_ns = on_ns;
+            }
+            printed.push(vec![
+                rung.label.to_string(),
+                format!("{:.3}", on.effectual_density()),
+                format!("{:.2}x", 1.0 / on.effectual_density().max(1e-9)),
+                format!("{:.2}", on_ns as f64 / 1e6),
+                format!("{:.2}", off_ns as f64 / 1e6),
+                format!("{:.2}x", off_ns as f64 / on_ns.max(1) as f64),
+                format!("{:.2}x", binary_on_ns as f64 / on_ns.max(1) as f64),
+                format!("{on_gf:.2}"),
+            ]);
+        }
+        print_table(
+            &format!(
+                "Repetition-sparsity trade-off — {mname} b{batch}, {threads} threads (paper: \
+                 SB ~2.8x density reduction vs binary at matched accuracy; speedup grows as \
+                 density falls only when sparsity support is on)"
+            ),
+            &[
+                "Rung",
+                "density",
+                "reduction",
+                "sp-on ms",
+                "sp-off ms",
+                "sp win",
+                "vs binary",
+                "GFLOP/s",
+            ],
+            &printed,
+        );
+    }
+    Ok(points)
 }
 
 /// Design-choice ablation (DESIGN.md): pattern-memoized planner vs the

@@ -181,6 +181,10 @@ pub fn drive_engine(cfg: &RunConfig, model: &str, requests: usize) -> Result<Ser
         plan.patch_fused_edges(),
         plan.num_arena_slots()
     );
+    // the executor's hot loop never touches an ineffectual column, so
+    // the effectual density below is the fraction of weight work the
+    // engine actually performs per pass
+    println!("plan density: {}", plan.density_report());
     let sample = plan.sample_elems();
     let ds = SyntheticDataset::new("serve", 10, 3, 32, cfg.seed);
     let router = Router::spawn(

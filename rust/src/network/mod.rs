@@ -77,7 +77,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, ensure, Result};
 
 use crate::models::ConvLayerDesc;
-use crate::quant::{quantize, Scheme};
+use crate::quant::{quantize_pruned, QuantizedWeights, Scheme, SparsityPattern};
 use crate::repetition::{
     execute_conv2d_layout, option_a_stride, plan_layer_auto_pool, tile_supports_blocked_io,
     EngineConfig, LayerPlan, OpCounts, PostOp, Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
@@ -185,6 +185,14 @@ pub struct NetworkPlan {
     slot_elems: Vec<usize>,
     /// §6 deployment footprint of all weights under `scheme`
     pub weight_bits: usize,
+    /// structured-sparsity pattern the quantized layers were pruned
+    /// with before planning ([`SparsityPattern::Unstructured`] = none)
+    pub pattern: SparsityPattern,
+    /// total weight parameters across every layer (fp stem included)
+    pub total_params: usize,
+    /// effectual (nonzero after quantization) weight parameters; fp
+    /// layers count every parameter as effectual
+    pub effectual_params: usize,
 }
 
 impl NetworkPlan {
@@ -205,8 +213,29 @@ impl NetworkPlan {
         scheme: Scheme,
         seed: u64,
     ) -> Result<NetworkPlan> {
+        Self::compile_seeded_pruned(layers, cfg, scheme, SparsityPattern::Unstructured, seed)
+    }
+
+    /// Compile with seeded latents and a structured-sparsity `pattern`
+    /// applied to every quantized layer before the alpha fit — the
+    /// density knob of the repetition-sparsity trade-off sweep.
+    pub fn compile_seeded_pruned(
+        layers: &[ConvLayerDesc],
+        cfg: EngineConfig,
+        scheme: Scheme,
+        pattern: SparsityPattern,
+        seed: u64,
+    ) -> Result<NetworkPlan> {
         let latents = seeded_latents(layers, seed);
-        Self::compile_with_weights(layers, &latents, cfg, scheme, Pool::global())
+        Self::compile_with_wiring_pruned(
+            layers,
+            &latents,
+            &derive_wiring(layers)?,
+            cfg,
+            scheme,
+            pattern,
+            Pool::global(),
+        )
     }
 
     /// Compile from explicit latent weights with derived wiring
@@ -243,6 +272,32 @@ impl NetworkPlan {
         wiring: &[LayerWiring],
         cfg: EngineConfig,
         scheme: Scheme,
+        pool: &Pool,
+    ) -> Result<NetworkPlan> {
+        Self::compile_with_wiring_pruned(
+            descs,
+            latents,
+            wiring,
+            cfg,
+            scheme,
+            SparsityPattern::Unstructured,
+            pool,
+        )
+    }
+
+    /// [`NetworkPlan::compile_with_wiring`] with a structured-sparsity
+    /// `pattern` threaded into quantization: each quantized layer runs
+    /// [`quantize_pruned`] so its smallest-magnitude latents are forced
+    /// to zero before the scale fit, and the layer plans then elide
+    /// those zeros entirely (when `cfg.sparsity_support` is on).
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile_with_wiring_pruned(
+        descs: &[ConvLayerDesc],
+        latents: &[Tensor],
+        wiring: &[LayerWiring],
+        cfg: EngineConfig,
+        scheme: Scheme,
+        pattern: SparsityPattern,
         pool: &Pool,
     ) -> Result<NetworkPlan> {
         let n = descs.len();
@@ -323,7 +378,7 @@ impl NetworkPlan {
             let d = &descs[li];
             let w = &latents[li];
             let (plan, dense_wt, weights) = if d.quantized {
-                let q = quantize(w, scheme, None);
+                let q = quantize_pruned(w, scheme, None, pattern);
                 let plan = if cfg.subtile == 0 {
                     plan_layer_auto_pool(&q, d.geom, cfg.sparsity_support, pool)
                 } else {
@@ -405,6 +460,17 @@ impl NetworkPlan {
         let slot_elems = slot_sizes(&slot_of_act, &act_buf_elems);
 
         let weight_bits = descs.iter().map(|d| layer_weight_bits(d, scheme)).sum();
+        let total_params: usize = layers.iter().map(|l| l.weights.len()).sum();
+        let effectual_params: usize = layers
+            .iter()
+            .map(|l| {
+                if l.plan.is_some() {
+                    l.weights.count_nonzero()
+                } else {
+                    l.weights.len()
+                }
+            })
+            .sum();
         Ok(NetworkPlan {
             layers,
             scheme,
@@ -414,6 +480,9 @@ impl NetworkPlan {
             slot_of_act,
             slot_elems,
             weight_bits,
+            pattern,
+            total_params,
+            effectual_params,
         })
     }
 
@@ -504,6 +573,78 @@ impl NetworkPlan {
             total.muls += c.muls;
         }
         total
+    }
+
+    /// Whole-network effectual density: effectual / total parameters
+    /// (1.0 when fully dense).
+    pub fn effectual_density(&self) -> f64 {
+        if self.total_params == 0 {
+            return 1.0;
+        }
+        self.effectual_params as f64 / self.total_params as f64
+    }
+
+    /// Per-layer `(name, effectual, total)` parameter counts, in
+    /// execution order. Engine layers report their plan's
+    /// [`DensityStats`](crate::repetition::DensityStats); fp layers
+    /// count every parameter as effectual.
+    pub fn layer_densities(&self) -> Vec<(&str, usize, usize)> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let total = l.weights.len();
+                let eff = match &l.plan {
+                    Some(p) => p.stats.effectual_cols as usize,
+                    None => total,
+                };
+                (l.name.as_str(), eff, total)
+            })
+            .collect()
+    }
+
+    /// One-line density summary for compile banners: whole-network
+    /// effectual fraction plus the per-layer density ladder.
+    pub fn density_report(&self) -> String {
+        let per_layer: Vec<String> = self
+            .layer_densities()
+            .iter()
+            .map(|(_, eff, total)| {
+                if *total == 0 {
+                    "1.00".to_string()
+                } else {
+                    format!("{:.2}", *eff as f64 / *total as f64)
+                }
+            })
+            .collect();
+        format!(
+            "effectual {}/{} params ({:.1}%), per-layer density [{}]",
+            self.effectual_params,
+            self.total_params,
+            100.0 * self.effectual_density(),
+            per_layer.join(" ")
+        )
+    }
+
+    /// A copy of this plan whose engine layers are rebuilt through the
+    /// unelided reference builder ([`LayerPlan::build_pool_unelided`]):
+    /// zero runs materialized in the arena, all-zero patterns owning
+    /// real spans. Sparsity-on execution never reads zero columns, so
+    /// this twin's forward must bit-match the elided plan's — the
+    /// density sweep and the engine proptests assert exactly that.
+    pub fn without_elision(&self, pool: &Pool) -> NetworkPlan {
+        let mut p = self.clone();
+        for l in &mut p.layers {
+            if let Some(lp) = &l.plan {
+                let q = QuantizedWeights {
+                    values: l.weights.clone(),
+                    alpha: vec![],
+                    beta: vec![],
+                    scheme: self.scheme,
+                };
+                l.plan = Some(LayerPlan::build_pool_unelided(&q, lp.geom, lp.cfg, pool));
+            }
+        }
+        p
     }
 }
 
@@ -889,6 +1030,7 @@ impl NetworkExecutor {
 mod tests {
     use super::*;
     use crate::models;
+    use crate::quant::quantize;
     use crate::repetition::{execute_conv2d_pool, plan_layer};
 
     fn sb() -> Scheme {
@@ -1312,6 +1454,44 @@ mod tests {
         assert_eq!(p1, p2, "second forward must land in the same arena slot");
         assert!(o1 == o2, "repeated forwards must be bit-identical");
         assert_eq!(o1.len(), plan.output_elems());
+    }
+
+    #[test]
+    fn pruned_compile_reports_density_and_bit_matches_unelided() {
+        let descs = models::cifar_resnet_layers(8, 0.5, 8, 1);
+        let cfg = EngineConfig::default();
+        let dense = NetworkPlan::compile(&descs, cfg, sb()).unwrap();
+        let nm = SparsityPattern::NM { n: 1, m: 4 };
+        let pruned = Arc::new(
+            NetworkPlan::compile_seeded_pruned(&descs, cfg, sb(), nm, DEFAULT_WEIGHT_SEED)
+                .unwrap(),
+        );
+        assert_eq!(dense.pattern, SparsityPattern::Unstructured);
+        assert_eq!(pruned.pattern, nm);
+        assert_eq!(pruned.total_params, dense.total_params);
+        assert!(pruned.effectual_params < dense.effectual_params);
+        assert!(pruned.effectual_density() < dense.effectual_density());
+        // engine layers' plan stats must agree with their weight tensors
+        for (li, l) in pruned.layers.iter().enumerate() {
+            if let Some(p) = &l.plan {
+                let eff = l.weights.count_nonzero();
+                assert_eq!(p.stats.effectual_cols as usize, eff, "layer {li}");
+                assert_eq!(p.stats.total_cols as usize, l.weights.len(), "layer {li}");
+            }
+        }
+        assert!(pruned.density_report().contains("effectual"));
+        assert_eq!(pruned.layer_densities().len(), pruned.num_layers());
+        // elided plan forwards bit-match the unelided reference twin
+        let pool = Pool::new(2);
+        let reference = Arc::new(pruned.without_elision(&pool));
+        let mut rng = Rng::new(7);
+        let mut input = vec![0.0f32; pruned.input_elems()];
+        rng.fill_normal(&mut input, 1.0);
+        let mut ref_exec = NetworkExecutor::new(reference);
+        let want = ref_exec.forward_pool(&input, &pool).to_vec();
+        let mut exec = NetworkExecutor::new(Arc::clone(&pruned));
+        let got = exec.forward_pool(&input, &pool);
+        assert!(got == want, "elided forward must bit-match the unelided reference");
     }
 
     #[test]

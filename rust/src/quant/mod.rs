@@ -204,6 +204,150 @@ pub fn quantize_signed_binary(
     }
 }
 
+/// Structured-sparsity mask mode applied to latent weights before
+/// quantization — the density knob of the repetition-sparsity trade-off
+/// curve. Masked latents are forced to zero *before* the alpha/beta fit
+/// (so they are excluded from every effectual-magnitude mean) and
+/// always quantize to exactly 0.
+///
+/// Group layout follows PLINIO's KHWC convention: for each filter `k`
+/// and spatial tap `(r, s)`, mask groups run along the input-channel
+/// axis `C`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SparsityPattern {
+    /// No mask: density is whatever the scheme produces on its own.
+    #[default]
+    Unstructured,
+    /// At most `n` non-zero latents per group of `m` consecutive input
+    /// channels (N:M pruning): the `m - n` smallest-magnitude latents of
+    /// each group are masked, ties broken toward keeping the lower
+    /// channel index.
+    NM {
+        /// kept (non-zero) latents per group
+        n: usize,
+        /// group size along the input-channel axis
+        m: usize,
+    },
+    /// Block-wise pruning (Intel neural-compressor style): input
+    /// channels are split into blocks of `s`; within each adjacent pair
+    /// of blocks, the block with the smaller L1 magnitude is masked
+    /// whole (ties mask the later block).
+    Block {
+        /// block length along the input-channel axis
+        s: usize,
+    },
+}
+
+impl SparsityPattern {
+    /// Short label for bench shapes ("unstructured", "nm1:4", "block4").
+    pub fn label(&self) -> String {
+        match self {
+            SparsityPattern::Unstructured => "unstructured".to_string(),
+            SparsityPattern::NM { n, m } => format!("nm{n}:{m}"),
+            SparsityPattern::Block { s } => format!("block{s}"),
+        }
+    }
+}
+
+/// Keep-mask for `w` (latents, `[K, C, R, S]`) under `pattern`: `true`
+/// entries survive, `false` entries are pruned. Selection is
+/// deterministic — magnitudes compare by `f32` total order and ties
+/// keep the lower channel index — so the mask is a pure function of the
+/// latents (byte-identical across runs and thread counts).
+pub fn sparsity_mask(w: &Tensor, pattern: SparsityPattern) -> Vec<bool> {
+    let (k, c, r, s) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    let taps = r * s;
+    let d = w.data();
+    let mut keep = vec![true; d.len()];
+    // KHWC grouping: fixed (k, r, s), the group axis is C — element
+    // (k, c, r, s) lives at ((k * C + c) * R + r) * S + s in KCRS.
+    let idx = |ki: usize, ci: usize, t: usize| (ki * c + ci) * taps + t;
+    match pattern {
+        SparsityPattern::Unstructured => {}
+        SparsityPattern::NM { n, m } => {
+            assert!(m > 0 && n <= m, "N:M needs 0 < M and N <= M, got {n}:{m}");
+            for ki in 0..k {
+                for t in 0..taps {
+                    let mut c0 = 0;
+                    while c0 < c {
+                        let g = m.min(c - c0);
+                        // rank the group's channels: larger |latent|
+                        // first, lower channel index on ties
+                        let mut order: Vec<usize> = (c0..c0 + g).collect();
+                        order.sort_by(|a, b| {
+                            let (va, vb) = (d[idx(ki, *a, t)].abs(), d[idx(ki, *b, t)].abs());
+                            vb.total_cmp(&va).then(a.cmp(b))
+                        });
+                        for &ci in &order[n.min(g)..] {
+                            keep[idx(ki, ci, t)] = false;
+                        }
+                        c0 += g;
+                    }
+                }
+            }
+        }
+        SparsityPattern::Block { s: bs } => {
+            assert!(bs > 0, "block size must be positive");
+            for ki in 0..k {
+                for t in 0..taps {
+                    let mut b0 = 0;
+                    // walk complete block pairs; a ragged / unpaired
+                    // tail survives unmasked
+                    while b0 + 2 * bs <= c {
+                        let l1 = |start: usize| -> f32 {
+                            (start..start + bs).map(|ci| d[idx(ki, ci, t)].abs()).sum()
+                        };
+                        let (sa, sb) = (l1(b0), l1(b0 + bs));
+                        let victim = if sa < sb { b0 } else { b0 + bs };
+                        for ci in victim..victim + bs {
+                            keep[idx(ki, ci, t)] = false;
+                        }
+                        b0 += 2 * bs;
+                    }
+                }
+            }
+        }
+    }
+    keep
+}
+
+/// Quantize `w` under `scheme` with a structured-sparsity mask applied
+/// first: masked latents are zeroed before the fit (a zeroed latent
+/// falls below every positive Delta, so it is excluded from the
+/// effectual mean) and forced to exactly 0 in the output — the
+/// unconditional re-mask covers the `delta == 0` edge. `Fp` and
+/// `Binary` cannot represent a zero weight, so they only accept
+/// [`SparsityPattern::Unstructured`].
+pub fn quantize_pruned(
+    w: &Tensor,
+    scheme: Scheme,
+    beta: Option<&[f32]>,
+    pattern: SparsityPattern,
+) -> QuantizedWeights {
+    if pattern == SparsityPattern::Unstructured {
+        return quantize(w, scheme, beta);
+    }
+    assert!(
+        !matches!(scheme, Scheme::Fp | Scheme::Binary),
+        "{} cannot represent pruned (zero) weights — use ternary or signed-binary",
+        scheme.name()
+    );
+    let keep = sparsity_mask(w, pattern);
+    let mut masked = w.clone();
+    for (v, kp) in masked.data_mut().iter_mut().zip(&keep) {
+        if !*kp {
+            *v = 0.0;
+        }
+    }
+    let mut q = quantize(&masked, scheme, beta);
+    for (v, kp) in q.values.data_mut().iter_mut().zip(&keep) {
+        if !*kp {
+            *v = 0.0;
+        }
+    }
+    q
+}
+
 /// Deterministic region sign assignment: first p_pos fraction +1 —
 /// matches `ref.default_beta` on the python side.
 pub fn default_beta(num_regions: usize, p_pos: f64) -> Vec<f32> {
@@ -319,6 +463,72 @@ mod tests {
     fn default_beta_prefix() {
         let b = default_beta(8, 0.25);
         assert_eq!(b.iter().filter(|v| **v > 0.0).count(), 2);
+    }
+
+    #[test]
+    fn nm_mask_keeps_at_most_n_per_group() {
+        let w = w_fixture(7); // [4, 8, 3, 3]
+        for (n, m) in [(1usize, 4usize), (2, 4), (2, 8), (3, 5)] {
+            let q = quantize_pruned(&w, Scheme::sb_default(), None, SparsityPattern::NM { n, m });
+            let (c, taps) = (8usize, 9usize);
+            for ki in 0..4 {
+                for t in 0..taps {
+                    let mut c0 = 0;
+                    while c0 < c {
+                        let g = m.min(c - c0);
+                        let nnz = (c0..c0 + g)
+                            .filter(|ci| q.values.data()[(ki * c + ci) * taps + t] != 0.0)
+                            .count();
+                        assert!(nnz <= n, "{n}:{m} group (k{ki} t{t} c{c0}) has {nnz} nonzero");
+                        c0 += g;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nm_ties_break_to_lower_channel() {
+        // every latent identical: the deterministic tie-break must keep
+        // exactly the first n channels of each group
+        let w = Tensor::filled(&[1, 8, 1, 1], 0.5);
+        let keep = sparsity_mask(&w, SparsityPattern::NM { n: 1, m: 4 });
+        assert_eq!(keep, [true, false, false, false, true, false, false, false]);
+        let keep2 = sparsity_mask(&w, SparsityPattern::NM { n: 2, m: 4 });
+        assert_eq!(keep2, [true, true, false, false, true, true, false, false]);
+    }
+
+    #[test]
+    fn masked_latents_are_excluded_from_the_alpha_fit() {
+        // beta = +1, latents [0.9, 0.5, 0.4, 0.3]: 2:4 masks the two
+        // smallest, so alpha must be mean(0.9, 0.5), not the mean over
+        // all four effectual latents
+        let mut w = Tensor::filled(&[1, 4, 1, 1], 0.0);
+        w.data_mut().copy_from_slice(&[0.9, 0.5, 0.4, 0.3]);
+        let scheme = Scheme::SignedBinary { delta_frac: 0.05, regions_per_filter: 1 };
+        let q = quantize_pruned(&w, scheme, Some(&[1.0]), SparsityPattern::NM { n: 2, m: 4 });
+        assert!((q.alpha[0] - 0.7).abs() < 1e-6, "alpha {} includes masked latents", q.alpha[0]);
+        assert_eq!(q.values.data()[2], 0.0);
+        assert_eq!(q.values.data()[3], 0.0);
+    }
+
+    #[test]
+    fn block_mask_prunes_the_smaller_block_of_each_pair() {
+        let mut w = Tensor::filled(&[1, 4, 1, 1], 0.0);
+        w.data_mut().copy_from_slice(&[0.1, 0.1, 0.9, 0.9]);
+        let keep = sparsity_mask(&w, SparsityPattern::Block { s: 2 });
+        assert_eq!(keep, [false, false, true, true]);
+        // tie: the later block is pruned, keeping lower channels
+        let tied = Tensor::filled(&[1, 4, 1, 1], 0.5);
+        let tied_keep = sparsity_mask(&tied, SparsityPattern::Block { s: 2 });
+        assert_eq!(tied_keep, [true, true, false, false]);
+    }
+
+    #[test]
+    fn pattern_labels_and_default() {
+        assert_eq!(SparsityPattern::default(), SparsityPattern::Unstructured);
+        assert_eq!(SparsityPattern::NM { n: 2, m: 4 }.label(), "nm2:4");
+        assert_eq!(SparsityPattern::Block { s: 4 }.label(), "block4");
     }
 
     #[test]

@@ -51,10 +51,13 @@
 //! and their accumulation order are unchanged, so fused output stays
 //! bit-identical to the unfused path.
 //!
-//! With sparsity support ON, zero entries never enter a sum and all-zero
-//! patterns are skipped. OFF, the zero group is summed and multiplied by
-//! zero — faithfully modelling a repetition-only system (paper §5.1
-//! config 1).
+//! Sparsity support is a **plan-time property**: with support ON the
+//! plan's arena is elided — zero columns were never materialized and
+//! all-zero patterns share one no-op span — so step 1 walks pos/neg
+//! runs only and there is no zero branch anywhere in the hot loop. OFF,
+//! the plan materializes zero runs and a separate whole-loop variant
+//! sums each zero group and multiplies it by zero — faithfully
+//! modelling a repetition-only system (paper §5.1 config 1).
 
 use crate::tensor::{
     im2col_rows_transposed_from_blocked_into, im2col_rows_transposed_into, Tensor,
@@ -355,31 +358,66 @@ pub fn execute_conv2d_layout(
                 // 1. distinct-pattern partial sums — one streaming pass
                 // over the CSR arena; each column gather is a contiguous
                 // PB-wide load + add (ragged lanes are zero-padded, so
-                // full-width ops are safe and deterministic)
-                for (gp, sp) in spans.iter().enumerate() {
-                    let acc: &mut [f32; PB] =
-                        (&mut scr.psums[gp * PB..gp * PB + PB]).try_into().unwrap();
-                    *acc = [0.0; PB];
-                    let s = sp.start as usize;
-                    let p_end = s + sp.pos as usize;
-                    let n_end = p_end + sp.neg as usize;
-                    for &col in &cols[s..p_end] {
-                        let src: &[f32; PB] = bpatch[col as usize * PB..col as usize * PB + PB]
-                            .try_into()
-                            .unwrap();
-                        for b in 0..PB {
-                            acc[b] += src[b];
+                // full-width ops are safe and deterministic). Sparsity
+                // support is a plan-time property, so the zero handling
+                // is a whole-loop variant, never a per-pattern branch:
+                // with support the elided arena holds only pos/neg runs
+                // (zero columns do not exist); without it the
+                // repetition-only arm sums each materialized zero group
+                // and multiplies by 0.
+                if plan.cfg.sparsity_support {
+                    for (gp, sp) in spans.iter().enumerate() {
+                        let acc: &mut [f32; PB] =
+                            (&mut scr.psums[gp * PB..gp * PB + PB]).try_into().unwrap();
+                        *acc = [0.0; PB];
+                        let s = sp.start as usize;
+                        let p_end = s + sp.pos as usize;
+                        let n_end = p_end + sp.neg as usize;
+                        for &col in &cols[s..p_end] {
+                            let src: &[f32; PB] = bpatch
+                                [col as usize * PB..col as usize * PB + PB]
+                                .try_into()
+                                .unwrap();
+                            for b in 0..PB {
+                                acc[b] += src[b];
+                            }
+                        }
+                        for &col in &cols[p_end..n_end] {
+                            let src: &[f32; PB] = bpatch
+                                [col as usize * PB..col as usize * PB + PB]
+                                .try_into()
+                                .unwrap();
+                            for b in 0..PB {
+                                acc[b] -= src[b];
+                            }
                         }
                     }
-                    for &col in &cols[p_end..n_end] {
-                        let src: &[f32; PB] = bpatch[col as usize * PB..col as usize * PB + PB]
-                            .try_into()
-                            .unwrap();
-                        for b in 0..PB {
-                            acc[b] -= src[b];
+                } else {
+                    for (gp, sp) in spans.iter().enumerate() {
+                        let acc: &mut [f32; PB] =
+                            (&mut scr.psums[gp * PB..gp * PB + PB]).try_into().unwrap();
+                        *acc = [0.0; PB];
+                        let s = sp.start as usize;
+                        let p_end = s + sp.pos as usize;
+                        let n_end = p_end + sp.neg as usize;
+                        for &col in &cols[s..p_end] {
+                            let src: &[f32; PB] = bpatch
+                                [col as usize * PB..col as usize * PB + PB]
+                                .try_into()
+                                .unwrap();
+                            for b in 0..PB {
+                                acc[b] += src[b];
+                            }
                         }
-                    }
-                    if !plan.cfg.sparsity_support {
+                        for &col in &cols[p_end..n_end] {
+                            let src: &[f32; PB] = bpatch
+                                [col as usize * PB..col as usize * PB + PB]
+                                .try_into()
+                                .unwrap();
+                            for b in 0..PB {
+                                acc[b] -= src[b];
+                            }
+                        }
                         // repetition-only mode: the zero group is summed
                         // like any other repeated value, then multiplied
                         // by 0.
@@ -458,7 +496,7 @@ pub fn execute_conv2d_layout(
 mod tests {
     use super::*;
     use crate::quant::{default_beta, quantize, quantize_signed_binary, Scheme};
-    use crate::repetition::{plan_layer, EngineConfig};
+    use crate::repetition::{plan_layer, EngineConfig, LayerPlan};
     use crate::tensor::{conv2d_gemm, Conv2dGeometry};
     use crate::util::Rng;
 
@@ -501,6 +539,31 @@ mod tests {
         let plane = 9;
         for i in 0..plane {
             assert_eq!(out.data()[i], 0.0, "filter 0 must be silent");
+        }
+    }
+
+    #[test]
+    fn elided_plan_bits_match_unelided_reference() {
+        // plan-time elision must not change a single bit: the unelided
+        // reference arena (zero runs materialized, all-zero patterns
+        // owning real spans) executes through the same sparsity-on loop
+        let mut rng = Rng::new(48);
+        let g = Conv2dGeometry { n: 2, c: 8, h: 7, w: 7, k: 12, r: 3, s: 3, stride: 1, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let cfg = EngineConfig { subtile: 8, sparsity_support: true };
+        let elided = plan_layer(&q, g, cfg);
+        let reference = LayerPlan::build_pool_unelided(&q, g, cfg, &Pool::new(1));
+        assert!(elided.arena.cols.len() < reference.arena.cols.len(), "nothing was elided");
+        // both builders account the same columns, elided or not
+        assert_eq!(elided.stats.total_cols, reference.stats.total_cols);
+        assert_eq!(elided.stats.effectual_cols, reference.stats.effectual_cols);
+        for threads in [1, 2, 4] {
+            let pool = Pool::new(threads);
+            let a = execute_conv2d_pool(&elided, &x, &pool);
+            let b = execute_conv2d_pool(&reference, &x, &pool);
+            assert!(a.data() == b.data(), "{threads}-thread elided forward differs");
         }
     }
 

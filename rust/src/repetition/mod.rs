@@ -14,10 +14,14 @@
 //!    them. Fewer distinct patterns == more repetition == less work. This
 //!    is why binary (2^T possible patterns) beats ternary (3^T) — the
 //!    paper's exponential-repetition-loss argument made concrete.
-//! 3. **Sparsity support** (on/off, paper §5.1): when ON, zero weights
-//!    inside a pattern are skipped and all-zero patterns cost nothing;
-//!    when OFF the engine treats 0 as just another repeated value and
-//!    sums its group like any other.
+//! 3. **Sparsity support** (on/off, paper §5.1): a *plan-time*
+//!    property, not an execute-time branch. ON, the plan **elides**
+//!    ineffectual work outright — zero columns are dropped from the
+//!    pattern arena and all-zero patterns fold into one shared no-op
+//!    span — so the hot loop never even sees a zero weight; per-layer
+//!    [`DensityStats`] record what was elided. OFF, the engine treats 0
+//!    as just another repeated value and sums its group like any other
+//!    (the repetition-only baseline arm).
 //! 4. **Filter dedup**: structurally identical quantized filters are
 //!    computed once (inter-filter repetition, BNN's 42% observation).
 //!
@@ -68,7 +72,7 @@ pub use exec::{
     execute_conv2d_tiled, option_a_stride, tile_supports_blocked_io, validate_blocked_tile,
     PostOp, Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
 };
-pub use plan::{LayerPlan, OpCounts, PatternArena, PatternSpan};
+pub use plan::{DensityStats, LayerPlan, OpCounts, PatternArena, PatternSpan};
 
 use crate::quant::QuantizedWeights;
 use crate::tensor::Conv2dGeometry;

@@ -85,16 +85,34 @@ impl PatternSpan {
 /// `PartialEq`/`Eq` compare the raw buffers — used by tests and the
 /// plan-build scaling harness to assert the arena is byte-identical
 /// regardless of how many threads built it.
+///
+/// **Elision** (sparsity support ON): zero columns are never
+/// materialized — each span's `zero` field survives as a *count* for
+/// accounting, but `cols` holds only the effectual pos/neg runs, and
+/// every all-zero (ineffectual) pattern shares one no-op span
+/// ([`PatternArena::noop_slot`]) instead of owning arena storage. The
+/// executor's hot loop therefore never touches a zero column. Sparsity
+/// OFF (and [`LayerPlan::build_pool_unelided`]) materializes the zero
+/// runs as before.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct PatternArena {
     /// absolute C*R*S column indices, pattern-contiguous (pos|neg|zero
-    /// runs back to back); the sub-tile base is already folded in
+    /// runs back to back — zero runs only when `zeros_materialized`);
+    /// the sub-tile base is already folded in
     pub cols: Vec<u32>,
     /// one span per distinct pattern, in sub-tile order
     pub spans: Vec<PatternSpan>,
     /// `spans` index where each sub-tile's patterns begin;
-    /// `len == num_tables + 1` (CSR row pointers)
+    /// `len == num_tables + 1` (CSR row pointers). An elided arena's
+    /// shared no-op span sits at slot 0, *before* `table_base[0]`.
     pub table_base: Vec<u32>,
+    /// zero runs are materialized in `cols` (repetition-only builds and
+    /// the unelided reference builder); elided arenas keep only the
+    /// `zero` count on each span
+    pub zeros_materialized: bool,
+    /// global span slot shared by every all-zero pattern (elided
+    /// arenas); `None` when all-zero patterns own real spans
+    pub noop_slot: Option<u32>,
 }
 
 impl PatternArena {
@@ -113,14 +131,43 @@ impl PatternArena {
         (self.table_base[ti + 1] - self.table_base[ti]) as usize
     }
 
-    /// The (pos, neg, zero) column slices of pattern `gp`.
+    /// The (pos, neg, zero) column slices of pattern `gp`. An elided
+    /// arena does not materialize zero runs, so its zero slice is empty
+    /// even when `spans[gp].zero > 0` (the count survives for
+    /// accounting).
     pub fn pattern_cols(&self, gp: usize) -> (&[u32], &[u32], &[u32]) {
         let sp = self.spans[gp];
         let s = sp.start as usize;
         let p = s + sp.pos as usize;
         let n = p + sp.neg as usize;
-        let z = n + sp.zero as usize;
+        let z = if self.zeros_materialized { n + sp.zero as usize } else { n };
         (&self.cols[s..p], &self.cols[p..n], &self.cols[n..z])
+    }
+}
+
+/// Per-layer effectual-density accounting recorded at plan-build time —
+/// the numbers the `plum bench density` sweep reports (the paper's
+/// repetition-sparsity trade-off curve).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DensityStats {
+    /// weight columns over all original filters (effectual + zero)
+    pub total_cols: u64,
+    /// non-zero weight columns (what the elided arena materializes,
+    /// weighted by original-filter usage)
+    pub effectual_cols: u64,
+    /// distinct all-zero patterns folded into the shared no-op slot
+    /// (0 when the build did not elide)
+    pub elided_spans: u64,
+}
+
+impl DensityStats {
+    /// Effectual / total columns (1.0 for an empty layer).
+    pub fn density(&self) -> f64 {
+        if self.total_cols == 0 {
+            1.0
+        } else {
+            self.effectual_cols as f64 / self.total_cols as f64
+        }
     }
 }
 
@@ -163,6 +210,8 @@ pub struct LayerPlan {
     pub unique_of_filter: Vec<u32>,
     /// distinct structural filters after dedup
     pub num_unique_filters: usize,
+    /// effectual-density accounting recorded at build time
+    pub stats: DensityStats,
 }
 
 /// One sub-tile's memoization result, built independently of every
@@ -189,12 +238,46 @@ impl LayerPlan {
     /// combine table and span layout are byte-identical for every pool
     /// width (asserted by `arena_identical_for_every_thread_count` and
     /// the `bench_repetition` plan-build study).
+    ///
+    /// With `cfg.sparsity_support` the arena is **elided**: zero
+    /// columns get no arena slots and all-zero patterns fold into one
+    /// shared no-op span (see [`PatternArena`]).
     pub fn build_pool(
         q: &QuantizedWeights,
         geom: Conv2dGeometry,
         cfg: EngineConfig,
         pool: &Pool,
     ) -> LayerPlan {
+        Self::build_pool_impl(q, geom, cfg, pool, cfg.sparsity_support)
+    }
+
+    /// Reference builder for tests and benches: sparsity-ON execution
+    /// semantics *without* plan-time elision — zero runs materialized,
+    /// all-zero patterns owning real spans, exactly the arena every
+    /// build produced before elision landed. The executor never reads
+    /// zero columns when `sparsity_support` is on, so this plan's
+    /// forward must stay bit-identical to the elided plan's at every
+    /// pool width; the property tests and the `bench density` sweep
+    /// assert exactly that invariant.
+    pub fn build_pool_unelided(
+        q: &QuantizedWeights,
+        geom: Conv2dGeometry,
+        cfg: EngineConfig,
+        pool: &Pool,
+    ) -> LayerPlan {
+        Self::build_pool_impl(q, geom, cfg, pool, false)
+    }
+
+    fn build_pool_impl(
+        q: &QuantizedWeights,
+        geom: Conv2dGeometry,
+        cfg: EngineConfig,
+        pool: &Pool,
+        elide: bool,
+    ) -> LayerPlan {
+        // fragment-local slot marking an all-zero window the merge maps
+        // to the shared no-op span
+        const ELIDED: u32 = u32::MAX;
         assert!(cfg.subtile > 0);
         let k = geom.k;
         let e = geom.c * geom.r * geom.s;
@@ -249,8 +332,14 @@ impl LayerPlan {
             for sig in sigs {
                 let window = &sig[base..base + len];
                 let slot = *pat_map.entry(window).or_insert_with(|| {
-                    // new distinct pattern: append its pos/neg/zero column
-                    // runs (absolute indices) and a span
+                    if elide && window.iter().all(|sgn| *sgn == 0) {
+                        // ineffectual pattern: no span, no columns — the
+                        // merge maps it to the shared no-op slot
+                        return ELIDED;
+                    }
+                    // new distinct pattern: append its pos/neg (and,
+                    // unelided, zero) column runs and a span; elided
+                    // builds keep the zero run as a count only
                     let start = frag.cols.len() as u32;
                     let mut pos = 0u32;
                     let mut neg = 0u32;
@@ -269,7 +358,9 @@ impl LayerPlan {
                     }
                     for (off, sgn) in window.iter().enumerate() {
                         if *sgn == 0 {
-                            frag.cols.push((base + off) as u32);
+                            if !elide {
+                                frag.cols.push((base + off) as u32);
+                            }
                             zero += 1;
                         }
                     }
@@ -284,9 +375,25 @@ impl LayerPlan {
         // ---- deterministic merge: walk fragments in sub-tile order and
         // offset their local span starts / pattern slots into the one
         // contiguous CSR arena ------------------------------------------
-        let mut arena = PatternArena { cols: Vec::new(), spans: Vec::new(), table_base: vec![0] };
+        let mut arena = PatternArena {
+            cols: Vec::new(),
+            spans: Vec::new(),
+            table_base: vec![0],
+            zeros_materialized: !elide,
+            noop_slot: None,
+        };
+        if elide {
+            // global slot 0: the shared no-op span every ineffectual
+            // (all-zero) pattern combines through. Its partial sum is
+            // always [0.0; PIXEL_BLOCK], so a filter combining through
+            // it adds exactly +0.0 — value-preserving by construction.
+            arena.spans.push(PatternSpan { start: 0, pos: 0, neg: 0, zero: 0 });
+            arena.table_base[0] = 1;
+            arena.noop_slot = Some(0);
+        }
         let mut table_len = Vec::with_capacity(num_tables);
         let mut combine = vec![0u32; nu * num_tables];
+        let mut elided_spans = 0u64;
         for (ti, cell) in frags.iter().enumerate() {
             let frag = cell
                 .lock()
@@ -304,11 +411,31 @@ impl LayerPlan {
             arena.table_base.push(arena.spans.len() as u32);
             // per unique filter, its pattern slots across sub-tiles are
             // adjacent — the executor's combine layout
+            let mut saw_elided = false;
             for (ui, &slot) in frag.slots.iter().enumerate() {
-                combine[ui * num_tables + ti] = span_off + slot;
+                combine[ui * num_tables + ti] = if slot == ELIDED {
+                    saw_elided = true;
+                    0 // the shared no-op slot
+                } else {
+                    span_off + slot
+                };
+            }
+            if saw_elided {
+                elided_spans += 1;
             }
             table_len.push(frag.len);
         }
+
+        // effectual-density accounting over *original* filters (so the
+        // numbers match the weight tensor's count_nonzero exactly)
+        let mut effectual_cols = 0u64;
+        for &ui in &unique_of_filter {
+            let row = &combine[ui as usize * num_tables..(ui as usize + 1) * num_tables];
+            for &gp in row {
+                effectual_cols += arena.spans[gp as usize].nnz();
+            }
+        }
+        let stats = DensityStats { total_cols: (k * e) as u64, effectual_cols, elided_spans };
 
         LayerPlan {
             geom,
@@ -320,6 +447,7 @@ impl LayerPlan {
             alpha: per_filter_alpha(q, k, e),
             unique_of_filter,
             num_unique_filters: nu,
+            stats,
         }
     }
 
@@ -480,40 +608,139 @@ mod tests {
 
     #[test]
     fn arena_is_contiguous_and_consistent() {
+        // repetition-only builds (and the unelided reference builder)
+        // materialize every column, so the strict CSR invariants hold
         let mut rng = Rng::new(25);
         let w = Tensor::rand_normal(&[12, 6, 3, 3], 0.5, &mut rng);
         let g = geom(6, 12);
+        let cfg_off = EngineConfig { subtile: 8, sparsity_support: false };
+        let cfg_on = EngineConfig { subtile: 8, sparsity_support: true };
         for scheme in [Scheme::Binary, Scheme::ternary_default(), Scheme::sb_default()] {
             let q = quantize(&w, scheme, None);
+            let pool = crate::util::Pool::new(1);
+            let off = LayerPlan::build(&q, g, cfg_off);
+            let unelided = LayerPlan::build_pool_unelided(&q, g, cfg_on, &pool);
+            for plan in [&off, &unelided] {
+                let e = g.c * g.r * g.s;
+                let a = &plan.arena;
+                assert!(a.zeros_materialized);
+                assert_eq!(a.noop_slot, None);
+                // spans tile `cols` exactly, back to back
+                let mut cursor = 0u32;
+                for sp in &a.spans {
+                    assert_eq!(sp.start, cursor, "spans must be contiguous");
+                    cursor += sp.pos + sp.neg + sp.zero;
+                }
+                assert_eq!(cursor as usize, a.cols.len());
+                // every pattern covers its whole sub-tile once
+                assert_eq!(a.table_base.len(), plan.num_tables + 1);
+                for ti in 0..plan.num_tables {
+                    for gp in a.table_base[ti] as usize..a.table_base[ti + 1] as usize {
+                        assert_eq!(a.spans[gp].len(), plan.table_len[ti]);
+                    }
+                }
+                // columns are absolute and in range; combine indexes valid slots
+                assert!(a.cols.iter().all(|c| (*c as usize) < e));
+                assert_eq!(plan.combine.len(), plan.num_unique_filters * plan.num_tables);
+                assert!(plan.combine.iter().all(|s| (*s as usize) < a.num_patterns()));
+                // combine's per-table slots stay inside that table's span range
+                for ui in 0..plan.num_unique_filters {
+                    for ti in 0..plan.num_tables {
+                        let gp = plan.combine[ui * plan.num_tables + ti];
+                        assert!(gp >= a.table_base[ti] && gp < a.table_base[ti + 1]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elided_arena_invariants() {
+        // sparsity-on builds elide: no zero columns in the arena, no
+        // all-zero spans except the shared no-op at slot 0, combine
+        // slots either in-table or the no-op
+        let mut rng = Rng::new(25);
+        let w = Tensor::rand_normal(&[12, 6, 3, 3], 0.5, &mut rng);
+        let g = geom(6, 12);
+        for scheme in [Scheme::ternary_default(), Scheme::sb_default()] {
+            let q = quantize(&w, scheme, None);
             let plan = LayerPlan::build(&q, g, EngineConfig { subtile: 8, sparsity_support: true });
-            let e = g.c * g.r * g.s;
             let a = &plan.arena;
-            // spans tile `cols` exactly, back to back
+            assert!(!a.zeros_materialized);
+            assert_eq!(a.noop_slot, Some(0));
+            assert!(a.spans[0].is_all_zero() && a.spans[0].len() == 0);
+            assert_eq!(a.table_base[0], 1, "tables start after the no-op span");
+            // spans tile `cols` back to back by their *effectual* runs
             let mut cursor = 0u32;
             for sp in &a.spans {
                 assert_eq!(sp.start, cursor, "spans must be contiguous");
-                cursor += sp.pos + sp.neg + sp.zero;
+                cursor += sp.pos + sp.neg;
             }
             assert_eq!(cursor as usize, a.cols.len());
-            // every pattern covers its whole sub-tile once
-            assert_eq!(a.table_base.len(), plan.num_tables + 1);
+            for (gp, sp) in a.spans.iter().enumerate() {
+                if gp > 0 {
+                    assert!(sp.nnz() > 0, "span {gp} is ineffectual but owns a slot");
+                }
+                // zero *counts* survive: in-table spans still cover the
+                // whole sub-tile by len()
+            }
             for ti in 0..plan.num_tables {
                 for gp in a.table_base[ti] as usize..a.table_base[ti + 1] as usize {
                     assert_eq!(a.spans[gp].len(), plan.table_len[ti]);
                 }
-            }
-            // columns are absolute and in range; combine indexes valid slots
-            assert!(a.cols.iter().all(|c| (*c as usize) < e));
-            assert_eq!(plan.combine.len(), plan.num_unique_filters * plan.num_tables);
-            assert!(plan.combine.iter().all(|s| (*s as usize) < a.num_patterns()));
-            // combine's per-table slots stay inside that table's span range
-            for ui in 0..plan.num_unique_filters {
-                for ti in 0..plan.num_tables {
+                for ui in 0..plan.num_unique_filters {
                     let gp = plan.combine[ui * plan.num_tables + ti];
-                    assert!(gp >= a.table_base[ti] && gp < a.table_base[ti + 1]);
+                    let in_table = gp >= a.table_base[ti] && gp < a.table_base[ti + 1];
+                    assert!(in_table || gp == 0, "combine slot {gp} outside table {ti}");
                 }
             }
+            // the zero slice of every pattern is empty (not materialized)
+            for gp in 0..a.num_patterns() {
+                let (_, _, zero) = a.pattern_cols(gp);
+                assert!(zero.is_empty());
+            }
+            // density stats match the quantized tensor exactly
+            assert_eq!(plan.stats.total_cols as usize, q.values.len());
+            assert_eq!(plan.stats.effectual_cols as usize, q.values.count_nonzero());
+            assert!((plan.stats.density() - q.density()).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn all_zero_filter_costs_nothing_in_the_elided_arena() {
+        // regression (the pre-elision engine gave all-zero patterns a
+        // real span and combine slots each): filter 0 quantizes to
+        // all-zero under SB beta=+1, and with sparsity support its
+        // patterns must occupy zero arena storage
+        let mut w = Tensor::filled(&[2, 2, 3, 3], -0.001);
+        for i in 18..36 {
+            w.data_mut()[i] = 0.9; // filter 1 all positive
+        }
+        let q = quantize_signed_binary(&w, &[1.0, 1.0], 0.05, 1);
+        let g = geom(2, 2);
+        let plan = LayerPlan::build(&q, g, EngineConfig { subtile: 8, sparsity_support: true });
+        let noop = plan.arena.noop_slot.expect("elided arena has a no-op slot");
+        let ui0 = plan.unique_of_filter[0] as usize;
+        for ti in 0..plan.num_tables {
+            assert_eq!(
+                plan.combine[ui0 * plan.num_tables + ti],
+                noop,
+                "all-zero filter must combine through the shared no-op slot"
+            );
+        }
+        // no span besides the shared no-op is ineffectual, and the
+        // no-op itself is free
+        for (gp, sp) in plan.arena.spans.iter().enumerate() {
+            if gp as u32 != noop {
+                assert!(sp.nnz() > 0, "span {gp} is ineffectual but kept");
+            }
+        }
+        assert_eq!(plan.arena.spans[noop as usize].adds(true), 0);
+        // one elided pattern per sub-tile; filter 1's 18 weights are
+        // the only effectual columns
+        assert_eq!(plan.stats.elided_spans, plan.num_tables as u64);
+        assert_eq!(plan.stats.effectual_cols, 18);
+        assert_eq!(plan.stats.total_cols, 36);
     }
 
     #[test]

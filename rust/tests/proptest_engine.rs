@@ -5,8 +5,8 @@
 //! literal SumMerge CSE DAG (`CseDag::eval_row`) — three independently
 //! built evaluators of the same quantized conv.
 
-use plum::quant::{self, Scheme};
-use plum::repetition::{build_cse, execute_conv2d_tiled, plan_layer, EngineConfig};
+use plum::quant::{self, quantize_pruned, Scheme, SparsityPattern};
+use plum::repetition::{build_cse, execute_conv2d_tiled, plan_layer, EngineConfig, LayerPlan};
 use plum::tensor::{conv2d_gemm_pool, im2col, Conv2dGeometry, Tensor};
 use plum::util::{Pool, Rng};
 
@@ -80,6 +80,54 @@ fn random_geometries_match_gemm_and_cse_dag() {
                 );
             }
             px += step;
+        }
+    }
+}
+
+/// Plan-time elision is a pure representation change: for arbitrary
+/// geometries, structured-sparsity patterns and sub-tile draws, the
+/// elided plan (zero columns dropped from the arena, all-zero patterns
+/// mapped to the shared no-op slot) must produce bit-identical forwards
+/// to the unelided reference plan (`LayerPlan::build_pool_unelided`) at
+/// every pool width — the executor under sparsity support never reads
+/// zero columns, so the bits cannot move.
+#[test]
+fn elided_plans_bit_match_the_unelided_reference() {
+    let mut rng = Rng::new(0xE11D);
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let schemes = [Scheme::ternary_default(), Scheme::sb_default()];
+    for case in 0..16 {
+        let g = random_geometry(&mut rng);
+        let scheme = schemes[rng.below(schemes.len())];
+        let subtile = [3, 5, 8, 17][rng.below(4)];
+        let tile = [1, 5, 32, 100][rng.below(4)];
+        let pattern = match rng.below(4) {
+            0 => SparsityPattern::Unstructured,
+            1 => SparsityPattern::NM { n: 1, m: 2 + rng.below(4) },
+            2 => SparsityPattern::NM { n: 2, m: 4 },
+            _ => SparsityPattern::Block { s: 1 + rng.below(3) },
+        };
+        let ctx = format!(
+            "case {case}: {g:?} scheme {} subtile {subtile} tile {tile} pattern {:?}",
+            scheme.name(),
+            pattern
+        );
+
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let x = Tensor::rand_normal(&[g.n, g.c, g.h, g.w], 1.0, &mut rng);
+        let q = quantize_pruned(&w, scheme, None, pattern);
+        let cfg = EngineConfig { subtile, sparsity_support: true };
+        let elided = plan_layer(&q, g, cfg);
+        let reference = LayerPlan::build_pool_unelided(&q, g, cfg, &Pool::new(1));
+        assert!(
+            elided.arena.cols.len() <= reference.arena.cols.len(),
+            "elided arena must never be larger: {ctx}"
+        );
+        for t in [1, 2, ncpu] {
+            let pool = Pool::new(t);
+            let got = execute_conv2d_tiled(&elided, &x, &pool, tile);
+            let want = execute_conv2d_tiled(&reference, &x, &pool, tile);
+            assert!(got.data() == want.data(), "elided vs unelided bits at {t} threads: {ctx}");
         }
     }
 }
