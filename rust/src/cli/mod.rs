@@ -42,7 +42,14 @@ COMMANDS:
                                             repetition engine: CIFAR ResNet,
                                             resnet18c and a 1x1 chain, each with
                                             patch reuse off/on (the
-                                            network_forward_fused series);
+                                            network_forward_fused series), plus
+                                            the always-on batch ladder
+                                            (forward_batch at b 1/4/16/64,
+                                            network_forward_b{N} records, each
+                                            rung gated bitwise against N
+                                            independent b=1 forwards before
+                                            timing; --batch only sets the base
+                                            workloads' compile batch);
                                             --tile 0 (default) auto-tunes the
                                             execution tile, skipping candidates
                                             blocked I/O cannot carry
@@ -66,7 +73,11 @@ COMMANDS:
                                             version S seconds into the window
                                             (the zero-downtime swap drill:
                                             swap_drain_ms / swap_p99 /
-                                            swap_dropped records)
+                                            swap_dropped records); with
+                                            --max-batch > 1 a second short run
+                                            caps the batcher at one sample per
+                                            forward (serve_throughput_b1) so
+                                            the batched-goodput win is recorded
          compare --current FILE [--baseline FILE] [--tolerance F]
                                             fail on perf regression vs baseline
   serve [--backend engine|pjrt] --model NAME [--requests N] [--replicas R]
@@ -270,7 +281,10 @@ fn bench_density(cfg: &RunConfig, args: &Args) -> Result<()> {
 /// goodput, shed rate) for the CI compare gate. `--swap-at S` turns the
 /// run into the hot-swap drill: a fresh model version is deployed `S`
 /// seconds into the window under load and the series gains
-/// swap_drain_ms / swap_p99 / swap_dropped records.
+/// swap_drain_ms / swap_p99 / swap_dropped records. With
+/// `--max-batch > 1` a second short run caps the batcher at one sample
+/// per engine forward and records it as `serve_throughput_b1`, so the
+/// batched-goodput win stays measured.
 fn bench_serve(cfg: &RunConfig, args: &Args) -> Result<()> {
     let model = args.get_or("model", "resnet8");
     let image = args.get_usize("image", 16);

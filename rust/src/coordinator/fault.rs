@@ -57,6 +57,26 @@ impl<B: InferBackend> FlakyBackend<B> {
     pub fn batches(&self) -> usize {
         self.batches.get()
     }
+
+    /// One scheduled fault trip, shared by both inference entry points
+    /// so the batch-native path (`infer_n`) counts, jitters, panics and
+    /// errors exactly like the padded one.
+    fn trip(&self) -> Result<()> {
+        let n = self.batches.get() + 1;
+        self.batches.set(n);
+        if !self.jitter.is_zero() {
+            let us = self.jitter.as_micros() as usize;
+            let extra = self.rng.borrow_mut().below(us.max(1));
+            std::thread::sleep(Duration::from_micros(extra as u64));
+        }
+        if self.panic_every > 0 && n % self.panic_every == 0 {
+            panic!("injected fault: panic at batch {n}");
+        }
+        if self.error_every > 0 && n % self.error_every == 0 {
+            bail!("injected fault: error at batch {n}");
+        }
+        Ok(())
+    }
 }
 
 impl<B: InferBackend> InferBackend for FlakyBackend<B> {
@@ -73,20 +93,13 @@ impl<B: InferBackend> InferBackend for FlakyBackend<B> {
     }
 
     fn infer_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
-        let n = self.batches.get() + 1;
-        self.batches.set(n);
-        if !self.jitter.is_zero() {
-            let us = self.jitter.as_micros() as usize;
-            let extra = self.rng.borrow_mut().below(us.max(1));
-            std::thread::sleep(Duration::from_micros(extra as u64));
-        }
-        if self.panic_every > 0 && n % self.panic_every == 0 {
-            panic!("injected fault: panic at batch {n}");
-        }
-        if self.error_every > 0 && n % self.error_every == 0 {
-            bail!("injected fault: error at batch {n}");
-        }
+        self.trip()?;
         self.inner.infer_batch(x)
+    }
+
+    fn infer_n(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.trip()?;
+        self.inner.infer_n(x, n)
     }
 }
 
@@ -134,6 +147,18 @@ mod tests {
         assert!(f.infer_batch(&x).is_ok()); // 1
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.infer_batch(&x)));
         assert!(r.is_err(), "batch 2 should panic");
+    }
+
+    #[test]
+    fn infer_n_shares_the_fault_schedule() {
+        // the batch-native entry point must advance the same counter,
+        // so a chaos test's fault sequence is independent of which
+        // entry point the worker uses
+        let f = FlakyBackend::new(mock(), 0, 3, Duration::ZERO, 1);
+        assert_eq!(f.infer_n(&[5.0], 1).unwrap(), vec![5.0]); // 1
+        assert!(f.infer_batch(&[0.0, 0.0]).is_ok()); // 2
+        assert!(f.infer_n(&[5.0], 1).is_err()); // 3: injected error
+        assert_eq!(f.batches(), 3);
     }
 
     #[test]

@@ -25,7 +25,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::metrics::{Counter, LatencyHistogram};
 
@@ -76,8 +76,8 @@ impl InferRequest {
     }
 }
 
-/// Anything the worker can run a padded batch through. Abstracted so the
-/// coordinator's batching/routing invariants are property-testable
+/// Anything the worker can run an admitted batch through. Abstracted so
+/// the coordinator's batching/routing invariants are property-testable
 /// without PJRT in the loop.
 ///
 /// NOTE: deliberately *not* `Send` — PJRT handles hold thread-local
@@ -95,6 +95,26 @@ pub trait InferBackend: 'static {
     fn out_elems(&self) -> usize;
     /// Run exactly one device batch (len == batch_size * sample_elems).
     fn infer_batch(&self, x: &[f32]) -> Result<Vec<f32>>;
+    /// Run `n` live samples (`x.len() == n * sample_elems()`,
+    /// `1 <= n <= batch_size()`) and return exactly `n * out_elems()`
+    /// logits. The worker hands every admitted batch through this entry
+    /// point. The default implementation zero-pads up to the fixed
+    /// device batch, runs [`InferBackend::infer_batch`] once, and drops
+    /// the padding's logits — artifact-baked backends keep working
+    /// unchanged. Batch-native backends (e.g. the engine's
+    /// `EngineBackend`) override it to run exactly `n` images as one
+    /// forward, skipping the padded work entirely.
+    fn infer_n(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let bs = self.batch_size();
+        let sample = self.sample_elems();
+        ensure!(n >= 1 && n <= bs, "live batch {n} outside 1..={bs} (device batch)");
+        ensure!(x.len() == n * sample, "live buffer {} != {n} x {sample}", x.len());
+        let mut xs = vec![0.0f32; bs * sample];
+        xs[..x.len()].copy_from_slice(x);
+        let mut logits = self.infer_batch(&xs)?;
+        logits.truncate(n * self.out_elems());
+        Ok(logits)
+    }
 }
 
 /// Deterministic mock backend for coordinator tests: logit j of sample i
@@ -444,14 +464,27 @@ fn generation_body<B: InferBackend>(
             continue;
         }
         let t0 = Instant::now();
-        // zero-pad to the artifact's fixed batch size
-        let mut xs = vec![0.0f32; device_bs * sample];
+        // ship exactly the live requests: expired requests were
+        // partitioned out above and never reach the device, and
+        // batch-native backends run `n_live` images as ONE forward
+        // (the default `infer_n` zero-pads for fixed-batch artifacts)
+        let n_live = live.len();
+        let mut xs = vec![0.0f32; n_live * sample];
         for (i, req) in live.iter().enumerate() {
             if req.x.len() == sample {
                 xs[i * sample..(i + 1) * sample].copy_from_slice(&req.x);
             }
         }
-        match catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&xs))) {
+        let run = || -> Result<Vec<f32>> {
+            let logits = backend.infer_n(&xs, n_live)?;
+            ensure!(
+                logits.len() == n_live * classes,
+                "backend returned {} logits for {n_live} live requests of {classes}",
+                logits.len()
+            );
+            Ok(logits)
+        };
+        match catch_unwind(AssertUnwindSafe(run)) {
             Ok(Ok(logits)) => {
                 stats.latency.record(t0.elapsed());
                 stats.consecutive_failures.store(0, Ordering::SeqCst);
@@ -501,7 +534,9 @@ fn generation_body<B: InferBackend>(
 /// chaos-tested in rust/tests/chaos_serving.rs):
 /// * every admitted request receives exactly one typed reply;
 /// * device batches never exceed the backend batch size; short batches
-///   are zero-padded and the padding's outputs are discarded;
+///   run through `infer_n` (batch-native backends execute exactly the
+///   live requests; the default zero-pads and discards the padding's
+///   outputs), and expired requests never reach the device;
 /// * replies carry the logits of their own request (no cross-wiring);
 /// * admission is bounded: at most `policy.queue_depth` requests queue.
 pub fn spawn_worker<B, F>(factory: F, policy: ServePolicy) -> Result<WorkerHandle>

@@ -452,6 +452,12 @@ pub fn repetition_study(
 /// carries `swap_drain_ms` (old-generation drain time, ns), `swap_p99`
 /// (end-to-end p99 measured *across* the swap) and `swap_dropped`
 /// (replies lost without a typed error — gated to zero).
+///
+/// When `cfg.max_batch > 1` the study appends a **batched-goodput
+/// comparison**: a second short run under the same offered load with
+/// the batcher capped at one sample per engine forward, recorded as
+/// `serve_throughput_b1` — the gap to `serve_throughput` is the
+/// batch-first serving win (one `forward_batch` per admitted batch).
 pub fn serving_study(
     cfg: &RunConfig,
     model: &str,
@@ -494,6 +500,35 @@ pub fn serving_study(
             gflops: 0.0,
         },
     ];
+    if cfg.max_batch > 1 {
+        // batched-goodput comparison: same model, same offered load, but
+        // the batcher capped at one sample per engine forward (a short
+        // window is enough — goodput saturates in well under a second)
+        let b1_cfg = RunConfig { max_batch: 1, ..cfg.clone() };
+        let b1 = crate::experiments::serving::bench_serve_engine_opts(
+            &b1_cfg,
+            model,
+            image,
+            rps,
+            duration_s.min(1.0),
+            None,
+        )?;
+        println!(
+            "batched goodput: max_batch {} achieved {:.0} rps vs single-sample {:.0} rps \
+             ({:.2}x)",
+            cfg.max_batch,
+            report.achieved_rps,
+            b1.achieved_rps,
+            report.achieved_rps / b1.achieved_rps.max(1e-9),
+        );
+        points.push(ScalingPoint {
+            op: "serve_throughput_b1".to_string(),
+            shape: shape.clone(),
+            threads,
+            min_ns: 0,
+            gflops: b1.achieved_rps,
+        });
+    }
     if let Some(swap) = &report.swap {
         points.push(ScalingPoint {
             op: "swap_drain_ms".to_string(),
@@ -840,6 +875,114 @@ fn network_forward_ladder(
     Ok((points, base_out.unwrap()))
 }
 
+/// The `bench network` batch ladder: runtime batch sizes every run
+/// measures (and, for b4/b16, CI gates via BENCH_network.json).
+pub const BATCH_LADDER: &[usize] = &[1, 4, 16, 64];
+
+/// The always-on `bench network` batch ladder: one CIFAR ResNet-`depth`
+/// plan compiled at the widest rung of [`BATCH_LADDER`] and run at
+/// every `b` in it. Before any timing, each rung is **gated**:
+/// `forward_batch(b)` must be bitwise-identical to `b` independent b=1
+/// forwards through the same plan — at every pool width, with patch
+/// fusion on AND off — so a record is only ever emitted for a
+/// proven-correct batched forward (the PR-9 acceptance criterion,
+/// mirrored at small geometries by `tests/proptest_batch.rs`). Records
+/// land as `network_forward_b{N}` with per-image-honest GFLOP/s.
+fn network_batch_ladder(
+    cfg: &RunConfig,
+    depth: usize,
+    ecfg: EngineConfig,
+    threads: &[usize],
+    reps: usize,
+    tile: usize,
+) -> Result<Vec<ScalingPoint>> {
+    use crate::network::{NetworkExecutor, NetworkPlan};
+    use std::sync::Arc;
+
+    let bmax = *BATCH_LADDER.last().unwrap();
+    let layers = models::cifar_resnet_layers(depth, 1.0, 32, bmax);
+    let fused =
+        Arc::new(NetworkPlan::compile_seeded(&layers, ecfg, Scheme::sb_default(), cfg.seed)?);
+    let unfused = Arc::new(fused.without_patch_fusion());
+    let sample = fused.sample_elems();
+    let shape = format!("resnet{depth} bmax{bmax} 32px");
+    let macs_per_image = fused.dense_macs() as f64 / bmax as f64;
+    let mut rng = Rng::new(cfg.seed ^ 0xbac4);
+    let mut input = vec![0.0f32; bmax * sample];
+    rng.fill_normal(&mut input, 1.0);
+    let mut points = Vec::new();
+    let mut printed = Vec::new();
+    println!("\nbatch ladder [{shape}]: gating forward_batch == N x b1 before timing");
+    for &b in BATCH_LADDER {
+        let xb = &input[..b * sample];
+        // pre-timing acceptance gate: the batched forward must
+        // reproduce b independent single-image forwards bit for bit at
+        // every pool width, fused and unfused, and all of those
+        // results must agree with each other (cross-width,
+        // cross-variant)
+        let mut reference: Option<Vec<f32>> = None;
+        for &t in threads {
+            let pool = Pool::new(t);
+            for (plan, label) in [(&fused, "fused"), (&unfused, "unfused")] {
+                let mut exec = NetworkExecutor::with_tile(Arc::clone(plan), tile)?;
+                let got = exec.forward_batch_pool(xb, b, &pool).to_vec();
+                let mut singles = NetworkExecutor::with_tile(Arc::clone(plan), tile)?;
+                let mut want = Vec::with_capacity(got.len());
+                for i in 0..b {
+                    want.extend_from_slice(
+                        singles.forward_batch_pool(&xb[i * sample..(i + 1) * sample], 1, &pool),
+                    );
+                }
+                if got != want {
+                    return Err(anyhow!(
+                        "batch ladder b={b}: {label} forward_batch differs from {b} \
+                         independent b=1 forwards at {t} threads"
+                    ));
+                }
+                match &reference {
+                    None => reference = Some(got),
+                    Some(r) if &got != r => {
+                        return Err(anyhow!(
+                            "batch ladder b={b}: {label} at {t} threads differs from the \
+                             first width/variant"
+                        ));
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+        // timing (fused plan): reps shrink with b so the b64 rung costs
+        // about as much wall time as the b1 rung
+        let breps = (reps / b).max(1);
+        for &t in threads {
+            let pool = Pool::new(t);
+            let mut exec = NetworkExecutor::with_tile(Arc::clone(&fused), tile)?;
+            let r = bench(&format!("forward_batch b{b} t{t}"), 1, breps, || {
+                std::hint::black_box(exec.forward_batch_pool(xb, b, &pool));
+            });
+            printed.push(vec![
+                format!("{b}"),
+                format!("{t}"),
+                format!("{:.2}", r.min_ns as f64 / 1e6),
+                format!("{:.1}", b as f64 * 1e9 / r.min_ns as f64),
+            ]);
+            points.push(ScalingPoint {
+                op: format!("network_forward_b{b}"),
+                shape: shape.clone(),
+                threads: t,
+                min_ns: r.min_ns,
+                gflops: 2.0 * macs_per_image * b as f64 / r.min_ns as f64,
+            });
+        }
+    }
+    print_table(
+        &format!("Batch ladder — {shape} (each rung gated == N x b1, fused+unfused)"),
+        &["b", "Threads", "forward ms", "img/s"],
+        &printed,
+    );
+    Ok(points)
+}
+
 /// `plum bench network`: full-network forward scaling through the
 /// network executor. Three workloads, compiled once each and timed
 /// end-to-end at each pool width, each in two variants — cross-layer
@@ -857,8 +1000,11 @@ fn network_forward_ladder(
 /// [`EXEC_TILE_CANDIDATES`] per workload (skipping candidates that
 /// cannot carry blocked I/O whenever the plan has fused edges). Every
 /// series is verified bit-identical across pool widths, and every fused
-/// run is verified bit-identical to its unfused baseline. Records feed
-/// the perf-trajectory gate (committed baseline: BENCH_network.json).
+/// run is verified bit-identical to its unfused baseline. The study
+/// always finishes with the [`BATCH_LADDER`] (`network_forward_b{N}`
+/// records, each rung gated bitwise against N independent b=1 forwards
+/// before timing — see [`network_batch_ladder`]). Records feed the
+/// perf-trajectory gate (committed baseline: BENCH_network.json).
 pub fn network_forward_study(
     cfg: &RunConfig,
     depth: usize,
@@ -900,6 +1046,8 @@ pub fn network_forward_study(
         ),
     ];
 
+    // the batch ladder reuses the resnet workload's (auto-tuned) tile
+    let mut ladder_tile = tile;
     for (wi, (shape, layers)) in workloads.into_iter().enumerate() {
         let t_compile = std::time::Instant::now();
         let fused = Arc::new(NetworkPlan::compile_seeded(
@@ -938,6 +1086,9 @@ pub fn network_forward_study(
         } else {
             tile
         };
+        if wi == 0 {
+            ladder_tile = exec_tile;
+        }
         let (pts, base) = network_forward_ladder(
             &unfused,
             "network_forward",
@@ -962,6 +1113,10 @@ pub fn network_forward_study(
         )?;
         points.extend(pts);
     }
+
+    // batch-first acceptance: the always-on batch ladder (one plan at
+    // the widest rung, every rung gated bitwise before timing)
+    points.extend(network_batch_ladder(cfg, depth, ecfg, &threads, reps, ladder_tile)?);
 
     Ok((threads, points))
 }

@@ -78,12 +78,29 @@ impl InferBackend for EngineBackend {
             self.batch,
             self.sample
         );
+        self.infer_n(x, self.batch)
+    }
+
+    /// Batch-native override: an admitted batch of `n` live requests is
+    /// ONE engine forward over exactly `n` images — no per-request
+    /// loop, no zero-padding to the compiled batch. The plan compiles
+    /// at the device batch (`batch_size()`), so any `n <= batch_size()`
+    /// runs through a prefix of the same arena and, by the executor's
+    /// batch bit-contract, yields logits identical to `n` single-image
+    /// forwards.
+    fn infer_n(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        ensure!(
+            n >= 1 && n <= self.batch,
+            "live batch {n} outside 1..={} (compiled batch)",
+            self.batch
+        );
+        ensure!(x.len() == n * self.sample, "batch buffer {} != {n} x {}", x.len(), self.sample);
         let mut exec = self.exec.borrow_mut();
-        let feat = exec.forward_pool(x, Pool::global());
+        let feat = exec.forward_batch_pool(x, n, Pool::global());
         // head: global average pool over the final feature planes
-        let mut logits = vec![0.0f32; self.batch * self.classes];
+        let mut logits = vec![0.0f32; n * self.classes];
         let inv = 1.0 / self.plane as f32;
-        for b in 0..self.batch {
+        for b in 0..n {
             for kf in 0..self.classes {
                 let base = (b * self.classes + kf) * self.plane;
                 let s: f32 = feat[base..base + self.plane].iter().sum();
@@ -144,5 +161,29 @@ mod tests {
     fn wrong_batch_len_errors() {
         let be = EngineBackend::new(tiny_plan(2));
         assert!(be.infer_batch(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn infer_n_bit_matches_per_request_singles() {
+        // the batch-native path must return, for every live slot, the
+        // exact logits a lone single-sample call would
+        let plan = tiny_plan(4);
+        let be = EngineBackend::new(Arc::clone(&plan));
+        let sample = be.sample_elems();
+        let classes = be.out_elems();
+        let mut rng = crate::util::Rng::new(51);
+        let mut xs = vec![0.0f32; 3 * sample];
+        rng.fill_normal(&mut xs, 1.0);
+        let got = be.infer_n(&xs, 3).unwrap();
+        assert_eq!(got.len(), 3 * classes);
+        for i in 0..3 {
+            let one = be.infer_n(&xs[i * sample..(i + 1) * sample], 1).unwrap();
+            assert!(
+                one[..] == got[i * classes..(i + 1) * classes],
+                "slot {i} differs from its single-sample forward"
+            );
+        }
+        // n beyond the compiled batch is a typed error, not a panic
+        assert!(be.infer_n(&vec![0.0; 5 * sample], 5).is_err());
     }
 }

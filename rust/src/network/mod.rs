@@ -45,7 +45,11 @@
 //! bit-identical with patch fusion on or off (reuse changes where
 //! values live, never the values or their accumulation order), asserted
 //! end-to-end by `tests/integration_network.rs` and re-checked by
-//! `plum bench network`.
+//! `plum bench network`. Batching joins the same contract:
+//! [`NetworkExecutor::forward_batch`] over `b` images is bit-identical
+//! to `b` independent single-image forwards (per-lane accumulation
+//! never crosses an image), asserted by `tests/proptest_batch.rs` and
+//! the `bench network` batch ladder.
 //!
 //! # Compile and execute a model
 //!
@@ -79,7 +83,7 @@ use anyhow::{bail, ensure, Result};
 use crate::models::ConvLayerDesc;
 use crate::quant::{quantize_pruned, QuantizedWeights, Scheme, SparsityPattern};
 use crate::repetition::{
-    execute_conv2d_layout, option_a_stride, plan_layer_auto_pool, tile_supports_blocked_io,
+    execute_conv2d_layout_batch, option_a_stride, plan_layer_auto_pool, tile_supports_blocked_io,
     EngineConfig, LayerPlan, OpCounts, PostOp, Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
 };
 use crate::tensor::{im2col_rows_into, Conv2dGeometry, Tensor};
@@ -527,6 +531,27 @@ impl NetworkPlan {
         self.act_elems[i]
     }
 
+    /// NCHW elements of activation `a[i]` at runtime batch `b`.
+    fn act_elems_at(&self, i: usize, b: usize) -> usize {
+        let (c, h, w) = self.act_shape[i];
+        b * c * h * w
+    }
+
+    /// Arena elements activation `a[i]` occupies at runtime batch
+    /// `b <= batch()`: NCHW activations shrink linearly with the batch,
+    /// blocked activations re-pad the ragged `PIXEL_BLOCK` tail at
+    /// `b * h * w` pixels. At `b == batch()` this equals the
+    /// compile-time `act_buf_elems[i]`, so a full-batch forward is the
+    /// degenerate case of the batched one.
+    fn act_buf_elems_at(&self, i: usize, b: usize) -> usize {
+        let (c, h, w) = self.act_shape[i];
+        if i > 0 && self.layers[i - 1].out_blocked {
+            blocked_elems(b * h * w, c)
+        } else {
+            b * c * h * w
+        }
+    }
+
     /// Activation-arena buffers the executor allocates (live-range
     /// assignment: 2 for plain chains, 3 for residual topologies).
     pub fn num_arena_slots(&self) -> usize {
@@ -969,21 +994,59 @@ impl NetworkExecutor {
 
     /// Full forward pass on an explicit pool (benchmarks pin widths).
     pub fn forward_pool(&mut self, input: &[f32], pool: &Pool) -> &[f32] {
+        let b = self.plan.batch();
+        self.forward_batch_pool(input, b, pool)
+    }
+
+    /// Forward the first `b` images of a batch on the process-wide
+    /// pool — see [`NetworkExecutor::forward_batch_pool`].
+    pub fn forward_batch(&mut self, input: &[f32], b: usize) -> &[f32] {
+        self.forward_batch_pool(input, b, Pool::global())
+    }
+
+    /// Forward a runtime batch of `b <= plan.batch()` images
+    /// (`input.len() == b * sample_elems()`, batch-major NCHW) on an
+    /// explicit pool. Per-layer plans are batch-agnostic — a
+    /// `LayerPlan` depends on the quantized weights and the geometry
+    /// *shape*, never on `geom.n` — so the executor overrides every
+    /// layer's batch at dispatch and a partial batch just uses a prefix
+    /// of each compile-time arena slot (blocked activations re-pad
+    /// their ragged `PIXEL_BLOCK` tail at `b * oh * ow` pixels).
+    ///
+    /// Bit-contract: the returned `[b, k, oh, ow]` activation is
+    /// bitwise-identical to concatenating `b` independent single-image
+    /// forwards through the same plan — at every pool width, with patch
+    /// fusion on or off, and with sparsity elision on or off (per-lane
+    /// f32 accumulation never crosses an image). `tests/
+    /// proptest_batch.rs` and the `bench network` batch ladder enforce
+    /// exactly this.
+    pub fn forward_batch_pool(&mut self, input: &[f32], b: usize, pool: &Pool) -> &[f32] {
         let plan = Arc::clone(&self.plan);
-        assert_eq!(input.len(), plan.input_elems(), "input does not match network geometry");
+        assert!(b >= 1, "runtime batch must be positive");
+        assert!(
+            b <= plan.batch(),
+            "runtime batch {b} exceeds compiled batch {} — compile the plan at the largest \
+             batch it must serve",
+            plan.batch()
+        );
+        assert_eq!(
+            input.len(),
+            b * plan.sample_elems(),
+            "input does not match network geometry at batch {b}"
+        );
         self.bufs[plan.slot_of_act[0]][..input.len()].copy_from_slice(input);
         for (li, layer) in plan.layers.iter().enumerate() {
             let in_slot = plan.slot_of_act[layer.input];
             let out_slot = plan.slot_of_act[li + 1];
             let res_slot = layer.residual_from.map(|ai| plan.slot_of_act[ai]);
-            let in_len = plan.act_buf_elems[layer.input];
-            let out_len = plan.act_buf_elems[li + 1];
+            let in_len = plan.act_buf_elems_at(layer.input, b);
+            let out_len = plan.act_buf_elems_at(li + 1, b);
             let (ov, xv, hv) = arena_views(&mut self.bufs, out_slot, in_slot, res_slot);
             let residual = layer.residual_from.map(|ai| {
                 let (sc, sh, sw) = plan.act_shape[ai];
                 let st = option_a_stride(sh, layer.geom.out_h());
                 Residual {
-                    src: &hv.expect("residual slot view")[..plan.act_elems[ai]],
+                    src: &hv.expect("residual slot view")[..plan.act_elems_at(ai, b)],
                     c: sc,
                     h: sh,
                     w: sw,
@@ -992,8 +1055,9 @@ impl NetworkExecutor {
             });
             let post = PostOp { relu: layer.relu, residual };
             match &layer.plan {
-                Some(lp) => execute_conv2d_layout(
+                Some(lp) => execute_conv2d_layout_batch(
                     lp,
+                    b,
                     &xv[..in_len],
                     &mut ov[..out_len],
                     pool,
@@ -1010,7 +1074,7 @@ impl NetworkExecutor {
                         "fp layers never fuse patch layouts"
                     );
                     dense_conv_into(
-                        layer.geom,
+                        Conv2dGeometry { n: b, ..layer.geom },
                         layer.dense_wt.as_ref().expect("fp layer keeps dense weights"),
                         &xv[..in_len],
                         &mut ov[..out_len],
@@ -1022,7 +1086,7 @@ impl NetworkExecutor {
             }
         }
         let out_slot = plan.slot_of_act[plan.num_layers()];
-        &self.bufs[out_slot][..plan.output_elems()]
+        &self.bufs[out_slot][..plan.act_elems_at(plan.num_layers(), b)]
     }
 }
 

@@ -60,7 +60,7 @@
 //! modelling a repetition-only system (paper §5.1 config 1).
 
 use crate::tensor::{
-    im2col_rows_transposed_from_blocked_into, im2col_rows_transposed_into, Tensor,
+    im2col_rows_transposed_from_blocked_into, im2col_rows_transposed_into, Conv2dGeometry, Tensor,
 };
 use crate::util::{Pool, ScratchVec, UnsafeSlice};
 
@@ -270,8 +270,35 @@ pub fn execute_conv2d_layout(
     post: PostOp<'_>,
     io: TileIo,
 ) {
+    execute_conv2d_layout_batch(plan, plan.geom.n, x, out, pool, tile, post, io);
+}
+
+/// [`execute_conv2d_layout`] over an explicit runtime batch of `batch`
+/// images. A `LayerPlan` depends only on the quantized weights and the
+/// per-layer geometry *shape* — never on `geom.n` — so one plan serves
+/// any batch size: the pixel axis simply grows to `batch * oh * ow`
+/// batch-major pixels (global pixel `px = (ni * oh + oy) * ow + ox`)
+/// and everything downstream — tiling, `PIXEL_BLOCK` gathers, blocked
+/// patch I/O, the `PostOp` epilogue's per-image residual indexing —
+/// already walks that global pixel axis. Ragged final blocks (including
+/// blocks straddling an image boundary) zero-pad exactly like the
+/// single-image path, and per-lane f32 accumulation order is unchanged,
+/// so a batched forward is bit-identical to `batch` independent
+/// single-image forwards at every pool width.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_conv2d_layout_batch(
+    plan: &LayerPlan,
+    batch: usize,
+    x: &[f32],
+    out: &mut [f32],
+    pool: &Pool,
+    tile: usize,
+    post: PostOp<'_>,
+    io: TileIo,
+) {
     assert!(tile > 0, "tile size must be positive");
-    let g = plan.geom;
+    assert!(batch > 0, "runtime batch must be positive");
+    let g = Conv2dGeometry { n: batch, ..plan.geom };
     let e = g.c * g.r * g.s;
     let (oh, ow) = (g.out_h(), g.out_w());
     let pixels = g.n * oh * ow;
@@ -600,6 +627,51 @@ mod tests {
                 out.data() == base.data(),
                 "{threads}-thread output differs from 1-thread"
             );
+        }
+    }
+
+    #[test]
+    fn runtime_batch_override_bits_match_independent_singles() {
+        // one plan (geom.n = 1) run at batch 3 must bit-match three
+        // independent single-image executions at every pool width — a
+        // 3x3 output plane (9 pixels) makes every PIXEL_BLOCK straddle
+        // an image boundary and leaves a ragged tail (27 % 8 = 3)
+        let mut rng = Rng::new(49);
+        let g = Conv2dGeometry { n: 1, c: 4, h: 3, w: 3, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
+        let w = Tensor::rand_normal(&[g.k, g.c, g.r, g.s], 0.5, &mut rng);
+        let q = quantize(&w, Scheme::sb_default(), None);
+        let plan = plan_layer(&q, g, EngineConfig::default());
+        let b = 3;
+        let xs = Tensor::rand_normal(&[b, g.c, g.h, g.w], 1.0, &mut rng);
+        let sample = g.c * g.h * g.w;
+        let plane = g.out_h() * g.out_w();
+        let mut want = Vec::new();
+        for i in 0..b {
+            let mut one = vec![f32::NAN; g.k * plane];
+            execute_conv2d_into(
+                &plan,
+                &xs.data()[i * sample..(i + 1) * sample],
+                &mut one,
+                &Pool::new(1),
+                DEFAULT_TILE,
+                PostOp::default(),
+            );
+            want.extend_from_slice(&one);
+        }
+        for threads in [1, 2, 3] {
+            let pool = Pool::new(threads);
+            let mut got = vec![f32::NAN; b * g.k * plane];
+            execute_conv2d_layout_batch(
+                &plan,
+                b,
+                xs.data(),
+                &mut got,
+                &pool,
+                DEFAULT_TILE,
+                PostOp::default(),
+                TileIo::default(),
+            );
+            assert!(got == want, "{threads}-thread batched execution differs");
         }
     }
 

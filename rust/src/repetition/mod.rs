@@ -68,9 +68,9 @@ mod plan;
 
 pub use cse::{build_cse, CseDag};
 pub use exec::{
-    execute_conv2d, execute_conv2d_into, execute_conv2d_layout, execute_conv2d_pool,
-    execute_conv2d_tiled, option_a_stride, tile_supports_blocked_io, validate_blocked_tile,
-    PostOp, Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
+    execute_conv2d, execute_conv2d_into, execute_conv2d_layout, execute_conv2d_layout_batch,
+    execute_conv2d_pool, execute_conv2d_tiled, option_a_stride, tile_supports_blocked_io,
+    validate_blocked_tile, PostOp, Residual, TileIo, DEFAULT_TILE, PIXEL_BLOCK,
 };
 pub use plan::{DensityStats, LayerPlan, OpCounts, PatternArena, PatternSpan};
 

@@ -14,7 +14,8 @@
 //!   failed warmup aborts the swap with the old version still serving,
 //!   and a bounded drain fails stragglers typed — never silently.
 
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use plum::coordinator::{
     flaky_factory, BatchPolicy, CircuitState, InferBackend, MockBackend, Router, ServeError,
@@ -404,5 +405,216 @@ fn bounded_drain_answers_stragglers_typed_never_silently() {
     }
     assert_eq!(ok + failed, 8, "conservation across a forced drain");
     assert!(failed >= 1);
+    router.shutdown().unwrap();
+}
+
+/// A device-log backend for the batch-axis chaos tests: every sample
+/// value shipped to the device and the live-batch size of every forward
+/// are recorded, so a test can read *exactly* what reached the device.
+/// The identity logit (`out = x`) makes per-request replies
+/// bit-checkable. The logs are shared `Arc`s so respawned generations
+/// append to the same history.
+struct RecordingBackend {
+    bs: usize,
+    delay: Duration,
+    /// every sample value the device was ever asked to run
+    seen: Arc<Mutex<Vec<f32>>>,
+    /// the live-batch size of every forward (one entry per forward)
+    sizes: Arc<Mutex<Vec<usize>>>,
+}
+
+impl InferBackend for RecordingBackend {
+    fn batch_size(&self) -> usize {
+        self.bs
+    }
+    fn sample_elems(&self) -> usize {
+        1
+    }
+    fn out_elems(&self) -> usize {
+        1
+    }
+    fn infer_batch(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.infer_n(x, self.bs)
+    }
+    fn infer_n(&self, x: &[f32], n: usize) -> anyhow::Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.seen.lock().unwrap().extend_from_slice(x);
+        self.sizes.lock().unwrap().push(n);
+        Ok(x.to_vec())
+    }
+}
+
+/// Batch-axis acceptance, half one: requests that expire in the queue
+/// are partitioned out *before* the batch buffer is built, so their
+/// bytes never reach the device. A slow first forward pins the worker,
+/// a burst of tight-deadline sentinels expires behind it, and the
+/// device log must show the sentinels were never shipped — while every
+/// sentinel still gets its typed `DeadlineExceeded` reply.
+#[test]
+fn batched_worker_never_ships_expired_requests_to_the_device() {
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let sizes = Arc::new(Mutex::new(Vec::new()));
+    let (seen_f, sizes_f) = (Arc::clone(&seen), Arc::clone(&sizes));
+    let policy = ServePolicy {
+        batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(500) },
+        queue_depth: 32,
+        default_deadline: Duration::from_secs(2),
+        breaker_threshold: 50,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+        drain_timeout: Duration::from_secs(5),
+    };
+    // jitter-only fault schedule: the batch-native entry point still
+    // goes through FlakyBackend, with deterministic timing noise
+    let router = Router::spawn(
+        1,
+        flaky_factory(
+            move || {
+                Ok(RecordingBackend {
+                    bs: 4,
+                    delay: Duration::from_millis(100),
+                    seen: Arc::clone(&seen_f),
+                    sizes: Arc::clone(&sizes_f),
+                })
+            },
+            0,
+            0,
+            Duration::from_micros(200),
+            7,
+        ),
+        policy,
+    )
+    .unwrap();
+    // pin the device: one generous-deadline request, flushed alone
+    // (max_wait is 500us; the burst comes well after)
+    let (pin_rx, _) = router.submit(vec![1.0]).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    // burst of tight-deadline sentinels: admitted (no latency signal
+    // yet, so feasibility passes), then expired long before the worker
+    // frees up ~95ms later
+    let sentinels: Vec<_> = (0..8)
+        .map(|i| {
+            let v = 100.0 + i as f32;
+            let deadline = Instant::now() + Duration::from_millis(20);
+            let (rx, _) = router
+                .submit_with_deadline(vec![v], deadline)
+                .expect("no latency signal yet: the sentinel must be admitted");
+            (v, rx)
+        })
+        .collect();
+    for (v, rx) in sentinels {
+        match rx.recv().expect("sentinel reply channel dropped") {
+            Err(ServeError::DeadlineExceeded { waited }) => {
+                assert!(waited >= Duration::from_millis(20), "expired early after {waited:?}")
+            }
+            Ok(out) => panic!("expired sentinel {v} was served: {out:?}"),
+            Err(e) => panic!("sentinel {v}: unexpected typed reply: {e}"),
+        }
+    }
+    assert_eq!(pin_rx.recv().unwrap().unwrap(), vec![1.0], "the pinning request was served");
+    // the device keeps serving after the expiry wave
+    let (rx, _) = router.submit(vec![2.0]).unwrap();
+    assert_eq!(rx.recv().unwrap().unwrap(), vec![2.0]);
+    router.shutdown().unwrap();
+    // the device log is the proof: only the two served values were ever
+    // shipped — no sentinel, no padding, in live-batches of size 1
+    let seen = seen.lock().unwrap();
+    assert_eq!(*seen, vec![1.0, 2.0], "expired request bytes reached the device");
+    assert!(sizes.lock().unwrap().iter().all(|&n| n == 1));
+}
+
+/// Batch-axis acceptance, half two: under a real fault schedule and
+/// burst traffic, multi-request batches form and run as ONE batch-native
+/// forward (`infer_n` with n > 1 — no zero-padding to the device batch),
+/// per-request replies stay bit-correct, and the conservation contract
+/// holds: every admitted request gets exactly one typed reply.
+#[test]
+fn batched_chaos_conserves_replies_and_runs_live_batches_as_one_forward() {
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let sizes = Arc::new(Mutex::new(Vec::new()));
+    let (seen_f, sizes_f) = (Arc::clone(&seen), Arc::clone(&sizes));
+    let router = Router::spawn(
+        1,
+        flaky_factory(
+            move || {
+                Ok(RecordingBackend {
+                    bs: 4,
+                    delay: Duration::from_micros(200),
+                    seen: Arc::clone(&seen_f),
+                    sizes: Arc::clone(&sizes_f),
+                })
+            },
+            5, // panic every 5th batch of each generation
+            3, // soft error every 3rd
+            Duration::from_micros(100),
+            9,
+        ),
+        chaos_policy(),
+    )
+    .unwrap();
+    // 40 bursts of 4 back-to-back submits: each burst lands inside one
+    // max_wait window, so the batcher keeps forming real multi-request
+    // batches under the fault schedule
+    let n = 160usize;
+    let mut admitted = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..n {
+        let v = 100.0 + i as f32;
+        match router.submit(vec![v]) {
+            Ok((rx, _)) => admitted.push((v, rx)),
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("untyped admission failure: {e}"),
+        }
+        if i % 4 == 3 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let n_adm = admitted.len();
+    let (mut ok, mut failed, mut expired) = (0usize, 0usize, 0usize);
+    let mut served = Vec::new();
+    for (v, rx) in admitted {
+        match rx.recv().unwrap_or_else(|_| panic!("request {v}: reply channel dropped")) {
+            Ok(out) => {
+                assert_eq!(out, vec![v], "cross-wired batched reply");
+                served.push(v);
+                ok += 1;
+            }
+            Err(ServeError::ReplicaFailed { .. }) => failed += 1,
+            Err(ServeError::DeadlineExceeded { .. }) => {
+                assert!(
+                    !seen.lock().unwrap().contains(&v),
+                    "expired request {v} reached the device"
+                );
+                expired += 1;
+            }
+            Err(e) => panic!("unexpected typed reply: {e}"),
+        }
+    }
+    // conservation: typed outcomes partition the offered load
+    assert_eq!(ok + failed + expired, n_adm);
+    assert_eq!(n_adm + shed, n);
+    assert!(ok > 0, "nothing ever served under chaos");
+    assert!(router.stats(0).crashes.get() > 0, "the fault schedule never fired");
+    let seen = seen.lock().unwrap();
+    let sizes = sizes.lock().unwrap();
+    // every served value was really shipped, and the device log holds
+    // *only* admitted sample values: the batch-native path sends live
+    // requests verbatim, never zero-padding to the device batch
+    for v in &served {
+        assert!(seen.contains(v), "served value {v} missing from the device log");
+    }
+    for v in seen.iter() {
+        assert!(
+            (100.0..100.0 + n as f32).contains(v),
+            "non-request value {v} (padding?) reached the device"
+        );
+    }
+    assert!(sizes.iter().all(|&b| (1..=4).contains(&b)), "live batch outside 1..=4");
+    assert!(
+        sizes.iter().any(|&b| b > 1),
+        "burst traffic never formed a multi-request batch: {sizes:?}"
+    );
     router.shutdown().unwrap();
 }

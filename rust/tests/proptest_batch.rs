@@ -1,0 +1,270 @@
+//! Batch-axis bit-equality pyramid: `forward_batch(b images)` must be
+//! **bitwise identical** to `b` independent single-image forwards
+//! through an equivalently-compiled b=1 plan — over random geometries,
+//! b ∈ {1, 2, 5, 8}, pool widths {1, 2, ncpu}, with cross-layer patch
+//! fusion on and off, and with sparsity elision on and off (the
+//! `without_patch_fusion` / `without_elision` twins). Edge cases ride
+//! along: ragged `PIXEL_BLOCK` tails spanning image boundaries, the
+//! b=1 degenerate batch, oversized-batch rejection, and
+//! `validate_blocked_tile` behavior for batched fused edges.
+//!
+//! Per-layer plans never depend on `geom.n` (weights + subtile only),
+//! so a plan compiled at batch 1 and one compiled at batch 8 hold
+//! bit-identical arenas — which is what makes the cross-plan reference
+//! comparison exact rather than approximate.
+
+use std::sync::Arc;
+
+use plum::models::ConvLayerDesc;
+use plum::network::{chain_wiring, seeded_latents, NetworkExecutor, NetworkPlan};
+use plum::quant::Scheme;
+use plum::repetition::{EngineConfig, PIXEL_BLOCK};
+use plum::tensor::Conv2dGeometry;
+use plum::util::{Pool, Rng};
+
+fn desc(name: &str, g: Conv2dGeometry) -> ConvLayerDesc {
+    ConvLayerDesc { name: name.into(), geom: g, quantized: true }
+}
+
+/// Compile a quantized chain of `geoms` (each geometry's `n` overridden
+/// to `batch`) with deterministic latents from `seed`. Because latents
+/// and per-layer plans are independent of `n`, two calls with different
+/// `batch` produce bit-compatible plans.
+fn compile_chain(
+    geoms: &[Conv2dGeometry],
+    batch: usize,
+    seed: u64,
+    cfg: EngineConfig,
+    pool: &Pool,
+) -> Arc<NetworkPlan> {
+    let descs: Vec<ConvLayerDesc> = geoms
+        .iter()
+        .enumerate()
+        .map(|(i, g)| desc(&format!("l{i}"), Conv2dGeometry { n: batch, ..*g }))
+        .collect();
+    let latents = seeded_latents(&descs, seed);
+    let wiring = chain_wiring(descs.len());
+    Arc::new(
+        NetworkPlan::compile_with_wiring(&descs, &latents, &wiring, cfg, Scheme::sb_default(), pool)
+            .expect("chain compile"),
+    )
+}
+
+/// Concatenated single-image forwards through a b=1 plan — the
+/// reference every batched variant must reproduce bit for bit.
+fn independent_singles(plan_1: &Arc<NetworkPlan>, input: &[f32], b: usize) -> Vec<f32> {
+    let pool1 = Pool::new(1);
+    let sample = plan_1.input_elems();
+    let mut exec = NetworkExecutor::new(Arc::clone(plan_1));
+    let mut out = Vec::with_capacity(b * plan_1.output_elems());
+    for i in 0..b {
+        out.extend_from_slice(exec.forward_pool(&input[i * sample..(i + 1) * sample], &pool1));
+    }
+    out
+}
+
+#[test]
+fn random_batched_forwards_bit_match_independent_singles() {
+    const BMAX: usize = 8;
+    let mut rng = Rng::new(0xBA7C);
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let pool1 = Pool::new(1);
+    for case in 0..8 {
+        // producer: 3x3 / stride-1 / pad-1; middle consumer random over
+        // the fusion grid; 1x1 tail — same family as the fusion
+        // proptests, now swept over runtime batch sizes
+        let c0 = 1 + rng.below(4);
+        let k0 = 1 + rng.below(6);
+        // 4..=9 px: odd planes force ragged PIXEL_BLOCK tails and
+        // image boundaries that fall mid-block at every b > 1
+        let h = 4 + rng.below(6);
+        let w = 4 + rng.below(6);
+        let g0 = Conv2dGeometry { n: 1, c: c0, h, w, k: k0, r: 3, s: 3, stride: 1, padding: 1 };
+        let r = [1, 3][rng.below(2)];
+        let s = [1, 3][rng.below(2)];
+        let stride = 1 + rng.below(2);
+        let padding = rng.below(2);
+        let k1 = 1 + rng.below(6);
+        let g1 = Conv2dGeometry { n: 1, c: k0, h, w, k: k1, r, s, stride, padding };
+        let g2 = Conv2dGeometry {
+            n: 1,
+            c: k1,
+            h: g1.out_h(),
+            w: g1.out_w(),
+            k: 1 + rng.below(4),
+            r: 1,
+            s: 1,
+            stride: 1,
+            padding: 0,
+        };
+        let geoms = [g0, g1, g2];
+        let cfg = EngineConfig { subtile: [5, 8, 16][rng.below(3)], sparsity_support: true };
+        let seed = 0x2000 + case as u64;
+        let ctx = format!("case {case}: g0 {g0:?} g1 {g1:?} g2 {g2:?} subtile {}", cfg.subtile);
+
+        let plan_b = compile_chain(&geoms, BMAX, seed, cfg, &pool1);
+        let plan_1 = compile_chain(&geoms, 1, seed, cfg, &pool1);
+        assert_eq!(plan_b.patch_fused_edges(), 2, "{ctx}");
+        // the four fusion x elision twins of the batched plan — every
+        // one must land on the same bits as the singles reference
+        let variants: Vec<(Arc<NetworkPlan>, &str)> = vec![
+            (Arc::clone(&plan_b), "fused+elided"),
+            (Arc::new(plan_b.without_patch_fusion()), "unfused+elided"),
+            (Arc::new(plan_b.without_elision(&pool1)), "fused+unelided"),
+            (Arc::new(plan_b.without_patch_fusion().without_elision(&pool1)), "unfused+unelided"),
+        ];
+
+        let sample = plan_1.input_elems();
+        let out_sample = plan_1.output_elems();
+        let mut input = vec![0.0f32; BMAX * sample];
+        rng.fill_normal(&mut input, 1.0);
+        let singles = independent_singles(&plan_1, &input, BMAX);
+
+        for &b in &[1usize, 2, 5, 8] {
+            let xb = &input[..b * sample];
+            let want = &singles[..b * out_sample];
+            for threads in [1, 2, ncpu] {
+                let pool = Pool::new(threads);
+                for (plan, label) in &variants {
+                    let mut exec = NetworkExecutor::new(Arc::clone(plan));
+                    let got = exec.forward_batch_pool(xb, b, &pool);
+                    assert!(
+                        got == want,
+                        "{label} forward_batch(b={b}) != {b} singles at {threads} threads ({ctx})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_batch_blocks_span_image_boundaries_bitwise() {
+    // a 3x3 output plane is 9 pixels: for every b > 1 some PIXEL_BLOCK
+    // holds pixels of two different images, and b = 5 leaves a ragged
+    // tail (45 % 8 = 5) — the fused edge's blocked layout must still
+    // zero-pad and gather exactly like the single-image case
+    const BMAX: usize = 5;
+    let g0 = Conv2dGeometry { n: 1, c: 3, h: 3, w: 3, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
+    let g1 = Conv2dGeometry { n: 1, c: 6, h: 3, w: 3, k: 4, r: 1, s: 1, stride: 1, padding: 0 };
+    let plane = g0.out_h() * g0.out_w();
+    assert_ne!(plane % PIXEL_BLOCK, 0, "plane must not align to blocks");
+    assert_ne!((BMAX * plane) % PIXEL_BLOCK, 0, "batched tail must stay ragged");
+    let cfg = EngineConfig { subtile: 8, sparsity_support: true };
+    let pool1 = Pool::new(1);
+    let plan_b = compile_chain(&[g0, g1], BMAX, 0x3001, cfg, &pool1);
+    let plan_1 = compile_chain(&[g0, g1], 1, 0x3001, cfg, &pool1);
+    assert_eq!(plan_b.patch_fused_edges(), 1);
+    let unfused = Arc::new(plan_b.without_patch_fusion());
+
+    let sample = plan_1.input_elems();
+    let out_sample = plan_1.output_elems();
+    let mut rng = Rng::new(0x3002);
+    let mut input = vec![0.0f32; BMAX * sample];
+    rng.fill_normal(&mut input, 1.0);
+    let singles = independent_singles(&plan_1, &input, BMAX);
+    for &b in &[2usize, 5] {
+        for threads in [1, 2, 4] {
+            let pool = Pool::new(threads);
+            for (plan, label) in [(&plan_b, "fused"), (&unfused, "unfused")] {
+                let mut exec = NetworkExecutor::new(Arc::clone(plan));
+                let got = exec.forward_batch_pool(&input[..b * sample], b, &pool);
+                assert!(
+                    got == &singles[..b * out_sample],
+                    "{label} ragged batch b={b} differs at {threads} threads"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn b1_runtime_batch_is_byte_identical_to_the_plain_forward() {
+    // the b=1 degenerate case: forward_batch(x, 1) through a plan
+    // compiled at batch 1 must return the exact bytes forward(x) does,
+    // and a partial b=1 forward through a batch-4 plan must match both
+    let g0 = Conv2dGeometry { n: 1, c: 4, h: 6, w: 6, k: 8, r: 3, s: 3, stride: 1, padding: 1 };
+    let g1 = Conv2dGeometry { n: 1, c: 8, h: 6, w: 6, k: 5, r: 1, s: 1, stride: 1, padding: 0 };
+    let cfg = EngineConfig { subtile: 8, sparsity_support: true };
+    let pool = Pool::new(2);
+    let pool1 = Pool::new(1);
+    let plan_1 = compile_chain(&[g0, g1], 1, 0x4001, cfg, &pool1);
+    let plan_4 = compile_chain(&[g0, g1], 4, 0x4001, cfg, &pool1);
+
+    let mut rng = Rng::new(0x4002);
+    let mut input = vec![0.0f32; plan_1.input_elems()];
+    rng.fill_normal(&mut input, 1.0);
+
+    let mut exec_fw = NetworkExecutor::new(Arc::clone(&plan_1));
+    let want = exec_fw.forward_pool(&input, &pool).to_vec();
+    let mut exec_b1 = NetworkExecutor::new(Arc::clone(&plan_1));
+    assert!(
+        exec_b1.forward_batch_pool(&input, 1, &pool) == &want[..],
+        "forward_batch(1) differs from forward on a b=1 plan"
+    );
+    let mut exec_p4 = NetworkExecutor::new(Arc::clone(&plan_4));
+    assert!(
+        exec_p4.forward_batch_pool(&input, 1, &pool) == &want[..],
+        "partial b=1 forward through a batch-4 plan differs"
+    );
+}
+
+#[test]
+fn blocked_tile_validation_governs_batched_fused_plans() {
+    // the documented tile contract is batch-independent: a fused plan
+    // rejects a non-PIXEL_BLOCK tile up front, an aligned tile keeps
+    // the bit-contract at every rung, and the unfused twin accepts the
+    // misaligned tile even for partial batches
+    const BMAX: usize = 4;
+    let g0 = Conv2dGeometry { n: 1, c: 3, h: 5, w: 5, k: 6, r: 3, s: 3, stride: 1, padding: 1 };
+    let g1 = Conv2dGeometry { n: 1, c: 6, h: 5, w: 5, k: 4, r: 1, s: 1, stride: 1, padding: 0 };
+    let cfg = EngineConfig { subtile: 8, sparsity_support: true };
+    let pool1 = Pool::new(1);
+    let plan_b = compile_chain(&[g0, g1], BMAX, 0x5001, cfg, &pool1);
+    let plan_1 = compile_chain(&[g0, g1], 1, 0x5001, cfg, &pool1);
+    assert!(plan_b.patch_fused_edges() > 0);
+
+    // tile 12 cannot carry blocked patch I/O: rejected before any work
+    assert!(NetworkExecutor::with_tile(Arc::clone(&plan_b), 12).is_err());
+
+    let sample = plan_1.input_elems();
+    let out_sample = plan_1.output_elems();
+    let mut rng = Rng::new(0x5002);
+    let mut input = vec![0.0f32; BMAX * sample];
+    rng.fill_normal(&mut input, 1.0);
+    let singles = independent_singles(&plan_1, &input, BMAX);
+
+    // an aligned tile (16) carries the fused batched forward at every b
+    for b in 1..=BMAX {
+        let mut exec = NetworkExecutor::with_tile(Arc::clone(&plan_b), 16).unwrap();
+        assert!(
+            exec.forward_batch_pool(&input[..b * sample], b, &pool1)
+                == &singles[..b * out_sample],
+            "fused tile-16 batch b={b} differs from singles"
+        );
+    }
+    // the unfused twin takes the misaligned tile, partial batches included
+    let unfused = Arc::new(plan_b.without_patch_fusion());
+    for b in [1usize, 3] {
+        let mut exec = NetworkExecutor::with_tile(Arc::clone(&unfused), 12).unwrap();
+        assert!(
+            exec.forward_batch_pool(&input[..b * sample], b, &pool1)
+                == &singles[..b * out_sample],
+            "unfused tile-12 batch b={b} differs from singles"
+        );
+    }
+}
+
+#[test]
+#[should_panic(expected = "runtime batch")]
+fn oversized_runtime_batch_is_rejected() {
+    // arena slots are sized for the compiled batch: running more images
+    // than that must fail loudly, never read out of bounds
+    let g = Conv2dGeometry { n: 1, c: 2, h: 4, w: 4, k: 3, r: 3, s: 3, stride: 1, padding: 1 };
+    let pool1 = Pool::new(1);
+    let plan =
+        compile_chain(&[g], 2, 0x6001, EngineConfig { subtile: 8, sparsity_support: true }, &pool1);
+    let input = vec![0.0f32; 3 * plan.sample_elems()];
+    let mut exec = NetworkExecutor::new(plan);
+    exec.forward_batch_pool(&input, 3, &pool1);
+}
