@@ -1,0 +1,989 @@
+//! Static plan-soundness verifier — `plum audit` and the debug-build
+//! compile gate.
+//!
+//! Every hot-path speedup in this crate (pixel-major gathers, fused
+//! blocked edges, elided spans, batch-prefix arenas) rides on a small
+//! set of `unsafe` sites whose preconditions are *plan* properties: the
+//! executor writes through [`UnsafeSlice`](crate::util::UnsafeSlice)
+//! without synchronization because tiles own disjoint output ranges,
+//! the activation arena hands layers overlapping buffers because slot
+//! live ranges never intersect, the CSR walk skips bounds checks
+//! because every span/combine index was placed in bounds at plan build.
+//! This module proves those preconditions **statically, by symbolic
+//! range analysis over the plan data structures, without executing a
+//! forward** — each check reasons about index *formulas* and interval
+//! algebra rather than running the kernel and observing it.
+//!
+//! Five check families, each naming the unsafe code it justifies:
+//!
+//! 1. **Arena CSR invariants** ([`audit_layer_plan`]): spans tile
+//!    `cols` back to back, every column is inside the patch matrix
+//!    (`< C*R*S`), `table_base` is monotone and ends at `spans.len()`,
+//!    every combine slot lands in its own sub-tile's span range (or
+//!    the shared no-op), the elided no-op span at slot 0 is well-formed
+//!    and [`DensityStats`] agrees with the spans — the preconditions of
+//!    the executor's unchecked `cols`/`psums`/`combine` indexing.
+//! 2. **Tile-disjoint writes**: for every layer and runtime batch, the
+//!    exact set of output indices each pool job writes is derived from
+//!    the scatter formulas (`(ni*K + fi)*plane + pix` NCHW,
+//!    `(gb*K + fi)*PB + b` blocked) as closed intervals; the whole
+//!    layer schedule is then checked pairwise-disjoint, in bounds, and
+//!    *gap-free* (full coverage — stale data is never left unwritten).
+//!    This is the justification for `unsafe impl Sync for UnsafeSlice`.
+//! 3. **Slot live-range non-aliasing**: live ranges are re-derived from
+//!    the wiring (independently of `allocate_slots`) and no two
+//!    overlapping-live activations may share an arena slot; a layer's
+//!    output slot must differ from its input and residual slots — the
+//!    precondition of `arena_views`' disjoint reborrows.
+//! 4. **PB-alignment of blocked tiles**: any layer with blocked patch
+//!    I/O requires the execution tile to be a multiple of
+//!    [`PIXEL_BLOCK`] (blocks must not straddle jobs, or two jobs would
+//!    write one block's interval).
+//! 5. **Batch-prefix bounds**: `act_buf_elems_at(a, b)` must fit the
+//!    compile-time slot capacity for **every** `1 <= b <= bmax`, so a
+//!    partial-batch forward can never write past its arena slot.
+//!
+//! Findings are typed ([`AuditFinding`]) with layer/span/range
+//! provenance. [`NetworkPlan`] compiles run [`audit_network_plan`] in
+//! debug builds (every `cargo test` exercises the gate); the
+//! `plum audit` CLI runs it in release across the whole zoo and exits
+//! nonzero on any finding.
+//!
+//! Determinism contract: the audit itself is deterministic and
+//! thread-count-independent — it runs on the calling thread only,
+//! iterates plan data in fixed order, and depends on nothing but the
+//! plan bytes and the tile, so two audits of the same plan always
+//! produce the identical finding list.
+
+use std::fmt;
+
+use crate::network::NetworkPlan;
+use crate::repetition::{DensityStats, LayerPlan, PIXEL_BLOCK};
+
+/// One statically-proven violation of an executor precondition, with
+/// enough provenance (layer, span, index, range) to locate the corrupt
+/// plan data. An empty finding list is the soundness certificate the
+/// unsafe code relies on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AuditFinding {
+    /// A plan-side buffer does not have the length its indexing scheme
+    /// assumes (`what` names the buffer).
+    ShapeMismatch {
+        /// layer index in the network schedule
+        layer: usize,
+        /// which buffer is misshapen
+        what: &'static str,
+        /// length the indexing scheme requires
+        expected: usize,
+        /// length actually found
+        found: usize,
+    },
+    /// A span's `start` does not continue where the previous span's run
+    /// ended — the CSR arena is not contiguous.
+    SpanNotContiguous {
+        /// layer index
+        layer: usize,
+        /// global span slot
+        span: usize,
+        /// expected start offset (end of the previous run)
+        expected: u32,
+        /// start offset recorded on the span
+        found: u32,
+    },
+    /// A span's column run extends past the end of `cols`.
+    SpanOutOfBounds {
+        /// layer index
+        layer: usize,
+        /// global span slot
+        span: usize,
+        /// one-past-the-end offset the span claims
+        end: usize,
+        /// actual `cols` length
+        cols: usize,
+    },
+    /// An arena column index is outside the patch matrix.
+    ColumnOutOfRange {
+        /// layer index
+        layer: usize,
+        /// global span slot owning the column
+        span: usize,
+        /// offending column index
+        col: u32,
+        /// patch-matrix column count (`C*R*S`)
+        limit: usize,
+    },
+    /// A span inside a sub-tile does not cover that sub-tile's length.
+    SpanLenMismatch {
+        /// layer index
+        layer: usize,
+        /// sub-tile index
+        table: usize,
+        /// global span slot
+        span: usize,
+        /// span's total column count
+        span_len: usize,
+        /// sub-tile length it must equal
+        table_len: usize,
+    },
+    /// `table_base` decreases between adjacent sub-tiles.
+    TableBaseNotMonotone {
+        /// layer index
+        layer: usize,
+        /// sub-tile whose base exceeds its successor
+        table: usize,
+        /// base of `table`
+        base: u32,
+        /// base of `table + 1`
+        next: u32,
+    },
+    /// A `table_base` entry points outside `spans` (or the row pointers
+    /// do not start/end where the arena layout requires).
+    TableBaseOutOfBounds {
+        /// layer index
+        layer: usize,
+        /// offending row-pointer value
+        base: u32,
+        /// number of spans it must stay within
+        num_spans: usize,
+    },
+    /// The elided arena's shared no-op slot is missing or malformed
+    /// (`reason` says how).
+    NoopSlotMalformed {
+        /// layer index
+        layer: usize,
+        /// what exactly is wrong with the no-op bookkeeping
+        reason: &'static str,
+    },
+    /// An all-zero span other than the shared no-op owns a real slot in
+    /// an elided arena (elision failed to fold it).
+    IneffectualSpanKept {
+        /// layer index
+        layer: usize,
+        /// global span slot of the ineffectual pattern
+        span: usize,
+    },
+    /// `unique_of_filter` maps a filter to a nonexistent unique slot.
+    FilterMapOutOfBounds {
+        /// layer index
+        layer: usize,
+        /// original filter index
+        filter: usize,
+        /// unique-filter slot it names
+        unique: u32,
+        /// number of unique filters that exist
+        num_unique: usize,
+    },
+    /// A combine-table entry names a nonexistent pattern span.
+    CombineSlotOutOfBounds {
+        /// layer index
+        layer: usize,
+        /// unique filter
+        unique_filter: usize,
+        /// sub-tile index
+        table: usize,
+        /// offending global span slot
+        slot: u32,
+        /// number of spans that exist
+        num_patterns: usize,
+    },
+    /// A combine-table entry points at a span outside its own sub-tile
+    /// (and it is not the shared no-op).
+    CombineSlotOutsideTable {
+        /// layer index
+        layer: usize,
+        /// unique filter
+        unique_filter: usize,
+        /// sub-tile index
+        table: usize,
+        /// global span slot that belongs to another sub-tile
+        slot: u32,
+    },
+    /// Recorded [`DensityStats`] disagree with what the spans and
+    /// combine table actually encode.
+    DensityStatsMismatch {
+        /// layer index
+        layer: usize,
+        /// which stats field disagrees
+        field: &'static str,
+        /// value recorded at plan build
+        recorded: u64,
+        /// value derived from the arena
+        derived: u64,
+    },
+    /// Two pool jobs of one layer dispatch would write the same output
+    /// index — the `UnsafeSlice` disjointness contract is broken.
+    WriteOverlap {
+        /// layer index
+        layer: usize,
+        /// runtime batch the schedule was derived for
+        batch: usize,
+        /// first overlapping output index
+        index: usize,
+        /// the two jobs whose write ranges collide
+        jobs: (usize, usize),
+    },
+    /// A job's write range extends past the layer's output buffer.
+    WriteOutOfBounds {
+        /// layer index
+        layer: usize,
+        /// runtime batch
+        batch: usize,
+        /// one-past-the-end index of the offending range
+        end: usize,
+        /// output buffer length
+        buf: usize,
+    },
+    /// An output index is written by no job at all — a forward would
+    /// leave stale data for the next consumer.
+    WriteGap {
+        /// layer index
+        layer: usize,
+        /// runtime batch
+        batch: usize,
+        /// first uncovered output index
+        index: usize,
+    },
+    /// A layer with blocked patch I/O is scheduled with a tile that is
+    /// not a multiple of [`PIXEL_BLOCK`] — jobs would split lane blocks
+    /// and the blocked write intervals above would interleave.
+    MisalignedBlockedTile {
+        /// layer index
+        layer: usize,
+        /// offending execution tile
+        tile: usize,
+    },
+    /// An activation's arena slot index does not exist.
+    SlotIndexOutOfBounds {
+        /// activation index
+        act: usize,
+        /// slot it names
+        slot: usize,
+        /// number of slots that exist
+        num_slots: usize,
+    },
+    /// Two activations with overlapping live ranges share an arena
+    /// slot: writing the later one destroys the earlier one while it is
+    /// still read.
+    SlotLiveRangeOverlap {
+        /// shared arena slot
+        slot: usize,
+        /// earlier activation (still live)
+        earlier: usize,
+        /// later activation whose write clobbers it
+        later: usize,
+        /// layer that still reads `earlier`
+        last_read: usize,
+    },
+    /// A layer's output slot aliases one of the buffers it reads
+    /// (`which` names the edge) — `arena_views` requires them disjoint.
+    OutputSlotAliased {
+        /// layer index
+        layer: usize,
+        /// aliased arena slot
+        slot: usize,
+        /// `"input"` or `"residual"`
+        which: &'static str,
+    },
+    /// Recorded per-activation sizing disagrees with the shape-derived
+    /// value (`what` names the table).
+    ActSizeMismatch {
+        /// activation index
+        act: usize,
+        /// which sizing table disagrees
+        what: &'static str,
+        /// value recorded at compile
+        recorded: usize,
+        /// value derived from `act_shape`
+        derived: usize,
+    },
+    /// At some runtime batch `1 <= b <= bmax` an activation's buffer
+    /// prefix exceeds its slot capacity — a partial-batch forward would
+    /// write past the arena slot.
+    BatchPrefixOverflow {
+        /// activation index
+        act: usize,
+        /// runtime batch at which the prefix first overflows
+        batch: usize,
+        /// elements the activation needs at that batch
+        needed: usize,
+        /// arena slot it lives in
+        slot: usize,
+        /// compile-time capacity of that slot
+        capacity: usize,
+    },
+}
+
+impl fmt::Display for AuditFinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use AuditFinding::*;
+        match self {
+            ShapeMismatch { layer, what, expected, found } => {
+                write!(f, "layer {layer}: {what} has {found} entries, indexing needs {expected}")
+            }
+            SpanNotContiguous { layer, span, expected, found } => {
+                write!(
+                    f,
+                    "layer {layer}: span {span} starts at {found}, previous run ends at \
+                     {expected}"
+                )
+            }
+            SpanOutOfBounds { layer, span, end, cols } => {
+                write!(f, "layer {layer}: span {span} runs to {end}, cols has {cols}")
+            }
+            ColumnOutOfRange { layer, span, col, limit } => {
+                write!(
+                    f,
+                    "layer {layer}: span {span} column {col} outside patch matrix \
+                     (C*R*S = {limit})"
+                )
+            }
+            SpanLenMismatch { layer, table, span, span_len, table_len } => {
+                write!(
+                    f,
+                    "layer {layer}: span {span} covers {span_len} columns, sub-tile {table} \
+                     is {table_len} wide"
+                )
+            }
+            TableBaseNotMonotone { layer, table, base, next } => {
+                write!(
+                    f,
+                    "layer {layer}: table_base[{table}] = {base} > table_base[{}] = {next}",
+                    table + 1
+                )
+            }
+            TableBaseOutOfBounds { layer, base, num_spans } => {
+                write!(f, "layer {layer}: table_base entry {base} outside {num_spans} spans")
+            }
+            NoopSlotMalformed { layer, reason } => {
+                write!(f, "layer {layer}: no-op slot malformed: {reason}")
+            }
+            IneffectualSpanKept { layer, span } => {
+                write!(
+                    f,
+                    "layer {layer}: all-zero span {span} owns arena storage in an elided plan"
+                )
+            }
+            FilterMapOutOfBounds { layer, filter, unique, num_unique } => {
+                write!(
+                    f,
+                    "layer {layer}: filter {filter} maps to unique slot {unique} of {num_unique}"
+                )
+            }
+            CombineSlotOutOfBounds { layer, unique_filter, table, slot, num_patterns } => {
+                write!(
+                    f,
+                    "layer {layer}: combine[{unique_filter}][{table}] names span {slot} of \
+                     {num_patterns}"
+                )
+            }
+            CombineSlotOutsideTable { layer, unique_filter, table, slot } => {
+                write!(
+                    f,
+                    "layer {layer}: combine[{unique_filter}][{table}] names span {slot} \
+                     outside sub-tile {table}"
+                )
+            }
+            DensityStatsMismatch { layer, field, recorded, derived } => {
+                write!(
+                    f,
+                    "layer {layer}: DensityStats.{field} records {recorded}, arena encodes \
+                     {derived}"
+                )
+            }
+            WriteOverlap { layer, batch, index, jobs } => {
+                write!(
+                    f,
+                    "layer {layer} (b={batch}): jobs {} and {} both write output index {index}",
+                    jobs.0, jobs.1
+                )
+            }
+            WriteOutOfBounds { layer, batch, end, buf } => {
+                write!(
+                    f,
+                    "layer {layer} (b={batch}): write range runs to {end}, buffer holds {buf}"
+                )
+            }
+            WriteGap { layer, batch, index } => {
+                write!(f, "layer {layer} (b={batch}): output index {index} is written by no job")
+            }
+            MisalignedBlockedTile { layer, tile } => {
+                write!(
+                    f,
+                    "layer {layer}: blocked patch I/O with tile {tile} not a multiple of \
+                     {PIXEL_BLOCK}"
+                )
+            }
+            SlotIndexOutOfBounds { act, slot, num_slots } => {
+                write!(f, "activation {act} assigned slot {slot} of {num_slots}")
+            }
+            SlotLiveRangeOverlap { slot, earlier, later, last_read } => {
+                write!(
+                    f,
+                    "slot {slot}: activation {later} is written at layer {} while activation \
+                     {earlier} is still read at layer {last_read}",
+                    later - 1
+                )
+            }
+            OutputSlotAliased { layer, slot, which } => {
+                write!(f, "layer {layer}: output slot {slot} aliases its {which} slot")
+            }
+            ActSizeMismatch { act, what, recorded, derived } => {
+                write!(f, "activation {act}: {what} records {recorded}, shape derives {derived}")
+            }
+            BatchPrefixOverflow { act, batch, needed, slot, capacity } => {
+                write!(
+                    f,
+                    "activation {act} needs {needed} elements at batch {batch}, slot {slot} \
+                     holds {capacity}"
+                )
+            }
+        }
+    }
+}
+
+/// Audit one layer plan's CSR arena (check family 1): contiguity,
+/// column bounds, `table_base` row pointers, no-op well-formedness,
+/// combine-table range discipline and [`DensityStats`] consistency.
+/// `layer` is only provenance for the findings.
+pub fn audit_layer_plan(layer: usize, plan: &LayerPlan) -> Vec<AuditFinding> {
+    let mut out = Vec::new();
+    let a = &plan.arena;
+    let e = plan.geom.c * plan.geom.r * plan.geom.s;
+    let k = plan.geom.k;
+    let nt = plan.num_tables;
+    let nu = plan.num_unique_filters;
+
+    // shape discipline first: everything below indexes by these lengths
+    let shape = |what: &'static str, expected: usize, found: usize, out: &mut Vec<_>| {
+        if expected != found {
+            out.push(AuditFinding::ShapeMismatch { layer, what, expected, found });
+        }
+    };
+    shape("table_base", nt + 1, a.table_base.len(), &mut out);
+    shape("table_len", nt, plan.table_len.len(), &mut out);
+    shape("alpha", k, plan.alpha.len(), &mut out);
+    shape("unique_of_filter", k, plan.unique_of_filter.len(), &mut out);
+    shape("combine", nu * nt, plan.combine.len(), &mut out);
+    shape("sub-tile lengths (sum)", e, plan.table_len.iter().sum::<usize>(), &mut out);
+    if !out.is_empty() {
+        return out; // indexing below would read past the short buffers
+    }
+
+    // no-op bookkeeping: elided arenas share slot 0, materialized
+    // arenas must not carry one
+    let expected_first = match (a.zeros_materialized, a.noop_slot) {
+        (false, Some(slot)) => {
+            if slot != 0 {
+                out.push(AuditFinding::NoopSlotMalformed {
+                    layer,
+                    reason: "shared no-op span must sit at global slot 0",
+                });
+            } else if a.spans.is_empty() || !a.spans[0].is_all_zero() || a.spans[0].len() != 0 {
+                out.push(AuditFinding::NoopSlotMalformed {
+                    layer,
+                    reason: "slot 0 must be an empty all-zero span",
+                });
+            }
+            1
+        }
+        (false, None) => {
+            out.push(AuditFinding::NoopSlotMalformed {
+                layer,
+                reason: "elided arena carries no shared no-op slot",
+            });
+            0
+        }
+        (true, Some(_)) => {
+            out.push(AuditFinding::NoopSlotMalformed {
+                layer,
+                reason: "materialized arena must not carry a no-op slot",
+            });
+            0
+        }
+        (true, None) => 0,
+    };
+    if a.table_base[0] != expected_first {
+        out.push(AuditFinding::TableBaseOutOfBounds {
+            layer,
+            base: a.table_base[0],
+            num_spans: a.num_patterns(),
+        });
+    }
+
+    // row pointers: monotone, ending exactly at spans.len()
+    let mut bases_ok = true;
+    for ti in 0..nt {
+        if a.table_base[ti] > a.table_base[ti + 1] {
+            out.push(AuditFinding::TableBaseNotMonotone {
+                layer,
+                table: ti,
+                base: a.table_base[ti],
+                next: a.table_base[ti + 1],
+            });
+            bases_ok = false;
+        }
+    }
+    if a.table_base[nt] as usize != a.num_patterns() {
+        out.push(AuditFinding::TableBaseOutOfBounds {
+            layer,
+            base: a.table_base[nt],
+            num_spans: a.num_patterns(),
+        });
+        bases_ok = false;
+    }
+
+    // span contiguity + column bounds: spans tile `cols` back to back
+    // by their materialized runs (pos|neg, plus zero when materialized)
+    let mut cursor = 0u32;
+    for (gp, sp) in a.spans.iter().enumerate() {
+        if sp.start != cursor {
+            out.push(AuditFinding::SpanNotContiguous {
+                layer,
+                span: gp,
+                expected: cursor,
+                found: sp.start,
+            });
+        }
+        let width = sp.pos + sp.neg + if a.zeros_materialized { sp.zero } else { 0 };
+        let end = sp.start as usize + width as usize;
+        cursor = sp.start + width;
+        if end > a.cols.len() {
+            out.push(AuditFinding::SpanOutOfBounds { layer, span: gp, end, cols: a.cols.len() });
+            break;
+        }
+        for &col in &a.cols[sp.start as usize..end] {
+            if col as usize >= e {
+                out.push(AuditFinding::ColumnOutOfRange { layer, span: gp, col, limit: e });
+                break; // one finding per span is enough provenance
+            }
+        }
+    }
+    if cursor as usize != a.cols.len() {
+        out.push(AuditFinding::ShapeMismatch {
+            layer,
+            what: "cols",
+            expected: cursor as usize,
+            found: a.cols.len(),
+        });
+    }
+
+    // per-table span discipline: every in-table span covers the whole
+    // sub-tile, and elided arenas keep no ineffectual span but the no-op
+    if bases_ok {
+        for ti in 0..nt {
+            for gp in a.table_base[ti] as usize..a.table_base[ti + 1] as usize {
+                if a.spans[gp].len() != plan.table_len[ti] {
+                    out.push(AuditFinding::SpanLenMismatch {
+                        layer,
+                        table: ti,
+                        span: gp,
+                        span_len: a.spans[gp].len(),
+                        table_len: plan.table_len[ti],
+                    });
+                }
+                if !a.zeros_materialized && a.spans[gp].is_all_zero() {
+                    out.push(AuditFinding::IneffectualSpanKept { layer, span: gp });
+                }
+            }
+        }
+    }
+
+    // filter map + combine table range discipline
+    let mut indices_ok = bases_ok;
+    for (fi, &ui) in plan.unique_of_filter.iter().enumerate() {
+        if ui as usize >= nu {
+            out.push(AuditFinding::FilterMapOutOfBounds {
+                layer,
+                filter: fi,
+                unique: ui,
+                num_unique: nu,
+            });
+            indices_ok = false;
+        }
+    }
+    for ui in 0..nu {
+        for ti in 0..nt {
+            let gp = plan.combine[ui * nt + ti];
+            if gp as usize >= a.num_patterns() {
+                out.push(AuditFinding::CombineSlotOutOfBounds {
+                    layer,
+                    unique_filter: ui,
+                    table: ti,
+                    slot: gp,
+                    num_patterns: a.num_patterns(),
+                });
+                indices_ok = false;
+            } else if bases_ok {
+                let in_table = gp >= a.table_base[ti] && gp < a.table_base[ti + 1];
+                if !in_table && a.noop_slot != Some(gp) {
+                    out.push(AuditFinding::CombineSlotOutsideTable {
+                        layer,
+                        unique_filter: ui,
+                        table: ti,
+                        slot: gp,
+                    });
+                }
+            }
+        }
+    }
+
+    // density accounting: derive the stats the spans actually encode
+    // (weighted by original-filter usage, like the build) and compare
+    if indices_ok {
+        let derived = derive_density(plan, k, e, nt);
+        let fields: [(&'static str, u64, u64); 3] = [
+            ("total_cols", plan.stats.total_cols, derived.total_cols),
+            ("effectual_cols", plan.stats.effectual_cols, derived.effectual_cols),
+            ("elided_spans", plan.stats.elided_spans, derived.elided_spans),
+        ];
+        for (field, recorded, derived) in fields {
+            if recorded != derived {
+                out.push(AuditFinding::DensityStatsMismatch { layer, field, recorded, derived });
+            }
+        }
+    }
+    out
+}
+
+/// Re-derive [`DensityStats`] from the arena: each original filter
+/// covers each column of the patch matrix exactly once, so the
+/// effectual count is the filter-weighted sum of span `nnz`s and the
+/// elided count is one folded pattern per sub-tile that routes any
+/// filter through the no-op.
+fn derive_density(plan: &LayerPlan, k: usize, e: usize, nt: usize) -> DensityStats {
+    let a = &plan.arena;
+    let mut effectual = 0u64;
+    debug_assert_eq!(plan.unique_of_filter.len(), k);
+    for &ui in &plan.unique_of_filter {
+        let ui = ui as usize;
+        for ti in 0..nt {
+            effectual += a.spans[plan.combine[ui * nt + ti] as usize].nnz();
+        }
+    }
+    let mut elided = 0u64;
+    if let Some(noop) = a.noop_slot {
+        for ti in 0..nt {
+            let folded = (0..plan.num_unique_filters)
+                .any(|ui| plan.combine[ui * nt + ti] == noop);
+            elided += folded as u64;
+        }
+    }
+    DensityStats { total_cols: (k * e) as u64, effectual_cols: effectual, elided_spans: elided }
+}
+
+/// One pool job's write range over a layer's output buffer, derived
+/// symbolically from the scatter index formula.
+#[derive(Clone, Copy)]
+struct WriteRange {
+    start: usize,
+    end: usize,
+    job: usize,
+}
+
+/// Audit a whole compiled network against the execution `tile` (check
+/// families 2–5 plus [`audit_layer_plan`] per engine layer). Returns
+/// every finding; an empty vector is the certificate the executor's
+/// unsafe code assumes. Deterministic and single-threaded — see the
+/// module docs.
+pub fn audit_network_plan(plan: &NetworkPlan, tile: usize) -> Vec<AuditFinding> {
+    let mut out = Vec::new();
+    let bmax = plan.batch();
+    let n_layers = plan.num_layers();
+    let n_acts = n_layers + 1;
+
+    // ---- family 1: per-layer arena invariants -------------------------
+    for (li, l) in plan.layers.iter().enumerate() {
+        if let Some(lp) = &l.plan {
+            out.extend(audit_layer_plan(li, lp));
+        }
+    }
+
+    // ---- family 3: slot live-range non-aliasing -----------------------
+    let mut slots_ok = true;
+    for (act, &slot) in plan.slot_of_act.iter().enumerate() {
+        if slot >= plan.slot_elems.len() {
+            out.push(AuditFinding::SlotIndexOutOfBounds {
+                act,
+                slot,
+                num_slots: plan.slot_elems.len(),
+            });
+            slots_ok = false;
+        }
+    }
+    // re-derive live ranges from the wiring, independently of
+    // allocate_slots: activation a is read until last_use[a]; the
+    // network output is pinned past the final layer
+    let mut last_use = vec![0usize; n_acts];
+    last_use[n_acts - 1] = n_layers;
+    for (li, l) in plan.layers.iter().enumerate() {
+        last_use[l.input] = last_use[l.input].max(li);
+        if let Some(ai) = l.residual_from {
+            last_use[ai] = last_use[ai].max(li);
+        }
+    }
+    // activation j is written during layer j - 1; any same-slot
+    // activation i < j must have taken its last read strictly before
+    for j in 1..n_acts {
+        for i in 0..j {
+            if plan.slot_of_act[i] == plan.slot_of_act[j] && last_use[i] >= j - 1 {
+                out.push(AuditFinding::SlotLiveRangeOverlap {
+                    slot: plan.slot_of_act[i],
+                    earlier: i,
+                    later: j,
+                    last_read: last_use[i],
+                });
+            }
+        }
+    }
+    for (li, l) in plan.layers.iter().enumerate() {
+        let out_slot = plan.slot_of_act[li + 1];
+        if out_slot == plan.slot_of_act[l.input] {
+            out.push(AuditFinding::OutputSlotAliased { layer: li, slot: out_slot, which: "input" });
+        }
+        if let Some(ai) = l.residual_from {
+            if out_slot == plan.slot_of_act[ai] {
+                out.push(AuditFinding::OutputSlotAliased {
+                    layer: li,
+                    slot: out_slot,
+                    which: "residual",
+                });
+            }
+        }
+    }
+
+    // ---- family 5: recorded sizes + batch-prefix bounds ---------------
+    for act in 0..n_acts {
+        let derived_full = plan.act_elems_at(act, bmax);
+        if plan.act_elems[act] != derived_full {
+            out.push(AuditFinding::ActSizeMismatch {
+                act,
+                what: "act_elems",
+                recorded: plan.act_elems[act],
+                derived: derived_full,
+            });
+        }
+        let derived_buf = plan.act_buf_elems_at(act, bmax);
+        if plan.act_buf_elems[act] != derived_buf {
+            out.push(AuditFinding::ActSizeMismatch {
+                act,
+                what: "act_buf_elems",
+                recorded: plan.act_buf_elems[act],
+                derived: derived_buf,
+            });
+        }
+        if !slots_ok {
+            continue;
+        }
+        let slot = plan.slot_of_act[act];
+        let capacity = plan.slot_elems[slot];
+        for b in 1..=bmax {
+            let needed = plan.act_buf_elems_at(act, b);
+            if needed > capacity {
+                out.push(AuditFinding::BatchPrefixOverflow {
+                    act,
+                    batch: b,
+                    needed,
+                    slot,
+                    capacity,
+                });
+                break; // the smallest overflowing batch is the provenance
+            }
+        }
+    }
+
+    // ---- families 2 + 4: per-layer write schedules --------------------
+    // the write-index formulas are affine in the batch index, so the
+    // extreme batches certify every prefix in between
+    let mut batches = vec![1, bmax];
+    batches.dedup();
+    for (li, l) in plan.layers.iter().enumerate() {
+        if (l.in_blocked || l.out_blocked) && tile % PIXEL_BLOCK != 0 {
+            out.push(AuditFinding::MisalignedBlockedTile { layer: li, tile });
+            continue; // the schedule below is undefined on split blocks
+        }
+        for &b in &batches {
+            audit_layer_writes(plan, li, b, tile, &mut out);
+        }
+    }
+    out
+}
+
+/// Derive every pool job's output write range for layer `li` at runtime
+/// batch `b` from the scatter formulas, then prove the whole dispatch
+/// pairwise-disjoint, in bounds, and gap-free. No forward is executed —
+/// the ranges come from the same index arithmetic the executor uses.
+fn audit_layer_writes(
+    plan: &NetworkPlan,
+    li: usize,
+    b: usize,
+    tile: usize,
+    out: &mut Vec<AuditFinding>,
+) {
+    const PB: usize = PIXEL_BLOCK;
+    let l = &plan.layers[li];
+    let g = l.geom;
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let plane = oh * ow;
+    let pixels = b * plane;
+    let k = g.k;
+    let buf = plan.act_buf_elems_at(li + 1, b);
+    if pixels == 0 {
+        return;
+    }
+    let jobs = pixels.div_ceil(tile);
+    let mut ranges: Vec<WriteRange> = Vec::new();
+    for job in 0..jobs {
+        let px0 = job * tile;
+        let tp = tile.min(pixels - px0);
+        if l.out_blocked {
+            // blocked scatter: obase = ((px0/PB + blk)*K + fi)*PB + lane.
+            // Tiles are PB-aligned (checked by the caller), so a job owns
+            // blocks [px0/PB, px0/PB + ceil(tp/PB)) and, with fi and lane
+            // exhaustive, exactly one contiguous interval of the buffer.
+            let gb0 = px0 / PB;
+            let nb = tp.div_ceil(PB);
+            ranges.push(WriteRange { start: gb0 * k * PB, end: (gb0 + nb) * k * PB, job });
+        } else {
+            // NCHW scatter: (ni*K + fi)*plane + pix. A job's pixel range
+            // [px0, px0+tp) splits per image; for each (image, filter)
+            // pair the pix sub-range is one contiguous interval.
+            let ni1 = (px0 + tp - 1) / plane;
+            for ni in px0 / plane..=ni1 {
+                let lo = px0.max(ni * plane) - ni * plane;
+                let hi = (px0 + tp).min((ni + 1) * plane) - ni * plane;
+                for fi in 0..k {
+                    let base = (ni * k + fi) * plane;
+                    ranges.push(WriteRange { start: base + lo, end: base + hi, job });
+                }
+            }
+        }
+    }
+    // interval sweep: sorted ranges must tile [0, buf) exactly
+    ranges.sort_unstable_by_key(|r| (r.start, r.end));
+    let mut covered = 0usize;
+    let mut prev_job = 0usize;
+    for r in &ranges {
+        if r.start < covered {
+            out.push(AuditFinding::WriteOverlap {
+                layer: li,
+                batch: b,
+                index: r.start,
+                jobs: (prev_job, r.job),
+            });
+            return; // one overlap per layer/batch is enough provenance
+        }
+        if r.start > covered {
+            out.push(AuditFinding::WriteGap { layer: li, batch: b, index: covered });
+            return;
+        }
+        covered = r.end;
+        prev_job = r.job;
+    }
+    if covered > buf {
+        out.push(AuditFinding::WriteOutOfBounds { layer: li, batch: b, end: covered, buf });
+    } else if covered < buf {
+        out.push(AuditFinding::WriteGap { layer: li, batch: b, index: covered });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::network::NetworkPlan;
+    use crate::quant::Scheme;
+    use crate::repetition::{EngineConfig, DEFAULT_TILE};
+
+    fn compiled(batch: usize) -> NetworkPlan {
+        let descs = models::cifar_resnet_layers(8, 0.5, 16, batch);
+        NetworkPlan::compile(&descs, EngineConfig::default(), Scheme::sb_default()).unwrap()
+    }
+
+    #[test]
+    fn green_plan_audits_clean_at_every_probe() {
+        let plan = compiled(4);
+        assert_eq!(audit_network_plan(&plan, DEFAULT_TILE), vec![]);
+        // unfused twin and a small aligned tile audit clean too
+        assert_eq!(audit_network_plan(&plan.without_patch_fusion(), DEFAULT_TILE), vec![]);
+        assert_eq!(audit_network_plan(&plan, 8), vec![]);
+        // unfused plans may run unaligned tiles: NCHW scatter needs no
+        // block alignment, and the interval proof must still close
+        assert_eq!(audit_network_plan(&plan.without_patch_fusion(), 5), vec![]);
+    }
+
+    #[test]
+    fn overlapping_slot_live_ranges_are_caught() {
+        let mut plan = compiled(1);
+        // act 1 (residual source into layer 2) and act 2 are both live
+        // across layer 1's write; forcing them into one slot must trip
+        // the live-range check
+        let s1 = plan.slot_of_act[1];
+        plan.slot_of_act[2] = s1;
+        let findings = audit_network_plan(&plan, DEFAULT_TILE);
+        assert!(
+            findings.iter().any(|f| matches!(
+                f,
+                AuditFinding::SlotLiveRangeOverlap { earlier: 1, later: 2, .. }
+            )),
+            "expected a live-range overlap, got {findings:?}"
+        );
+        // the same corruption also aliases layer 1's output with its
+        // input slot — the arena_views precondition
+        assert!(findings
+            .iter()
+            .any(|f| matches!(f, AuditFinding::OutputSlotAliased { layer: 1, .. })));
+    }
+
+    #[test]
+    fn oversized_batch_prefix_is_caught() {
+        let mut plan = compiled(4);
+        // shrink one slot below its largest activation: some batch
+        // prefix must overflow, and the audit names the smallest one
+        let act = plan
+            .act_buf_elems
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &e)| e)
+            .map(|(a, _)| a)
+            .unwrap();
+        let slot = plan.slot_of_act[act];
+        plan.slot_elems[slot] = plan.act_buf_elems[act] / 2;
+        let findings = audit_network_plan(&plan, DEFAULT_TILE);
+        assert!(
+            findings
+                .iter()
+                .any(|f| matches!(f, AuditFinding::BatchPrefixOverflow { .. })),
+            "expected a batch-prefix overflow, got {findings:?}"
+        );
+    }
+
+    #[test]
+    fn dangling_slot_index_is_caught() {
+        let mut plan = compiled(1);
+        plan.slot_of_act[1] = plan.slot_elems.len() + 3;
+        let findings = audit_network_plan(&plan, DEFAULT_TILE);
+        assert!(findings
+            .iter()
+            .any(|f| matches!(f, AuditFinding::SlotIndexOutOfBounds { act: 1, .. })));
+    }
+
+    #[test]
+    fn act_size_bookkeeping_is_cross_checked() {
+        let mut plan = compiled(2);
+        plan.act_elems[1] += 1;
+        let findings = audit_network_plan(&plan, DEFAULT_TILE);
+        assert!(findings
+            .iter()
+            .any(|f| matches!(f, AuditFinding::ActSizeMismatch { act: 1, what: "act_elems", .. })));
+    }
+
+    #[test]
+    fn findings_are_deterministic() {
+        let mut plan = compiled(2);
+        plan.slot_of_act[2] = plan.slot_of_act[1];
+        let a = audit_network_plan(&plan, DEFAULT_TILE);
+        let b = audit_network_plan(&plan, DEFAULT_TILE);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "audit findings must be reproducible");
+    }
+}

@@ -80,6 +80,20 @@ COMMANDS:
                                             the batched-goodput win is recorded
          compare --current FILE [--baseline FILE] [--tolerance F]
                                             fail on perf regression vs baseline
+  audit --all | --model NAME [--scheme binary|ternary|sb] [--batch N]
+        [--image N] [--tile N] [--subtile N] [--no-sparsity] [--unfused]
+                                            static plan-soundness verifier: prove
+                                            the executor's soundness preconditions
+                                            (arena CSR bounds, tile-disjoint
+                                            writes, slot live ranges, blocked
+                                            tile alignment, batch-prefix fit)
+                                            by symbolic range analysis over
+                                            compiled plans — no forward runs.
+                                            --all sweeps the zoo (resnet8/20/32,
+                                            resnet18c, chain1x1) x schemes x
+                                            sparsity on/off x bmax {1,64}, fused
+                                            and unfused; any finding exits
+                                            nonzero (the CI hard gate)
   serve [--backend engine|pjrt] --model NAME [--requests N] [--replicas R]
         [--ckpt PATH]                       engine (default, plain CPU): resnetN,
                                             resnet18c (projection shortcuts) or
@@ -134,6 +148,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&cfg, &args),
         "bench" => cmd_bench(&cfg, &args),
+        "audit" => cmd_audit(&args),
         "serve" => cmd_serve(&cfg, &args),
         "report" => cmd_report(&cfg, &args),
         "quantize" => cmd_quantize(&cfg, &args),
@@ -363,6 +378,102 @@ fn bench_compare(args: &Args) -> Result<()> {
             baseline_path,
             tolerance * 100.0
         ))
+    }
+}
+
+/// `plum audit`: the static plan-soundness verifier
+/// ([`crate::analysis`]). Compiles plans from zoo geometry and proves
+/// the unsafe executor's preconditions by symbolic range analysis — no
+/// forward is executed, so the gate is cheap enough to run on every CI
+/// build. `--all` sweeps the whole zoo across schemes, sparsity
+/// support on/off and bmax ∈ {1, 64}, auditing the fused plan and its
+/// unfused twin from each compile; any finding exits nonzero.
+fn cmd_audit(args: &Args) -> Result<()> {
+    use crate::analysis::audit_network_plan;
+    use crate::network::NetworkPlan;
+    use crate::quant::Scheme;
+    use crate::repetition::{EngineConfig, DEFAULT_TILE};
+
+    fn parse_scheme(name: &str) -> Result<Scheme> {
+        match name {
+            "binary" => Ok(Scheme::Binary),
+            "ternary" => Ok(Scheme::ternary_default()),
+            "sb" | "signed-binary" => Ok(Scheme::sb_default()),
+            other => Err(anyhow!("unknown audit scheme '{other}' — binary | ternary | sb")),
+        }
+    }
+
+    let image = args.get_usize("image", 32);
+    let tile = args.get_usize("tile", DEFAULT_TILE);
+    // fixed sub-tile: auto-tuning (subtile 0) only moves perf, not
+    // soundness, and a fixed value keeps the sweep fast + deterministic
+    let subtile = args.get_usize("subtile", 8);
+    let combos: Vec<(&str, String, bool, usize)> = if args.has("all") {
+        let mut v = Vec::new();
+        for model in ["resnet8", "resnet20", "resnet32", "resnet18c", "chain1x1"] {
+            for scheme in ["binary", "ternary", "sb"] {
+                for sparsity in [true, false] {
+                    for bmax in [1usize, 64] {
+                        v.push((model, scheme.to_string(), sparsity, bmax));
+                    }
+                }
+            }
+        }
+        v
+    } else {
+        let model = args.get("model").ok_or_else(|| {
+            anyhow!("usage: plum audit --all | --model NAME [--scheme S] [--batch N]")
+        })?;
+        vec![(
+            model,
+            args.get_or("scheme", "sb").to_string(),
+            !args.has("no-sparsity"),
+            args.get_usize("batch", 1),
+        )]
+    };
+
+    let unfused_only = args.has("unfused");
+    let mut findings_total = 0usize;
+    let mut audits = 0usize;
+    for (model, scheme_name, sparsity, bmax) in &combos {
+        let scheme = parse_scheme(scheme_name)?;
+        let descs = crate::models::engine_model_layers(model, image, *bmax)
+            .ok_or_else(|| anyhow!("unknown model '{model}' — resnetN | resnet18c | chain1x1"))?;
+        let cfg = EngineConfig { subtile, sparsity_support: *sparsity };
+        let plan = NetworkPlan::compile(&descs, cfg, scheme)?;
+        let mut variants: Vec<(&str, NetworkPlan)> = Vec::new();
+        if !unfused_only {
+            variants.push(("fused", plan.clone()));
+        }
+        variants.push(("unfused", plan.without_patch_fusion()));
+        for (variant, p) in &variants {
+            let findings = audit_network_plan(p, tile);
+            audits += 1;
+            let label = format!(
+                "{model} {scheme_name} sparsity={} bmax={bmax} {variant}",
+                if *sparsity { "on" } else { "off" }
+            );
+            if findings.is_empty() {
+                println!(
+                    "audit OK   {label}: {} layers, {} arena slots, {} fused edges",
+                    p.num_layers(),
+                    p.num_arena_slots(),
+                    p.patch_fused_edges()
+                );
+            } else {
+                findings_total += findings.len();
+                println!("audit FAIL {label}: {} finding(s)", findings.len());
+                for f in &findings {
+                    println!("  {f}");
+                }
+            }
+        }
+    }
+    if findings_total == 0 {
+        println!("{audits} plan audit(s) clean — the executor's soundness preconditions hold");
+        Ok(())
+    } else {
+        Err(anyhow!("{findings_total} soundness finding(s) across {audits} plan audit(s)"))
     }
 }
 

@@ -21,7 +21,13 @@
 // `-D warnings` and the `cargo doc` job's `RUSTDOCFLAGS="-D warnings"`),
 // so the gate lives in CI rather than failing local builds outright.
 #![warn(missing_docs)]
+// Every `unsafe` operation must sit in an explicit `unsafe {}` block
+// carrying its own `// SAFETY:` argument (enforced by
+// tests/safety_comments.rs), even inside `unsafe fn` — the analysis
+// module's audit checks are the other half of each argument.
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

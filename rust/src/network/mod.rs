@@ -175,18 +175,20 @@ pub struct NetworkPlan {
     pub layers: Vec<NetworkLayer>,
     /// quantization scheme every quantized layer was compiled under
     pub scheme: Scheme,
-    /// logical element count of activation `a[i]` (`a[0]` = input)
-    act_elems: Vec<usize>,
+    /// logical element count of activation `a[i]` (`a[0]` = input);
+    /// crate-visible so the [`crate::analysis`] auditor can cross-check
+    /// the recorded sizing against the shapes
+    pub(crate) act_elems: Vec<usize>,
     /// arena bytes-worth of activation `a[i]`: equals `act_elems[i]`
     /// for NCHW activations, the PIXEL_BLOCK-padded block size for
     /// fused (blocked) activations
-    act_buf_elems: Vec<usize>,
+    pub(crate) act_buf_elems: Vec<usize>,
     /// `(c, h, w)` of activation `a[i]` (batch excluded)
-    act_shape: Vec<(usize, usize, usize)>,
+    pub(crate) act_shape: Vec<(usize, usize, usize)>,
     /// arena slot of activation `a[i]` (live-range linear scan)
-    slot_of_act: Vec<usize>,
+    pub(crate) slot_of_act: Vec<usize>,
     /// arena slot sizes (max buf elems over the slot's activations)
-    slot_elems: Vec<usize>,
+    pub(crate) slot_elems: Vec<usize>,
     /// §6 deployment footprint of all weights under `scheme`
     pub weight_bits: usize,
     /// structured-sparsity pattern the quantized layers were pruned
@@ -475,7 +477,7 @@ impl NetworkPlan {
                 }
             })
             .sum();
-        Ok(NetworkPlan {
+        let plan = NetworkPlan {
             layers,
             scheme,
             act_elems,
@@ -487,7 +489,17 @@ impl NetworkPlan {
             pattern,
             total_params,
             effectual_params,
-        })
+        };
+        // Debug builds gate every compile behind the static soundness
+        // audit (crate::analysis) — each `cargo test` run proves the
+        // unsafe-code preconditions for every plan it compiles. Release
+        // builds skip it; `plum audit` runs the same checks on demand.
+        #[cfg(debug_assertions)]
+        {
+            let findings = crate::analysis::audit_network_plan(&plan, DEFAULT_TILE);
+            assert!(findings.is_empty(), "compiled plan failed the soundness audit: {findings:?}");
+        }
+        Ok(plan)
     }
 
     /// Number of conv layers in the compiled network.
@@ -532,7 +544,7 @@ impl NetworkPlan {
     }
 
     /// NCHW elements of activation `a[i]` at runtime batch `b`.
-    fn act_elems_at(&self, i: usize, b: usize) -> usize {
+    pub(crate) fn act_elems_at(&self, i: usize, b: usize) -> usize {
         let (c, h, w) = self.act_shape[i];
         b * c * h * w
     }
@@ -543,7 +555,7 @@ impl NetworkPlan {
     /// `b * h * w` pixels. At `b == batch()` this equals the
     /// compile-time `act_buf_elems[i]`, so a full-batch forward is the
     /// degenerate case of the batched one.
-    fn act_buf_elems_at(&self, i: usize, b: usize) -> usize {
+    pub(crate) fn act_buf_elems_at(&self, i: usize, b: usize) -> usize {
         let (c, h, w) = self.act_shape[i];
         if i > 0 && self.layers[i - 1].out_blocked {
             blocked_elems(b * h * w, c)
@@ -901,6 +913,12 @@ fn dense_conv_into(
                         acc += pv * wt[ei * g.k + ki];
                     }
                     let v = post.apply(acc, ni, ki, pix, ow);
+                    // SAFETY: this job owns output pixels [px0, px0+tp),
+                    // so (ni*K + ki)*plane + pix is written by no other
+                    // job and stays < n*K*plane == out.len(). Proven
+                    // statically per layer schedule by the NCHW
+                    // write-interval check in analysis::audit_network_plan
+                    // (WriteOverlap / WriteOutOfBounds findings).
                     unsafe { od.write((ni * g.k + ki) * plane + pix, v) };
                 }
             }

@@ -61,7 +61,9 @@ pub fn gemm_into_pool(
     pool.run(blocks, |bi| {
         let i0 = bi * MC;
         let rows = MC.min(m - i0);
-        // disjoint contiguous row range of C per block
+        // SAFETY: job `bi` owns rows [i0, i0 + rows) of C exclusively —
+        // MC-row blocks partition 0..m, so the [i0*n, (i0+rows)*n)
+        // ranges are pairwise disjoint and end at m*n == c.len().
         let cb = unsafe { out.slice_mut(i0 * n, rows * n) };
         gemm_block(&a[i0 * k..(i0 + rows) * k], b, cb, rows, k, n);
     });

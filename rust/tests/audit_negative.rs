@@ -1,0 +1,154 @@
+//! Negative-path proof that `plum audit` catches corrupt plans.
+//!
+//! A verifier that only ever passes green plans proves nothing, so
+//! every invariant family gets a hand-seeded corruption here: compile a
+//! real zoo plan, break exactly one plan property through the public
+//! API, and assert the audit reports the matching typed
+//! [`AuditFinding`] variant. Corruptions happen *after* compile, so the
+//! debug-build compile gate (which audits every fresh plan) stays
+//! green. Slot-table corruptions (`slot_of_act` / `slot_elems` are
+//! crate-private) live in `analysis::tests` instead.
+
+use plum::analysis::{audit_layer_plan, audit_network_plan, AuditFinding};
+use plum::models;
+use plum::network::NetworkPlan;
+use plum::quant::Scheme;
+use plum::repetition::{EngineConfig, DEFAULT_TILE};
+
+fn compiled(model: &str, bmax: usize) -> NetworkPlan {
+    let descs = models::engine_model_layers(model, 16, bmax).expect("zoo model");
+    let cfg = EngineConfig { subtile: 8, sparsity_support: true };
+    NetworkPlan::compile(&descs, cfg, Scheme::sb_default()).expect("compile")
+}
+
+fn first_engine_layer(plan: &NetworkPlan) -> usize {
+    plan.layers.iter().position(|l| l.plan.is_some()).expect("an engine layer")
+}
+
+#[test]
+fn green_zoo_plans_audit_clean_fused_and_unfused() {
+    // residual pins (resnetN), projection shortcuts (resnet18c) and a
+    // pure fused chain (chain1x1), each at bmax 1 and 2
+    for model in ["resnet8", "resnet18c", "chain1x1"] {
+        for bmax in [1, 2] {
+            let plan = compiled(model, bmax);
+            let fused = audit_network_plan(&plan, DEFAULT_TILE);
+            assert_eq!(fused, vec![], "{model} bmax {bmax} fused");
+            let unfused = audit_network_plan(&plan.without_patch_fusion(), DEFAULT_TILE);
+            assert_eq!(unfused, vec![], "{model} bmax {bmax} unfused");
+        }
+    }
+}
+
+#[test]
+fn out_of_bounds_combine_index_is_caught() {
+    let mut plan = compiled("resnet8", 1);
+    let li = first_engine_layer(&plan);
+    plan.layers[li].plan.as_mut().unwrap().combine[0] = u32::MAX;
+    let findings = audit_network_plan(&plan, DEFAULT_TILE);
+    assert!(
+        findings.iter().any(|f| matches!(
+            f,
+            AuditFinding::CombineSlotOutOfBounds { layer, .. } if *layer == li
+        )),
+        "expected CombineSlotOutOfBounds at layer {li}, got {findings:?}"
+    );
+}
+
+#[test]
+fn non_monotone_table_base_is_caught() {
+    let mut plan = compiled("resnet8", 1);
+    let li = first_engine_layer(&plan);
+    let lp = plan.layers[li].plan.as_mut().unwrap();
+    assert!(lp.num_tables >= 2, "need two sub-tiles to break monotonicity");
+    lp.arena.table_base[1] = u32::MAX;
+    let findings = audit_network_plan(&plan, DEFAULT_TILE);
+    assert!(
+        findings
+            .iter()
+            .any(|f| matches!(f, AuditFinding::TableBaseNotMonotone { layer, .. } if *layer == li)),
+        "expected TableBaseNotMonotone at layer {li}, got {findings:?}"
+    );
+}
+
+#[test]
+fn column_outside_patch_matrix_is_caught() {
+    let mut plan = compiled("resnet8", 1);
+    let li = first_engine_layer(&plan);
+    plan.layers[li].plan.as_mut().unwrap().arena.cols[0] = u32::MAX;
+    let findings = audit_network_plan(&plan, DEFAULT_TILE);
+    assert!(
+        findings
+            .iter()
+            .any(|f| matches!(f, AuditFinding::ColumnOutOfRange { layer, .. } if *layer == li)),
+        "expected ColumnOutOfRange at layer {li}, got {findings:?}"
+    );
+}
+
+#[test]
+fn broken_span_contiguity_is_caught() {
+    let mut plan = compiled("resnet8", 1);
+    let li = first_engine_layer(&plan);
+    let lp = plan.layers[li].plan.as_mut().unwrap();
+    assert!(lp.arena.spans.len() >= 2);
+    lp.arena.spans[1].start += 1;
+    let findings = audit_network_plan(&plan, DEFAULT_TILE);
+    assert!(
+        findings.iter().any(|f| matches!(
+            f,
+            AuditFinding::SpanNotContiguous { layer, span: 1, .. } if *layer == li
+        )),
+        "expected SpanNotContiguous at layer {li} span 1, got {findings:?}"
+    );
+}
+
+#[test]
+fn density_stats_drift_is_caught() {
+    // per-layer API: the stats cross-check works without a network
+    let mut plan = compiled("resnet8", 1);
+    let li = first_engine_layer(&plan);
+    let lp = plan.layers[li].plan.as_mut().unwrap();
+    lp.stats.effectual_cols += 1;
+    let findings = audit_layer_plan(li, lp);
+    assert!(
+        findings.iter().any(|f| matches!(
+            f,
+            AuditFinding::DensityStatsMismatch { layer, field: "effectual_cols", .. }
+                if *layer == li
+        )),
+        "expected DensityStatsMismatch at layer {li}, got {findings:?}"
+    );
+}
+
+#[test]
+fn missing_noop_slot_on_elided_arena_is_caught() {
+    let mut plan = compiled("resnet8", 1);
+    let li = first_engine_layer(&plan);
+    let lp = plan.layers[li].plan.as_mut().unwrap();
+    assert!(!lp.arena.zeros_materialized, "sparsity-on plans elide");
+    lp.arena.noop_slot = None;
+    let findings = audit_network_plan(&plan, DEFAULT_TILE);
+    assert!(
+        findings
+            .iter()
+            .any(|f| matches!(f, AuditFinding::NoopSlotMalformed { layer, .. } if *layer == li)),
+        "expected NoopSlotMalformed at layer {li}, got {findings:?}"
+    );
+}
+
+#[test]
+fn misaligned_blocked_tile_is_caught() {
+    let plan = compiled("resnet20", 1);
+    assert!(plan.patch_fused_edges() > 0, "resnet20 must fuse edges");
+    // tile 12 splits PIXEL_BLOCK lanes across jobs on blocked layers
+    let findings = audit_network_plan(&plan, 12);
+    assert!(
+        findings
+            .iter()
+            .any(|f| matches!(f, AuditFinding::MisalignedBlockedTile { tile: 12, .. })),
+        "expected MisalignedBlockedTile, got {findings:?}"
+    );
+    // the unfused twin hands off NCHW everywhere — tile 12 is then
+    // sound, and the write-interval proof must still close exactly
+    assert_eq!(audit_network_plan(&plan.without_patch_fusion(), 12), vec![]);
+}

@@ -63,13 +63,18 @@ fn independent_singles(plan_1: &Arc<NetworkPlan>, input: &[f32], b: usize) -> Ve
     out
 }
 
+/// Random-case budget. Under Miri each forward costs minutes, not
+/// microseconds, so the sweep shrinks to a smoke pass — the full grid
+/// still runs natively in the regular CI job.
+const CASES: usize = if cfg!(miri) { 2 } else { 8 };
+
 #[test]
 fn random_batched_forwards_bit_match_independent_singles() {
     const BMAX: usize = 8;
     let mut rng = Rng::new(0xBA7C);
     let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let pool1 = Pool::new(1);
-    for case in 0..8 {
+    for case in 0..CASES {
         // producer: 3x3 / stride-1 / pad-1; middle consumer random over
         // the fusion grid; 1x1 tail — same family as the fusion
         // proptests, now swept over runtime batch sizes
@@ -120,10 +125,12 @@ fn random_batched_forwards_bit_match_independent_singles() {
         rng.fill_normal(&mut input, 1.0);
         let singles = independent_singles(&plan_1, &input, BMAX);
 
-        for &b in &[1usize, 2, 5, 8] {
+        let bs: &[usize] = if cfg!(miri) { &[1, 5] } else { &[1, 2, 5, 8] };
+        let widths: &[usize] = if cfg!(miri) { &[2] } else { &[1, 2, ncpu] };
+        for &b in bs {
             let xb = &input[..b * sample];
             let want = &singles[..b * out_sample];
-            for threads in [1, 2, ncpu] {
+            for &threads in widths {
                 let pool = Pool::new(threads);
                 for (plan, label) in &variants {
                     let mut exec = NetworkExecutor::new(Arc::clone(plan));

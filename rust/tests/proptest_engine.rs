@@ -10,6 +10,11 @@ use plum::repetition::{build_cse, execute_conv2d_tiled, plan_layer, EngineConfig
 use plum::tensor::{conv2d_gemm_pool, im2col, Conv2dGeometry, Tensor};
 use plum::util::{Pool, Rng};
 
+/// Random-case budgets. Under Miri each conv costs minutes, so the
+/// sweeps shrink to smoke passes — the full grids run natively in CI.
+const GEOMETRY_CASES: usize = if cfg!(miri) { 2 } else { 24 };
+const ELISION_CASES: usize = if cfg!(miri) { 2 } else { 16 };
+
 fn random_geometry(rng: &mut Rng) -> Conv2dGeometry {
     let r = [1, 2, 3, 5][rng.below(4)];
     let s = [1, 2, 3][rng.below(3)];
@@ -32,7 +37,7 @@ fn random_geometries_match_gemm_and_cse_dag() {
     let serial = Pool::new(1);
     let wide = Pool::new(3);
     let schemes = [Scheme::Binary, Scheme::ternary_default(), Scheme::sb_default()];
-    for case in 0..24 {
+    for case in 0..GEOMETRY_CASES {
         let g = random_geometry(&mut rng);
         let scheme = schemes[rng.below(schemes.len())];
         let subtile = [3, 5, 8, 17][rng.below(4)];
@@ -96,7 +101,7 @@ fn elided_plans_bit_match_the_unelided_reference() {
     let mut rng = Rng::new(0xE11D);
     let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
     let schemes = [Scheme::ternary_default(), Scheme::sb_default()];
-    for case in 0..16 {
+    for case in 0..ELISION_CASES {
         let g = random_geometry(&mut rng);
         let scheme = schemes[rng.below(schemes.len())];
         let subtile = [3, 5, 8, 17][rng.below(4)];
@@ -123,7 +128,8 @@ fn elided_plans_bit_match_the_unelided_reference() {
             elided.arena.cols.len() <= reference.arena.cols.len(),
             "elided arena must never be larger: {ctx}"
         );
-        for t in [1, 2, ncpu] {
+        let widths: &[usize] = if cfg!(miri) { &[2] } else { &[1, 2, ncpu] };
+        for &t in widths {
             let pool = Pool::new(t);
             let got = execute_conv2d_tiled(&elided, &x, &pool, tile);
             let want = execute_conv2d_tiled(&reference, &x, &pool, tile);

@@ -1,0 +1,107 @@
+//! Every `unsafe` site in `src/` must carry a nearby `// SAFETY:`
+//! argument.
+//!
+//! The crate's soundness story is split in two: the static audit
+//! (`plum::analysis`) proves the data-dependent preconditions, and the
+//! `// SAFETY:` comment at each site names which invariant — and which
+//! audit check — justifies it. This test makes the comments mandatory,
+//! so a new `unsafe` block without a written argument fails CI rather
+//! than review.
+//!
+//! Matching is deliberately dumb (line-based, word-boundary token
+//! scan): it can over-approximate — a string literal containing the
+//! word would be flagged — and that is fine; the fix is to reword the
+//! string, never to weaken the scanner.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// How many lines above an `unsafe` token we search for "SAFETY". Large
+/// enough for a multi-line argument above `unsafe impl`, small enough
+/// that a comment cannot justify an unrelated site further down.
+const WINDOW: usize = 12;
+
+/// Lower bound on sites the scanner must find. If a refactor drops the
+/// count below this, the likeliest cause is broken matching, not a
+/// genuinely safer codebase — update it deliberately either way.
+const MIN_SITES: usize = 15;
+
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in fs::read_dir(dir).expect("readable src dir") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_sources(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// True when `line` contains `unsafe` as a standalone token (not as a
+/// fragment of an identifier like `unsafe_slice_disjoint_writes`).
+fn has_unsafe_token(line: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = line[from..].find("unsafe") {
+        let start = from + rel;
+        let end = start + "unsafe".len();
+        let before_ok = start == 0 || {
+            let c = bytes[start - 1];
+            !c.is_ascii_alphanumeric() && c != b'_'
+        };
+        let after_ok = end == bytes.len() || {
+            let c = bytes[end];
+            !c.is_ascii_alphanumeric() && c != b'_'
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+#[test]
+fn every_unsafe_site_has_a_safety_comment() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    rust_sources(&src, &mut files);
+    files.sort();
+    assert!(!files.is_empty(), "no sources under {}", src.display());
+
+    let mut sites = 0usize;
+    let mut violations = Vec::new();
+    for file in &files {
+        let text = fs::read_to_string(file).expect("readable source file");
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, line) in lines.iter().enumerate() {
+            let trimmed = line.trim_start();
+            // comments and attributes may mention the keyword freely
+            // (e.g. the lint name in `#![deny(unsafe_op_in_unsafe_fn)]`)
+            if trimmed.starts_with("//") || trimmed.starts_with("#!") || trimmed.starts_with("#[") {
+                continue;
+            }
+            if !has_unsafe_token(line) {
+                continue;
+            }
+            sites += 1;
+            let window = &lines[i.saturating_sub(WINDOW)..=i];
+            let justified =
+                window.iter().any(|l| l.to_ascii_uppercase().contains("SAFETY"));
+            if !justified {
+                let rel = file.strip_prefix(&src).unwrap_or(file);
+                violations.push(format!("{}:{}: {}", rel.display(), i + 1, line.trim()));
+            }
+        }
+    }
+
+    assert!(
+        sites >= MIN_SITES,
+        "scanner found only {sites} unsafe sites (expected >= {MIN_SITES}) — did matching break?"
+    );
+    assert!(
+        violations.is_empty(),
+        "unsafe sites missing a // SAFETY: comment within {WINDOW} lines:\n{}",
+        violations.join("\n")
+    );
+}
